@@ -1,0 +1,57 @@
+//! Paper-scale cluster sweep: the simulator counterpart of Figs. 4–5 across
+//! pipeline depths and domains.
+//!
+//!     cargo run --release --offline --example cluster_sim
+
+use pipedec::metrics::Table;
+use pipedec::sim::{simulate_pipedec, simulate_pp, simulate_slm, simulate_stpp,
+    ClusterSpec, HitModel};
+use pipedec::util::XorShiftRng;
+use pipedec::workload::DOMAINS;
+
+fn main() -> anyhow::Result<()> {
+    let tokens = 512;
+
+    println!("== latency vs pipeline depth (domain=math, w=32, c=16) ==");
+    let hit = HitModel::default_for("math");
+    let mut t = Table::new(&["stages", "pipedec ms/tok", "pp ms/tok", "stpp ms/tok",
+        "speedup vs pp", "speedup vs stpp"]);
+    for stages in [7usize, 14, 21] {
+        let cluster = ClusterSpec::paper(stages);
+        let mut rng = XorShiftRng::new(9);
+        let pd = simulate_pipedec(&cluster, 32, 16, &hit, tokens, &mut rng);
+        let pp = simulate_pp(&cluster, tokens);
+        let st = simulate_stpp(&cluster, 16, 4, 4, &hit, tokens, &mut rng);
+        t.row(vec![
+            stages.to_string(),
+            format!("{:.1}", 1e3 * pd.s_per_token()),
+            format!("{:.1}", 1e3 * pp.s_per_token()),
+            format!("{:.1}", 1e3 * st.s_per_token()),
+            format!("{:.2}x", pp.s_per_token() / pd.s_per_token()),
+            format!("{:.2}x", st.s_per_token() / pd.s_per_token()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("== per-domain latency at 14 stages (paper Fig. 5 shape) ==");
+    let cluster = ClusterSpec::paper(14);
+    let mut t = Table::new(&["domain", "pipedec ms/tok", "stpp ms/tok", "pp ms/tok",
+        "slm ms/tok"]);
+    for (dom, _) in DOMAINS {
+        let hit = HitModel::default_for(dom);
+        let mut rng = XorShiftRng::new(11);
+        let pd = simulate_pipedec(&cluster, 32, 16, &hit, tokens, &mut rng);
+        let st = simulate_stpp(&cluster, 16, 4, 4, &hit, tokens, &mut rng);
+        let pp = simulate_pp(&cluster, tokens);
+        let slm = simulate_slm(tokens);
+        t.row(vec![
+            dom.to_string(),
+            format!("{:.1}", 1e3 * pd.s_per_token()),
+            format!("{:.1}", 1e3 * st.s_per_token()),
+            format!("{:.1}", 1e3 * pp.s_per_token()),
+            format!("{:.1}", 1e3 * slm.s_per_token()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Compare all four engines (PipeDec / STPP / PP / SLM) on one prompt per
+//! workload domain — a miniature of the paper's Fig. 5 on the real
+//! artifact-backed engines.
+//!
+//!     cargo run --release --offline --example compare_engines
+
+use pipedec::baselines::{PpEngine, SlmEngine, StppEngine};
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecEngine;
+use pipedec::metrics::Table;
+use pipedec::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = pipedec::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("target_config.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let cfg = EngineConfig {
+        stages: 8,
+        tree: TreeConfig {
+            max_width: 8,
+            max_children: 8,
+            max_depth: 12,
+        },
+        max_new_tokens: 24,
+        ..EngineConfig::default()
+    };
+
+    let mut pipedec = PipeDecEngine::new(&dir, cfg.clone())?;
+    let mut stpp = StppEngine::new(&dir, cfg.clone())?;
+    let mut pp = PpEngine::new(&dir, cfg.clone())?;
+    let mut slm = SlmEngine::new(&dir, cfg)?;
+
+    let mut table = Table::new(&[
+        "domain", "dataset", "pipedec ms/tok", "stpp ms/tok", "pp ms/tok",
+        "slm ms/tok", "accept",
+    ]);
+    for wl in Workload::load_all(&dir)? {
+        let prompt = &wl.prompts[0];
+        let r = pipedec.decode(prompt)?;
+        let s = stpp.decode(prompt)?;
+        let p = pp.decode(prompt)?;
+        let l = slm.decode(prompt)?;
+        // losslessness across speculative engines
+        let n = r.tokens.len().min(p.tokens.len()).min(s.tokens.len());
+        anyhow::ensure!(r.tokens[..n] == p.tokens[..n], "pipedec != pp on {}", wl.domain);
+        anyhow::ensure!(s.tokens[..n] == p.tokens[..n], "stpp != pp on {}", wl.domain);
+        table.row(vec![
+            wl.domain.clone(),
+            wl.dataset_analogue.clone(),
+            format!("{:.1}", 1e3 * r.modeled_s_per_token()),
+            format!("{:.1}", 1e3 * s.modeled_s_per_token()),
+            format!("{:.1}", 1e3 * p.modeled_s_per_token()),
+            format!("{:.1}", 1e3 * l.modeled_s_per_token()),
+            format!("{:.2}", r.accept_rate()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(modeled = parallel-schedule latency from measured per-stage times)");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: decode one prompt with PipeDec and with plain pipeline
+//! parallelism (PP) over the same artifacts, verify the outputs match
+//! token-for-token (losslessness), and compare latency.
+//!
+//!     cargo run --release --offline --example quickstart
+//!
+//! Requires `make artifacts` to have run.
+
+use pipedec::baselines::PpEngine;
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecEngine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = pipedec::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("target_config.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    let cfg = EngineConfig {
+        stages: 8,
+        tree: TreeConfig {
+            max_width: 8,
+            max_children: 8,
+            max_depth: 12,
+        },
+        max_new_tokens: 48,
+        ..EngineConfig::default()
+    };
+
+    let prompt = "<math>\nquestion: carol packs 5 boxes with 6 coins each. total coins?\n";
+    println!("prompt:\n{prompt}");
+
+    println!("[1/2] PipeDec (8-stage pipeline + draft in pipeline + dynamic tree)");
+    let mut pipedec = PipeDecEngine::new(&dir, cfg.clone())?;
+    let r = pipedec.decode(prompt)?;
+    println!("  completion: {:?}", r.text);
+    println!(
+        "  tokens={} timesteps={} accept_rate={:.2} modeled={:.1} ms/token",
+        r.tokens.len(),
+        r.timesteps,
+        r.accept_rate(),
+        1e3 * r.modeled_s_per_token()
+    );
+
+    println!("[2/2] PP (same pipeline, no speculation)");
+    let mut pp = PpEngine::new(&dir, cfg)?;
+    let b = pp.decode(prompt)?;
+    println!("  completion: {:?}", b.text);
+    println!(
+        "  tokens={} modeled={:.1} ms/token",
+        b.tokens.len(),
+        1e3 * b.modeled_s_per_token()
+    );
+
+    let n = r.tokens.len().min(b.tokens.len());
+    anyhow::ensure!(
+        r.tokens[..n] == b.tokens[..n],
+        "losslessness violated: outputs differ"
+    );
+    println!("\noutputs identical over {n} tokens (lossless OK)");
+    println!(
+        "modeled speedup: {:.2}x",
+        b.modeled_s_per_token() / r.modeled_s_per_token()
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! End-to-end serving driver (DESIGN.md "End-to-end validation"): load the
+//! build-time model through the PJRT runtime and serve a batch of real
+//! requests from all six workload domains through the router + PipeDec
+//! engine, reporting per-request latency percentiles and aggregate
+//! throughput.
+//!
+//!     cargo run --release --offline --example serve_batch [-- <k>]
+//!
+//! `k` = number of concurrent requests submitted up front (default 6).
+
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecEngine;
+use pipedec::server::{drain, summarize, Router};
+use pipedec::workload::mixed_stream;
+
+fn main() -> anyhow::Result<()> {
+    let dir = pipedec::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("target_config.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let k: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6);
+
+    let cfg = EngineConfig {
+        stages: 4,
+        tree: TreeConfig {
+            max_width: 8,
+            max_children: 8,
+            max_depth: 12,
+        },
+        max_new_tokens: 32,
+        ..EngineConfig::default()
+    };
+    let mut engine = PipeDecEngine::new(&dir, cfg)?;
+
+    // submit k requests (round-robin over the six domains, as in Fig. 8)
+    let prompts = mixed_stream(&dir, (k + 5) / 6)?;
+    let mut router = Router::new(64);
+    for p in prompts.iter().take(k) {
+        router.submit(p)?;
+    }
+    println!("serving {} queued requests through PipeDec-4-stage...", router.depth());
+
+    let t0 = std::time::Instant::now();
+    let mut accept_rates = Vec::new();
+    let completions = drain(&mut router, |prompt| {
+        let r = engine.decode(prompt)?;
+        accept_rates.push(r.accept_rate());
+        Ok((r.tokens.len(), r.modeled_s))
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let (metrics, lat) = summarize(&completions, wall);
+    println!("\nrequests:  {}", metrics.counter("requests"));
+    println!("tokens:    {}", metrics.counter("tokens"));
+    println!(
+        "latency:   p50={:.2}s p95={:.2}s p99={:.2}s (wall, incl. queueing)",
+        lat.percentile(50.0),
+        lat.percentile(95.0),
+        lat.percentile(99.0)
+    );
+    println!(
+        "throughput: {:.1} tokens/s over {:.2}s wall",
+        metrics.counter("tokens") as f64 / wall,
+        wall
+    );
+    println!(
+        "mean accept rate: {:.2}",
+        accept_rates.iter().sum::<f64>() / accept_rates.len().max(1) as f64
+    );
+    Ok(())
+}

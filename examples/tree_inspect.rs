@@ -1,0 +1,90 @@
+//! Inspect the dynamic prediction tree: run the draft model standalone and
+//! print the tree after each expansion and prune — a visual companion to
+//! paper §3.3 / Fig. 2.
+//!
+//!     cargo run --release --offline --example tree_inspect
+
+use pipedec::config::TreeConfig;
+use pipedec::coordinator::sampling::top_candidates;
+use pipedec::kvcache::TwoLevelCache;
+use pipedec::model::{bias, ModelHandles};
+use pipedec::runtime::Runtime;
+use pipedec::tokenizer;
+use pipedec::tree::{PredictionTree, PruneOutcome};
+
+fn render(tree: &PredictionTree) -> String {
+    let mut out = String::new();
+    for l in 0..tree.depth_count() {
+        let toks: Vec<String> = tree
+            .layer_range(l)
+            .map(|i| {
+                let ch = tokenizer::decode(&[tree.token(i)]);
+                let ch = if ch.is_empty() { format!("#{}", tree.token(i)) } else { ch };
+                format!("{:?}(p={:.2})", ch, tree.cum_logprob(i).exp())
+            })
+            .collect();
+        out.push_str(&format!("  layer {l}: {}\n", toks.join(" ")));
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = pipedec::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("draft_config.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let rt = Runtime::cpu()?;
+    let mut draft = ModelHandles::load(&rt, &dir, "draft")?;
+    let dc = draft.cfg.clone();
+    let mut cache =
+        TwoLevelCache::new(dc.n_layers, dc.n_heads, dc.head_dim, dc.past_cap, dc.tree_cap);
+
+    let prompt = "<translate>\nde: der hund ist";
+    let prompt_ids = tokenizer::encode(prompt);
+    let logits = draft.full_prefill(&rt, &mut cache, &prompt_ids)?;
+    let root = pipedec::util::top_k_indices(&logits, 1)[0] as u32;
+
+    let cfg = TreeConfig { max_width: 6, max_children: 3, max_depth: 8 };
+    let mut tree = PredictionTree::new(cfg, 64, root, prompt_ids.len());
+    println!("prompt: {prompt:?}\nroot token: {:?}\n", tokenizer::decode(&[root]));
+
+    for step in 0..4 {
+        // expand one layer with the draft
+        let start = cache.tree_len();
+        let indices: Vec<usize> = (start..tree.len()).collect();
+        let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
+        let mut pos = vec![0i32; dc.width_cap];
+        for (r, &i) in indices.iter().enumerate() {
+            pos[r] = tree.position_of(i) as i32;
+        }
+        let rows = tree.bias_rows(&indices, dc.tree_cap, bias::NEG);
+        let tb = bias::pad_tree_bias_rows(rows, indices.len(), start, dc.width_cap, dc.tree_cap);
+        let logits = draft.full_forward_tree_block(&rt, &mut cache, &tokens, &pos, &tb)?;
+        let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
+            .map(|r| top_candidates(&logits[r * dc.vocab_size..(r + 1) * dc.vocab_size], 3))
+            .collect();
+        tree.expand_layer(&cands);
+        println!("after expansion {step}:\n{}", render(&tree));
+    }
+
+    // simulate a verification: accept the most probable depth-1 child
+    let best = tree.layer_range(1).max_by(|&a, &b| {
+        tree.cum_logprob(a).partial_cmp(&tree.cum_logprob(b)).unwrap()
+    });
+    if let Some(best) = best {
+        let x = tree.token(best);
+        println!("verify: target decodes {:?} -> prune", tokenizer::decode(&[x]));
+        match tree.prune(x) {
+            PruneOutcome::Hit { kept_old, .. } => {
+                cache.promote_root_to_past()?;
+                cache.compact_tree(&kept_old);
+                println!("HIT — subtree survives:\n{}", render(&tree));
+            }
+            PruneOutcome::Miss => println!("MISS — tree reinitialized"),
+        }
+        tree.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+        println!("tree invariants hold after prune ✓");
+    }
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT entry point: train (if needed) + lower every serve-time entry point to
+HLO text artifacts consumed by the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifact set (per model m in {target, draft}):
+  {m}_embed.hlo.txt   (emb[V,d], tokens[W]i32)                  -> (h[W,d],)
+  {m}_layer.hlo.txt   (9 layer weights, h, past_k, past_v, tree_k, tree_v,
+                       tree_len i32, pos[W]i32, past_bias, tree_bias)
+                      -> (h', k_new[H,W,hd], v_new[H,W,hd])
+  {m}_head.hlo.txt    (final_norm[d], emb[V,d], h[W,d])          -> (logits,)
+plus weights_{m}.pdw, {m}_config.txt, prompts_{domain}.txt, manifest.txt.
+
+Argument order is the lowering order below and is mirrored by
+rust/src/model/stage.rs — do not reorder.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .configs import (
+    DRAFT, PAST_CAP, TARGET, TREE_CAP, WIDTH_CAP, ModelConfig, config_lines,
+)
+from .model import embed_step, head_step, layer_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# Width buckets: the default artifacts use the full WIDTH_CAP; a W=8 variant
+# (suffix `_w8`) serves small-tree engine configs so they do not pay the
+# padded 32-wide compute (EXPERIMENTS.md §Perf iteration 3).
+WIDTH_BUCKETS = (WIDTH_CAP, 8)
+
+
+def lower_embed(cfg: ModelConfig, w: int = WIDTH_CAP):
+    return jax.jit(embed_step).lower(
+        f32(cfg.vocab_size, cfg.dim), i32(w))
+
+
+def lower_head(cfg: ModelConfig, w: int = WIDTH_CAP):
+    fn = functools.partial(head_step, eps=cfg.norm_eps)
+    return jax.jit(fn).lower(
+        f32(cfg.dim), f32(cfg.vocab_size, cfg.dim), f32(w, cfg.dim))
+
+
+def lower_layer(cfg: ModelConfig, w: int = WIDTH_CAP):
+    d, h = cfg.dim, cfg.hidden
+    nh, hd = cfg.n_heads, cfg.head_dim
+    fn = functools.partial(layer_step, cfg=cfg, use_kernel=True)
+    return jax.jit(fn).lower(
+        # weights (LAYER_WEIGHT_ORDER)
+        f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d),
+        f32(d), f32(d, h), f32(d, h), f32(h, d),
+        # runtime
+        f32(w, d),                         # h
+        f32(nh, PAST_CAP, hd),             # past_k
+        f32(nh, PAST_CAP, hd),             # past_v
+        f32(nh, TREE_CAP, hd),             # tree_k (without current block)
+        f32(nh, TREE_CAP, hd),             # tree_v
+        i32(),                             # tree_len
+        i32(w),                            # pos
+        f32(w, PAST_CAP),                  # past_bias
+        f32(w, TREE_CAP),                  # tree_bias
+    )
+
+
+def emit(out_dir: str, name: str, lowered, manifest: list) -> None:
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"{name}.hlo.txt {len(text)}")
+    print(f"  {name}.hlo.txt ({len(text) // 1024} KiB)")
+
+
+def emit_prompts(out_dir: str, per_domain: int = 12) -> None:
+    for dom in corpus.DOMAINS:
+        path = os.path.join(out_dir, f"prompts_{dom}.txt")
+        with open(path, "w") as f:
+            f.write("\n%%%\n".join(corpus.domain_prompts(dom, per_domain)))
+
+
+GOLDEN_PROMPT = "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n"
+GOLDEN_STEPS = 12
+
+
+def emit_golden(out_dir: str) -> None:
+    """Greedy continuations computed with the python training-path forward;
+    rust/tests/integration_runtime.rs replays them through the AOT artifacts
+    to prove the two paths agree bit-for-bit at the argmax level."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from . import tokenizer
+    from .model import forward_train
+    from .pdw import read_pdw, unflatten_params
+
+    ids = tokenizer.encode(GOLDEN_PROMPT)
+    for cfg in (TARGET, DRAFT):
+        flat = read_pdw(os.path.join(out_dir, f"weights_{cfg.name}.pdw"))
+        params = unflatten_params(flat, cfg.n_layers)
+        fwd = jax.jit(lambda p, t, c=cfg: forward_train(p, t, c))
+        seq = list(ids)
+        outs = []
+        for _ in range(GOLDEN_STEPS):
+            logits = fwd(params, jnp.asarray(np.array(seq)[None], jnp.int32))
+            nxt = int(jnp.argmax(logits[0, -1]))
+            outs.append(nxt)
+            seq.append(nxt)
+        with open(os.path.join(out_dir, f"golden_{cfg.name}.txt"), "w") as f:
+            f.write(" ".join(str(i) for i in ids) + "\n")
+            f.write(" ".join(str(i) for i in outs) + "\n")
+        print(f"  golden_{cfg.name}.txt: {outs}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=None,
+                    help="override training steps (smoke tests use ~30)")
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    need_train = args.retrain or not all(
+        os.path.exists(os.path.join(out, f"weights_{m.name}.pdw"))
+        for m in (TARGET, DRAFT))
+    if need_train:
+        from .train import train_all
+
+        train_all(out_dir=out, steps=args.train_steps)
+    else:
+        print("weights exist, skipping training (use --retrain to redo)")
+
+    manifest: list[str] = []
+    for cfg in (TARGET, DRAFT):
+        print(f"lowering {cfg.name} ({cfg.param_count() / 1e6:.2f}M params)")
+        for w in WIDTH_BUCKETS:
+            sfx = "" if w == WIDTH_CAP else f"_w{w}"
+            emit(out, f"{cfg.name}_embed{sfx}", lower_embed(cfg, w), manifest)
+            emit(out, f"{cfg.name}_layer{sfx}", lower_layer(cfg, w), manifest)
+            emit(out, f"{cfg.name}_head{sfx}", lower_head(cfg, w), manifest)
+        with open(os.path.join(out, f"{cfg.name}_config.txt"), "w") as f:
+            f.write(config_lines(cfg))
+    emit_prompts(out)
+    emit_golden(out)
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Shared model/artifact configuration for the PipeDec reproduction.
+
+These constants are the single source of truth for every static shape baked
+into the AOT artifacts. The Rust side reads the same values from
+``artifacts/{target,draft}_config.txt`` emitted by ``aot.py`` — keep the two
+in sync by only ever editing this file.
+"""
+
+from dataclasses import dataclass, field
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary (byte-level, shared by target and draft; mirrored in
+# rust/src/tokenizer/mod.rs)
+# ---------------------------------------------------------------------------
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+NEWLINE_ID = 3
+FIRST_PRINTABLE = 32  # ' '
+LAST_PRINTABLE = 126  # '~'
+# ids 4..98 map to chars 32..126; total live ids = 99, padded to 128.
+VOCAB_SIZE = 128
+
+# ---------------------------------------------------------------------------
+# Static shape caps baked into artifacts
+# ---------------------------------------------------------------------------
+WIDTH_CAP = 32        # max tree-layer width W the real engine supports
+TREE_CAP = 288        # tree-level KV cache capacity (nodes)
+PAST_CAP = 512        # model-level KV cache capacity (accepted tokens)
+PREFILL_CHUNK = 32    # prompt tokens processed per prefill stage call
+NEG_INF = -1e9        # additive mask value
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style decoder configuration."""
+
+    name: str
+    dim: int
+    n_layers: int
+    n_heads: int
+    vocab_size: int = VOCAB_SIZE
+    mlp_hidden: int = 0  # 0 -> 3 * dim (SwiGLU ~ 8/3 rounded)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.n_heads == 0
+        return self.dim // self.n_heads
+
+    @property
+    def hidden(self) -> int:
+        return self.mlp_hidden if self.mlp_hidden else 3 * self.dim
+
+    def param_count(self) -> int:
+        d, h, v = self.dim, self.hidden, self.vocab_size
+        per_layer = 4 * d * d + 3 * d * h + 2 * d
+        return v * d + self.n_layers * per_layer + d  # tied head
+
+
+# The "large" model: 8 layers so the real engine can run 1/2/4/8-stage
+# pipelines; paper-scale 7/14/21-stage numbers come from the simulator.
+TARGET = ModelConfig(name="target", dim=128, n_layers=8, n_heads=4)
+
+# The draft model: cheaper and less accurate, co-trained on the same corpus.
+DRAFT = ModelConfig(name="draft", dim=64, n_layers=2, n_heads=2)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 96
+    batch_size: int = 8
+    steps: int = 240
+    lr: float = 3e-3
+    warmup: int = 20
+    seed: int = 1234
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+TRAIN = TrainConfig()
+
+
+def config_lines(cfg: ModelConfig) -> str:
+    """key=value dump consumed by rust/src/config/artifact.rs."""
+    return "".join(
+        f"{k}={v}\n"
+        for k, v in [
+            ("name", cfg.name),
+            ("dim", cfg.dim),
+            ("n_layers", cfg.n_layers),
+            ("n_heads", cfg.n_heads),
+            ("head_dim", cfg.head_dim),
+            ("mlp_hidden", cfg.hidden),
+            ("vocab_size", cfg.vocab_size),
+            ("rope_theta", cfg.rope_theta),
+            ("norm_eps", cfg.norm_eps),
+            ("width_cap", WIDTH_CAP),
+            ("tree_cap", TREE_CAP),
+            ("past_cap", PAST_CAP),
+            ("prefill_chunk", PREFILL_CHUNK),
+        ]
+    )

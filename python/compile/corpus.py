@@ -1,0 +1,180 @@
+"""Deterministic 6-domain build corpus.
+
+Each domain is the synthetic analogue of one of the paper's six evaluation
+datasets (DESIGN.md §inventory row 13). The domains are generated from small
+template banks with a seeded RNG; they differ in template entropy, which after
+training yields the cross-dataset spread of draft-model hit rates the paper's
+Figs. 5-7 vary over (code/math are highly predictable, trivia/qa less so).
+
+Domain -> paper dataset:
+  code      -> HumanEval        (programming)
+  math      -> GSM8K            (mathematics)
+  qa        -> MMLU             (general QA)
+  translate -> WMT14 DE-EN      (translation)
+  trivia    -> TriviaQA-Wiki    (knowledge)
+  reading   -> DROP             (reading comprehension)
+"""
+
+import random
+
+DOMAINS = ["code", "math", "qa", "translate", "trivia", "reading"]
+
+_NAMES = ["alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi"]
+_NOUNS = ["apples", "books", "coins", "cards", "stones", "shells", "pens", "cups"]
+_VERBS = ["add", "scale", "double", "square", "negate", "half", "shift", "clamp"]
+_CITIES = ["paris", "london", "berlin", "madrid", "rome", "vienna", "oslo", "dublin"]
+_RIVERS = ["nile", "amazon", "danube", "volga", "rhine", "seine", "thames", "ebro"]
+_COLORS = ["red", "green", "blue", "amber", "violet", "teal", "gray", "white"]
+_DE_EN = [
+    ("der hund", "the dog"), ("die katze", "the cat"), ("das haus", "the house"),
+    ("der baum", "the tree"), ("das buch", "the book"), ("die stadt", "the city"),
+    ("der fluss", "the river"), ("das wasser", "the water"),
+    ("die sonne", "the sun"), ("der mond", "the moon"),
+]
+_ADJ_DE_EN = [("gross", "big"), ("klein", "small"), ("alt", "old"), ("neu", "new"),
+              ("rot", "red"), ("blau", "blue")]
+
+
+def gen_code(rng: random.Random) -> str:
+    f = rng.choice(_VERBS)
+    a = rng.randint(1, 9)
+    b = rng.randint(1, 9)
+    body = {
+        "add": f"return x + {a}",
+        "scale": f"return x * {a}",
+        "double": "return x * 2",
+        "square": "return x * x",
+        "negate": "return -x",
+        "half": "return x // 2",
+        "shift": f"return x + {a} - {b}",
+        "clamp": f"return min(x, {a * 10})",
+    }[f]
+    return (
+        f"def {f}_{a}(x):\n"
+        f"    \"\"\"{f} the value x.\"\"\"\n"
+        f"    {body}\n"
+        f"\n"
+        f"assert {f}_{a}({b}) is not None\n"
+    )
+
+
+def gen_math(rng: random.Random) -> str:
+    n = rng.choice(_NAMES)
+    o = rng.choice(_NOUNS)
+    a = rng.randint(2, 20)
+    b = rng.randint(2, 20)
+    kind = rng.randrange(3)
+    if kind == 0:
+        return (
+            f"question: {n} has {a} {o} and buys {b} more. how many {o} now?\n"
+            f"step: {a} + {b} = {a + b}\n"
+            f"answer: {a + b}\n"
+        )
+    if kind == 1:
+        hi, lo = max(a, b), min(a, b)
+        return (
+            f"question: {n} had {hi} {o} and gave away {lo}. how many left?\n"
+            f"step: {hi} - {lo} = {hi - lo}\n"
+            f"answer: {hi - lo}\n"
+        )
+    return (
+        f"question: {n} packs {a} boxes with {b} {o} each. total {o}?\n"
+        f"step: {a} * {b} = {a * b}\n"
+        f"answer: {a * b}\n"
+    )
+
+
+def gen_qa(rng: random.Random) -> str:
+    c = rng.choice(_CITIES)
+    k = rng.choice(_COLORS)
+    kind = rng.randrange(3)
+    if kind == 0:
+        return (
+            f"q: which option names a european city? (a) {k} (b) {c}\n"
+            f"a: (b) {c}\n"
+        )
+    if kind == 1:
+        return f"q: is {c} a city? options: yes, no\na: yes\n"
+    return f"q: what kind of word is {k}? options: color, city\na: color\n"
+
+
+def gen_translate(rng: random.Random) -> str:
+    de, en = rng.choice(_DE_EN)
+    ad, ae = rng.choice(_ADJ_DE_EN)
+    return (
+        f"de: {de} ist {ad}.\n"
+        f"en: {en} is {ae}.\n"
+    )
+
+
+def gen_trivia(rng: random.Random) -> str:
+    r = rng.choice(_RIVERS)
+    c = rng.choice(_CITIES)
+    length = rng.randint(2, 9) * 100
+    kind = rng.randrange(2)
+    if kind == 0:
+        return (
+            f"fact: the {r} is a river about {length} km long.\n"
+            f"q: what is the {r}?\na: a river\n"
+        )
+    return (
+        f"fact: {c} lies near the {r}.\n"
+        f"q: which river is near {c}?\na: the {r}\n"
+    )
+
+
+def gen_reading(rng: random.Random) -> str:
+    n1, n2 = rng.sample(_NAMES, 2)
+    o = rng.choice(_NOUNS)
+    a = rng.randint(3, 30)
+    b = rng.randint(3, 30)
+    return (
+        f"passage: {n1} collected {a} {o} in the morning. "
+        f"{n2} collected {b} {o} in the evening.\n"
+        f"q: how many {o} in total?\n"
+        f"a: {a} + {b} = {a + b}\n"
+    )
+
+
+GENERATORS = {
+    "code": gen_code,
+    "math": gen_math,
+    "qa": gen_qa,
+    "translate": gen_translate,
+    "trivia": gen_trivia,
+    "reading": gen_reading,
+}
+
+
+def build_corpus(seed: int = 7, samples_per_domain: int = 400) -> str:
+    """~300 KB deterministic mixed-domain training text."""
+    rng = random.Random(seed)
+    chunks = []
+    for i in range(samples_per_domain):
+        for dom in DOMAINS:
+            chunks.append(f"<{dom}>\n")
+            chunks.append(GENERATORS[dom](random.Random(rng.randrange(1 << 30))))
+    return "".join(chunks)
+
+
+def domain_prompts(domain: str, n: int, seed: int = 99) -> list[str]:
+    """Evaluation prompts: the leading part of a fresh sample (the model must
+    complete the rest), one list per domain — the analogue of sampling 10
+    items from each paper dataset."""
+    rng = random.Random(seed * 1000 + DOMAINS.index(domain))
+    prompts = []
+    for _ in range(n):
+        text = GENERATORS[domain](random.Random(rng.randrange(1 << 30)))
+        # cut roughly in half at a line boundary so there is real continuation
+        lines = text.split("\n")
+        keep = max(1, len(lines) // 2)
+        prompts.append(f"<{domain}>\n" + "\n".join(lines[:keep]) + "\n")
+    return prompts
+
+
+if __name__ == "__main__":
+    c = build_corpus()
+    print(f"corpus: {len(c)} chars")
+    for d in DOMAINS:
+        print(f"--- {d} ---")
+        print(domain_prompts(d, 1)[0])

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the dynamic tree attention kernel (paper Alg. 1).
+
+Computes, per head:
+    S_past    = Q K_past^T  / sqrt(hd)   + past_bias   (valid-length mask)
+    S_tree    = Q K_tree^T  / sqrt(hd)   + tree_bias   (ancestor mask)
+    S         = softmax([S_past ; S_tree])             (joint normalization)
+    A         = S_past V_past + S_tree V_tree
+
+The tree cache already contains the current block appended at ``tree_len``
+(append happens in L2 before the kernel — "cache.append" of Alg. 1), and the
+biases are additive 0/-1e9 masks computed host-side, so the kernel itself is
+branch-free and static-shaped.
+"""
+
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, past_k, past_v, tree_k, tree_v, past_bias, tree_bias):
+    """All arrays are per-head slices:
+
+    q:         [W, hd]
+    past_k/v:  [P, hd]
+    tree_k/v:  [T, hd]
+    past_bias: [W, P]  additive (0 valid / -1e9 invalid)
+    tree_bias: [W, T]  additive ancestor mask
+    returns    [W, hd]
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=q.dtype))
+    s_past = q @ past_k.T * scale + past_bias
+    s_tree = q @ tree_k.T * scale + tree_bias
+    s = jnp.concatenate([s_past, s_tree], axis=-1)
+    s = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    s = s / jnp.sum(s, axis=-1, keepdims=True)
+    p = past_k.shape[0]
+    return s[:, :p] @ past_v + s[:, p:] @ tree_v
+
+
+def tree_attention_ref_mha(q, past_k, past_v, tree_k, tree_v, past_bias, tree_bias):
+    """Multi-head variant: q [H, W, hd], caches [H, P/T, hd], biases shared
+    across heads ([W, P], [W, T])."""
+    import jax
+
+    return jax.vmap(
+        tree_attention_ref, in_axes=(0, 0, 0, 0, 0, None, None)
+    )(q, past_k, past_v, tree_k, tree_v, past_bias, tree_bias)

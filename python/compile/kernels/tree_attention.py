@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: dynamic tree attention (paper Alg. 1).
+
+TPU adaptation of the paper's GPU algorithm (DESIGN.md §Hardware-Adaptation):
+
+* grid = (n_heads,): one program instance per head; every per-head operand
+  tile fits comfortably in VMEM at the paper-relevant sizes
+  (W<=128, P<=512, T<=288, hd<=64 -> < 1 MiB of f32 per instance, ~6% of a
+  16 MiB VMEM), so no inner K-loop is needed and both matmuls map to single
+  MXU passes.
+* the two segments (model cache ‖ tree cache) are reduced with a shared
+  online-softmax accumulator instead of being concatenated — the paper's
+  "compute S_past and S_predict separately" trick; on TPU this avoids
+  materializing [W, P+T] in VMEM.
+* masks arrive as dense additive bias tiles (0 / -1e9) resident in VMEM; no
+  gather/scatter — the dynamic tree structure is encoded entirely in the
+  bias, which the Rust coordinator rebuilds incrementally per timestep.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom calls, and interpret mode traces the kernel into plain HLO so the
+whole stage artifact stays loadable by the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tree_attn_kernel(q_ref, pk_ref, pv_ref, tk_ref, tv_ref,
+                      pb_ref, tb_ref, o_ref):
+    """One head. Shapes: q [W,hd], pk/pv [P,hd], tk/tv [T,hd],
+    pb [W,P], tb [W,T], o [W,hd]."""
+    q = q_ref[...]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=q.dtype))
+
+    # --- segment 1: model-level (past) cache ---
+    s_past = jnp.dot(q, pk_ref[...].T) * scale + pb_ref[...]
+    m1 = jnp.max(s_past, axis=-1, keepdims=True)                   # [W,1]
+    e1 = jnp.exp(s_past - m1)
+    d1 = jnp.sum(e1, axis=-1, keepdims=True)
+    a1 = jnp.dot(e1, pv_ref[...])                                  # [W,hd]
+
+    # --- segment 2: tree-level cache (current block already appended) ---
+    s_tree = jnp.dot(q, tk_ref[...].T) * scale + tb_ref[...]
+    m2 = jnp.max(s_tree, axis=-1, keepdims=True)
+    e2 = jnp.exp(s_tree - m2)
+    d2 = jnp.sum(e2, axis=-1, keepdims=True)
+    a2 = jnp.dot(e2, tv_ref[...])
+
+    # --- online-softmax merge of the two segments ---
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    denom = d1 * c1 + d2 * c2
+    o_ref[...] = (a1 * c1 + a2 * c2) / denom
+
+
+@functools.partial(jax.named_call, name="tree_attention")
+def tree_attention(q, past_k, past_v, tree_k, tree_v, past_bias, tree_bias):
+    """Multi-head dynamic tree attention.
+
+    q:         [H, W, hd]
+    past_k/v:  [H, P, hd]
+    tree_k/v:  [H, T, hd]  (current block appended at tree_len by caller)
+    past_bias: [W, P]      additive validity mask
+    tree_bias: [W, T]      additive ancestor mask
+    returns:   [H, W, hd]
+    """
+    h, w, hd = q.shape
+    p = past_k.shape[1]
+    t = tree_k.shape[1]
+
+    kernel = pl.pallas_call(
+        _tree_attn_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((None, w, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, p, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, p, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((w, p), lambda i: (0, 0)),
+            pl.BlockSpec((w, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, w, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, hd), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+    return kernel(q, past_k, past_v, tree_k, tree_v, past_bias, tree_bias)
+
+
+def vmem_estimate_bytes(w, p, t, hd, dtype_bytes=4):
+    """Per-instance VMEM footprint estimate (DESIGN/EXPERIMENTS §Perf):
+    operand tiles + both score tiles + accumulators."""
+    tiles = (
+        w * hd            # q
+        + 2 * p * hd      # pk, pv
+        + 2 * t * hd      # tk, tv
+        + w * p + w * t   # biases
+        + w * p + w * t   # score/exp temporaries
+        + 3 * w * hd      # a1, a2, out
+    )
+    return tiles * dtype_bytes

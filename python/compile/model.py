@@ -1,0 +1,220 @@
+"""L2: LLaMA-style decoder with dynamic tree attention (paper §3.4.2).
+
+Two families of entry points:
+
+* build-time training path: ``forward_train`` — plain causal attention over
+  [B, S] token batches (never exported);
+* serve-time path, lowered to HLO by ``aot.py`` and driven from Rust:
+    - ``embed_step``   tokens[W]                      -> h[W, d]
+    - ``layer_step``   h + two-level KV + masks       -> h', new-block KV
+    - ``head_step``    h[W, d]                        -> logits[W, V]
+
+``layer_step`` implements one transformer block around the L1 Pallas tree
+attention kernel. The same program serves decode *and* prefill: prefill is a
+decode call with an empty tree cache and a causal in-block bias (the current
+chunk plays the role of the "predicted" segment of Alg. 1).
+
+Weight argument order is fixed and mirrored in rust/src/model/stage.rs:
+  attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, NEG_INF
+from .kernels.tree_attention import tree_attention
+from .kernels.ref import tree_attention_ref_mha
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    """LLaMA-style init; head tied to the embedding."""
+    d, hdim, v = cfg.dim, cfg.hidden, cfg.vocab_size
+    keys = jax.random.split(key, 1 + cfg.n_layers)
+    scale = d ** -0.5
+    params = {
+        "emb": jax.random.normal(keys[0], (v, d), jnp.float32) * scale,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[1 + li], 7)
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": jax.random.normal(ks[0], (d, d), jnp.float32) * scale,
+                "wk": jax.random.normal(ks[1], (d, d), jnp.float32) * scale,
+                "wv": jax.random.normal(ks[2], (d, d), jnp.float32) * scale,
+                "wo": jax.random.normal(ks[3], (d, d), jnp.float32) * scale,
+                "mlp_norm": jnp.ones((d,), jnp.float32),
+                "w_gate": jax.random.normal(ks[4], (d, hdim), jnp.float32) * scale,
+                "w_up": jax.random.normal(ks[5], (d, hdim), jnp.float32) * scale,
+                "w_down": jax.random.normal(ks[6], (hdim, d), jnp.float32)
+                * hdim ** -0.5,
+            }
+        )
+    return params
+
+
+LAYER_WEIGHT_ORDER = (
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+)
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope(x, pos, theta):
+    """x: [..., T, H, hd] or [T, H, hd]; pos: [T] int32 absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., :, None] * freqs  # [T, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [T, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def swiglu(h, w_gate, w_up, w_down):
+    return (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+
+# ---------------------------------------------------------------------------
+# serve-time entry points (exported by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def embed_step(emb, tokens):
+    """tokens: [W] i32 -> [W, d]."""
+    return (jnp.take(emb, tokens, axis=0),)
+
+
+def head_step(final_norm, emb, h, eps):
+    """h: [W, d] -> logits [W, V] (tied head)."""
+    return (rms_norm(h, final_norm, eps) @ emb.T,)
+
+
+def layer_step(
+    attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down,
+    h, past_k, past_v, tree_k, tree_v, tree_len, pos, past_bias, tree_bias,
+    *, cfg: ModelConfig, use_kernel: bool = True,
+):
+    """One transformer block with dynamic tree attention.
+
+    h:          [W, d]      hidden states of the newest tree layer
+    past_k/v:   [H, P, hd]  model-level cache (accepted tokens), masked by
+                            past_bias
+    tree_k/v:   [H, T, hd]  tree-level cache WITHOUT the current block; the
+                            block is appended at tree_len inside (Alg. 1
+                            "cache.append")
+    tree_len:   i32 scalar  number of valid entries already in the tree cache
+    pos:        [W] i32     absolute RoPE positions of the new nodes
+    past_bias:  [W, P] f32  additive validity mask
+    tree_bias:  [W, T] f32  additive ancestor mask (covers appended block too)
+
+    Returns (h_out [W, d], k_new [H, W, hd], v_new [H, W, hd]); the caller
+    owns both caches and appends k_new/v_new to its tree-level cache.
+    """
+    nh, hd, eps = cfg.n_heads, cfg.head_dim, cfg.norm_eps
+    w = h.shape[0]
+
+    x = rms_norm(h, attn_norm, eps)
+    q = (x @ wq).reshape(w, nh, hd)
+    k = (x @ wk).reshape(w, nh, hd)
+    v = (x @ wv).reshape(w, nh, hd)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    k_new = jnp.transpose(k, (1, 0, 2))  # [H, W, hd]
+    v_new = jnp.transpose(v, (1, 0, 2))
+
+    # Alg. 1 line 3: append the block to the tree-level cache at tree_len.
+    tk = jax.lax.dynamic_update_slice(tree_k, k_new, (0, tree_len, 0))
+    tv = jax.lax.dynamic_update_slice(tree_v, v_new, (0, tree_len, 0))
+
+    qh = jnp.transpose(q, (1, 0, 2))  # [H, W, hd]
+    attn_fn = tree_attention if use_kernel else tree_attention_ref_mha
+    a = attn_fn(qh, past_k, past_v, tk, tv, past_bias, tree_bias)  # [H, W, hd]
+    a = jnp.transpose(a, (1, 0, 2)).reshape(w, nh * hd)
+    h = h + a @ wo
+
+    x = rms_norm(h, mlp_norm, eps)
+    h = h + swiglu(x, w_gate, w_up, w_down)
+    return h, k_new, v_new
+
+# ---------------------------------------------------------------------------
+# bias helpers (mirrored in rust/src/model/bias.rs; python versions are used
+# by tests and by the hit-rate measurement path in aot.py)
+# ---------------------------------------------------------------------------
+
+
+def past_bias_for(past_len, w, p):
+    """[W, P]: column j valid iff j < past_len."""
+    cols = jnp.arange(p)[None, :]
+    row = jnp.where(cols < past_len, 0.0, NEG_INF).astype(jnp.float32)
+    return jnp.broadcast_to(row, (w, p))
+
+
+def causal_block_bias(valid, tree_len, w, t):
+    """Prefill-mode tree bias: block rows attend causally to the block
+    appended at tree_len; rows >= valid are fully masked except self."""
+    rows = jnp.arange(w)[:, None]
+    cols = jnp.arange(t)[None, :]
+    in_block = (cols >= tree_len) & (cols < tree_len + w)
+    causal = cols - tree_len <= rows
+    ok = in_block & causal & (rows < valid)
+    self_ok = in_block & (cols - tree_len == rows)
+    return jnp.where(ok | self_ok, 0.0, NEG_INF).astype(jnp.float32)
+
+# ---------------------------------------------------------------------------
+# training path (build-time only)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, tokens, cfg: ModelConfig):
+    """tokens: [B, S] i32 -> logits [B, S, V]; plain causal attention."""
+    b, s = tokens.shape
+    nh, hd, eps = cfg.n_heads, cfg.head_dim, cfg.norm_eps
+    h = jnp.take(params["emb"], tokens, axis=0)  # [B, S, d]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    causal = jnp.where(
+        jnp.arange(s)[None, :] <= jnp.arange(s)[:, None], 0.0, NEG_INF
+    ).astype(jnp.float32)
+    for lp in params["layers"]:
+        x = rms_norm(h, lp["attn_norm"], eps)
+        q = (x @ lp["wq"]).reshape(b, s, nh, hd)
+        k = (x @ lp["wk"]).reshape(b, s, nh, hd)
+        v = (x @ lp["wv"]).reshape(b, s, nh, hd)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        q = jnp.transpose(q, (0, 2, 1, 3))  # [B, H, S, hd]
+        k = jnp.transpose(k, (0, 2, 1, 3))
+        v = jnp.transpose(v, (0, 2, 1, 3))
+        sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        sc = sc + causal[None, None]
+        a = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", a, v)
+        o = jnp.transpose(o, (0, 2, 1, 3)).reshape(b, s, nh * hd)
+        h = h + o @ lp["wo"]
+        x = rms_norm(h, lp["mlp_norm"], eps)
+        h = h + swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"])
+    h = rms_norm(h, params["final_norm"], eps)
+    return h @ params["emb"].T
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Next-token cross-entropy, PAD positions excluded."""
+    logits = forward_train(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

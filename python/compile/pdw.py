@@ -1,0 +1,66 @@
+"""pdweights: tiny binary tensor container shared with rust/src/weights/.
+
+Layout (little-endian):
+  magic   b"PDW1"
+  u32     tensor count
+  per tensor:
+    u16   name length, name bytes (utf-8)
+    u8    ndim
+    u32   dims[ndim]
+    f32   data (row-major)
+"""
+
+import struct
+
+import numpy as np
+
+
+def write_pdw(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"PDW1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_pdw(path: str) -> dict[str, np.ndarray]:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"PDW1", "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out[name] = data
+    return out
+
+
+def flatten_params(params) -> dict:
+    """model.init_params pytree -> flat {name: array} with stable names:
+    emb, final_norm, layers.<i>.<field>"""
+    flat = {"emb": params["emb"], "final_norm": params["final_norm"]}
+    for i, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            flat[f"layers.{i}.{k}"] = v
+    return flat
+
+
+def unflatten_params(flat: dict, n_layers: int):
+    params = {"emb": flat["emb"], "final_norm": flat["final_norm"], "layers": []}
+    for i in range(n_layers):
+        params["layers"].append(
+            {k.split(".")[-1]: v for k, v in flat.items()
+             if k.startswith(f"layers.{i}.")}
+        )
+    return params

@@ -1,0 +1,45 @@
+"""Byte-level tokenizer shared with rust/src/tokenizer/mod.rs.
+
+ids: 0=PAD 1=BOS 2=EOS 3='\n', 4..98 = printable ASCII 32..126.
+Anything outside the alphabet maps to ' '.
+"""
+
+from .configs import (
+    BOS_ID,
+    EOS_ID,
+    FIRST_PRINTABLE,
+    LAST_PRINTABLE,
+    NEWLINE_ID,
+    PAD_ID,
+)
+
+_OFFSET = 4
+
+
+def encode(text: str, bos: bool = False, eos: bool = False) -> list[int]:
+    ids = [BOS_ID] if bos else []
+    for ch in text:
+        if ch == "\n":
+            ids.append(NEWLINE_ID)
+        else:
+            o = ord(ch)
+            if FIRST_PRINTABLE <= o <= LAST_PRINTABLE:
+                ids.append(o - FIRST_PRINTABLE + _OFFSET)
+            else:
+                ids.append(ord(" ") - FIRST_PRINTABLE + _OFFSET)
+    if eos:
+        ids.append(EOS_ID)
+    return ids
+
+
+def decode(ids) -> str:
+    out = []
+    for i in ids:
+        i = int(i)
+        if i == NEWLINE_ID:
+            out.append("\n")
+        elif i >= _OFFSET and i < _OFFSET + (LAST_PRINTABLE - FIRST_PRINTABLE + 1):
+            out.append(chr(i - _OFFSET + FIRST_PRINTABLE))
+        elif i in (PAD_ID, BOS_ID, EOS_ID):
+            continue
+    return "".join(out)

@@ -1,0 +1,119 @@
+"""Build-time training of the target and draft models on the 6-domain corpus.
+
+This runs exactly once, inside ``make artifacts`` — never at serve time. Both
+models are trained on the same token stream so the draft acquires the
+substantial top-k agreement with the target that speculative decoding needs
+(the paper gets this for free from the LLaMA family; we get it from
+co-training — DESIGN.md §Model scale substitution).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, tokenizer
+from .configs import DRAFT, TARGET, TRAIN, ModelConfig, TrainConfig
+from .model import init_params, loss_fn
+from .pdw import flatten_params, write_pdw
+
+
+def token_stream(seed: int = 7) -> np.ndarray:
+    text = corpus.build_corpus(seed=seed)
+    return np.asarray(tokenizer.encode(text), dtype=np.int32)
+
+
+def sample_batch(stream: np.ndarray, rng: np.random.Generator,
+                 batch: int, seq: int) -> np.ndarray:
+    starts = rng.integers(0, len(stream) - seq - 1, size=batch)
+    return np.stack([stream[s : s + seq + 1] for s in starts])
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def make_update(cfg: ModelConfig, tc: TrainConfig):
+    @jax.jit
+    def update(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+        # global-norm clip
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+        scale = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g, opt["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * g * g, opt["v"], grads)
+        mhat = jax.tree_util.tree_map(lambda mm: mm / (1 - b1 ** t), m)
+        vhat = jax.tree_util.tree_map(lambda vv: vv / (1 - b2 ** t), v)
+        params = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - lr * (mm / (jnp.sqrt(vv) + eps)
+                                        + tc.weight_decay * p),
+            params, mhat, vhat)
+        return params, {"m": m, "v": v, "t": t}, loss
+
+    return update
+
+
+def lr_at(step: int, tc: TrainConfig) -> float:
+    if step < tc.warmup:
+        return tc.lr * (step + 1) / tc.warmup
+    frac = (step - tc.warmup) / max(1, tc.steps - tc.warmup)
+    return tc.lr * 0.5 * (1.0 + float(np.cos(np.pi * frac)))
+
+
+def train_model(cfg: ModelConfig, tc: TrainConfig, stream: np.ndarray,
+                log=print) -> tuple[dict, list[float]]:
+    key = jax.random.PRNGKey(tc.seed)
+    params = init_params(cfg, key)
+    opt = adam_init(params)
+    update = make_update(cfg, tc)
+    rng = np.random.default_rng(tc.seed + 1)
+    losses = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        tokens = jnp.asarray(sample_batch(stream, rng, tc.batch_size, tc.seq_len))
+        params, opt, loss = update(params, opt, tokens, lr_at(step, tc))
+        losses.append(float(loss))
+        if step % 20 == 0 or step == tc.steps - 1:
+            log(f"[train {cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    return params, losses
+
+
+def train_all(out_dir: str = "../artifacts", steps: int | None = None,
+              log=print) -> None:
+    import os
+
+    tc = TRAIN if steps is None else TrainConfig(
+        steps=steps, seq_len=TRAIN.seq_len, batch_size=TRAIN.batch_size,
+        lr=TRAIN.lr, warmup=min(TRAIN.warmup, max(1, steps // 4)),
+        seed=TRAIN.seed)
+    os.makedirs(out_dir, exist_ok=True)
+    stream = token_stream()
+    log(f"corpus: {len(stream)} tokens")
+    logs = []
+    for cfg in (TARGET, DRAFT):
+        params, losses = train_model(cfg, tc, stream, log=log)
+        write_pdw(os.path.join(out_dir, f"weights_{cfg.name}.pdw"),
+                  flatten_params(jax.device_get(params)))
+        logs.append((cfg.name, losses))
+    with open(os.path.join(out_dir, "train_log.txt"), "w") as f:
+        for name, losses in logs:
+            f.write(f"# {name}\n")
+            for i, l in enumerate(losses):
+                f.write(f"{i} {l:.6f}\n")
+
+
+if __name__ == "__main__":
+    import sys
+
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else None
+    train_all(steps=steps)

@@ -1,0 +1,73 @@
+"""AOT path: HLO text emission, pdw roundtrip, tokenizer parity, corpus
+determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus, tokenizer
+from compile.aot import lower_embed, lower_head, lower_layer, to_hlo_text
+from compile.configs import DRAFT, VOCAB_SIZE, config_lines
+from compile.pdw import flatten_params, read_pdw, unflatten_params, write_pdw
+from compile.model import init_params
+
+
+def test_hlo_text_emits_and_mentions_entry(tmp_path):
+    text = to_hlo_text(lower_embed(DRAFT))
+    assert "ENTRY" in text
+    assert len(text) > 200
+
+
+def test_layer_lowering_has_expected_arity():
+    text = to_hlo_text(lower_layer(DRAFT))
+    # 9 weights + 9 runtime args
+    assert "ENTRY" in text
+    assert text.count("parameter(") >= 18
+
+
+def test_head_lowering():
+    assert "ENTRY" in to_hlo_text(lower_head(DRAFT))
+
+
+def test_pdw_roundtrip(tmp_path):
+    params = init_params(DRAFT, jax.random.PRNGKey(0))
+    flat = flatten_params(jax.device_get(params))
+    path = os.path.join(tmp_path, "w.pdw")
+    write_pdw(path, flat)
+    back = read_pdw(path)
+    assert set(back) == set(flat)
+    for k in flat:
+        np.testing.assert_array_equal(back[k], np.asarray(flat[k], np.float32))
+    re = unflatten_params(back, DRAFT.n_layers)
+    assert len(re["layers"]) == DRAFT.n_layers
+
+
+def test_tokenizer_roundtrip_and_vocab():
+    text = "hello World 42!\n<math> x*y"
+    ids = tokenizer.encode(text)
+    assert tokenizer.decode(ids) == text
+    assert max(ids) < VOCAB_SIZE
+
+
+def test_corpus_is_deterministic_and_covers_domains():
+    a = corpus.build_corpus(seed=7, samples_per_domain=5)
+    b = corpus.build_corpus(seed=7, samples_per_domain=5)
+    assert a == b
+    for d in corpus.DOMAINS:
+        assert f"<{d}>" in a
+
+
+def test_domain_prompts_are_prefixes():
+    for d in corpus.DOMAINS:
+        ps = corpus.domain_prompts(d, 3)
+        assert len(ps) == 3
+        assert all(p.startswith(f"<{d}>") for p in ps)
+
+
+def test_config_lines_parse_back():
+    lines = config_lines(DRAFT)
+    kv = dict(l.split("=") for l in lines.strip().split("\n"))
+    assert int(kv["dim"]) == DRAFT.dim
+    assert int(kv["n_layers"]) == DRAFT.n_layers

@@ -1,0 +1,107 @@
+"""L1 correctness: the Pallas dynamic tree attention kernel vs the pure-jnp
+oracle, swept over shapes/dtypes with hypothesis — the CORE correctness
+signal for the compute hot-spot."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import tree_attention_ref_mha
+from compile.kernels.tree_attention import tree_attention, vmem_estimate_bytes
+
+NEG = -1e9
+
+
+def rand_inputs(rng, h, w, p, t, hd, past_valid, tree_mode):
+    q = rng.standard_normal((h, w, hd)).astype(np.float32)
+    pk = rng.standard_normal((h, p, hd)).astype(np.float32)
+    pv = rng.standard_normal((h, p, hd)).astype(np.float32)
+    tk = rng.standard_normal((h, t, hd)).astype(np.float32)
+    tv = rng.standard_normal((h, t, hd)).astype(np.float32)
+    pb = np.full((w, p), NEG, np.float32)
+    pb[:, :past_valid] = 0.0
+    tb = np.full((w, t), NEG, np.float32)
+    if tree_mode == "causal":
+        for i in range(w):
+            tb[i, : i + 1] = 0.0
+    elif tree_mode == "random":
+        mask = rng.random((w, t)) < 0.4
+        mask[:, 0] = True  # at least one valid column per row
+        tb[mask] = 0.0
+    else:  # self-only
+        for i in range(min(w, t)):
+            tb[i, i] = 0.0
+        tb[:, 0] = 0.0
+    return q, pk, pv, tk, tv, pb, tb
+
+
+@pytest.mark.parametrize("past_valid", [0, 1, 7, 16])
+@pytest.mark.parametrize("tree_mode", ["causal", "random", "self"])
+def test_kernel_matches_oracle_basic(past_valid, tree_mode):
+    rng = np.random.default_rng(42)
+    args = rand_inputs(rng, 2, 8, 16, 12, 32, past_valid, tree_mode)
+    out = np.asarray(tree_attention(*args))
+    ref = np.asarray(tree_attention_ref_mha(*args))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    w=st.sampled_from([1, 4, 8, 32]),
+    p=st.sampled_from([8, 64, 512]),
+    t=st.sampled_from([8, 32, 288]),
+    hd=st.sampled_from([8, 32]),
+    past_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_oracle_hypothesis(h, w, p, t, hd, past_frac, seed):
+    rng = np.random.default_rng(seed)
+    past_valid = int(past_frac * p)
+    args = rand_inputs(rng, h, w, p, t, hd, past_valid, "random")
+    out = np.asarray(tree_attention(*args))
+    ref = np.asarray(tree_attention_ref_mha(*args))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_rows_are_convex_combinations():
+    """With softmax weights, each output row lies in the convex hull of the
+    value vectors -> norm bounded by the max value norm."""
+    rng = np.random.default_rng(7)
+    args = rand_inputs(rng, 2, 8, 32, 16, 16, 8, "causal")
+    out = np.asarray(tree_attention(*args))
+    vmax = max(np.abs(args[2]).max(), np.abs(args[4]).max())
+    assert np.abs(out).max() <= vmax + 1e-5
+
+
+def test_kernel_ignores_masked_tree_values():
+    """Fully-masked tree columns must not influence the output."""
+    rng = np.random.default_rng(3)
+    a1 = rand_inputs(rng, 1, 4, 8, 8, 8, 4, "causal")
+    a2 = list(a1)
+    tk, tv, tb = a2[3].copy(), a2[4].copy(), a2[6]
+    masked_cols = np.all(tb == NEG, axis=0)
+    tk[:, masked_cols] = 999.0
+    tv[:, masked_cols] = -999.0
+    a2[3], a2[4] = tk, tv
+    np.testing.assert_allclose(
+        np.asarray(tree_attention(*a1)), np.asarray(tree_attention(*a2)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_inside_jit():
+    rng = np.random.default_rng(5)
+    args = rand_inputs(rng, 2, 8, 16, 12, 32, 4, "causal")
+    f = jax.jit(tree_attention)
+    out = np.asarray(f(*args))
+    ref = np.asarray(tree_attention_ref_mha(*args))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_estimate_within_budget():
+    """DESIGN §Hardware-Adaptation: per-instance tiles fit VMEM (16 MiB)."""
+    b = vmem_estimate_bytes(w=128, p=512, t=288, hd=64)
+    assert b < 16 * 1024 * 1024

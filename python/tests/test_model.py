@@ -1,0 +1,112 @@
+"""L2 correctness: the exported entry points compose to the training-path
+forward; bias helpers; stage splitting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import DRAFT, TARGET
+from compile.model import (
+    LAYER_WEIGHT_ORDER, causal_block_bias, embed_step, forward_train,
+    head_step, init_params, layer_step, loss_fn, past_bias_for,
+)
+
+
+@pytest.fixture(scope="module")
+def draft_params():
+    return init_params(DRAFT, jax.random.PRNGKey(0))
+
+
+def run_prefill_via_layer_step(params, cfg, seq, P=64, T=32, use_kernel=True):
+    S = len(seq)
+    H, hd = cfg.n_heads, cfg.head_dim
+    h = embed_step(params["emb"], jnp.asarray(seq, jnp.int32))[0]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    pb = past_bias_for(0, S, P)
+    tb = causal_block_bias(S, 0, S, T)
+    for lp in params["layers"]:
+        args = [lp[n] for n in LAYER_WEIGHT_ORDER]
+        h, _, _ = layer_step(
+            *args, h, jnp.zeros((H, P, hd)), jnp.zeros((H, P, hd)),
+            jnp.zeros((H, T, hd)), jnp.zeros((H, T, hd)),
+            jnp.int32(0), pos, pb, tb, cfg=cfg, use_kernel=use_kernel)
+    return head_step(params["final_norm"], params["emb"], h, cfg.norm_eps)[0]
+
+
+def test_layer_step_composes_to_forward_train(draft_params):
+    seq = list(np.random.default_rng(0).integers(4, 90, 12))
+    logits = run_prefill_via_layer_step(draft_params, DRAFT, seq)
+    ref = forward_train(draft_params, jnp.asarray([seq], jnp.int32), DRAFT)[0]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_and_ref_paths_agree(draft_params):
+    seq = list(np.random.default_rng(1).integers(4, 90, 8))
+    a = run_prefill_via_layer_step(draft_params, DRAFT, seq, use_kernel=True)
+    b = run_prefill_via_layer_step(draft_params, DRAFT, seq, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_incremental_decode_matches_full_context(draft_params):
+    """Two-level cache semantics: prefill N then decode 1 via tree block ==
+    full forward over N+1."""
+    cfg = DRAFT
+    rng = np.random.default_rng(2)
+    seq = list(rng.integers(4, 90, 9))
+    P, T = 64, 16
+    H, hd = cfg.n_heads, cfg.head_dim
+    # prefill first 8, capture past kv
+    h = embed_step(draft_params["emb"], jnp.asarray(seq[:8], jnp.int32))[0]
+    pos = jnp.arange(8, dtype=jnp.int32)
+    pb = past_bias_for(0, 8, P)
+    tb = causal_block_bias(8, 0, 8, T)
+    past = []
+    for lp in draft_params["layers"]:
+        args = [lp[n] for n in LAYER_WEIGHT_ORDER]
+        h, k_new, v_new = layer_step(
+            *args, h, jnp.zeros((H, P, hd)), jnp.zeros((H, P, hd)),
+            jnp.zeros((H, T, hd)), jnp.zeros((H, T, hd)),
+            jnp.int32(0), pos, pb, tb, cfg=cfg)
+        pk = jnp.zeros((H, P, hd)).at[:, :8].set(k_new[:, :8])
+        pv = jnp.zeros((H, P, hd)).at[:, :8].set(v_new[:, :8])
+        past.append((pk, pv))
+    # decode token 9 as a width-1 tree block
+    h = embed_step(draft_params["emb"], jnp.asarray([seq[8]], jnp.int32))[0][:1]
+    pos1 = jnp.asarray([8], jnp.int32)
+    pb1 = past_bias_for(8, 1, P)
+    tb1 = causal_block_bias(1, 0, 1, T)
+    for lp, (pk, pv) in zip(draft_params["layers"], past):
+        args = [lp[n] for n in LAYER_WEIGHT_ORDER]
+        h, _, _ = layer_step(
+            *args, h, pk, pv,
+            jnp.zeros((H, T, hd)), jnp.zeros((H, T, hd)),
+            jnp.int32(0), pos1, pb1, tb1, cfg=cfg)
+    logits = head_step(draft_params["final_norm"], draft_params["emb"], h,
+                       cfg.norm_eps)[0][0]
+    ref = forward_train(draft_params, jnp.asarray([seq], jnp.int32), cfg)[0, -1]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bias_shapes():
+    assert past_bias_for(3, 4, 8).shape == (4, 8)
+    assert causal_block_bias(2, 1, 4, 8).shape == (4, 8)
+
+
+def test_loss_decreases_on_tiny_batch(draft_params):
+    """One gradient step on a repeated batch reduces loss."""
+    toks = jnp.asarray(np.random.default_rng(3).integers(4, 90, (2, 24)),
+                       jnp.int32)
+    l0, g = jax.value_and_grad(loss_fn)(draft_params, toks, DRAFT)
+    p1 = jax.tree_util.tree_map(lambda p, gg: p - 0.05 * gg, draft_params, g)
+    l1 = loss_fn(p1, toks, DRAFT)
+    assert float(l1) < float(l0)
+
+
+def test_param_counts_match_config():
+    for cfg in (TARGET, DRAFT):
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+        assert n == cfg.param_count()

@@ -1,0 +1,79 @@
+//! Fig. 3 reproduction: draft top-k agreement with the target's greedy
+//! output, for long vs short contexts — the "scale effect" motivating the
+//! dynamic tree (§3.3). Measured on the real artifact-backed models.
+
+use pipedec::bench_support::{banner, emit};
+use pipedec::kvcache::TwoLevelCache;
+use pipedec::metrics::Table;
+use pipedec::model::{bias, ModelHandles};
+use pipedec::runtime::Runtime;
+use pipedec::util::top_k_indices;
+use pipedec::workload::Workload;
+
+/// Greedy-decode `steps` tokens with the target while recording, at each
+/// step, whether the draft's top-k contains the target's choice.
+fn agreement(rt: &Runtime, target: &mut ModelHandles, draft: &mut ModelHandles,
+             prompt: &str, steps: usize, ks: &[usize]) -> Vec<f64> {
+    let tc = target.cfg.clone();
+    let dc = draft.cfg.clone();
+    let mut tcache = TwoLevelCache::new(tc.n_layers, tc.n_heads, tc.head_dim,
+        tc.past_cap, tc.tree_cap);
+    let mut dcache = TwoLevelCache::new(dc.n_layers, dc.n_heads, dc.head_dim,
+        dc.past_cap, dc.tree_cap);
+    let ids = pipedec::tokenizer::encode(prompt);
+    let tl = target.full_prefill(rt, &mut tcache, &ids).unwrap();
+    let dl = draft.full_prefill(rt, &mut dcache, &ids).unwrap();
+    let mut hits = vec![0usize; ks.len()];
+    let mut t_next = top_k_indices(&tl, 1)[0] as u32;
+    let mut d_logits = dl;
+    for _ in 0..steps {
+        // draft ranks candidates for the SAME context prefix
+        let d_rank = top_k_indices(&d_logits, *ks.last().unwrap());
+        for (i, &k) in ks.iter().enumerate() {
+            if d_rank[..k.min(d_rank.len())].contains(&(t_next as usize)) {
+                hits[i] += 1;
+            }
+        }
+        // advance both models by the target's token
+        let step = |m: &mut ModelHandles, cache: &mut TwoLevelCache, tok: u32| {
+            let c = m.cfg.clone();
+            let mut pos = vec![0i32; c.width_cap];
+            pos[0] = cache.past_len() as i32;
+            let tb = bias::pad_tree_bias_rows(Vec::new(), 0, 0, c.width_cap, c.tree_cap);
+            let lg = m.full_forward_tree_block(rt, cache, &[tok], &pos, &tb).unwrap();
+            cache.promote_root_to_past().unwrap();
+            cache.compact_tree(&[]);
+            lg[..c.vocab_size].to_vec()
+        };
+        let t_logits = step(target, &mut tcache, t_next);
+        d_logits = step(draft, &mut dcache, t_next);
+        t_next = top_k_indices(&t_logits, 1)[0] as u32;
+    }
+    hits.iter().map(|&h| h as f64 / steps as f64).collect()
+}
+
+fn main() {
+    banner("fig3_topk_accuracy",
+        "draft top-k agreement vs k, short and long context (paper Fig. 3)");
+    let dir = pipedec::artifacts_dir();
+    if !dir.join("target_config.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts`"); return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut target = ModelHandles::load(&rt, &dir, "target").unwrap();
+    let mut draft = ModelHandles::load(&rt, &dir, "draft").unwrap();
+    let ks = [1usize, 2, 4, 8, 16];
+
+    let short = Workload::load(&dir, "math").unwrap().prompts[0].clone();
+    let long: String = Workload::load_all(&dir).unwrap().iter()
+        .flat_map(|w| w.prompts.iter().take(2).cloned()).collect::<Vec<_>>().join("");
+
+    let mut table = Table::new(&["context", "k=1", "k=2", "k=4", "k=8", "k=16"]);
+    for (name, prompt, steps) in [("short", short.as_str(), 48), ("long", &long[..long.len().min(400)], 48)] {
+        let acc = agreement(&rt, &mut target, &mut draft, prompt, steps, &ks);
+        table.row(std::iter::once(name.to_string())
+            .chain(acc.iter().map(|a| format!("{a:.3}"))).collect());
+    }
+    emit("fig3_topk_accuracy", &table);
+    println!("expected shape: monotone in k, top-8 close to 1 (paper Fig. 3)");
+}

@@ -1,0 +1,74 @@
+//! Fig. 4 reproduction: average latency + prediction accuracy vs tree width
+//! {8,16,32,64,128} and max children {2,4,8,16}.
+//!
+//! Widths within the artifact cap (<=32) run on the REAL engine and their
+//! measured accept rates calibrate the simulator hit model; wider points
+//! extrapolate on the paper-scale 14-stage cluster (DESIGN.md).
+
+use pipedec::bench_support::{banner, emit};
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecEngine;
+use pipedec::metrics::Table;
+use pipedec::sim::{simulate_pipedec, ClusterSpec, HitModel};
+use pipedec::util::XorShiftRng;
+use pipedec::workload::Workload;
+
+fn main() {
+    banner("fig4_tree_params",
+        "latency + accuracy vs tree width / max children (paper Fig. 4)");
+    let dir = pipedec::artifacts_dir();
+    if !dir.join("target_config.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts`"); return;
+    }
+    let prompt = Workload::load(&dir, "math").unwrap().prompts[0].clone();
+    let cluster = ClusterSpec::paper(14);
+
+    // --- width sweep at c = 8 ---
+    let mut wt = Table::new(&["width", "engine accept", "engine ms/tok (modeled)",
+        "sim-14 ms/tok", "source"]);
+    let mut cal: Option<HitModel> = None;
+    for w in [8usize, 16, 32, 64, 128] {
+        if w <= 32 {
+            let cfg = EngineConfig {
+                stages: 8,
+                tree: TreeConfig { max_width: w, max_children: 8, max_depth: 12 },
+                max_new_tokens: 24,
+                ..EngineConfig::default()
+            };
+            let mut e = PipeDecEngine::new(&dir, cfg).unwrap();
+            let r = e.decode(&prompt).unwrap();
+            let hm = HitModel::calibrated(r.accept_rate(), w, 8);
+            if w == 32 { cal = Some(hm); }
+            let mut rng = XorShiftRng::new(3);
+            let sim = simulate_pipedec(&cluster, w, 8, &hm, 256, &mut rng);
+            wt.row(vec![w.to_string(), format!("{:.2}", r.accept_rate()),
+                format!("{:.1}", 1e3 * r.modeled_s_per_token()),
+                format!("{:.1}", 1e3 * sim.s_per_token()), "real+sim".into()]);
+        } else {
+            let hm = cal.unwrap_or_else(|| HitModel::default_for("math"));
+            let mut rng = XorShiftRng::new(3);
+            let sim = simulate_pipedec(&cluster, w, 8, &hm, 256, &mut rng);
+            wt.row(vec![w.to_string(), "-".into(), "-".into(),
+                format!("{:.1}", 1e3 * sim.s_per_token()), "sim".into()]);
+        }
+    }
+    emit("fig4_width", &wt);
+
+    // --- children sweep at w = 8 (real engine) ---
+    let mut ct = Table::new(&["children", "accept", "ms/tok (modeled)"]);
+    for c in [2usize, 4, 8, 16] {
+        let cfg = EngineConfig {
+            stages: 8,
+            tree: TreeConfig { max_width: 8, max_children: c, max_depth: 12 },
+            max_new_tokens: 24,
+            ..EngineConfig::default()
+        };
+        let mut e = PipeDecEngine::new(&dir, cfg).unwrap();
+        let r = e.decode(&prompt).unwrap();
+        ct.row(vec![c.to_string(), format!("{:.2}", r.accept_rate()),
+            format!("{:.1}", 1e3 * r.modeled_s_per_token())]);
+    }
+    emit("fig4_children", &ct);
+    println!("expected shape: accuracy rises with both axes; latency dips then \
+rises with width (verification cost); paper picks w=32, c=16");
+}

@@ -1,0 +1,133 @@
+//! L3 hot-path micro-benchmarks (EXPERIMENTS.md §Perf): dynamic-tree
+//! update/prune, bit-mask algebra, scheduler dispatch, literal construction
+//! and artifact execution overhead.
+
+use pipedec::bench_support::{banner, emit, fmt_s, time_fn};
+use pipedec::config::TreeConfig;
+use pipedec::metrics::Table;
+use pipedec::schedule::CentralScheduler;
+use pipedec::tree::PredictionTree;
+use pipedec::util::XorShiftRng;
+
+fn grown_tree(width: usize, depth: usize) -> PredictionTree {
+    let cfg = TreeConfig { max_width: width, max_children: 8, max_depth: depth + 2 };
+    let mut t = PredictionTree::new(cfg, width * depth + 8, 0, 0);
+    let mut rng = XorShiftRng::new(1);
+    for _ in 0..depth {
+        let f = t.frontier().len();
+        let cands: Vec<Vec<(u32, f32)>> = (0..f)
+            .map(|_| (0..8).map(|j| (rng.below(120) as u32 + 4, 1.0 / (j + 2) as f32)).collect())
+            .collect();
+        t.expand_layer(&cands);
+    }
+    t
+}
+
+fn main() {
+    banner("micro_hotpath", "L3 substrate micro-benchmarks");
+    let mut table = Table::new(&["op", "config", "mean", "p99"]);
+
+    // tree expansion at paper-scale widths
+    for (w, d) in [(32usize, 14usize), (128, 21)] {
+        let s = time_fn(2, 10, || {
+            std::hint::black_box(grown_tree(w, d));
+        });
+        table.row(vec!["tree build".into(), format!("w={w} d={d}"),
+            fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+    }
+
+    // prune on a grown tree
+    for (w, d) in [(32usize, 14usize), (128, 21)] {
+        let proto = grown_tree(w, d);
+        let hit_tok = proto.token(proto.layer_range(1).start);
+        let s = time_fn(2, 20, || {
+            let mut t = proto.clone();
+            std::hint::black_box(t.prune(hit_tok));
+        });
+        table.row(vec!["tree prune".into(), format!("w={w} d={d}"),
+            fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+    }
+
+    // bias-row construction (per-timestep hot path)
+    {
+        let t = grown_tree(32, 9);
+        let frontier: Vec<usize> = t.frontier().collect();
+        let s = time_fn(5, 50, || {
+            std::hint::black_box(t.bias_rows(&frontier, 288, -1e9));
+        });
+        table.row(vec!["bias rows".into(), "w=32 cap=288".into(),
+            fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+    }
+
+    // scheduler dispatch throughput
+    {
+        let s = time_fn(2, 20, || {
+            let mut sch = CentralScheduler::new();
+            let mut live = Vec::new();
+            for i in 0..200usize {
+                sch.submit(i % 16, (i + 1) % 16, 1024, 0);
+                for d in sch.tick() { live.push(d.task.id); }
+                if live.len() > 4 {
+                    let id = live.remove(0);
+                    sch.notify_finish(id);
+                    for d in sch.tick() { live.push(d.task.id); }
+                }
+            }
+            while let Some(id) = live.pop() {
+                sch.notify_finish(id);
+                sch.tick();
+            }
+        });
+        table.row(vec!["scheduler".into(), "200 transfers".into(),
+            fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+    }
+
+    // runtime: literal construction + layer execution (needs artifacts)
+    let dir = pipedec::artifacts_dir();
+    if dir.join("target_config.txt").exists() {
+        use pipedec::kvcache::TwoLevelCache;
+        use pipedec::model::{bias, ModelHandles};
+        use pipedec::runtime::Runtime;
+        let rt = Runtime::cpu().unwrap();
+        let mut m = ModelHandles::load(&rt, &dir, "target").unwrap();
+        let c = m.cfg.clone();
+        let cache = TwoLevelCache::new(1, c.n_heads, c.head_dim, c.past_cap, c.tree_cap);
+        let hidden = vec![0.1f32; c.width_cap * c.dim];
+        let pos = vec![0i32; c.width_cap];
+        let pb = bias::past_bias(0, c.width_cap, c.past_cap);
+        let tb = bias::pad_tree_bias_rows(Vec::new(), 0, 0, c.width_cap, c.tree_cap);
+        let s = time_fn(3, 20, || {
+            std::hint::black_box(
+                m.layer_forward(&rt, 0, 0, &cache, &hidden, &pos, &pb, &tb).unwrap(),
+            );
+        });
+        table.row(vec!["layer exec".into(), format!("W={} d={}", c.width_cap, c.dim),
+            fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+
+        // narrow width-bucket variant (§Perf iteration 3)
+        let mut m8 = ModelHandles::load_with_width(&rt, &dir, "target", 8).unwrap();
+        let c8 = m8.cfg.clone();
+        let hidden8 = vec![0.1f32; c8.width_cap * c8.dim];
+        let pos8 = vec![0i32; c8.width_cap];
+        let pb8 = bias::past_bias(0, c8.width_cap, c8.past_cap);
+        let tb8 = bias::pad_tree_bias_rows(Vec::new(), 0, 0, c8.width_cap, c8.tree_cap);
+        let s = time_fn(3, 20, || {
+            std::hint::black_box(
+                m8.layer_forward(&rt, 0, 0, &cache, &hidden8, &pos8, &pb8, &tb8).unwrap(),
+            );
+        });
+        table.row(vec!["layer exec".into(), format!("W={} d={}", c8.width_cap, c8.dim),
+            fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+
+        let s = time_fn(3, 20, || {
+            std::hint::black_box(
+                pipedec::runtime::lit_f32(cache.past_k_layer(0),
+                    &[c.n_heads, c.past_cap, c.head_dim]).unwrap(),
+            );
+        });
+        table.row(vec!["literal build".into(), "past_k [4,512,32]".into(),
+            fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+    }
+
+    emit("micro_hotpath", &table);
+}

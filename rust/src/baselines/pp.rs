@@ -1,0 +1,175 @@
+//! PP baseline: standard pipeline parallelism (paper §4.2, "Pipeline
+//! Parallelism"). One token decodes per full pipeline traversal — the
+//! latency the paper's §2.4 motivation formula describes:
+//! `sum_i T_c,i + sum_i T_t,i` per token.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::BaselineResult;
+use crate::config::EngineConfig;
+use crate::coordinator::sampling::{select_token, Sampling};
+use crate::kvcache::TwoLevelCache;
+use crate::metrics::Metrics;
+use crate::model::{bias, ModelHandles};
+use crate::runtime::Runtime;
+use crate::tokenizer;
+use crate::transport::{LinkModel, LinkStats};
+use crate::util::XorShiftRng;
+
+pub struct PpEngine {
+    rt: Runtime,
+    target: ModelHandles,
+    pub cfg: EngineConfig,
+    layers_per_stage: usize,
+    stage_caches: Vec<TwoLevelCache>,
+    link: LinkModel,
+    pub link_stats: LinkStats,
+    rng: XorShiftRng,
+}
+
+impl PpEngine {
+    pub fn new(artifact_dir: &Path, cfg: EngineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let rt = Runtime::cpu()?;
+        // PP decodes width-1 blocks: the narrow artifact bucket suffices
+        let target = ModelHandles::load_with_width(&rt, artifact_dir, "target", 1)?;
+        anyhow::ensure!(
+            target.cfg.n_layers % cfg.stages == 0,
+            "stages must divide layer count"
+        );
+        let layers_per_stage = target.cfg.n_layers / cfg.stages;
+        let tc = &target.cfg;
+        let stage_caches = (0..cfg.stages)
+            .map(|_| {
+                TwoLevelCache::new(
+                    layers_per_stage,
+                    tc.n_heads,
+                    tc.head_dim,
+                    tc.past_cap,
+                    tc.tree_cap,
+                )
+            })
+            .collect();
+        let rng = XorShiftRng::new(cfg.seed);
+        Ok(Self {
+            rt,
+            target,
+            cfg,
+            layers_per_stage,
+            stage_caches,
+            link: LinkModel::pcie_p2p(),
+            link_stats: LinkStats::default(),
+            rng,
+        })
+    }
+
+    fn layer_range(&self, s: usize) -> std::ops::Range<usize> {
+        s * self.layers_per_stage..(s + 1) * self.layers_per_stage
+    }
+
+    pub fn decode(&mut self, prompt: &str) -> Result<BaselineResult> {
+        let sampling = Sampling::from_engine(&self.cfg);
+        for c in &mut self.stage_caches {
+            c.reset();
+        }
+        self.rng = XorShiftRng::new(self.cfg.seed);
+        let mut metrics = Metrics::new();
+        let tc = self.target.cfg.clone();
+        let w = tc.width_cap;
+
+        let max_prompt = tc.past_cap - self.cfg.max_new_tokens - 2;
+        let mut ids = tokenizer::encode(prompt);
+        ids.truncate(max_prompt);
+        anyhow::ensure!(!ids.is_empty(), "empty prompt");
+
+        // prefill
+        let mut last_h = None;
+        let mut last_count = 0;
+        for chunk in ids.chunks(w) {
+            let start = self.stage_caches[0].past_len();
+            let mut h = self.target.embed(&self.rt, chunk)?;
+            for s in 0..self.cfg.stages {
+                let r = self.layer_range(s);
+                h = self.target.prefill_chunk(
+                    &self.rt,
+                    r,
+                    &mut self.stage_caches[s],
+                    h,
+                    chunk.len(),
+                    start,
+                )?;
+            }
+            last_count = chunk.len();
+            last_h = Some(h);
+        }
+        let logits = self.target.head(&self.rt, &last_h.context("empty prompt")?)?;
+        let v = tc.vocab_size;
+        let mut next = select_token(
+            &logits[(last_count - 1) * v..last_count * v],
+            &sampling,
+            &mut self.rng,
+        );
+
+        // decode: one token per full pipeline pass
+        let wall0 = Instant::now();
+        let mut modeled_s = 0.0;
+        let mut decoded = vec![next];
+        let d_bytes = tc.dim * w * 4;
+        while decoded.len() < self.cfg.max_new_tokens && next != tokenizer::EOS_ID {
+            let pos0 = self.stage_caches[0].past_len();
+            let mut pos = vec![0i32; w];
+            pos[0] = pos0 as i32;
+            let tree_bias = bias::pad_tree_bias_rows(Vec::new(), 0, 0, w, tc.tree_cap);
+
+            let mut h = self.target.embed(&self.rt, &[next])?;
+            let mut token_s = 0.0;
+            for s in 0..self.cfg.stages {
+                let t0 = Instant::now();
+                let past_bias =
+                    bias::past_bias(self.stage_caches[s].past_len(), w, tc.past_cap);
+                let r = self.layer_range(s);
+                h = self.target.stage_forward(
+                    &self.rt,
+                    r,
+                    &mut self.stage_caches[s],
+                    h,
+                    1,
+                    &pos,
+                    &past_bias,
+                    &tree_bias,
+                )?;
+                token_s += t0.elapsed().as_secs_f64();
+                if s + 1 < self.cfg.stages {
+                    let t = self.link.transfer_time(d_bytes);
+                    self.link_stats.record(d_bytes, &self.link);
+                    token_s += t;
+                }
+            }
+            let t0 = Instant::now();
+            let logits = self.target.head(&self.rt, &h)?;
+            token_s += t0.elapsed().as_secs_f64();
+            next = select_token(&logits[..v], &sampling, &mut self.rng);
+            decoded.push(next);
+            for c in &mut self.stage_caches {
+                c.promote_root_to_past()?;
+                c.clear_tree();
+            }
+            // PP latency = sum of stage computes + sum of transfers
+            modeled_s += token_s;
+            metrics.record("token_s", token_s);
+        }
+
+        metrics.incr("tokens", decoded.len() as u64);
+        Ok(BaselineResult {
+            text: tokenizer::decode(&decoded),
+            tokens: decoded,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            modeled_s,
+            accepted_per_round: 0.0,
+            metrics,
+        })
+    }
+}

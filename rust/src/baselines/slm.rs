@@ -1,0 +1,97 @@
+//! SLM baseline (paper §4.2): the small model served standalone on a single
+//! device — the paper's "LLaMA 3.1-8B on one L40" comparison point, here the
+//! draft-size model running plain autoregressive decoding.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::BaselineResult;
+use crate::config::EngineConfig;
+use crate::coordinator::sampling::{select_token, Sampling};
+use crate::kvcache::TwoLevelCache;
+use crate::metrics::Metrics;
+use crate::model::{bias, ModelHandles};
+use crate::runtime::Runtime;
+use crate::tokenizer;
+use crate::util::XorShiftRng;
+
+pub struct SlmEngine {
+    rt: Runtime,
+    model: ModelHandles,
+    pub cfg: EngineConfig,
+    cache: TwoLevelCache,
+    rng: XorShiftRng,
+}
+
+impl SlmEngine {
+    pub fn new(artifact_dir: &Path, cfg: EngineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let rt = Runtime::cpu()?;
+        // width-1 autoregression: the narrow artifact bucket suffices
+        let model = ModelHandles::load_with_width(&rt, artifact_dir, "draft", 1)?;
+        let c = &model.cfg;
+        let cache =
+            TwoLevelCache::new(c.n_layers, c.n_heads, c.head_dim, c.past_cap, c.tree_cap);
+        let rng = XorShiftRng::new(cfg.seed);
+        Ok(Self {
+            rt,
+            model,
+            cfg,
+            cache,
+            rng,
+        })
+    }
+
+    pub fn decode(&mut self, prompt: &str) -> Result<BaselineResult> {
+        let sampling = Sampling::from_engine(&self.cfg);
+        self.cache.reset();
+        self.rng = XorShiftRng::new(self.cfg.seed);
+        let mut metrics = Metrics::new();
+        let c = self.model.cfg.clone();
+
+        let max_prompt = c.past_cap - self.cfg.max_new_tokens - 2;
+        let mut ids = tokenizer::encode(prompt);
+        ids.truncate(max_prompt);
+        anyhow::ensure!(!ids.is_empty(), "empty prompt");
+
+        let logits = self.model.full_prefill(&self.rt, &mut self.cache, &ids)?;
+        let mut next = select_token(&logits, &sampling, &mut self.rng);
+
+        let wall0 = Instant::now();
+        let mut modeled_s = 0.0;
+        let mut decoded = vec![next];
+        while decoded.len() < self.cfg.max_new_tokens && next != tokenizer::EOS_ID {
+            let t0 = Instant::now();
+            let mut pos = vec![0i32; c.width_cap];
+            pos[0] = self.cache.past_len() as i32;
+            let tree_bias =
+                bias::pad_tree_bias_rows(Vec::new(), 0, 0, c.width_cap, c.tree_cap);
+            let logits = self.model.full_forward_tree_block(
+                &self.rt,
+                &mut self.cache,
+                &[next],
+                &pos,
+                &tree_bias,
+            )?;
+            next = select_token(&logits[..c.vocab_size], &sampling, &mut self.rng);
+            decoded.push(next);
+            self.cache.promote_root_to_past()?;
+            self.cache.compact_tree(&[]);
+            let dt = t0.elapsed().as_secs_f64();
+            modeled_s += dt;
+            metrics.record("token_s", dt);
+        }
+
+        metrics.incr("tokens", decoded.len() as u64);
+        Ok(BaselineResult {
+            text: tokenizer::decode(&decoded),
+            tokens: decoded,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            modeled_s,
+            accepted_per_round: 0.0,
+            metrics,
+        })
+    }
+}

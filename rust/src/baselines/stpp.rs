@@ -1,0 +1,301 @@
+//! STPP baseline: Static Tree Pipeline Parallelism (paper §4.2), inspired by
+//! SpecInfer's tree-based speculative decoding.
+//!
+//! Per round: the draft model builds a *complete* prediction tree serially
+//! (depth-by-depth, all layers before verification), bounded by the single
+//! verification batch the hardware admits — here the artifact `width_cap`,
+//! exactly the "limited number of tree nodes" constraint the paper contrasts
+//! PipeDec against. The whole tree then traverses the pipeline once; the
+//! target's logits are walked from the root along matching children, and
+//! the longest accepted path is committed.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::BaselineResult;
+use crate::config::EngineConfig;
+use crate::coordinator::sampling::{select_token, top_candidates, Sampling};
+use crate::kvcache::TwoLevelCache;
+use crate::metrics::Metrics;
+use crate::model::{bias, ModelHandles};
+use crate::runtime::Runtime;
+use crate::tokenizer;
+use crate::transport::{LinkModel, LinkStats};
+use crate::tree::PredictionTree;
+use crate::util::XorShiftRng;
+
+pub struct StppEngine {
+    rt: Runtime,
+    target: ModelHandles,
+    draft: ModelHandles,
+    pub cfg: EngineConfig,
+    layers_per_stage: usize,
+    stage_caches: Vec<TwoLevelCache>,
+    draft_cache: TwoLevelCache,
+    link: LinkModel,
+    pub link_stats: LinkStats,
+    rng: XorShiftRng,
+    /// Static tree depth per round.
+    pub tree_depth: usize,
+}
+
+impl StppEngine {
+    pub fn new(artifact_dir: &Path, mut cfg: EngineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let rt = Runtime::cpu()?;
+        let target = ModelHandles::load(&rt, artifact_dir, "target")?;
+        let draft = ModelHandles::load(&rt, artifact_dir, "draft")?;
+        anyhow::ensure!(
+            target.cfg.n_layers % cfg.stages == 0,
+            "stages must divide layer count"
+        );
+        // the whole static tree must fit one verification batch
+        cfg.tree.max_width = cfg.tree.max_width.min(target.cfg.width_cap / 2);
+        let layers_per_stage = target.cfg.n_layers / cfg.stages;
+        let tc = &target.cfg;
+        let stage_caches = (0..cfg.stages)
+            .map(|_| {
+                TwoLevelCache::new(
+                    layers_per_stage,
+                    tc.n_heads,
+                    tc.head_dim,
+                    tc.past_cap,
+                    tc.tree_cap,
+                )
+            })
+            .collect();
+        let dc = &draft.cfg;
+        let draft_cache =
+            TwoLevelCache::new(dc.n_layers, dc.n_heads, dc.head_dim, dc.past_cap, dc.tree_cap);
+        let rng = XorShiftRng::new(cfg.seed);
+        let tree_depth = cfg.tree.max_depth.min(6);
+        Ok(Self {
+            rt,
+            target,
+            draft,
+            cfg,
+            layers_per_stage,
+            stage_caches,
+            draft_cache,
+            link: LinkModel::pcie_p2p(),
+            link_stats: LinkStats::default(),
+            rng,
+            tree_depth,
+        })
+    }
+
+    fn layer_range(&self, s: usize) -> std::ops::Range<usize> {
+        s * self.layers_per_stage..(s + 1) * self.layers_per_stage
+    }
+
+    /// Build the static tree for one round with serial draft inference.
+    /// Returns (tree, draft seconds).
+    fn build_static_tree(&mut self, root: u32, root_pos: usize) -> Result<(PredictionTree, f64)> {
+        let dc = self.draft.cfg.clone();
+        let budget = self.target.cfg.width_cap; // one verification batch
+        let mut tree = PredictionTree::new(self.cfg.tree, budget, root, root_pos);
+        self.draft_cache.clear_tree();
+        let mut secs = 0.0;
+        for _ in 0..self.tree_depth {
+            let start = self.draft_cache.tree_len();
+            if start >= tree.len() || tree.len() >= budget {
+                break;
+            }
+            let t0 = Instant::now();
+            let indices: Vec<usize> = (start..tree.len()).collect();
+            let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
+            let mut pos = vec![0i32; dc.width_cap];
+            for (r, &i) in indices.iter().enumerate() {
+                pos[r] = tree.position_of(i) as i32;
+            }
+            let rows = tree.bias_rows(&indices, dc.tree_cap, bias::NEG);
+            let tree_bias = bias::pad_tree_bias_rows(
+                rows,
+                indices.len(),
+                start,
+                dc.width_cap,
+                dc.tree_cap,
+            );
+            let logits = self.draft.full_forward_tree_block(
+                &self.rt,
+                &mut self.draft_cache,
+                &tokens,
+                &pos,
+                &tree_bias,
+            )?;
+            let v = dc.vocab_size;
+            let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
+                .map(|r| top_candidates(&logits[r * v..(r + 1) * v], self.cfg.tree.max_children))
+                .collect();
+            let added = tree.expand_layer(&cands);
+            secs += t0.elapsed().as_secs_f64();
+            if added.is_empty() {
+                break;
+            }
+        }
+        Ok((tree, secs))
+    }
+
+    pub fn decode(&mut self, prompt: &str) -> Result<BaselineResult> {
+        let sampling = Sampling::from_engine(&self.cfg);
+        for c in &mut self.stage_caches {
+            c.reset();
+        }
+        self.draft_cache.reset();
+        self.rng = XorShiftRng::new(self.cfg.seed);
+        let mut metrics = Metrics::new();
+        let tc = self.target.cfg.clone();
+        let (w, v) = (tc.width_cap, tc.vocab_size);
+
+        let max_prompt = tc.past_cap - self.cfg.max_new_tokens - 2;
+        let mut ids = tokenizer::encode(prompt);
+        ids.truncate(max_prompt);
+        anyhow::ensure!(!ids.is_empty(), "empty prompt");
+
+        // target prefill
+        let mut last_h = None;
+        let mut last_count = 0;
+        for chunk in ids.chunks(w) {
+            let start = self.stage_caches[0].past_len();
+            let mut h = self.target.embed(&self.rt, chunk)?;
+            for s in 0..self.cfg.stages {
+                let r = self.layer_range(s);
+                h = self.target.prefill_chunk(
+                    &self.rt,
+                    r,
+                    &mut self.stage_caches[s],
+                    h,
+                    chunk.len(),
+                    start,
+                )?;
+            }
+            last_count = chunk.len();
+            last_h = Some(h);
+        }
+        let logits = self.target.head(&self.rt, &last_h.context("empty prompt")?)?;
+        let mut next = select_token(
+            &logits[(last_count - 1) * v..last_count * v],
+            &sampling,
+            &mut self.rng,
+        );
+        self.draft.full_prefill(&self.rt, &mut self.draft_cache, &ids)?;
+
+        let wall0 = Instant::now();
+        let mut modeled_s = 0.0;
+        let mut decoded = vec![next];
+        let mut rounds = 0u64;
+        let d_bytes = tc.dim * w * 4;
+
+        while decoded.len() < self.cfg.max_new_tokens && next != tokenizer::EOS_ID {
+            rounds += 1;
+            let root_pos = self.stage_caches[0].past_len();
+            let (tree, draft_s) = self.build_static_tree(next, root_pos)?;
+            modeled_s += draft_s;
+
+            // one pipeline verification pass over the whole tree
+            let count = tree.len();
+            let all: Vec<usize> = (0..count).collect();
+            let tokens: Vec<u32> = tree.tokens().to_vec();
+            let mut pos = vec![0i32; w];
+            for (r, &i) in all.iter().enumerate() {
+                pos[r] = tree.position_of(i) as i32;
+            }
+            let rows = tree.bias_rows(&all, tc.tree_cap, bias::NEG);
+            let tree_bias = bias::pad_tree_bias_rows(rows, count, 0, w, tc.tree_cap);
+
+            let mut h = self.target.embed(&self.rt, &tokens)?;
+            let mut pass_s = 0.0;
+            for s in 0..self.cfg.stages {
+                let t0 = Instant::now();
+                let past_bias =
+                    bias::past_bias(self.stage_caches[s].past_len(), w, tc.past_cap);
+                let r = self.layer_range(s);
+                h = self.target.stage_forward(
+                    &self.rt,
+                    r,
+                    &mut self.stage_caches[s],
+                    h,
+                    count,
+                    &pos,
+                    &past_bias,
+                    &tree_bias,
+                )?;
+                pass_s += t0.elapsed().as_secs_f64();
+                if s + 1 < self.cfg.stages {
+                    pass_s += self.link.transfer_time(d_bytes);
+                    self.link_stats.record(d_bytes, &self.link);
+                }
+            }
+            let t0 = Instant::now();
+            let logits = self.target.head(&self.rt, &h)?;
+            pass_s += t0.elapsed().as_secs_f64();
+            modeled_s += pass_s;
+
+            // walk the tree from the root along matching children
+            let mut node = 0usize;
+            let mut path = vec![0usize];
+            let mut accepted = Vec::new();
+            loop {
+                let x = select_token(&logits[node * v..(node + 1) * v], &sampling, &mut self.rng);
+                accepted.push(x);
+                if decoded.len() + accepted.len() >= self.cfg.max_new_tokens
+                    || x == tokenizer::EOS_ID
+                {
+                    break;
+                }
+                match tree.children_of(node).into_iter().find(|&c| tree.token(c) == x) {
+                    Some(child) => {
+                        path.push(child);
+                        node = child;
+                    }
+                    None => break,
+                }
+            }
+
+            // promote the accepted path's KV (root + matched children)
+            for c in &mut self.stage_caches {
+                for &slot in &path {
+                    c.promote_slot_to_past(slot)?;
+                }
+                c.clear_tree();
+            }
+            // keep the draft's model-level cache in sync: replay accepted
+            // tokens through the draft as width-1 prefill-style blocks
+            {
+                let dc = self.draft.cfg.clone();
+                self.draft_cache.clear_tree();
+                for (k, &_slot) in path.iter().enumerate() {
+                    let tok = if k == 0 { next } else { accepted[k - 1] };
+                    let start = self.draft_cache.past_len();
+                    let hlocal = self.draft.embed(&self.rt, &[tok])?;
+                    self.draft.prefill_chunk(
+                        &self.rt,
+                        0..dc.n_layers,
+                        &mut self.draft_cache,
+                        hlocal,
+                        1,
+                        start,
+                    )?;
+                }
+            }
+
+            metrics.record("accepted_per_round", accepted.len() as f64);
+            decoded.extend(&accepted);
+            next = *accepted.last().unwrap();
+        }
+
+        let acc = metrics.summary("accepted_per_round").mean();
+        metrics.incr("rounds", rounds);
+        metrics.incr("tokens", decoded.len() as u64);
+        Ok(BaselineResult {
+            text: tokenizer::decode(&decoded),
+            tokens: decoded,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            modeled_s,
+            accepted_per_round: acc,
+            metrics,
+        })
+    }
+}

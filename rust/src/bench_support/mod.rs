@@ -1,0 +1,72 @@
+//! Bench harness (the offline vendor set has no criterion): timed runs with
+//! warmup, summary stats, and paper-style table output. Every
+//! `rust/benches/fig*.rs` binary uses this module and writes its rows to
+//! `bench_results/*.csv` alongside stdout.
+
+use std::time::Instant;
+
+use crate::metrics::Table;
+use crate::util::Summary;
+
+/// Time `f` `iters` times after `warmup` discarded runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(samples)
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, what: &str) {
+    println!("\n=== {name} ===");
+    println!("{what}\n");
+}
+
+/// Print and persist a results table.
+pub fn emit(name: &str, table: &Table) {
+    println!("{}", table.render());
+    let path = std::path::Path::new("bench_results").join(format!("{name}.csv"));
+    if let Err(e) = table.write_csv(&path) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("[csv] {}", path.display());
+    }
+}
+
+/// Format seconds as adaptive ms/us.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_collects_iters() {
+        let s = time_fn(1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.len(), 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(0.002).ends_with("ms"));
+        assert!(fmt_s(2e-5).ends_with("us"));
+    }
+}

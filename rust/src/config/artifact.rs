@@ -1,0 +1,102 @@
+//! Parser for `artifacts/{target,draft}_config.txt` — the static-shape
+//! contract emitted by `python/compile/aot.py` (`configs.config_lines`).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Model + shape-cap description for one artifact set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub mlp_hidden: usize,
+    pub vocab_size: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub width_cap: usize,
+    pub tree_cap: usize,
+    pub past_cap: usize,
+    pub prefill_chunk: usize,
+}
+
+impl ArtifactConfig {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("bad line: {line}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).with_context(|| format!("missing key {k}"))
+        };
+        let usz = |k: &str| -> Result<usize> { Ok(get(k)?.parse::<usize>()?) };
+        let flt = |k: &str| -> Result<f64> { Ok(get(k)?.parse::<f64>()?) };
+        let cfg = Self {
+            name: get("name")?.clone(),
+            dim: usz("dim")?,
+            n_layers: usz("n_layers")?,
+            n_heads: usz("n_heads")?,
+            head_dim: usz("head_dim")?,
+            mlp_hidden: usz("mlp_hidden")?,
+            vocab_size: usz("vocab_size")?,
+            rope_theta: flt("rope_theta")?,
+            norm_eps: flt("norm_eps")?,
+            width_cap: usz("width_cap")?,
+            tree_cap: usz("tree_cap")?,
+            past_cap: usz("past_cap")?,
+            prefill_chunk: usz("prefill_chunk")?,
+        };
+        anyhow::ensure!(
+            cfg.dim == cfg.n_heads * cfg.head_dim,
+            "dim != n_heads * head_dim"
+        );
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name=target\ndim=128\nn_layers=8\nn_heads=4\n\
+        head_dim=32\nmlp_hidden=384\nvocab_size=128\nrope_theta=10000.0\n\
+        norm_eps=1e-05\nwidth_cap=32\ntree_cap=288\npast_cap=512\n\
+        prefill_chunk=32\n";
+
+    #[test]
+    fn parse_sample() {
+        let c = ArtifactConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.name, "target");
+        assert_eq!(c.dim, 128);
+        assert_eq!(c.n_layers, 8);
+        assert_eq!(c.head_dim, 32);
+        assert_eq!(c.tree_cap, 288);
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        assert!(ArtifactConfig::parse("name=x\ndim=8\n").is_err());
+    }
+
+    #[test]
+    fn dim_consistency_enforced() {
+        let bad = SAMPLE.replace("head_dim=32", "head_dim=31");
+        assert!(ArtifactConfig::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Configuration system: a small TOML-subset parser (no external crates in
+//! the offline vendor set) plus the typed configs used across the crate.
+
+pub mod artifact;
+pub mod toml;
+
+pub use artifact::ArtifactConfig;
+pub use toml::{TomlDoc, TomlValue};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Prediction-tree parameters (paper §3.3 / §4.3.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TreeConfig {
+    /// Maximum nodes per tree layer (w). Paper sweeps {8,16,32,64,128},
+    /// picks 32.
+    pub max_width: usize,
+    /// Maximum candidate children per node (c). Paper sweeps {2,4,8,16},
+    /// picks 16.
+    pub max_children: usize,
+    /// Maximum tree depth kept ahead of verification (d); in PipeDec this
+    /// tracks the number of pipeline groups.
+    pub max_depth: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        Self {
+            max_width: 8,
+            max_children: 8,
+            max_depth: 9,
+        }
+    }
+}
+
+/// Engine/topology parameters for the real (artifact-backed) engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Number of pipeline stages the target model is split into. Must divide
+    /// the layer count (8 for the build-time target).
+    pub stages: usize,
+    /// Stages per timestep group G_i (paper §3.1): stages inside a group
+    /// execute sequentially within one timestep; data flows cross group
+    /// boundaries between timesteps. 1 = every stage its own group (the
+    /// paper's 14/21-stage configs); 2 over 14 GPUs = the 7-stage config.
+    pub group_size: usize,
+    pub tree: TreeConfig,
+    /// Maximum new tokens per request.
+    pub max_new_tokens: usize,
+    /// Sampling settings (greedy when `temperature == 0`).
+    pub temperature: f32,
+    pub top_p: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    /// Ablation: when true, tree pruning never reuses the surviving subtree
+    /// — every verified token restarts the pipeline as if it missed. Output
+    /// is unchanged (losslessness is independent of reuse); only latency
+    /// suffers. Quantifies the dynamic tree's contribution (DESIGN.md).
+    pub ablate_tree_reuse: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            stages: 4,
+            group_size: 1,
+            tree: TreeConfig::default(),
+            max_new_tokens: 48,
+            temperature: 0.0,
+            top_p: 0.9,
+            top_k: 80,
+            seed: 0,
+            ablate_tree_reuse: false,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Load from a TOML file with `[engine]` / `[tree]` / `[sampling]`
+    /// sections; missing keys keep defaults.
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("engine", "stages") {
+            cfg.stages = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("engine", "group_size") {
+            cfg.group_size = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("engine", "max_new_tokens") {
+            cfg.max_new_tokens = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("engine", "seed") {
+            cfg.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.get("tree", "max_width") {
+            cfg.tree.max_width = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("tree", "max_children") {
+            cfg.tree.max_children = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("tree", "max_depth") {
+            cfg.tree.max_depth = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("sampling", "temperature") {
+            cfg.temperature = v.as_f64()? as f32;
+        }
+        if let Some(v) = doc.get("sampling", "top_p") {
+            cfg.top_p = v.as_f64()? as f32;
+        }
+        if let Some(v) = doc.get("sampling", "top_k") {
+            cfg.top_k = v.as_usize()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.stages >= 1, "stages must be >= 1");
+        anyhow::ensure!(
+            self.group_size >= 1 && self.stages % self.group_size == 0,
+            "group_size must divide stages"
+        );
+        anyhow::ensure!(self.tree.max_width >= 1, "tree.max_width must be >= 1");
+        anyhow::ensure!(
+            self.tree.max_children >= 1,
+            "tree.max_children must be >= 1"
+        );
+        anyhow::ensure!(self.tree.max_depth >= 2, "tree.max_depth must be >= 2");
+        anyhow::ensure!(
+            (0.0..=2.0).contains(&self.temperature),
+            "temperature out of range"
+        );
+        anyhow::ensure!((0.0..=1.0).contains(&self.top_p), "top_p out of range");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn group_size_must_divide_stages() {
+        let mut c = EngineConfig::default();
+        c.stages = 4;
+        c.group_size = 3;
+        assert!(c.validate().is_err());
+        c.group_size = 2;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = EngineConfig::from_toml_str(
+            r#"
+            [engine]
+            stages = 8
+            max_new_tokens = 64
+            seed = 42
+            [tree]
+            max_width = 16
+            max_children = 4
+            max_depth = 10
+            [sampling]
+            temperature = 0.6
+            top_p = 0.9
+            top_k = 80
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.stages, 8);
+        assert_eq!(cfg.tree.max_width, 16);
+        assert_eq!(cfg.tree.max_children, 4);
+        assert!((cfg.temperature - 0.6).abs() < 1e-6);
+        assert_eq!(cfg.seed, 42);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let cfg = EngineConfig::from_toml_str("[tree]\nmax_width = 64\n").unwrap();
+        assert_eq!(cfg.tree.max_width, 64);
+        assert_eq!(cfg.stages, EngineConfig::default().stages);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(EngineConfig::from_toml_str("[engine]\nstages = 0\n").is_err());
+    }
+}

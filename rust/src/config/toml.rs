@@ -1,0 +1,195 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` lines,
+//! values are integers, floats, booleans, quoted strings, or flat arrays of
+//! those. Comments (`#`) and blank lines are skipped. This covers everything
+//! the repo's config files use; it is not a general TOML implementation.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i as f64),
+            TomlValue::Float(f) => Ok(*f),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    /// section -> key -> value; top-level keys live under section "".
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let v = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' inside quoted strings is not supported by this subset
+    match line.find('#') {
+        Some(i) if !line[..i].contains('"') => &line[..i],
+        _ => line,
+    }
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let p = part.trim();
+                if !p.is_empty() {
+                    items.push(parse_value(p)?);
+                }
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            x = 2          # comment
+            y = 3.5
+            s = "hi"
+            flag = true
+            arr = [1, 2, 3]
+            [b]
+            z = -4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.get("a", "x").unwrap().as_usize().unwrap(), 2);
+        assert!((doc.get("a", "y").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-12);
+        assert_eq!(doc.get("a", "s").unwrap().as_str().unwrap(), "hi");
+        assert!(doc.get("a", "flag").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("a", "arr").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(doc.get("b", "z").unwrap().as_f64().unwrap(), -4.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = @@\n").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = TomlDoc::parse("a = []\n").unwrap();
+        assert!(doc.get("", "a").unwrap().as_array().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,535 @@
+//! The PipeDec engine (paper §3.2–§3.4): timestep-synchronous pipeline
+//! decoding of a single request with the draft model integrated into the
+//! pipeline and a dynamic prediction tree coordinating speculative state.
+//!
+//! Execution model: the engine executes the per-timestep task set
+//! *sequentially but in dependency order* (the order the workflow DAG of
+//! Appendix B admits), measuring each node's compute time. Because this host
+//! has a single core, running stage threads would not change wall-clock;
+//! instead the engine reconstructs the *parallel-schedule latency* of every
+//! timestep from the measured per-node times exactly as the paper's latency
+//! model prescribes (§2.4):
+//!
+//! ```text
+//!   T_timestep = max(T_draft, max_i(T_group_i) + max_i(T_transfer_i))
+//! ```
+//!
+//! and reports both raw wall time and the modeled parallel latency. The
+//! distributed control plane itself (transmission scheduling, endpoint
+//! conflicts) is exercised through [`crate::schedule::CentralScheduler`] on
+//! every transfer.
+//!
+//! Per timestep (Fig. 2):
+//! 1. **draft phase** — the draft node processes the newest tree layer it
+//!    has not seen, proposes top-c children per frontier node, and the tree
+//!    expands by one width-capped layer (§3.3.3);
+//! 2. **stage phase** — every pipeline stage processes the data flow it
+//!    received last timestep (dropping rows pruned while in flight);
+//! 3. **sync phase** — when a data flow exits the last stage, the verified
+//!    token is decoded from the current root's logits row, the tree is
+//!    pruned (hit) or reinitialized (miss), KV caches promote the accepted
+//!    root and compact (§3.4.3).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::sampling::{select_token, top_candidates, Sampling};
+use crate::config::EngineConfig;
+use crate::kvcache::TwoLevelCache;
+use crate::metrics::Metrics;
+use crate::model::{bias, ModelHandles};
+use crate::runtime::Runtime;
+use crate::schedule::CentralScheduler;
+use crate::tokenizer;
+use crate::transport::{LinkModel, LinkStats};
+use crate::tree::{PredictionTree, PruneOutcome};
+use crate::util::XorShiftRng;
+
+/// A data flow between pipeline nodes: the node ids of one tree layer plus
+/// the hidden states produced by the previous stage (absent for the
+/// draft -> L_1 edge, which carries token ids resolved through the tree).
+#[derive(Debug, Clone)]
+struct DataFlow {
+    ids: Vec<u64>,
+    hidden: Option<Vec<f32>>, // [W, d] padded; rows 0..ids.len() valid
+}
+
+/// Result of decoding one request.
+#[derive(Debug, Clone)]
+pub struct DecodeResult {
+    pub tokens: Vec<u32>,
+    pub text: String,
+    /// Timesteps executed during decode.
+    pub timesteps: u64,
+    /// Tree hits / misses at sync points.
+    pub hits: u64,
+    pub misses: u64,
+    /// Wall-clock decode seconds (single-core sequential execution).
+    pub wall_s: f64,
+    /// Modeled parallel-schedule decode seconds (see module docs).
+    pub modeled_s: f64,
+    pub metrics: Metrics,
+}
+
+impl DecodeResult {
+    pub fn accept_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn modeled_s_per_token(&self) -> f64 {
+        if self.tokens.is_empty() {
+            0.0
+        } else {
+            self.modeled_s / self.tokens.len() as f64
+        }
+    }
+}
+
+/// The PipeDec engine over AOT artifacts.
+pub struct PipeDecEngine {
+    rt: Runtime,
+    target: ModelHandles,
+    draft: ModelHandles,
+    pub cfg: EngineConfig,
+    layers_per_stage: usize,
+    stage_caches: Vec<TwoLevelCache>,
+    draft_cache: TwoLevelCache,
+    link: LinkModel,
+    pub link_stats: LinkStats,
+    scheduler: CentralScheduler,
+    rng: XorShiftRng,
+}
+
+impl PipeDecEngine {
+    pub fn new(artifact_dir: &Path, mut cfg: EngineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let rt = Runtime::cpu()?;
+        // pick the narrowest artifact width bucket that fits the tree layer
+        let target =
+            ModelHandles::load_with_width(&rt, artifact_dir, "target", cfg.tree.max_width)?;
+        let draft =
+            ModelHandles::load_with_width(&rt, artifact_dir, "draft", cfg.tree.max_width)?;
+        anyhow::ensure!(
+            target.cfg.n_layers % cfg.stages == 0,
+            "stages {} must divide target layers {}",
+            cfg.stages,
+            target.cfg.n_layers
+        );
+        let layers_per_stage = target.cfg.n_layers / cfg.stages;
+        // the real engine is bounded by the artifact static shapes; wider
+        // sweeps run in the cluster simulator (DESIGN.md)
+        cfg.tree.max_width = cfg
+            .tree
+            .max_width
+            .min(target.cfg.width_cap)
+            .min(draft.cfg.width_cap);
+        cfg.tree.max_children = cfg.tree.max_children.min(target.cfg.vocab_size);
+        let tc = &target.cfg;
+        let stage_caches = (0..cfg.stages)
+            .map(|_| {
+                TwoLevelCache::new(
+                    layers_per_stage,
+                    tc.n_heads,
+                    tc.head_dim,
+                    tc.past_cap,
+                    tc.tree_cap,
+                )
+            })
+            .collect();
+        let dc = &draft.cfg;
+        let draft_cache =
+            TwoLevelCache::new(dc.n_layers, dc.n_heads, dc.head_dim, dc.past_cap, dc.tree_cap);
+        let rng = XorShiftRng::new(cfg.seed);
+        Ok(Self {
+            rt,
+            target,
+            draft,
+            cfg,
+            layers_per_stage,
+            stage_caches,
+            draft_cache,
+            link: LinkModel::pcie_p2p(),
+            link_stats: LinkStats::default(),
+            scheduler: CentralScheduler::new(),
+            rng,
+        })
+    }
+
+    pub fn stages(&self) -> usize {
+        self.cfg.stages
+    }
+
+    /// Number of timestep groups G_i (paper §3.1).
+    pub fn groups(&self) -> usize {
+        self.cfg.stages / self.cfg.group_size
+    }
+
+    fn group_stages(&self, g: usize) -> std::ops::Range<usize> {
+        g * self.cfg.group_size..(g + 1) * self.cfg.group_size
+    }
+
+    fn layer_range(&self, stage: usize) -> std::ops::Range<usize> {
+        stage * self.layers_per_stage..(stage + 1) * self.layers_per_stage
+    }
+
+    fn reset(&mut self) {
+        for c in &mut self.stage_caches {
+            c.reset();
+        }
+        self.draft_cache.reset();
+        self.rng = XorShiftRng::new(self.cfg.seed);
+    }
+
+    /// Pipeline prefill of the prompt through all target stages (the paper
+    /// adopts plain sequential pre-filling, §3.4.1) plus draft prefill.
+    /// Returns the first decoded token and the modeled prefill seconds.
+    fn prefill(&mut self, prompt_ids: &[u32], sampling: &Sampling) -> Result<(u32, f64)> {
+        let w = self.target.cfg.width_cap;
+        let t0 = Instant::now();
+        let mut last_h = None;
+        let mut last_count = 0;
+        for chunk in prompt_ids.chunks(w) {
+            let start = self.stage_caches[0].past_len();
+            let mut h = self.target.embed(&self.rt, chunk)?;
+            for s in 0..self.cfg.stages {
+                let range = self.layer_range(s);
+                h = self.target.prefill_chunk(
+                    &self.rt,
+                    range,
+                    &mut self.stage_caches[s],
+                    h,
+                    chunk.len(),
+                    start,
+                )?;
+            }
+            last_count = chunk.len();
+            last_h = Some(h);
+        }
+        let h = last_h.context("empty prompt")?;
+        let logits = self.target.head(&self.rt, &h)?;
+        let v = self.target.cfg.vocab_size;
+        let row = &logits[(last_count - 1) * v..last_count * v];
+        let first = select_token(row, sampling, &mut self.rng);
+
+        // draft prefill (runs in parallel with the target on the real
+        // testbed; sequential here, and excluded from decode latency)
+        self.draft.full_prefill(&self.rt, &mut self.draft_cache, prompt_ids)?;
+        Ok((first, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Draft phase: process the unprocessed BFS suffix (the frontier layer),
+    /// expand the tree by one layer, and return the new layer's data flow.
+    fn draft_phase(&mut self, tree: &mut PredictionTree) -> Result<(Option<DataFlow>, f64)> {
+        let dc = self.draft.cfg.clone();
+        let start = self.draft_cache.tree_len();
+        if start >= tree.len() || tree.len() >= self.draft_cache.tree_cap() {
+            return Ok((None, 0.0)); // frontier already processed or budget full
+        }
+        let indices: Vec<usize> = (start..tree.len()).collect();
+        anyhow::ensure!(
+            indices.len() <= dc.width_cap,
+            "frontier wider than width cap"
+        );
+        let t0 = Instant::now();
+        let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
+        let mut pos = vec![0i32; dc.width_cap];
+        for (r, &i) in indices.iter().enumerate() {
+            pos[r] = tree.position_of(i) as i32;
+        }
+        let rows = tree.bias_rows(&indices, dc.tree_cap, bias::NEG);
+        let tree_bias =
+            bias::pad_tree_bias_rows(rows, indices.len(), start, dc.width_cap, dc.tree_cap);
+        let logits = self.draft.full_forward_tree_block(
+            &self.rt,
+            &mut self.draft_cache,
+            &tokens,
+            &pos,
+            &tree_bias,
+        )?;
+        let v = dc.vocab_size;
+        let c = self.cfg.tree.max_children;
+        let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
+            .map(|r| top_candidates(&logits[r * v..(r + 1) * v], c))
+            .collect();
+        let new_nodes = tree.expand_layer(&cands);
+        let elapsed = t0.elapsed().as_secs_f64();
+        if new_nodes.is_empty() {
+            return Ok((None, elapsed));
+        }
+        let ids = new_nodes.iter().map(|&i| tree.id(i)).collect();
+        Ok((Some(DataFlow { ids, hidden: None }), elapsed))
+    }
+
+    /// Stage phase for one stage: filter stale rows, run the layer span,
+    /// return the outgoing data flow (None if everything was pruned away).
+    fn stage_phase(
+        &mut self,
+        stage: usize,
+        df: DataFlow,
+        tree: &PredictionTree,
+        past_bias: &[f32],
+    ) -> Result<(Option<DataFlow>, f64)> {
+        let tc = self.target.cfg.clone();
+        let w = tc.width_cap;
+        let d = tc.dim;
+
+        // translate ids -> current indices; collect surviving rows
+        let mut indices = Vec::with_capacity(df.ids.len());
+        let mut kept_rows = Vec::with_capacity(df.ids.len());
+        for (r, &id) in df.ids.iter().enumerate() {
+            if let Some(i) = tree.index_of_id(id) {
+                indices.push(i);
+                kept_rows.push(r);
+            }
+        }
+        if indices.is_empty() {
+            return Ok((None, 0.0));
+        }
+        let t0 = Instant::now();
+        let count = indices.len();
+
+        let hidden = match &df.hidden {
+            None => {
+                let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
+                self.target.embed(&self.rt, &tokens)?
+            }
+            Some(h) => {
+                // compact surviving rows into a fresh padded block
+                let mut out = vec![0f32; w * d];
+                for (nr, &or) in kept_rows.iter().enumerate() {
+                    out[nr * d..(nr + 1) * d].copy_from_slice(&h[or * d..(or + 1) * d]);
+                }
+                out
+            }
+        };
+
+        let cache = &self.stage_caches[stage];
+        anyhow::ensure!(
+            cache.tree_len() == indices[0],
+            "stage {stage}: BFS prefix broken (cache {} vs first index {})",
+            cache.tree_len(),
+            indices[0]
+        );
+        let mut pos = vec![0i32; w];
+        for (r, &i) in indices.iter().enumerate() {
+            pos[r] = tree.position_of(i) as i32;
+        }
+        let rows = tree.bias_rows(&indices, tc.tree_cap, bias::NEG);
+        let tree_bias =
+            bias::pad_tree_bias_rows(rows, count, cache.tree_len(), w, tc.tree_cap);
+
+        let range = self.layer_range(stage);
+        let h_out = self.target.stage_forward(
+            &self.rt,
+            range,
+            &mut self.stage_caches[stage],
+            hidden,
+            count,
+            &pos,
+            past_bias,
+            &tree_bias,
+        )?;
+        let ids = indices.iter().map(|&i| tree.id(i)).collect();
+        Ok((
+            Some(DataFlow {
+                ids,
+                hidden: Some(h_out),
+            }),
+            t0.elapsed().as_secs_f64(),
+        ))
+    }
+
+    /// Account one inter-node transfer through the central scheduler and the
+    /// link model; returns the modeled wire seconds.
+    fn account_transfer(&mut self, src: usize, dst: usize, bytes: usize, seq: u64) -> f64 {
+        let id = self.scheduler.submit(src, dst, bytes, seq);
+        let dispatched = self.scheduler.tick();
+        debug_assert!(dispatched.iter().any(|d| d.task.id == id));
+        self.scheduler.notify_finish(id);
+        self.scheduler.tick();
+        self.link_stats.record(bytes, &self.link);
+        self.link.transfer_time(bytes)
+    }
+
+    /// Decode one request.
+    pub fn decode(&mut self, prompt: &str) -> Result<DecodeResult> {
+        let sampling = Sampling::from_engine(&self.cfg);
+        self.reset();
+        let mut metrics = Metrics::new();
+
+        let max_prompt = self.target.cfg.past_cap - self.cfg.max_new_tokens - 2;
+        let mut prompt_ids = tokenizer::encode(prompt);
+        prompt_ids.truncate(max_prompt);
+        anyhow::ensure!(!prompt_ids.is_empty(), "empty prompt");
+
+        let (first, prefill_s) = self.prefill(&prompt_ids, &sampling)?;
+        metrics.record("prefill_s", prefill_s);
+
+        let budget = self.target.cfg.tree_cap.min(self.draft.cfg.tree_cap);
+        let mut tree = PredictionTree::new(self.cfg.tree, budget, first, prompt_ids.len());
+        let mut decoded = vec![first];
+
+        let groups = self.groups();
+        let d_bytes = self.target.cfg.dim * self.target.cfg.width_cap * 4;
+        let mut inputs: Vec<Option<DataFlow>> = vec![None; groups];
+        inputs[0] = Some(DataFlow {
+            ids: vec![tree.id(0)],
+            hidden: None,
+        });
+
+        let wall0 = Instant::now();
+        let mut modeled_s = 0.0;
+        let mut timesteps = 0u64;
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let max_timesteps =
+            (self.cfg.max_new_tokens as u64 + 8) * (groups as u64 + 2);
+
+        'outer: while decoded.len() < self.cfg.max_new_tokens {
+            timesteps += 1;
+            if timesteps > max_timesteps {
+                anyhow::bail!("timestep budget exceeded — engine stalled");
+            }
+            let seq = timesteps;
+
+            // ---- draft phase ----
+            let (draft_df, draft_s) = self.draft_phase(&mut tree)?;
+
+            // ---- stage phase: each group G_g runs its member stages
+            // sequentially within the timestep (paper §3.1); the group's
+            // modeled time is the sum of its members' ----
+            let mut next_inputs: Vec<Option<DataFlow>> = vec![None; groups];
+            let mut exit_df: Option<DataFlow> = None;
+            let mut group_times = vec![0.0f64; groups];
+            let mut transfer_times: Vec<f64> = Vec::new();
+            // all stages share past_len (promotions are synchronized), so
+            // one past-bias build serves the whole timestep (§Perf iter 2)
+            let past_bias = bias::past_bias(
+                self.stage_caches[0].past_len(),
+                self.target.cfg.width_cap,
+                self.target.cfg.past_cap,
+            );
+            for g in 0..groups {
+                let Some(df0) = inputs[g].take() else { continue };
+                let span = self.group_stages(g);
+                let mut df = Some(df0);
+                for stage in span.clone() {
+                    let Some(cur) = df.take() else { break };
+                    let (out, secs) = self.stage_phase(stage, cur, &tree, &past_bias)?;
+                    group_times[g] += secs;
+                    if out.is_some() && stage + 1 < span.end {
+                        // intra-group hop: same timestep, scheduled transfer
+                        group_times[g] +=
+                            self.account_transfer(stage + 1, stage + 2, d_bytes, seq);
+                    }
+                    df = out;
+                }
+                let Some(out) = df else { continue };
+                if g + 1 < groups {
+                    transfer_times.push(self.account_transfer(
+                        span.end,
+                        span.end + 1,
+                        d_bytes,
+                        seq,
+                    ));
+                    next_inputs[g + 1] = Some(out);
+                } else {
+                    exit_df = Some(out);
+                }
+            }
+            if let Some(df) = draft_df {
+                // draft (rank 0) -> L_1: token ids only
+                transfer_times.push(self.account_transfer(0, 1, df.ids.len() * 8, seq));
+                next_inputs[0] = Some(df);
+            }
+
+            // paper latency model: max(T_draft, C·max(T_group_i) + max(T_t,i))
+            let max_group = group_times.iter().cloned().fold(0.0, f64::max);
+            let max_tx = transfer_times.iter().cloned().fold(0.0, f64::max);
+            modeled_s += draft_s.max(max_group + max_tx);
+            metrics.record("timestep_draft_s", draft_s);
+            metrics.record("timestep_max_group_s", max_group);
+            metrics.incr(
+                "active_group_timeslots",
+                group_times.iter().filter(|t| **t > 0.0).count() as u64,
+            );
+            metrics.incr("group_timeslots", groups as u64);
+
+            // ---- sync phase ----
+            if let Some(df) = exit_df {
+                let head_t = Instant::now();
+                let logits = self
+                    .target
+                    .head(&self.rt, df.hidden.as_ref().unwrap())?;
+                modeled_s += head_t.elapsed().as_secs_f64();
+                let root_id = tree.id(0);
+                if let Some(row) = df.ids.iter().position(|&id| id == root_id) {
+                    let v = self.target.cfg.vocab_size;
+                    let x = select_token(&logits[row * v..(row + 1) * v], &sampling, &mut self.rng);
+                    decoded.push(x);
+                    let outcome = if self.cfg.ablate_tree_reuse {
+                        crate::tree::PruneOutcome::Miss
+                    } else {
+                        tree.prune(x)
+                    };
+                    match outcome {
+                        PruneOutcome::Hit { kept_old, .. } => {
+                            hits += 1;
+                            for c in &mut self.stage_caches {
+                                c.promote_root_to_past()?;
+                                c.compact_tree(&kept_old);
+                            }
+                            self.draft_cache.promote_root_to_past()?;
+                            self.draft_cache.compact_tree(&kept_old);
+                        }
+                        PruneOutcome::Miss => {
+                            misses += 1;
+                            for c in &mut self.stage_caches {
+                                c.promote_root_to_past()?;
+                                c.clear_tree();
+                            }
+                            self.draft_cache.promote_root_to_past()?;
+                            self.draft_cache.clear_tree();
+                            let root_pos = self.stage_caches[0].past_len();
+                            tree = PredictionTree::new(self.cfg.tree, budget, x, root_pos);
+                            // in-flight data flows are stale: restart pipeline
+                            next_inputs = vec![None; groups];
+                            next_inputs[0] = Some(DataFlow {
+                                ids: vec![tree.id(0)],
+                                hidden: None,
+                            });
+                        }
+                    }
+                    if x == tokenizer::EOS_ID {
+                        inputs = next_inputs;
+                        break 'outer;
+                    }
+                }
+                // stale exits (root pruned away earlier) are dropped
+            }
+            inputs = next_inputs;
+        }
+
+        let wall_s = wall0.elapsed().as_secs_f64();
+        metrics.incr("tokens", decoded.len() as u64);
+        metrics.incr("timesteps", timesteps);
+        metrics.incr("hits", hits);
+        metrics.incr("misses", misses);
+        Ok(DecodeResult {
+            text: tokenizer::decode(&decoded),
+            tokens: decoded,
+            timesteps,
+            hits,
+            misses,
+            wall_s,
+            modeled_s,
+            metrics,
+        })
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the PipeDec engine (paper §3) and its token-selection
+//! policies.
+//!
+//! * [`engine::PipeDecEngine`] — the paper's system contribution: a
+//!   pipeline-parallel decoder for a single request with the draft model
+//!   integrated as pipeline rank 0, a dynamic prediction tree, two-level
+//!   KV caches, scheduled transfers, and hit/miss synchronization.
+//! * [`sampling`] — greedy and stochastic (temperature/top-p/top-k) token
+//!   selection shared with the baselines.
+
+pub mod engine;
+pub mod sampling;
+
+pub use engine::{DecodeResult, PipeDecEngine};
+pub use sampling::{select_token, top_candidates, Sampling};

@@ -1,0 +1,135 @@
+//! Token selection: greedy and stochastic (temperature / top-k / top-p)
+//! decoding, matching the paper's §4.3.3 settings (temperature 0.6,
+//! top-p 0.9, top-k 80).
+
+use crate::util::{softmax_inplace, top_k_weighted, XorShiftRng};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    Stochastic {
+        temperature: f32,
+        top_p: f32,
+        top_k: usize,
+    },
+}
+
+impl Sampling {
+    pub fn from_engine(cfg: &crate::config::EngineConfig) -> Self {
+        if cfg.temperature == 0.0 {
+            Sampling::Greedy
+        } else {
+            Sampling::Stochastic {
+                temperature: cfg.temperature,
+                top_p: cfg.top_p,
+                top_k: cfg.top_k,
+            }
+        }
+    }
+
+    /// Paper §4.3.3 parameters.
+    pub fn llama_stochastic() -> Self {
+        Sampling::Stochastic {
+            temperature: 0.6,
+            top_p: 0.9,
+            top_k: 80,
+        }
+    }
+}
+
+/// Select a token from a logits row.
+pub fn select_token(logits: &[f32], sampling: &Sampling, rng: &mut XorShiftRng) -> u32 {
+    match *sampling {
+        Sampling::Greedy => crate::util::top_k_indices(logits, 1)[0] as u32,
+        Sampling::Stochastic {
+            temperature,
+            top_p,
+            top_k,
+        } => {
+            let k = top_k.max(1).min(logits.len());
+            let mut cands = top_k_weighted(logits, k);
+            let mut probs: Vec<f32> =
+                cands.iter().map(|(_, v)| v / temperature.max(1e-6)).collect();
+            softmax_inplace(&mut probs);
+            // nucleus: keep the smallest prefix with cumulative mass >= top_p
+            let mut cum = 0.0;
+            let mut cut = probs.len();
+            for (i, p) in probs.iter().enumerate() {
+                cum += p;
+                if cum >= top_p {
+                    cut = i + 1;
+                    break;
+                }
+            }
+            probs.truncate(cut);
+            cands.truncate(cut);
+            let pick = rng.weighted(&probs);
+            cands[pick].0 as u32
+        }
+    }
+}
+
+/// Softmax probabilities of the top-c entries of a logits row — the draft
+/// model's candidate distribution for tree expansion (§3.3.3). Probabilities
+/// are normalized over the full row first, so cumulative tree probabilities
+/// remain comparable across nodes.
+pub fn top_candidates(logits: &[f32], c: usize) -> Vec<(u32, f32)> {
+    let mut probs = logits.to_vec();
+    softmax_inplace(&mut probs);
+    top_k_weighted(&probs, c)
+        .into_iter()
+        .map(|(i, p)| (i as u32, p))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_takes_argmax() {
+        let mut rng = XorShiftRng::new(1);
+        let logits = [0.0f32, 3.0, 1.0];
+        assert_eq!(select_token(&logits, &Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = XorShiftRng::new(2);
+        let s = Sampling::Stochastic {
+            temperature: 0.05,
+            top_p: 1.0,
+            top_k: 10,
+        };
+        let logits = [0.0f32, 5.0, 1.0, 0.5];
+        let hits = (0..200)
+            .filter(|_| select_token(&logits, &s, &mut rng) == 1)
+            .count();
+        assert!(hits > 190, "hits={hits}");
+    }
+
+    #[test]
+    fn top_p_cuts_tail() {
+        let mut rng = XorShiftRng::new(3);
+        // one dominant token: nucleus of 0.5 keeps only it
+        let s = Sampling::Stochastic {
+            temperature: 1.0,
+            top_p: 0.5,
+            top_k: 10,
+        };
+        let logits = [10.0f32, 0.0, 0.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(select_token(&logits, &s, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn candidates_are_probabilities() {
+        let logits = [1.0f32, 2.0, 3.0, 4.0];
+        let cands = top_candidates(&logits, 2);
+        assert_eq!(cands[0].0, 3);
+        assert_eq!(cands[1].0, 2);
+        assert!(cands[0].1 > cands[1].1);
+        assert!(cands.iter().all(|&(_, p)| (0.0..=1.0).contains(&p)));
+    }
+}

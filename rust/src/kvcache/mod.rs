@@ -1,0 +1,416 @@
+//! Two-level KV cache (paper §3.2 / §3.4.3).
+//!
+//! Each pipeline stage owns one [`TwoLevelCache`] covering its contiguous
+//! layer span:
+//!
+//! * **model level** (`past_*`) — keys/values of accepted tokens, the
+//!   conventional KV cache;
+//! * **tree level** (`tree_*`) — keys/values of prediction-tree nodes,
+//!   slot-indexed by the node's BFS index (stages hold a BFS prefix of the
+//!   tree, so one global slot numbering works everywhere).
+//!
+//! Following the paper's layout note ("storing all layers for a
+//! computational node in a tensor, with the highest dimension representing
+//! the number of Transformer blocks"), all layers live in one contiguous
+//! buffer, so promotion and pruning are single passes and per-layer views
+//! for the PJRT runtime are zero-copy slices.
+//!
+//! Synchronization semantics (§3.4.3): on a verified token, the old root
+//! (tree slot 0) is promoted to the model level — `promote_root_to_past` —
+//! then the tree level is compacted to the surviving subtree
+//! (`compact_tree` with the `kept_old` list from
+//! [`crate::tree::PredictionTree::prune`]) or cleared on a miss.
+
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone)]
+pub struct TwoLevelCache {
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+    past_cap: usize,
+    tree_cap: usize,
+
+    past_k: Vec<f32>,
+    past_v: Vec<f32>,
+    past_len: usize,
+
+    tree_k: Vec<f32>,
+    tree_v: Vec<f32>,
+    tree_len: usize,
+}
+
+impl TwoLevelCache {
+    pub fn new(
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        past_cap: usize,
+        tree_cap: usize,
+    ) -> Self {
+        let past = layers * heads * past_cap * head_dim;
+        let tree = layers * heads * tree_cap * head_dim;
+        Self {
+            layers,
+            heads,
+            head_dim,
+            past_cap,
+            tree_cap,
+            past_k: vec![0.0; past],
+            past_v: vec![0.0; past],
+            past_len: 0,
+            tree_k: vec![0.0; tree],
+            tree_v: vec![0.0; tree],
+            tree_len: 0,
+        }
+    }
+
+    pub fn past_len(&self) -> usize {
+        self.past_len
+    }
+
+    pub fn tree_len(&self) -> usize {
+        self.tree_len
+    }
+
+    pub fn past_cap(&self) -> usize {
+        self.past_cap
+    }
+
+    pub fn tree_cap(&self) -> usize {
+        self.tree_cap
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    #[inline]
+    fn past_layer_stride(&self) -> usize {
+        self.heads * self.past_cap * self.head_dim
+    }
+
+    #[inline]
+    fn tree_layer_stride(&self) -> usize {
+        self.heads * self.tree_cap * self.head_dim
+    }
+
+    /// Per-layer views [H, CAP, hd] for runtime arguments (zero-copy).
+    pub fn past_k_layer(&self, l: usize) -> &[f32] {
+        let s = self.past_layer_stride();
+        &self.past_k[l * s..(l + 1) * s]
+    }
+
+    pub fn past_v_layer(&self, l: usize) -> &[f32] {
+        let s = self.past_layer_stride();
+        &self.past_v[l * s..(l + 1) * s]
+    }
+
+    pub fn tree_k_layer(&self, l: usize) -> &[f32] {
+        let s = self.tree_layer_stride();
+        &self.tree_k[l * s..(l + 1) * s]
+    }
+
+    pub fn tree_v_layer(&self, l: usize) -> &[f32] {
+        let s = self.tree_layer_stride();
+        &self.tree_v[l * s..(l + 1) * s]
+    }
+
+    /// Write a new KV block `[H, W, hd]` (first `count` rows valid) for
+    /// layer `l` into tree slots `tree_len..tree_len+count`. All layers of
+    /// the stage must append the same count before [`Self::commit_tree`].
+    pub fn append_tree_block(
+        &mut self,
+        l: usize,
+        k_block: &[f32],
+        v_block: &[f32],
+        block_w: usize,
+        count: usize,
+    ) -> Result<()> {
+        ensure!(
+            self.tree_len + count <= self.tree_cap,
+            "tree cache overflow: {} + {count} > {}",
+            self.tree_len,
+            self.tree_cap
+        );
+        self.copy_block(l, k_block, v_block, block_w, count, true)
+    }
+
+    /// Write a new KV block into the model level at
+    /// `past_len..past_len+count` (prefill path). Commit with
+    /// [`Self::commit_past`].
+    pub fn append_past_block(
+        &mut self,
+        l: usize,
+        k_block: &[f32],
+        v_block: &[f32],
+        block_w: usize,
+        count: usize,
+    ) -> Result<()> {
+        ensure!(
+            self.past_len + count <= self.past_cap,
+            "past cache overflow: {} + {count} > {}",
+            self.past_len,
+            self.past_cap
+        );
+        self.copy_block(l, k_block, v_block, block_w, count, false)
+    }
+
+    fn copy_block(
+        &mut self,
+        l: usize,
+        k_block: &[f32],
+        v_block: &[f32],
+        block_w: usize,
+        count: usize,
+        to_tree: bool,
+    ) -> Result<()> {
+        ensure!(count <= block_w, "count > block width");
+        ensure!(
+            k_block.len() == self.heads * block_w * self.head_dim,
+            "bad block size"
+        );
+        let hd = self.head_dim;
+        let (cap, base_len, stride) = if to_tree {
+            (self.tree_cap, self.tree_len, self.tree_layer_stride())
+        } else {
+            (self.past_cap, self.past_len, self.past_layer_stride())
+        };
+        let (dst_k, dst_v) = if to_tree {
+            (&mut self.tree_k, &mut self.tree_v)
+        } else {
+            (&mut self.past_k, &mut self.past_v)
+        };
+        for h in 0..self.heads {
+            for r in 0..count {
+                let src = (h * block_w + r) * hd;
+                let dst = l * stride + (h * cap + base_len + r) * hd;
+                dst_k[dst..dst + hd].copy_from_slice(&k_block[src..src + hd]);
+                dst_v[dst..dst + hd].copy_from_slice(&v_block[src..src + hd]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance the tree length after all layers appended a block.
+    pub fn commit_tree(&mut self, count: usize) {
+        self.tree_len += count;
+        debug_assert!(self.tree_len <= self.tree_cap);
+    }
+
+    /// Advance the model-level length (prefill).
+    pub fn commit_past(&mut self, count: usize) {
+        self.past_len += count;
+        debug_assert!(self.past_len <= self.past_cap);
+    }
+
+    /// §3.4.3: transfer the first tree element (the old root, slot 0) to the
+    /// model-level cache — one pass over all layers.
+    pub fn promote_root_to_past(&mut self) -> Result<()> {
+        ensure!(self.tree_len >= 1, "no tree entries to promote");
+        ensure!(self.past_len < self.past_cap, "past cache full");
+        let hd = self.head_dim;
+        let ts = self.tree_layer_stride();
+        let ps = self.past_layer_stride();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let src = l * ts + (h * self.tree_cap) * hd; // slot 0
+                let dst = l * ps + (h * self.past_cap + self.past_len) * hd;
+                let (k, v) = (&self.tree_k[src..src + hd], &self.tree_v[src..src + hd]);
+                // split borrows: copy via temporaries (hd is tiny)
+                let kt: Vec<f32> = k.to_vec();
+                let vt: Vec<f32> = v.to_vec();
+                self.past_k[dst..dst + hd].copy_from_slice(&kt);
+                self.past_v[dst..dst + hd].copy_from_slice(&vt);
+            }
+        }
+        self.past_len += 1;
+        Ok(())
+    }
+
+    /// Promote an arbitrary tree slot to the model level (used by the
+    /// static-tree STPP baseline, which accepts a whole path per round).
+    pub fn promote_slot_to_past(&mut self, slot: usize) -> Result<()> {
+        ensure!(slot < self.tree_len, "slot {slot} >= tree_len {}", self.tree_len);
+        ensure!(self.past_len < self.past_cap, "past cache full");
+        let hd = self.head_dim;
+        let ts = self.tree_layer_stride();
+        let ps = self.past_layer_stride();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let src = l * ts + (h * self.tree_cap + slot) * hd;
+                let dst = l * ps + (h * self.past_cap + self.past_len) * hd;
+                let kt: Vec<f32> = self.tree_k[src..src + hd].to_vec();
+                let vt: Vec<f32> = self.tree_v[src..src + hd].to_vec();
+                self.past_k[dst..dst + hd].copy_from_slice(&kt);
+                self.past_v[dst..dst + hd].copy_from_slice(&vt);
+            }
+        }
+        self.past_len += 1;
+        Ok(())
+    }
+
+    /// Compact the tree level to the surviving slots (ascending `kept_old`
+    /// from the prune). Only entries below the stage's current `tree_len`
+    /// apply — those form a prefix of `kept_old` thanks to BFS ordering —
+    /// so slot numbering stays equal to the new BFS index everywhere.
+    pub fn compact_tree(&mut self, kept_old: &[usize]) {
+        let hd = self.head_dim;
+        let ts = self.tree_layer_stride();
+        let keep: Vec<usize> = kept_old
+            .iter()
+            .copied()
+            .take_while(|&s| s < self.tree_len)
+            .collect();
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let base = l * ts + h * self.tree_cap * hd;
+                for (new_slot, &old_slot) in keep.iter().enumerate() {
+                    if new_slot == old_slot {
+                        continue;
+                    }
+                    let (dst, src) = (base + new_slot * hd, base + old_slot * hd);
+                    self.tree_k.copy_within(src..src + hd, dst);
+                    self.tree_v.copy_within(src..src + hd, dst);
+                }
+            }
+        }
+        self.tree_len = keep.len();
+    }
+
+    /// Drop all tree-level entries (miss path).
+    pub fn clear_tree(&mut self) {
+        self.tree_len = 0;
+    }
+
+    /// Reset everything (new request).
+    pub fn reset(&mut self) {
+        self.past_len = 0;
+        self.tree_len = 0;
+    }
+
+    /// Read one (k, v) vector pair for tests.
+    pub fn read_tree_slot(&self, l: usize, h: usize, slot: usize) -> (Vec<f32>, Vec<f32>) {
+        let hd = self.head_dim;
+        let base = l * self.tree_layer_stride() + (h * self.tree_cap + slot) * hd;
+        (
+            self.tree_k[base..base + hd].to_vec(),
+            self.tree_v[base..base + hd].to_vec(),
+        )
+    }
+
+    pub fn read_past_slot(&self, l: usize, h: usize, slot: usize) -> (Vec<f32>, Vec<f32>) {
+        let hd = self.head_dim;
+        let base = l * self.past_layer_stride() + (h * self.past_cap + slot) * hd;
+        (
+            self.past_k[base..base + hd].to_vec(),
+            self.past_v[base..base + hd].to_vec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(heads: usize, w: usize, hd: usize, seed: f32) -> Vec<f32> {
+        (0..heads * w * hd).map(|i| seed + i as f32).collect()
+    }
+
+    #[test]
+    fn append_and_read_tree() {
+        let mut c = TwoLevelCache::new(2, 2, 4, 16, 8);
+        let k = block(2, 3, 4, 100.0);
+        let v = block(2, 3, 4, 200.0);
+        for l in 0..2 {
+            c.append_tree_block(l, &k, &v, 3, 2).unwrap();
+        }
+        c.commit_tree(2);
+        assert_eq!(c.tree_len(), 2);
+        // head 1, row 1 of the block -> slot 1
+        let (ks, vs) = c.read_tree_slot(0, 1, 1);
+        let src = (1 * 3 + 1) * 4;
+        assert_eq!(ks, k[src..src + 4].to_vec());
+        assert_eq!(vs, v[src..src + 4].to_vec());
+    }
+
+    #[test]
+    fn promote_moves_root_across_all_layers() {
+        let mut c = TwoLevelCache::new(2, 1, 4, 8, 8);
+        let k = block(1, 1, 4, 7.0);
+        let v = block(1, 1, 4, 9.0);
+        for l in 0..2 {
+            c.append_tree_block(l, &k, &v, 1, 1).unwrap();
+        }
+        c.commit_tree(1);
+        c.promote_root_to_past().unwrap();
+        assert_eq!(c.past_len(), 1);
+        for l in 0..2 {
+            let (ks, _) = c.read_past_slot(l, 0, 0);
+            assert_eq!(ks, k[..4].to_vec());
+        }
+    }
+
+    #[test]
+    fn compact_tree_keeps_prefix_of_kept() {
+        let mut c = TwoLevelCache::new(1, 1, 2, 8, 8);
+        // append 4 slots with recognizable values
+        for slot in 0..4 {
+            let k = vec![slot as f32; 2];
+            let v = vec![slot as f32 + 0.5; 2];
+            c.append_tree_block(0, &k, &v, 1, 1).unwrap();
+            c.commit_tree(1);
+        }
+        // prune keeps old slots [1, 3]
+        c.compact_tree(&[1, 3]);
+        assert_eq!(c.tree_len(), 2);
+        assert_eq!(c.read_tree_slot(0, 0, 0).0, vec![1.0, 1.0]);
+        assert_eq!(c.read_tree_slot(0, 0, 1).0, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn compact_tree_ignores_unprocessed_suffix() {
+        let mut c = TwoLevelCache::new(1, 1, 2, 8, 8);
+        for slot in 0..2 {
+            let k = vec![slot as f32; 2];
+            c.append_tree_block(0, &k, &k, 1, 1).unwrap();
+            c.commit_tree(1);
+        }
+        // kept list references slots this stage has not processed (>= 2)
+        c.compact_tree(&[1, 5, 6]);
+        assert_eq!(c.tree_len(), 1);
+        assert_eq!(c.read_tree_slot(0, 0, 0).0, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn promote_arbitrary_slot() {
+        let mut c = TwoLevelCache::new(1, 1, 2, 8, 8);
+        for slot in 0..3 {
+            let k = vec![slot as f32; 2];
+            c.append_tree_block(0, &k, &k, 1, 1).unwrap();
+            c.commit_tree(1);
+        }
+        c.promote_slot_to_past(2).unwrap();
+        assert_eq!(c.read_past_slot(0, 0, 0).0, vec![2.0, 2.0]);
+        assert!(c.promote_slot_to_past(5).is_err());
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut c = TwoLevelCache::new(1, 1, 2, 2, 2);
+        let k = vec![0.0; 1 * 3 * 2];
+        assert!(c.append_tree_block(0, &k, &k, 3, 3).is_err());
+    }
+
+    #[test]
+    fn prefill_appends_to_past() {
+        let mut c = TwoLevelCache::new(1, 2, 2, 8, 4);
+        let k = block(2, 2, 2, 1.0);
+        c.append_past_block(0, &k, &k, 2, 2).unwrap();
+        c.commit_past(2);
+        assert_eq!(c.past_len(), 2);
+        let (ks, _) = c.read_past_slot(0, 1, 1);
+        let src = (1 * 2 + 1) * 2;
+        assert_eq!(ks, k[src..src + 2].to_vec());
+    }
+}

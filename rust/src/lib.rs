@@ -1,0 +1,51 @@
+//! PipeDec / SpecPipe: pipeline-parallel LLM inference accelerated with
+//! dynamic-tree speculative decoding.
+//!
+//! Reproduction of "PipeDec: Low-Latency Pipeline-based Inference with
+//! Dynamic Speculative Decoding towards Large-scale Models" as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * L1 (build time) — Pallas dynamic tree attention kernel
+//!   (`python/compile/kernels/`);
+//! * L2 (build time) — LLaMA-style decoder lowered per entry point to HLO
+//!   text artifacts (`python/compile/model.py`, `aot.py`);
+//! * L3 (this crate) — the serving system: dynamic prediction tree,
+//!   two-level KV cache, pipeline engine with timestep groups, transmission
+//!   scheduler, workflow DAG controller, baselines (PP / STPP / SLM), a
+//!   calibrated cluster simulator for paper-scale figures, and a request
+//!   server.
+//!
+//! Python never runs on the request path: artifacts are loaded and executed
+//! through the PJRT CPU client (`runtime`).
+
+pub mod baselines;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod proputil;
+pub mod runtime;
+pub mod schedule;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod transport;
+pub mod tree;
+pub mod util;
+pub mod weights;
+pub mod workflow;
+pub mod workload;
+
+/// Crate version (for the CLI banner).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifacts directory, overridable with `PIPEDEC_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("PIPEDEC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

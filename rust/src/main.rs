@@ -1,0 +1,168 @@
+//! `pipedec` CLI: serve single prompts through any engine, run the paper-
+//! scale cluster simulator, or inspect artifacts.
+//!
+//! Subcommands (hand-rolled parsing; the offline vendor set has no clap):
+//!   pipedec decode  [--engine pipedec|pp|stpp|slm] [--stages N] [--width W]
+//!                   [--children C] [--max-new N] [--prompt TEXT|--domain D]
+//!                   [--temperature T] [--config FILE]
+//!   pipedec sim     [--stages N] [--width W] [--children C] [--tokens N]
+//!                   [--domain D]
+//!   pipedec info    # artifact + config summary
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use pipedec::baselines::{PpEngine, SlmEngine, StppEngine};
+use pipedec::config::EngineConfig;
+use pipedec::coordinator::PipeDecEngine;
+use pipedec::sim::{simulate_pipedec, simulate_pp, simulate_stpp, ClusterSpec, HitModel};
+use pipedec::util::XorShiftRng;
+use pipedec::workload::Workload;
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument: {a}");
+        };
+        let val = args.get(i + 1).context("flag needs a value")?;
+        out.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => EngineConfig::from_toml_file(std::path::Path::new(path))?,
+        None => EngineConfig::default(),
+    };
+    if let Some(v) = flags.get("stages") {
+        cfg.stages = v.parse()?;
+    }
+    if let Some(v) = flags.get("width") {
+        cfg.tree.max_width = v.parse()?;
+    }
+    if let Some(v) = flags.get("children") {
+        cfg.tree.max_children = v.parse()?;
+    }
+    if let Some(v) = flags.get("max-new") {
+        cfg.max_new_tokens = v.parse()?;
+    }
+    if let Some(v) = flags.get("temperature") {
+        cfg.temperature = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn pick_prompt(flags: &HashMap<String, String>) -> Result<String> {
+    if let Some(p) = flags.get("prompt") {
+        return Ok(p.clone());
+    }
+    let domain = flags.get("domain").map(|s| s.as_str()).unwrap_or("math");
+    let wl = Workload::load(&pipedec::artifacts_dir(), domain)?;
+    Ok(wl.prompts[0].clone())
+}
+
+fn cmd_decode(flags: HashMap<String, String>) -> Result<()> {
+    let cfg = engine_cfg(&flags)?;
+    let prompt = pick_prompt(&flags)?;
+    let dir = pipedec::artifacts_dir();
+    let engine = flags.get("engine").map(|s| s.as_str()).unwrap_or("pipedec");
+    println!("engine={engine} stages={} tree=(w={},c={})", cfg.stages,
+        cfg.tree.max_width, cfg.tree.max_children);
+    println!("--- prompt ---\n{prompt}\n--- completion ---");
+    match engine {
+        "pipedec" => {
+            let mut e = PipeDecEngine::new(&dir, cfg)?;
+            let r = e.decode(&prompt)?;
+            println!("{}", r.text);
+            println!(
+                "--- stats ---\ntokens={} timesteps={} hits={} misses={} accept={:.2}",
+                r.tokens.len(), r.timesteps, r.hits, r.misses, r.accept_rate()
+            );
+            println!(
+                "wall={:.2}s modeled={:.3}s ({:.1} ms/token modeled)",
+                r.wall_s, r.modeled_s, 1e3 * r.modeled_s_per_token()
+            );
+        }
+        "pp" => {
+            let r = PpEngine::new(&dir, cfg)?.decode(&prompt)?;
+            println!("{}", r.text);
+            println!("--- stats ---\ntokens={} wall={:.2}s modeled={:.3}s",
+                r.tokens.len(), r.wall_s, r.modeled_s);
+        }
+        "stpp" => {
+            let r = StppEngine::new(&dir, cfg)?.decode(&prompt)?;
+            println!("{}", r.text);
+            println!("--- stats ---\ntokens={} accepted/round={:.2} modeled={:.3}s",
+                r.tokens.len(), r.accepted_per_round, r.modeled_s);
+        }
+        "slm" => {
+            let r = SlmEngine::new(&dir, cfg)?.decode(&prompt)?;
+            println!("{}", r.text);
+            println!("--- stats ---\ntokens={} wall={:.2}s", r.tokens.len(), r.wall_s);
+        }
+        other => bail!("unknown engine {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_sim(flags: HashMap<String, String>) -> Result<()> {
+    let stages: usize = flags.get("stages").map(|s| s.parse()).transpose()?.unwrap_or(14);
+    let width: usize = flags.get("width").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let children: usize = flags.get("children").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let tokens: usize = flags.get("tokens").map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let domain = flags.get("domain").map(|s| s.as_str()).unwrap_or("math");
+    let cluster = ClusterSpec::paper(stages);
+    let hit = HitModel::default_for(domain);
+    let mut rng = XorShiftRng::new(1);
+    let pd = simulate_pipedec(&cluster, width, children, &hit, tokens, &mut rng);
+    let pp = simulate_pp(&cluster, tokens);
+    let st = simulate_stpp(&cluster, 16, 4, 4, &hit, tokens, &mut rng);
+    println!("paper-scale simulation: 70B over {stages}x RTX3090, domain={domain}");
+    println!("  PipeDec-{stages}: {:8.2} ms/token (accuracy {:.2})",
+        1e3 * pd.s_per_token(), pd.accuracy());
+    println!("  STPP:        {:8.2} ms/token (accepted/round {:.2})",
+        1e3 * st.s_per_token(), st.accepted_per_round);
+    println!("  PP:          {:8.2} ms/token", 1e3 * pp.s_per_token());
+    println!("  speedup vs PP:   {:.2}x", pp.s_per_token() / pd.s_per_token());
+    println!("  speedup vs STPP: {:.2}x", st.s_per_token() / pd.s_per_token());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = pipedec::artifacts_dir();
+    println!("pipedec {} — artifacts at {}", pipedec::version(), dir.display());
+    for name in ["target", "draft"] {
+        let cfg = pipedec::config::ArtifactConfig::load(
+            &dir.join(format!("{name}_config.txt")),
+        )?;
+        println!(
+            "  {name}: dim={} layers={} heads={} vocab={} caps(w={},tree={},past={})",
+            cfg.dim, cfg.n_layers, cfg.n_heads, cfg.vocab_size,
+            cfg.width_cap, cfg.tree_cap, cfg.past_cap
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("decode") => cmd_decode(parse_flags(&args[1..])?),
+        Some("sim") => cmd_sim(parse_flags(&args[1..])?),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: pipedec <decode|sim|info> [flags]  (see rust/src/main.rs)");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Metrics: counters, latency recorders, and table/CSV output for the
+//! benches and examples.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::Summary;
+
+/// Accumulates named counters and sample series.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.samples.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn samples(&self, name: &str) -> &[f64] {
+        self.samples.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn summary(&self, name: &str) -> Summary {
+        Summary::from_samples(self.samples(name).to_vec())
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.samples {
+            self.samples.entry(k.clone()).or_default().extend(v);
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for k in self.samples.keys() {
+            out.push_str(&format!("{k}: {}\n", self.summary(k)));
+        }
+        out
+    }
+}
+
+/// Scope timer recording elapsed seconds into a metric on drop.
+pub struct ScopedTimer<'a> {
+    metrics: &'a mut Metrics,
+    name: String,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(metrics: &'a mut Metrics, name: &str) -> Self {
+        Self {
+            metrics,
+            name: name.to_string(),
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.metrics
+            .record(&self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+/// Fixed-width text table used by the figure benches to print paper-style
+/// rows.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.incr("tokens", 3);
+        m.incr("tokens", 2);
+        assert_eq!(m.counter("tokens"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn samples_summarize() {
+        let mut m = Metrics::new();
+        for v in [1.0, 2.0, 3.0] {
+            m.record("lat", v);
+        }
+        assert!((m.summary("lat").mean() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        a.incr("x", 1);
+        a.record("s", 1.0);
+        let mut b = Metrics::new();
+        b.incr("x", 2);
+        b.record("s", 3.0);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert_eq!(a.samples("s").len(), 2);
+    }
+
+    #[test]
+    fn timer_records() {
+        let mut m = Metrics::new();
+        {
+            let _t = ScopedTimer::new(&mut m, "dur");
+        }
+        assert_eq!(m.samples("dur").len(), 1);
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert!(t.render().contains("bb"));
+        assert_eq!(t.to_csv(), "a,bb\n1,2\n");
+    }
+}

@@ -1,0 +1,94 @@
+//! Attention-bias builders, host-side mirrors of the helpers in
+//! `python/compile/model.py` (`past_bias_for`, `causal_block_bias`).
+
+use crate::config::TreeConfig;
+
+pub const NEG: f32 = -1e9;
+
+/// `[W, P]` additive validity mask: column j is open iff `j < past_len`.
+pub fn past_bias(past_len: usize, w: usize, p: usize) -> Vec<f32> {
+    let mut out = vec![NEG; w * p];
+    for r in 0..w {
+        for v in &mut out[r * p..r * p + past_len.min(p)] {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+/// `[W, T]` prefill bias: the current chunk is appended at `tree_len`;
+/// row i attends causally to block columns `tree_len..=tree_len+i` while
+/// `i < valid`. Fully-masked padding rows keep self-attention open so the
+/// kernel's softmax stays finite.
+pub fn causal_block_bias(valid: usize, tree_len: usize, w: usize, t: usize) -> Vec<f32> {
+    let mut out = vec![NEG; w * t];
+    for r in 0..w {
+        if r < valid {
+            for c in 0..=r.min(t.saturating_sub(tree_len + 1)) {
+                out[r * t + tree_len + c] = 0.0;
+            }
+        } else if tree_len + r < t {
+            out[r * t + tree_len + r] = 0.0; // padding row: self only
+        }
+    }
+    out
+}
+
+/// `[W, T]` tree bias for padding rows beyond the valid block: open the
+/// self slot so softmax stays finite (mirrors the python helper's
+/// `self_ok` clause). `rows` already hold the ancestor bias of the valid
+/// block from [`crate::tree::PredictionTree::bias_rows`].
+pub fn pad_tree_bias_rows(
+    mut rows: Vec<f32>,
+    valid: usize,
+    tree_len: usize,
+    w: usize,
+    t: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(rows.len(), valid * t);
+    rows.resize(w * t, NEG);
+    for r in valid..w {
+        let c = tree_len + r;
+        if c < t {
+            rows[r * t + c] = 0.0;
+        }
+    }
+    rows
+}
+
+/// Effective tree width cap for a [`TreeConfig`] against the artifact cap.
+pub fn effective_width(tree: &TreeConfig, width_cap: usize) -> usize {
+    tree.max_width.min(width_cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn past_bias_opens_prefix() {
+        let b = past_bias(2, 2, 4);
+        assert_eq!(b, vec![0.0, 0.0, NEG, NEG, 0.0, 0.0, NEG, NEG]);
+    }
+
+    #[test]
+    fn causal_block_is_triangular() {
+        let b = causal_block_bias(3, 1, 4, 6);
+        // row 0 attends col 1 only
+        assert_eq!(&b[0..6], &[NEG, 0.0, NEG, NEG, NEG, NEG]);
+        // row 1 attends cols 1..=2
+        assert_eq!(&b[6..12], &[NEG, 0.0, 0.0, NEG, NEG, NEG]);
+        // row 3 is padding: self slot open at col 4
+        assert_eq!(b[3 * 6 + 4], 0.0);
+    }
+
+    #[test]
+    fn pad_rows_open_self() {
+        let rows = vec![0.0f32; 1 * 8]; // one valid row
+        let padded = pad_tree_bias_rows(rows, 1, 3, 4, 8);
+        assert_eq!(padded.len(), 32);
+        assert_eq!(padded[1 * 8 + 4], 0.0); // row1 self at 3+1
+        assert_eq!(padded[2 * 8 + 5], 0.0);
+        assert_eq!(padded[1 * 8 + 3], NEG);
+    }
+}

@@ -1,0 +1,340 @@
+//! Model execution wrappers: compose the per-entry-point HLO artifacts
+//! (embed / layer / head) into stage passes, draft steps, and prefill.
+//!
+//! Argument order of the `*_layer` artifact (mirrored from
+//! `python/compile/aot.py::lower_layer` — do not reorder):
+//!
+//! ```text
+//!   attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down,
+//!   h[W,d], past_k[H,P,hd], past_v, tree_k[H,T,hd], tree_v,
+//!   tree_len (i32 scalar), pos[W] i32, past_bias[W,P], tree_bias[W,T]
+//! -> (h'[W,d], k_new[H,W,hd], v_new[H,W,hd])
+//! ```
+
+pub mod bias;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ArtifactConfig;
+use crate::kvcache::TwoLevelCache;
+use crate::runtime::{lit_f32, lit_i32, scalar_i32, to_vec_f32, ArtifactSet, Runtime};
+use crate::weights::WeightMap;
+
+/// Names of the nine per-layer weight tensors, in artifact argument order
+/// (== `python/compile/model.py::LAYER_WEIGHT_ORDER`).
+pub const LAYER_WEIGHT_ORDER: [&str; 9] = [
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+];
+
+/// Output of one layer pass over a node block.
+pub struct LayerOut {
+    pub hidden: Vec<f32>,
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+}
+
+/// One loaded model (target or draft): artifact executables + weight
+/// literals built once at load time.
+pub struct ModelHandles {
+    /// Effective artifact config: `width_cap` reflects the selected width
+    /// bucket, so every shape computation below sizes to the loaded variant.
+    pub cfg: ArtifactConfig,
+    artifacts: ArtifactSet,
+    /// Entry-name suffix of the selected width bucket ("" = full cap,
+    /// "_w8" = the narrow variant; EXPERIMENTS.md §Perf iteration 3).
+    suffix: String,
+    emb_lit: xla::Literal,
+    final_norm_lit: xla::Literal,
+    layer_lits: Vec<Vec<xla::Literal>>,
+}
+
+impl ModelHandles {
+    /// Load with the full width cap.
+    pub fn load(rt: &Runtime, dir: &Path, name: &str) -> Result<Self> {
+        Self::load_with_width(rt, dir, name, usize::MAX)
+    }
+
+    /// Load config + weights + artifacts for `{name}` from `dir`, selecting
+    /// the narrowest width-bucket artifact variant that fits blocks of
+    /// `want_width` rows.
+    pub fn load_with_width(
+        rt: &Runtime,
+        dir: &Path,
+        name: &str,
+        want_width: usize,
+    ) -> Result<Self> {
+        let mut cfg = ArtifactConfig::load(&dir.join(format!("{name}_config.txt")))?;
+        let narrow = dir.join(format!("{name}_layer_w8.hlo.txt"));
+        let suffix = if want_width <= 8 && narrow.exists() {
+            cfg.width_cap = 8;
+            "_w8".to_string()
+        } else {
+            String::new()
+        };
+        let weights = WeightMap::load(&dir.join(format!("weights_{name}.pdw")))?;
+        let mut artifacts = ArtifactSet::new(dir, name);
+        // eagerly compile the three entry points
+        for e in ["embed", "layer", "head"] {
+            artifacts.entry(rt, &format!("{e}{suffix}"))?;
+        }
+
+        let emb = weights.get("emb")?;
+        let emb_lit = lit_f32(&emb.data, &[cfg.vocab_size, cfg.dim])?;
+        let fnorm = weights.get("final_norm")?;
+        let final_norm_lit = lit_f32(&fnorm.data, &[cfg.dim])?;
+
+        let mut layer_lits = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut lits = Vec::with_capacity(9);
+            for w in LAYER_WEIGHT_ORDER {
+                let t = weights
+                    .get(&format!("layers.{l}.{w}"))
+                    .with_context(|| format!("layer {l} weight {w}"))?;
+                lits.push(lit_f32(&t.data, &t.dims)?);
+            }
+            layer_lits.push(lits);
+        }
+        Ok(Self {
+            cfg,
+            artifacts,
+            suffix,
+            emb_lit,
+            final_norm_lit,
+            layer_lits,
+        })
+    }
+
+    /// Effective block width of the loaded artifact variant.
+    pub fn width(&self) -> usize {
+        self.cfg.width_cap
+    }
+
+    /// Token ids -> hidden states `[W, d]`. Input is padded to `width_cap`.
+    pub fn embed(&mut self, rt: &Runtime, tokens: &[u32]) -> Result<Vec<f32>> {
+        let w = self.cfg.width_cap;
+        anyhow::ensure!(tokens.len() <= w, "block wider than width_cap");
+        let mut padded = vec![0i32; w];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let toks = lit_i32(&padded, &[w])?;
+        let args = [&self.emb_lit, &toks];
+        let out = self.artifacts.entry(rt, &format!("embed{}", self.suffix))?.run_refs(&args)?;
+        to_vec_f32(&out[0])
+    }
+
+    /// One transformer layer over a node block with the two-level cache of
+    /// the owning stage. `layer` is the model-wide layer index;
+    /// `layer_in_stage` indexes into `cache`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn layer_forward(
+        &mut self,
+        rt: &Runtime,
+        layer: usize,
+        layer_in_stage: usize,
+        cache: &TwoLevelCache,
+        hidden: &[f32],
+        pos: &[i32],
+        past_bias: &[f32],
+        tree_bias: &[f32],
+    ) -> Result<LayerOut> {
+        let c = &self.cfg;
+        let (w, p, t, nh, hd) = (c.width_cap, c.past_cap, c.tree_cap, c.n_heads, c.head_dim);
+        anyhow::ensure!(hidden.len() == w * c.dim, "hidden shape");
+        anyhow::ensure!(pos.len() == w, "pos shape");
+        anyhow::ensure!(past_bias.len() == w * p, "past_bias shape");
+        anyhow::ensure!(tree_bias.len() == w * t, "tree_bias shape");
+
+        // dynamic operands are built per call; weight literals are borrowed
+        // (a deep literal clone of ~0.9 MB/layer otherwise dominates the
+        // call — EXPERIMENTS.md §Perf)
+        let dynamic: Vec<xla::Literal> = vec![
+            lit_f32(hidden, &[w, c.dim])?,
+            lit_f32(cache.past_k_layer(layer_in_stage), &[nh, p, hd])?,
+            lit_f32(cache.past_v_layer(layer_in_stage), &[nh, p, hd])?,
+            lit_f32(cache.tree_k_layer(layer_in_stage), &[nh, t, hd])?,
+            lit_f32(cache.tree_v_layer(layer_in_stage), &[nh, t, hd])?,
+            scalar_i32(cache.tree_len() as i32)?,
+            lit_i32(pos, &[w])?,
+            lit_f32(past_bias, &[w, p])?,
+            lit_f32(tree_bias, &[w, t])?,
+        ];
+        let mut args: Vec<&xla::Literal> = self.layer_lits[layer].iter().collect();
+        args.extend(dynamic.iter());
+
+        let out = self.artifacts.entry(rt, &format!("layer{}", self.suffix))?.run_refs(&args)?;
+        anyhow::ensure!(out.len() == 3, "layer artifact returns 3 outputs");
+        Ok(LayerOut {
+            hidden: to_vec_f32(&out[0])?,
+            k_new: to_vec_f32(&out[1])?,
+            v_new: to_vec_f32(&out[2])?,
+        })
+    }
+
+    /// Final norm + tied head: hidden `[W, d]` -> logits `[W, V]`.
+    pub fn head(&mut self, rt: &Runtime, hidden: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        anyhow::ensure!(hidden.len() == c.width_cap * c.dim, "hidden shape");
+        let h = lit_f32(hidden, &[c.width_cap, c.dim])?;
+        let args = [&self.final_norm_lit, &self.emb_lit, &h];
+        let out = self.artifacts.entry(rt, &format!("head{}", self.suffix))?.run_refs(&args)?;
+        to_vec_f32(&out[0])
+    }
+
+    /// Run a block through a contiguous span of layers (a pipeline stage),
+    /// appending the new tree-level KV of each layer to `cache` and
+    /// committing `count` slots. Returns the final hidden states.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage_forward(
+        &mut self,
+        rt: &Runtime,
+        layer_range: std::ops::Range<usize>,
+        cache: &mut TwoLevelCache,
+        mut hidden: Vec<f32>,
+        count: usize,
+        pos: &[i32],
+        past_bias: &[f32],
+        tree_bias: &[f32],
+    ) -> Result<Vec<f32>> {
+        let w = self.cfg.width_cap;
+        for (lis, layer) in layer_range.enumerate() {
+            let out = self.layer_forward(
+                rt, layer, lis, cache, &hidden, pos, past_bias, tree_bias,
+            )?;
+            cache.append_tree_block(lis, &out.k_new, &out.v_new, w, count)?;
+            hidden = out.hidden;
+        }
+        cache.commit_tree(count);
+        Ok(hidden)
+    }
+
+    /// Prefill a prompt chunk through a span of layers: the chunk plays the
+    /// "predicted" segment with a causal in-block bias (see
+    /// `python/compile/model.py` docstring), and the resulting KV is
+    /// appended to the **model level** of the cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_chunk(
+        &mut self,
+        rt: &Runtime,
+        layer_range: std::ops::Range<usize>,
+        cache: &mut TwoLevelCache,
+        mut hidden: Vec<f32>,
+        count: usize,
+        start_pos: usize,
+    ) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let w = c.width_cap;
+        let pos: Vec<i32> = (0..w).map(|i| (start_pos + i) as i32).collect();
+        let past_bias = bias::past_bias(cache.past_len(), w, c.past_cap);
+        // in-block causal bias over the tree segment appended at slot 0
+        let tree_bias = bias::causal_block_bias(count, 0, w, c.tree_cap);
+        anyhow::ensure!(cache.tree_len() == 0, "prefill requires empty tree level");
+        for (lis, layer) in layer_range.enumerate() {
+            let out = self.layer_forward(
+                rt, layer, lis, cache, &hidden, &pos, &past_bias, &tree_bias,
+            )?;
+            cache.append_past_block(lis, &out.k_new, &out.v_new, w, count)?;
+            hidden = out.hidden;
+        }
+        cache.commit_past(count);
+        Ok(hidden)
+    }
+
+    /// Full-model pass over a tree block (used by the draft node and the
+    /// SLM baseline): embed + all layers + head. Appends tree-level KV.
+    pub fn full_forward_tree_block(
+        &mut self,
+        rt: &Runtime,
+        cache: &mut TwoLevelCache,
+        tokens: &[u32],
+        pos: &[i32],
+        tree_bias: &[f32],
+    ) -> Result<Vec<f32>> {
+        let hidden = self.embed(rt, tokens)?;
+        let past_bias =
+            bias::past_bias(cache.past_len(), self.cfg.width_cap, self.cfg.past_cap);
+        let n = self.cfg.n_layers;
+        let h = self.stage_forward(
+            rt,
+            0..n,
+            cache,
+            hidden,
+            tokens.len(),
+            pos,
+            &past_bias,
+            tree_bias,
+        )?;
+        self.head(rt, &h)
+    }
+
+    /// Full-model prefill of a whole prompt (draft node / SLM baseline).
+    /// Returns the logits row of the last prompt token.
+    pub fn full_prefill(
+        &mut self,
+        rt: &Runtime,
+        cache: &mut TwoLevelCache,
+        prompt: &[u32],
+    ) -> Result<Vec<f32>> {
+        let w = self.cfg.width_cap;
+        let n = self.cfg.n_layers;
+        let mut last_h: Option<Vec<f32>> = None;
+        let mut last_count = 0;
+        for chunk in prompt.chunks(w) {
+            let start = cache.past_len();
+            let hidden = self.embed(rt, chunk)?;
+            let h = self.prefill_chunk(rt, 0..n, cache, hidden, chunk.len(), start)?;
+            last_count = chunk.len();
+            last_h = Some(h);
+        }
+        let h = last_h.context("empty prompt")?;
+        let logits = self.head(rt, &h)?;
+        let v = self.cfg.vocab_size;
+        Ok(logits[(last_count - 1) * v..last_count * v].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::top_k_indices;
+
+    fn setup() -> Option<(Runtime, ModelHandles)> {
+        let dir = crate::artifacts_dir();
+        if !dir.join("draft_config.txt").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = ModelHandles::load(&rt, &dir, "draft").unwrap();
+        Some((rt, m))
+    }
+
+    #[test]
+    fn draft_loads_and_embeds() {
+        let Some((rt, mut m)) = setup() else { return };
+        let h = m.embed(&rt, &crate::tokenizer::encode("hi")).unwrap();
+        assert_eq!(h.len(), m.cfg.width_cap * m.cfg.dim);
+        assert!(h.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn prefill_then_greedy_continuation_is_plausible() {
+        // The draft was trained on the corpus; after prefixing a math-style
+        // prompt the greedy next token must be a printable id (not PAD) and
+        // logits must be finite.
+        let Some((rt, mut m)) = setup() else { return };
+        let c = m.cfg.clone();
+        let mut cache = TwoLevelCache::new(
+            c.n_layers, c.n_heads, c.head_dim, c.past_cap, c.tree_cap,
+        );
+        let prompt = crate::tokenizer::encode("<math>\nquestion: bob has 3 coins");
+        let logits = m.full_prefill(&rt, &mut cache, &prompt).unwrap();
+        assert_eq!(logits.len(), c.vocab_size);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        let top = top_k_indices(&logits, 1)[0];
+        assert!(top >= 3, "greedy next token {top} should not be PAD/BOS");
+        assert_eq!(cache.past_len(), prompt.len());
+    }
+}

@@ -1,0 +1,65 @@
+//! Literal construction/extraction helpers shared by the model wrappers.
+
+use anyhow::{Context, Result};
+
+/// f32 literal of the given shape from row-major data.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "lit_f32: {} != {:?}", data.len(), dims);
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("lit_f32: {e:?}"))
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "lit_i32: {} != {:?}", data.len(), dims);
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("lit_i32: {e:?}"))
+}
+
+/// Scalar i32 literal (shape `()`).
+pub fn scalar_i32(v: i32) -> Result<xla::Literal> {
+    lit_i32(&[v], &[])
+}
+
+/// Extract f32 data from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to_vec::<f32>")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![7i32, -8];
+        let lit = lit_i32(&data, &[2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let lit = scalar_i32(42).unwrap();
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 42);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0], &[2]).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* — the published `xla` crate wraps
+//! xla_extension 0.5.1, which rejects the 64-bit instruction ids in
+//! serialized protos from jax >= 0.5; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+//!
+//! All entry points are lowered with `return_tuple=True`, so every
+//! execution returns a tuple literal which [`Executable::run`] decomposes.
+
+pub mod literal;
+
+pub use literal::{lit_f32, lit_i32, scalar_i32, to_vec_f32};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with borrowed literals — avoids deep `Literal::clone` of
+    /// weight tensors on the hot path (EXPERIMENTS.md §Perf, L3 item 1).
+    pub fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {}: {e:?}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose result of {}: {e:?}", self.name))
+    }
+}
+
+/// Lazy registry of the artifact set for one model (`target` / `draft`).
+pub struct ArtifactSet {
+    dir: PathBuf,
+    model: String,
+    cache: HashMap<String, Executable>,
+}
+
+impl ArtifactSet {
+    pub fn new(dir: &Path, model: &str) -> Self {
+        Self {
+            dir: dir.to_path_buf(),
+            model: model.to_string(),
+            cache: HashMap::new(),
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Compile-once accessor for `{model}_{entry}.hlo.txt`.
+    pub fn entry(&mut self, rt: &Runtime, entry: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(entry) {
+            let path = self.dir.join(format!("{}_{entry}.hlo.txt", self.model));
+            let exe = rt.load_hlo_text(&path)?;
+            self.cache.insert(entry.to_string(), exe);
+        }
+        Ok(self.cache.get(entry).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need built artifacts; they are skipped (not failed) when
+    /// `artifacts/` is absent so `cargo test` works pre-`make artifacts`.
+    fn artifacts() -> Option<PathBuf> {
+        let dir = crate::artifacts_dir();
+        dir.join("target_config.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn embed_artifact_runs() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let cfg =
+            crate::config::ArtifactConfig::load(&dir.join("target_config.txt")).unwrap();
+        let exe = rt.load_hlo_text(&dir.join("target_embed.hlo.txt")).unwrap();
+        let weights =
+            crate::weights::WeightMap::load(&dir.join("weights_target.pdw")).unwrap();
+        let emb = weights.get("emb").unwrap();
+        let emb_lit = lit_f32(&emb.data, &[cfg.vocab_size, cfg.dim]).unwrap();
+        let tokens = vec![5i32; cfg.width_cap];
+        let tok_lit = lit_i32(&tokens, &[cfg.width_cap]).unwrap();
+        let out = exe.run(&[emb_lit, tok_lit]).unwrap();
+        assert_eq!(out.len(), 1);
+        let h = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(h.len(), cfg.width_cap * cfg.dim);
+        // row 0 must equal emb[5]
+        let row = &emb.data[5 * cfg.dim..6 * cfg.dim];
+        for (a, b) in h[..cfg.dim].iter().zip(row) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

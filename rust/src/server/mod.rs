@@ -1,0 +1,157 @@
+//! Request server: router + FIFO batcher + engine worker.
+//!
+//! PipeDec is a *single-task* accelerator (it commits every pipeline stage
+//! to one request), so the server runs one engine worker and a bounded
+//! admission queue; the paper's Fig. 8 process-pool experiment maps to
+//! submitting `k` concurrent requests and measuring completion throughput.
+//! The router is engine-agnostic: any `FnMut(&str) -> Result<(Vec<u32>,
+//! f64)>` can serve, which lets tests and benches run PP/STPP/SLM behind
+//! the same front end.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::Metrics;
+use crate::util::Summary;
+
+/// A queued request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub arrived_at: f64,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: usize,
+    /// queueing delay + service, seconds
+    pub latency_s: f64,
+    pub service_s: f64,
+}
+
+/// FIFO admission queue with a capacity bound (backpressure).
+#[derive(Debug)]
+pub struct Router {
+    queue: VecDeque<Request>,
+    capacity: usize,
+    next_id: u64,
+    clock0: Instant,
+}
+
+impl Router {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            capacity,
+            next_id: 0,
+            clock0: Instant::now(),
+        }
+    }
+
+    /// Returns the request id, or Err when the queue is full.
+    pub fn submit(&mut self, prompt: &str) -> Result<u64> {
+        anyhow::ensure!(self.queue.len() < self.capacity, "queue full");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Request {
+            id,
+            prompt: prompt.to_string(),
+            arrived_at: self.clock0.elapsed().as_secs_f64(),
+        });
+        Ok(id)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock0.elapsed().as_secs_f64()
+    }
+}
+
+/// Serve everything currently queued through a decode function, FIFO.
+/// Returns per-request completions.
+pub fn drain<F>(router: &mut Router, mut decode: F) -> Result<Vec<Completion>>
+where
+    F: FnMut(&str) -> Result<(usize, f64)>,
+{
+    let mut out = Vec::new();
+    while let Some(req) = router.pop() {
+        let t0 = Instant::now();
+        let (tokens, _modeled) = decode(&req.prompt)?;
+        let service = t0.elapsed().as_secs_f64();
+        out.push(Completion {
+            id: req.id,
+            tokens,
+            latency_s: router.now() - req.arrived_at,
+            service_s: service,
+        });
+    }
+    Ok(out)
+}
+
+/// Aggregate a batch of completions into the numbers Fig. 8 reports.
+pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) {
+    let mut m = Metrics::new();
+    let mut lat = Vec::new();
+    let mut total_tokens = 0usize;
+    for c in completions {
+        m.incr("requests", 1);
+        m.incr("tokens", c.tokens as u64);
+        m.record("latency_s", c.latency_s);
+        lat.push(c.latency_s);
+        total_tokens += c.tokens;
+    }
+    if wall_s > 0.0 {
+        m.record("throughput_tok_s", total_tokens as f64 / wall_s);
+    }
+    (m, Summary::from_samples(lat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut r = Router::new(4);
+        let a = r.submit("a").unwrap();
+        let b = r.submit("b").unwrap();
+        assert!(a < b);
+        assert_eq!(r.pop().unwrap().prompt, "a");
+        assert_eq!(r.pop().unwrap().prompt, "b");
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure_rejects_overflow() {
+        let mut r = Router::new(2);
+        r.submit("a").unwrap();
+        r.submit("b").unwrap();
+        assert!(r.submit("c").is_err());
+    }
+
+    #[test]
+    fn drain_serves_all_and_measures() {
+        let mut r = Router::new(8);
+        for i in 0..3 {
+            r.submit(&format!("p{i}")).unwrap();
+        }
+        let done = drain(&mut r, |p| Ok((p.len(), 0.0))).unwrap();
+        assert_eq!(done.len(), 3);
+        assert!(done.iter().all(|c| c.latency_s >= 0.0));
+        let (m, lat) = summarize(&done, 1.0);
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(lat.len(), 3);
+    }
+}

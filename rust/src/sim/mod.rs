@@ -1,0 +1,26 @@
+//! Calibrated cluster simulator (DESIGN.md inventory row 12).
+//!
+//! The paper's testbed — LLaMA 3.1-70B over 14–21 GPUs (RTX 3090/4090, L40)
+//! on 10 Gbps Ethernet with a dedicated L40 draft node — is not available
+//! here, so paper-scale latency/throughput figures (Figs. 4–8) are
+//! regenerated on a discrete-time simulator whose two inputs are:
+//!
+//! 1. **hardware constants**: per-GPU memory bandwidth and compute peaks
+//!    (decode is memory-bound; batch adds a compute term), plus the link
+//!    model from [`crate::transport`];
+//! 2. **hit statistics**: the draft/target top-k agreement measured on the
+//!    *real* artifact-backed engine per workload domain, extrapolated along
+//!    a saturating top-k curve for tree sizes beyond the artifact caps.
+//!
+//! Policies mirror the four engines: PipeDec timestep pipelining with
+//! miss-restart, STPP serial-draft rounds, PP token-at-a-time, SLM
+//! single-GPU autoregression.
+
+pub mod cluster;
+pub mod hitmodel;
+pub mod policy;
+
+pub use cluster::{ClusterSpec, GpuModel, StageModel};
+pub use hitmodel::HitModel;
+pub use policy::{simulate_pipedec, simulate_pp, simulate_slm, simulate_stpp,
+    throughput_tokens_per_s, SimOutcome};

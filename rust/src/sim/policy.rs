@@ -1,0 +1,276 @@
+//! Decoding policies on the simulated cluster: PipeDec, STPP, PP, SLM.
+//!
+//! All simulators decode `n_tokens` of one request and return the elapsed
+//! model time; randomness (hit/miss draws) comes from the crate RNG so runs
+//! are reproducible.
+
+use super::cluster::ClusterSpec;
+use super::hitmodel::HitModel;
+use crate::util::XorShiftRng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimOutcome {
+    pub tokens: usize,
+    pub seconds: f64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Average accepted length per STPP round (0 for others).
+    pub accepted_per_round: f64,
+}
+
+impl SimOutcome {
+    pub fn s_per_token(&self) -> f64 {
+        self.seconds / self.tokens.max(1) as f64
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+/// PipeDec (§3): one timestep per pipeline beat. While predictions hit, one
+/// token syncs per timestep; a miss restarts the pipeline (the next token
+/// needs a full traversal). Deeper trees than the pipeline keep every stage
+/// busy, so the beat is `max(T_draft, max_i T_stage(w) + T_link)` — the
+/// paper's §2.4 latency formula.
+pub fn simulate_pipedec(
+    cluster: &ClusterSpec,
+    width: usize,
+    children: usize,
+    hit: &HitModel,
+    n_tokens: usize,
+    rng: &mut XorShiftRng,
+) -> SimOutcome {
+    let n = cluster.stages.len();
+    let t_stage = cluster.max_stage_time(width);
+    let t_link = cluster.link.transfer_time(cluster.activation_bytes(width));
+    let t_draft = cluster.draft.block_time(width * children.min(4));
+    let beat = t_draft.max(t_stage + t_link);
+    // pipeline fill after a (re)start: the root data flow must traverse all
+    // stages before the first sync
+    let fill = cluster.sum_stage_time(width)
+        + (n.saturating_sub(1)) as f64 * t_link;
+
+    let p = hit.hit_prob(width, children);
+    let mut seconds = fill; // initial fill
+    let (mut hits, mut misses) = (0u64, 0u64);
+    let mut produced = 0usize;
+    while produced < n_tokens {
+        seconds += beat;
+        produced += 1; // every sync decodes exactly one token (§3.4.3)
+        if rng.chance(p) {
+            hits += 1;
+        } else {
+            misses += 1;
+            seconds += fill; // restart: in-flight flows invalidated
+        }
+    }
+    SimOutcome {
+        tokens: produced,
+        seconds,
+        hits,
+        misses,
+        accepted_per_round: 0.0,
+    }
+}
+
+/// STPP (SpecInfer-style, §4.2): serial draft builds a static tree of
+/// `depth` levels bounded to one verification batch, then one full pipeline
+/// pass verifies it; the matched root path is accepted.
+pub fn simulate_stpp(
+    cluster: &ClusterSpec,
+    tree_nodes: usize,
+    children: usize,
+    depth: usize,
+    hit: &HitModel,
+    n_tokens: usize,
+    rng: &mut XorShiftRng,
+) -> SimOutcome {
+    let n = cluster.stages.len();
+    let per_level_width = (tree_nodes / depth.max(1)).max(1);
+    let t_draft_level = cluster.draft.block_time(per_level_width);
+    let t_pass = cluster.sum_stage_time(tree_nodes)
+        + (n.saturating_sub(1)) as f64
+            * cluster.link.transfer_time(cluster.activation_bytes(tree_nodes));
+    let round_time = depth as f64 * t_draft_level + t_pass;
+
+    let p = hit.hit_prob(per_level_width, children);
+    let mut seconds = 0.0;
+    let (mut hits, mut misses) = (0u64, 0u64);
+    let mut produced = 0usize;
+    let mut rounds = 0u64;
+    while produced < n_tokens {
+        rounds += 1;
+        seconds += round_time;
+        // walk: each level matches with probability p; always >= 1 token
+        let mut accepted = 1usize;
+        while accepted < depth && rng.chance(p) {
+            accepted += 1;
+            hits += 1;
+        }
+        if accepted < depth {
+            misses += 1;
+        }
+        produced += accepted;
+    }
+    SimOutcome {
+        tokens: produced,
+        seconds,
+        hits,
+        misses,
+        accepted_per_round: produced as f64 / rounds.max(1) as f64,
+    }
+}
+
+/// PP (§2.4): one token per full pipeline traversal.
+pub fn simulate_pp(cluster: &ClusterSpec, n_tokens: usize) -> SimOutcome {
+    let n = cluster.stages.len();
+    let per_token = cluster.sum_stage_time(1)
+        + (n.saturating_sub(1)) as f64
+            * cluster.link.transfer_time(cluster.activation_bytes(1));
+    SimOutcome {
+        tokens: n_tokens,
+        seconds: per_token * n_tokens as f64,
+        hits: 0,
+        misses: 0,
+        accepted_per_round: 0.0,
+    }
+}
+
+/// SLM: small model, one GPU, plain autoregression.
+pub fn simulate_slm(n_tokens: usize) -> SimOutcome {
+    let t = ClusterSpec::slm_8b().block_time(1);
+    SimOutcome {
+        tokens: n_tokens,
+        seconds: t * n_tokens as f64,
+        hits: 0,
+        misses: 0,
+        accepted_per_round: 0.0,
+    }
+}
+
+/// Fig. 8 throughput model: `k` concurrent requests, per-GPU free memory
+/// capping the batch at `max_batch`. PP/STPP interleave batched requests
+/// across pipeline stages (throughput scales with batch until the cap);
+/// PipeDec dedicates the whole pipeline to one request at a time but decodes
+/// it faster.
+pub fn throughput_tokens_per_s(
+    cluster: &ClusterSpec,
+    policy: &str,
+    k: usize,
+    max_batch: usize,
+    hit: &HitModel,
+    width: usize,
+    children: usize,
+    rng: &mut XorShiftRng,
+) -> f64 {
+    let b = k.min(max_batch).max(1);
+    match policy {
+        "pp" => {
+            // batched pipeline: one batch of b tokens per beat once full
+            let beat = cluster.max_stage_time(b)
+                + cluster.link.transfer_time(cluster.activation_bytes(b));
+            // can only overlap as many requests as stages
+            let occupancy =
+                (k.min(cluster.stages.len()) as f64 / cluster.stages.len() as f64).min(1.0);
+            b as f64 / beat * occupancy
+        }
+        "stpp" => {
+            let o = simulate_stpp(cluster, 16.min(b * 4), children, 4, hit, 256, rng);
+            let per_req = 1.0 / o.s_per_token();
+            // verification batch shares the block: b requests take turns
+            per_req * (b as f64).sqrt()
+        }
+        "pipedec" => {
+            let o = simulate_pipedec(cluster, width, children, hit, 256, rng);
+            // single-task: throughput == single-request rate regardless of k
+            1.0 / o.s_per_token()
+        }
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> XorShiftRng {
+        XorShiftRng::new(42)
+    }
+
+    #[test]
+    fn pipedec_beats_pp_at_paper_scale() {
+        let c = ClusterSpec::paper(14);
+        let hit = HitModel::default_for("math");
+        let pd = simulate_pipedec(&c, 32, 16, &hit, 512, &mut rng());
+        let pp = simulate_pp(&c, 512);
+        let speedup = pp.s_per_token() / pd.s_per_token();
+        assert!(
+            (3.0..10.0).contains(&speedup),
+            "PipeDec/PP speedup {speedup:.2} outside the paper's 4.46-7.79 band"
+        );
+    }
+
+    #[test]
+    fn pipedec_beats_stpp() {
+        let c = ClusterSpec::paper(14);
+        let hit = HitModel::default_for("math");
+        let pd = simulate_pipedec(&c, 32, 16, &hit, 512, &mut rng());
+        let st = simulate_stpp(&c, 16, 4, 4, &hit, 512, &mut rng());
+        let speedup = st.s_per_token() / pd.s_per_token();
+        assert!(
+            (1.5..4.0).contains(&speedup),
+            "PipeDec/STPP speedup {speedup:.2} outside the paper's 2.2-2.69 band"
+        );
+    }
+
+    #[test]
+    fn deeper_pipeline_helps_then_plateaus() {
+        let hit = HitModel::default_for("math");
+        let t7 = simulate_pipedec(&ClusterSpec::paper(7), 32, 16, &hit, 512, &mut rng())
+            .s_per_token();
+        let t14 = simulate_pipedec(&ClusterSpec::paper(14), 32, 16, &hit, 512, &mut rng())
+            .s_per_token();
+        assert!(t14 < t7, "14-stage should beat 7-stage");
+        let gain = t7 / t14;
+        assert!((1.2..2.2).contains(&gain), "7->14 gain {gain:.2} (paper ~1.64)");
+    }
+
+    #[test]
+    fn pipedec_14_stage_near_slm() {
+        // the paper's headline: the 70B pipeline approaches the 8B-on-one-GPU
+        // latency
+        let hit = HitModel::default_for("code");
+        let pd = simulate_pipedec(&ClusterSpec::paper(14), 32, 16, &hit, 512, &mut rng());
+        let slm = simulate_slm(512);
+        let ratio = pd.s_per_token() / slm.s_per_token();
+        assert!(ratio < 2.5, "PipeDec-14 vs SLM ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn stpp_accepts_more_with_accurate_draft() {
+        let c = ClusterSpec::paper(14);
+        let good = HitModel { a1: 0.95, rho: 0.6, beta: 2.5 };
+        let bad = HitModel { a1: 0.30, rho: 0.6, beta: 2.5 };
+        let a = simulate_stpp(&c, 16, 4, 4, &good, 256, &mut rng());
+        let b = simulate_stpp(&c, 16, 4, 4, &bad, 256, &mut rng());
+        assert!(a.accepted_per_round > b.accepted_per_round);
+    }
+
+    #[test]
+    fn throughput_pp_wins_at_high_concurrency() {
+        let c = ClusterSpec::paper(14);
+        let hit = HitModel::default_for("math");
+        let pp8 = throughput_tokens_per_s(&c, "pp", 8, 8, &hit, 32, 16, &mut rng());
+        let pd8 = throughput_tokens_per_s(&c, "pipedec", 8, 8, &hit, 32, 16, &mut rng());
+        let pd1 = throughput_tokens_per_s(&c, "pipedec", 1, 8, &hit, 32, 16, &mut rng());
+        let pp1 = throughput_tokens_per_s(&c, "pp", 1, 8, &hit, 32, 16, &mut rng());
+        assert!(pp8 > pd8, "PP should win at k=8 (pp {pp8:.1} vs pd {pd8:.1})");
+        assert!(pd1 > pp1, "PipeDec should win at k=1 (pd {pd1:.1} vs pp {pp1:.1})");
+    }
+}

@@ -1,0 +1,89 @@
+//! Byte-level tokenizer, mirror of `python/compile/tokenizer.py`.
+//!
+//! ids: 0=PAD 1=BOS 2=EOS 3='\n', 4..=98 map printable ASCII 32..=126.
+//! Characters outside the alphabet encode as ' '.
+
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+pub const NEWLINE_ID: u32 = 3;
+pub const VOCAB_SIZE: usize = 128;
+
+const OFFSET: u32 = 4;
+const FIRST: u32 = 32;
+const LAST: u32 = 126;
+
+/// Encode text to token ids.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.chars()
+        .map(|ch| {
+            if ch == '\n' {
+                NEWLINE_ID
+            } else {
+                let o = ch as u32;
+                if (FIRST..=LAST).contains(&o) {
+                    o - FIRST + OFFSET
+                } else {
+                    b' ' as u32 - FIRST + OFFSET
+                }
+            }
+        })
+        .collect()
+}
+
+/// Encode with optional BOS/EOS wrapping.
+pub fn encode_with(text: &str, bos: bool, eos: bool) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + 2);
+    if bos {
+        out.push(BOS_ID);
+    }
+    out.extend(encode(text));
+    if eos {
+        out.push(EOS_ID);
+    }
+    out
+}
+
+/// Decode ids back to text (control ids other than newline are dropped).
+pub fn decode(ids: &[u32]) -> String {
+    let mut s = String::with_capacity(ids.len());
+    for &id in ids {
+        if id == NEWLINE_ID {
+            s.push('\n');
+        } else if id >= OFFSET && id < OFFSET + (LAST - FIRST + 1) {
+            s.push(char::from_u32(id - OFFSET + FIRST).unwrap());
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "hello, world! 123\nsecond line ~";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn non_ascii_maps_to_space() {
+        assert_eq!(decode(&encode("a\u{00e9}b")), "a b");
+    }
+
+    #[test]
+    fn bos_eos_wrapping() {
+        let ids = encode_with("x", true, true);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(*ids.last().unwrap(), EOS_ID);
+        assert_eq!(decode(&ids), "x");
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for id in encode("The AI ~!") {
+            assert!((id as usize) < VOCAB_SIZE);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Transport layer: the in-process stand-in for NCCL point-to-point
+//! transfers (DESIGN.md §Model scale substitution).
+//!
+//! Messages move over `std::sync::mpsc` channels between pipeline node
+//! threads. Every link carries a (latency, bandwidth) cost model so the
+//! engine can account the *modeled* wire time of each transfer in its
+//! metrics without sleeping on the real path; the cluster simulator uses
+//! the same [`LinkModel`] numbers for paper-scale runs.
+//!
+//! Transfers are admitted through the central scheduler
+//! ([`crate::schedule::CentralScheduler`]) so the endpoint-conflict
+//! discipline of Appendix A governs the real engine too.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Cost model of one directed link.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+    /// Bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl LinkModel {
+    /// 10 Gbps Ethernet with typical small-cluster latency (the paper's
+    /// inter-server fabric).
+    pub fn ethernet_10g() -> Self {
+        Self {
+            latency_s: 100e-6,
+            bandwidth_bps: 10e9 / 8.0,
+        }
+    }
+
+    /// PCIe 4.0 x16 peer-to-peer (intra-server GPU pairs).
+    pub fn pcie_p2p() -> Self {
+        Self {
+            latency_s: 5e-6,
+            bandwidth_bps: 25e9,
+        }
+    }
+
+    /// Modeled wire time for a payload.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// A typed duplex mailbox pair for one pipeline edge.
+pub struct Mailbox<T> {
+    pub tx: Sender<T>,
+    pub rx: Receiver<T>,
+}
+
+/// Build the chain of channels for an n+1-node pipeline (rank 0 = draft,
+/// ranks 1..=n = stages): returns per-rank (incoming receiver, outgoing
+/// sender to rank+1). The last rank's outgoing sender loops back to rank 0
+/// conceptually; here it reports to the engine instead, so `senders[n]` is
+/// None.
+pub struct PipelineChannels<T> {
+    pub incoming: Vec<Option<Receiver<T>>>,
+    pub outgoing: Vec<Option<Sender<T>>>,
+}
+
+pub fn pipeline_channels<T>(n_ranks: usize) -> PipelineChannels<T> {
+    let mut incoming: Vec<Option<Receiver<T>>> = (0..n_ranks).map(|_| None).collect();
+    let mut outgoing: Vec<Option<Sender<T>>> = (0..n_ranks).map(|_| None).collect();
+    for rank in 0..n_ranks.saturating_sub(1) {
+        let (tx, rx) = channel::<T>();
+        outgoing[rank] = Some(tx);
+        incoming[rank + 1] = Some(rx);
+    }
+    PipelineChannels { incoming, outgoing }
+}
+
+/// Per-link transfer accounting: modeled seconds and bytes moved.
+#[derive(Debug, Default, Clone)]
+pub struct LinkStats {
+    pub transfers: u64,
+    pub bytes: u64,
+    pub modeled_seconds: f64,
+}
+
+impl LinkStats {
+    pub fn record(&mut self, bytes: usize, model: &LinkModel) {
+        self.transfers += 1;
+        self.bytes += bytes as u64;
+        self.modeled_seconds += model.transfer_time(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_time_scales_with_bytes() {
+        let l = LinkModel::ethernet_10g();
+        let t1 = l.transfer_time(1_000);
+        let t2 = l.transfer_time(10_000_000);
+        assert!(t2 > t1);
+        // 10 MB over 1.25 GB/s ~ 8 ms
+        assert!((t2 - (100e-6 + 0.008)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn pcie_faster_than_ethernet() {
+        let bytes = 1 << 20;
+        assert!(
+            LinkModel::pcie_p2p().transfer_time(bytes)
+                < LinkModel::ethernet_10g().transfer_time(bytes)
+        );
+    }
+
+    #[test]
+    fn channels_form_a_chain() {
+        let chans = pipeline_channels::<u32>(4);
+        assert!(chans.outgoing[0].is_some());
+        assert!(chans.incoming[0].is_none());
+        assert!(chans.outgoing[3].is_none());
+        assert!(chans.incoming[3].is_some());
+        chans.outgoing[0].as_ref().unwrap().send(7).unwrap();
+        assert_eq!(chans.incoming[1].as_ref().unwrap().recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut st = LinkStats::default();
+        let l = LinkModel::pcie_p2p();
+        st.record(100, &l);
+        st.record(200, &l);
+        assert_eq!(st.transfers, 2);
+        assert_eq!(st.bytes, 300);
+        assert!(st.modeled_seconds > 0.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Bit-packed square boolean matrix for the tree ancestor mask **M**
+//! (paper §3.3.1): `get(i, j)` == "node j is an ancestor-or-self of node i".
+//!
+//! The paper stores M densely on GPU; here it is u64-packed so the §3.3
+//! algebra (B = M·log P, pruning via a column, block-structured growth)
+//! runs in a few cache lines even for simulator-scale trees (thousands of
+//! nodes).
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitMatrix {
+    n: usize,
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn new(n: usize) -> Self {
+        let words_per_row = n.div_ceil(64).max(1);
+        Self {
+            n,
+            words_per_row,
+            bits: vec![0; n * words_per_row],
+        }
+    }
+
+    /// Identity matrix of size n (every node is its own ancestor-or-self).
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::new(n);
+        for i in 0..n {
+            m.set(i, i, true);
+        }
+        m
+    }
+
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.n && j < self.n);
+        let w = self.bits[i * self.words_per_row + j / 64];
+        (w >> (j % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        debug_assert!(i < self.n && j < self.n);
+        let idx = i * self.words_per_row + j / 64;
+        if v {
+            self.bits[idx] |= 1 << (j % 64);
+        } else {
+            self.bits[idx] &= !(1 << (j % 64));
+        }
+    }
+
+    /// Grow to size `n2 >= n`, preserving contents (new bits zero).
+    pub fn grown(&self, n2: usize) -> Self {
+        assert!(n2 >= self.n);
+        let mut out = Self::new(n2);
+        for i in 0..self.n {
+            let src = &self.bits[i * self.words_per_row..][..self.words_per_row];
+            out.bits[i * out.words_per_row..][..self.words_per_row]
+                .copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Append a row that copies row `parent` and sets bit `self_col`
+    /// (the §3.3.3 bottom-left "repeat parent rows" + bottom-right identity
+    /// blocks, one row at a time). Caller must have grown the matrix so that
+    /// row `self_col` exists.
+    pub fn inherit_row(&mut self, row: usize, parent: usize, self_col: usize) {
+        debug_assert!(row < self.n && parent < row);
+        let (dst_start, src_start) =
+            (row * self.words_per_row, parent * self.words_per_row);
+        for w in 0..self.words_per_row {
+            self.bits[dst_start + w] = self.bits[src_start + w];
+        }
+        self.set(row, self_col, true);
+    }
+
+    /// Column j as row indices with the bit set (the subtree of j,
+    /// §3.3.4 M_h).
+    pub fn column_ones(&self, j: usize) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.get(i, j)).collect()
+    }
+
+    /// Row i as column indices with the bit set (ancestors-or-self of i).
+    pub fn row_ones(&self, i: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let base = i * self.words_per_row;
+        for w in 0..self.words_per_row {
+            let mut bits = self.bits[base + w];
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                out.push(w * 64 + b);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Number of set bits in row i.
+    pub fn row_count(&self, i: usize) -> usize {
+        let base = i * self.words_per_row;
+        self.bits[base..base + self.words_per_row]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
+    }
+
+    /// Submatrix selection M_h · M · M_h^T (§3.3.4): keep the given
+    /// rows/columns (indices must be sorted ascending).
+    pub fn select(&self, keep: &[usize]) -> Self {
+        let mut out = Self::new(keep.len());
+        for (ni, &oi) in keep.iter().enumerate() {
+            for (nj, &oj) in keep.iter().enumerate() {
+                if self.get(oi, oj) {
+                    out.set(ni, nj, true);
+                }
+            }
+        }
+        out
+    }
+
+    /// Dense row as additive attention bias (0.0 where set, `neg` elsewhere)
+    /// into `out` (len >= cap; columns >= n are masked).
+    pub fn bias_row_into(&self, i: usize, neg: f32, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = neg;
+        }
+        for j in self.row_ones(i) {
+            out[j] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = BitMatrix::new(130); // spans three words per row
+        m.set(0, 0, true);
+        m.set(129, 128, true);
+        m.set(65, 64, true);
+        assert!(m.get(0, 0));
+        assert!(m.get(129, 128));
+        assert!(m.get(65, 64));
+        assert!(!m.get(1, 0));
+        m.set(65, 64, false);
+        assert!(!m.get(65, 64));
+    }
+
+    #[test]
+    fn inherit_row_copies_and_sets_self() {
+        let mut m = BitMatrix::identity(2).grown(3);
+        // node 2 is a child of node 1
+        m.inherit_row(2, 1, 2);
+        assert!(m.get(2, 1));
+        assert!(m.get(2, 2));
+        assert!(!m.get(2, 0));
+    }
+
+    #[test]
+    fn column_ones_finds_subtree() {
+        // chain 0 -> 1 -> 2, plus sibling 3 under 0
+        let mut m = BitMatrix::identity(4);
+        m.inherit_row(1, 0, 1);
+        m.inherit_row(2, 1, 2);
+        m.inherit_row(3, 0, 3);
+        assert_eq!(m.column_ones(1), vec![1, 2]);
+        assert_eq!(m.column_ones(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn select_submatrix() {
+        let mut m = BitMatrix::identity(3);
+        m.inherit_row(1, 0, 1);
+        m.inherit_row(2, 1, 2);
+        let s = m.select(&[1, 2]);
+        assert_eq!(s.size(), 2);
+        assert!(s.get(0, 0));
+        assert!(s.get(1, 0)); // 2 had 1 as ancestor
+        assert!(s.get(1, 1));
+        assert!(!s.get(0, 1));
+    }
+
+    #[test]
+    fn row_ones_and_count() {
+        let mut m = BitMatrix::identity(70);
+        m.inherit_row(69, 0, 69);
+        assert_eq!(m.row_ones(69), vec![0, 69]);
+        assert_eq!(m.row_count(69), 2);
+    }
+
+    #[test]
+    fn bias_row() {
+        let mut m = BitMatrix::identity(3);
+        m.inherit_row(1, 0, 1);
+        let mut out = vec![0.0f32; 5];
+        m.bias_row_into(1, -1e9, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, -1e9, -1e9, -1e9]);
+    }
+}

@@ -1,0 +1,668 @@
+//! Dynamic prediction tree (paper §3.3).
+//!
+//! Nodes live in BFS order in flat arrays — the GPU-array layout of the
+//! paper, kept verbatim on the host:
+//!
+//! * `tokens`      — **X**, token id per node;
+//! * `prob`        — **P**, probability of the node's token given its parent;
+//! * `child_count` — **C**;
+//! * `mask`        — **M**, bit-packed ancestor-or-self matrix;
+//! * `cum_lp`      — **B** = M·log(P), maintained incrementally (the
+//!   matrix-product definition is kept as [`PredictionTree::cum_logprob_via_mask`]
+//!   and cross-checked in tests).
+//!
+//! Layer-by-layer growth ([`PredictionTree::expand_layer`], §3.3.3), pruning
+//! on a verified token ([`PredictionTree::prune`], §3.3.4), and re-rooting
+//! semantics exactly follow the paper: on a hit, the subtree rooted at the
+//! matching depth-1 node survives (column M_h of the mask) and becomes the
+//! new tree with the hit node as root; on a miss the tree is reinitialized
+//! by the engine.
+//!
+//! Node identity across prunes: every node gets a monotonically increasing
+//! `id`. Data flows in the pipeline reference nodes by id; after a prune,
+//! stages translate ids through [`PredictionTree::index_of_id`], dropping
+//! rows whose node was pruned away.
+
+pub mod bitmatrix;
+
+pub use bitmatrix::BitMatrix;
+
+use crate::config::TreeConfig;
+use crate::util::safe_ln;
+
+/// Candidate children proposed by the draft model for one frontier node:
+/// (token, probability), at most `max_children` entries, probabilities from
+/// the draft's softmax (need not sum to 1 after truncation).
+pub type Candidates = Vec<(u32, f32)>;
+
+/// Outcome of [`PredictionTree::prune`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PruneOutcome {
+    /// hit_index >= 0: token found in the second layer. `kept_old` holds the
+    /// pre-prune BFS indices that survive (== tree-KV-cache slots to keep,
+    /// in order; `kept_old[0]` is the new root).
+    Hit {
+        hit_index: usize,
+        kept_old: Vec<usize>,
+    },
+    /// hit_index == -1: prediction failed, the tree must be reinitialized.
+    Miss,
+}
+
+#[derive(Debug, Clone)]
+pub struct PredictionTree {
+    cfg: TreeConfig,
+    /// Hard cap on total node count (engine: the artifact TREE_CAP;
+    /// simulator: effectively unbounded).
+    node_budget: usize,
+
+    ids: Vec<u64>,
+    tokens: Vec<u32>,
+    prob: Vec<f32>,
+    child_count: Vec<u32>,
+    parent: Vec<i32>,
+    depth: Vec<u32>,
+    cum_lp: Vec<f32>,
+    mask: BitMatrix,
+    /// BFS start index of each layer (layer 0 = root). Last entry < node
+    /// count; layer l spans `layer_starts[l] .. layer_starts.get(l+1)`.
+    layer_starts: Vec<usize>,
+
+    /// Absolute sequence position of the root token (== number of accepted
+    /// tokens in the model-level KV cache when this tree was (re)rooted).
+    root_pos: usize,
+    next_id: u64,
+    /// Bumped on prune/reinit; lets stages detect stale data flows.
+    version: u64,
+}
+
+impl PredictionTree {
+    /// §3.3.2: a single root holding the last decoded token.
+    pub fn new(cfg: TreeConfig, node_budget: usize, root_token: u32, root_pos: usize) -> Self {
+        let mut t = Self {
+            cfg,
+            node_budget,
+            ids: Vec::new(),
+            tokens: Vec::new(),
+            prob: Vec::new(),
+            child_count: Vec::new(),
+            parent: Vec::new(),
+            depth: Vec::new(),
+            cum_lp: Vec::new(),
+            mask: BitMatrix::identity(1),
+            layer_starts: vec![0],
+            root_pos,
+            next_id: 0,
+            version: 0,
+        };
+        t.push_node(root_token, 1.0, -1, 0, 0.0);
+        t
+    }
+
+    fn push_node(&mut self, token: u32, prob: f32, parent: i32, depth: u32, cum: f32) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ids.push(id);
+        self.tokens.push(token);
+        self.prob.push(prob);
+        self.child_count.push(0);
+        self.parent.push(parent);
+        self.depth.push(depth);
+        self.cum_lp.push(cum);
+        id
+    }
+
+    // ------------------------------------------------------------------
+    // accessors
+    // ------------------------------------------------------------------
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn config(&self) -> &TreeConfig {
+        &self.cfg
+    }
+
+    pub fn depth_count(&self) -> usize {
+        self.layer_starts.len()
+    }
+
+    pub fn root_pos(&self) -> usize {
+        self.root_pos
+    }
+
+    pub fn token(&self, i: usize) -> u32 {
+        self.tokens[i]
+    }
+
+    pub fn id(&self, i: usize) -> u64 {
+        self.ids[i]
+    }
+
+    pub fn parent_of(&self, i: usize) -> Option<usize> {
+        (self.parent[i] >= 0).then(|| self.parent[i] as usize)
+    }
+
+    pub fn depth_of(&self, i: usize) -> usize {
+        self.depth[i] as usize
+    }
+
+    pub fn child_count_of(&self, i: usize) -> usize {
+        self.child_count[i] as usize
+    }
+
+    pub fn cum_logprob(&self, i: usize) -> f32 {
+        self.cum_lp[i]
+    }
+
+    pub fn mask(&self) -> &BitMatrix {
+        &self.mask
+    }
+
+    /// Absolute RoPE position of node i.
+    pub fn position_of(&self, i: usize) -> usize {
+        self.root_pos + self.depth[i] as usize
+    }
+
+    /// BFS index range of layer `l` (0-based depth).
+    pub fn layer_range(&self, l: usize) -> std::ops::Range<usize> {
+        let start = self.layer_starts[l];
+        let end = self
+            .layer_starts
+            .get(l + 1)
+            .copied()
+            .unwrap_or(self.tokens.len());
+        start..end
+    }
+
+    /// Indices of the deepest layer (the expansion frontier).
+    pub fn frontier(&self) -> std::ops::Range<usize> {
+        self.layer_range(self.depth_count() - 1)
+    }
+
+    /// Children of node i (BFS indices).
+    pub fn children_of(&self, i: usize) -> Vec<usize> {
+        (i + 1..self.len())
+            .filter(|&j| self.parent[j] == i as i32)
+            .collect()
+    }
+
+    /// All tokens, BFS order (X array view).
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    pub fn index_of_id(&self, id: u64) -> Option<usize> {
+        // ids are strictly increasing in BFS order within a tree lifetime
+        self.ids.binary_search(&id).ok()
+    }
+
+    /// **B** recomputed from the mask (the paper's B = M·log P definition);
+    /// used by tests to validate the incremental `cum_lp`.
+    pub fn cum_logprob_via_mask(&self) -> Vec<f32> {
+        (0..self.len())
+            .map(|i| {
+                self.mask
+                    .row_ones(i)
+                    .into_iter()
+                    .map(|j| safe_ln(self.prob[j]))
+                    .sum()
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // §3.3.3 tree update
+    // ------------------------------------------------------------------
+
+    /// Expand the tree by one layer. `candidates[k]` holds the draft model's
+    /// top-c (token, prob) proposals for the k-th frontier node. Returns the
+    /// BFS indices of the newly added nodes (empty when the width/budget
+    /// selection keeps nothing).
+    pub fn expand_layer(&mut self, candidates: &[Candidates]) -> Vec<usize> {
+        let frontier = self.frontier();
+        assert_eq!(
+            candidates.len(),
+            frontier.len(),
+            "one candidate set per frontier node"
+        );
+        let n_old = self.len();
+
+        // B^(l+1)[i][j] = log Q[i][j] + B[parent_i]  (flattened)
+        let mut flat: Vec<(usize, usize, u32, f32, f32)> = Vec::new();
+        for (k, cands) in candidates.iter().enumerate() {
+            let parent_idx = frontier.start + k;
+            assert!(
+                cands.len() <= self.cfg.max_children,
+                "candidate count exceeds max_children"
+            );
+            for &(tok, q) in cands {
+                let b = safe_ln(q) + self.cum_lp[parent_idx];
+                flat.push((parent_idx, flat.len(), tok, q, b));
+            }
+        }
+        if flat.is_empty() {
+            return Vec::new();
+        }
+
+        // top n^(l+1) = min(w, n_l * c) by cumulative log-probability,
+        // additionally clamped by the node budget (engine TREE_CAP).
+        let budget_room = self.node_budget.saturating_sub(n_old);
+        let n_new = self
+            .cfg
+            .max_width
+            .min(flat.len())
+            .min(budget_room);
+        if n_new == 0 {
+            return Vec::new();
+        }
+        let scores: Vec<f32> = flat.iter().map(|e| e.4).collect();
+        let mut picked = crate::util::top_k_indices(&scores, n_new);
+        // Keep BFS order: sort selected entries by flattened (parent, slot)
+        // position — the paper's selection-mask application preserves it.
+        picked.sort_unstable();
+
+        let mut new_indices = Vec::with_capacity(n_new);
+        self.mask = self.mask.grown(n_old + n_new);
+        let new_depth = self.depth[n_old - 1] + 1;
+        for &f in &picked {
+            let (parent_idx, _, tok, q, b) = flat[f];
+            let idx = self.len();
+            self.push_node(tok, q, parent_idx as i32, new_depth, b);
+            self.child_count[parent_idx] += 1;
+            self.mask.inherit_row(idx, parent_idx, idx);
+            new_indices.push(idx);
+        }
+        self.layer_starts.push(n_old);
+        new_indices
+    }
+
+    // ------------------------------------------------------------------
+    // §3.3.4 tree pruning
+    // ------------------------------------------------------------------
+
+    /// Locate `x` in the second layer (depth-1 nodes). Returns the offset
+    /// within the layer, or None (paper hit_index = -1).
+    pub fn find_in_second_layer(&self, x: u32) -> Option<usize> {
+        if self.depth_count() < 2 {
+            return None;
+        }
+        let r = self.layer_range(1);
+        self.tokens[r.clone()].iter().position(|&t| t == x)
+    }
+
+    /// Prune after the large model verified token `x` at the root
+    /// (§3.3.4): on a hit the subtree rooted at the matching depth-1 node
+    /// survives and is re-rooted; on a miss the caller must rebuild via
+    /// [`PredictionTree::new`]. Advances `root_pos` on hit.
+    pub fn prune(&mut self, x: u32) -> PruneOutcome {
+        let Some(offset) = self.find_in_second_layer(x) else {
+            self.version += 1;
+            return PruneOutcome::Miss;
+        };
+        let hit = self.layer_range(1).start + offset;
+
+        // M_h = column of the hit node: its subtree, BFS-ordered.
+        let kept = self.mask.column_ones(hit);
+        debug_assert_eq!(kept[0], hit);
+
+        // old -> new index mapping
+        let mut old_to_new = vec![usize::MAX; self.len()];
+        for (ni, &oi) in kept.iter().enumerate() {
+            old_to_new[oi] = ni;
+        }
+
+        let base_lp = self.cum_lp[hit];
+        let mut ids = Vec::with_capacity(kept.len());
+        let mut tokens = Vec::with_capacity(kept.len());
+        let mut prob = Vec::with_capacity(kept.len());
+        let mut child_count = Vec::with_capacity(kept.len());
+        let mut parent = Vec::with_capacity(kept.len());
+        let mut depth = Vec::with_capacity(kept.len());
+        let mut cum_lp = Vec::with_capacity(kept.len());
+        for &oi in &kept {
+            ids.push(self.ids[oi]);
+            tokens.push(self.tokens[oi]);
+            child_count.push(self.child_count[oi]);
+            depth.push(self.depth[oi] - 1);
+            if oi == hit {
+                prob.push(1.0);
+                parent.push(-1);
+                cum_lp.push(0.0);
+            } else {
+                prob.push(self.prob[oi]);
+                parent.push(old_to_new[self.parent[oi] as usize] as i32);
+                cum_lp.push(self.cum_lp[oi] - base_lp);
+            }
+        }
+
+        // layer starts shift down one level
+        let mut layer_starts = vec![0usize];
+        for i in 1..kept.len() {
+            if depth[i] != depth[i - 1] {
+                layer_starts.push(i);
+            }
+        }
+
+        self.mask = self.mask.select(&kept);
+        self.ids = ids;
+        self.tokens = tokens;
+        self.prob = prob;
+        self.child_count = child_count;
+        self.parent = parent;
+        self.depth = depth;
+        self.cum_lp = cum_lp;
+        self.layer_starts = layer_starts;
+        self.root_pos += 1;
+        self.version += 1;
+
+        PruneOutcome::Hit {
+            hit_index: offset,
+            kept_old: kept,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // attention-bias helpers (consumed by the engine / model stages)
+    // ------------------------------------------------------------------
+
+    /// Additive ancestor bias rows for the given nodes over `cap` tree-cache
+    /// slots (slot == BFS index — stages hold the BFS prefix). Row-major
+    /// `[nodes.len() x cap]`.
+    pub fn bias_rows(&self, nodes: &[usize], cap: usize, neg: f32) -> Vec<f32> {
+        let mut out = vec![neg; nodes.len() * cap];
+        for (r, &i) in nodes.iter().enumerate() {
+            for j in self.mask.row_ones(i) {
+                debug_assert!(j < cap, "tree larger than cache cap");
+                out[r * cap + j] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// Structural invariants; called by tests and debug assertions.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.len();
+        if self.mask.size() != n {
+            return Err("mask size mismatch".into());
+        }
+        if self.parent[0] != -1 || self.depth[0] != 0 {
+            return Err("bad root".into());
+        }
+        let mut child_counts = vec![0u32; n];
+        for i in 1..n {
+            let p = self.parent[i];
+            if p < 0 || p as usize >= i {
+                return Err(format!("node {i}: parent {p} not earlier in BFS"));
+            }
+            if self.depth[i] != self.depth[p as usize] + 1 {
+                return Err(format!("node {i}: depth != parent depth + 1"));
+            }
+            child_counts[p as usize] += 1;
+        }
+        if child_counts != self.child_count {
+            return Err("child_count (C) inconsistent".into());
+        }
+        for i in 0..n {
+            // mask row must equal the ancestor chain
+            let mut chain = vec![i];
+            let mut cur = i;
+            while let Some(p) = self.parent_of(cur) {
+                chain.push(p);
+                cur = p;
+            }
+            chain.sort_unstable();
+            if self.mask.row_ones(i) != chain {
+                return Err(format!("node {i}: mask row != ancestor chain"));
+            }
+        }
+        // BFS layer ordering
+        for w in self.depth.windows(2) {
+            if w[1] < w[0] {
+                return Err("depths not non-decreasing in BFS order".into());
+            }
+        }
+        // incremental B matches M·log P
+        let via_mask = self.cum_logprob_via_mask();
+        for i in 0..n {
+            if (via_mask[i] - self.cum_lp[i]).abs() > 1e-4 {
+                return Err(format!(
+                    "node {i}: cum_lp {} != M·logP {}",
+                    self.cum_lp[i], via_mask[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(w: usize, c: usize) -> TreeConfig {
+        TreeConfig {
+            max_width: w,
+            max_children: c,
+            max_depth: 16,
+        }
+    }
+
+    fn cands(list: &[(u32, f32)]) -> Candidates {
+        list.to_vec()
+    }
+
+    #[test]
+    fn init_matches_paper() {
+        let t = PredictionTree::new(cfg(8, 4), 64, 42, 10);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.token(0), 42);
+        assert_eq!(t.child_count_of(0), 0);
+        assert!((t.cum_logprob(0) - 0.0).abs() < 1e-6);
+        assert!(t.mask().get(0, 0));
+        assert_eq!(t.position_of(0), 10);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expand_selects_top_width_by_cumulative_prob() {
+        let mut t = PredictionTree::new(cfg(2, 4), 64, 0, 0);
+        let added = t.expand_layer(&[cands(&[(1, 0.5), (2, 0.3), (3, 0.15), (4, 0.05)])]);
+        assert_eq!(added.len(), 2); // width cap 2
+        assert_eq!(t.token(added[0]), 1);
+        assert_eq!(t.token(added[1]), 2);
+        assert_eq!(t.child_count_of(0), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expand_two_layers_cumulative() {
+        let mut t = PredictionTree::new(cfg(3, 2), 64, 0, 0);
+        t.expand_layer(&[cands(&[(1, 0.9), (2, 0.1)])]);
+        // frontier = {1:0.9, 2:0.1}; children proposals
+        let added = t.expand_layer(&[
+            cands(&[(5, 0.6), (6, 0.4)]), // under 0.9: cum 0.54, 0.36
+            cands(&[(7, 0.9), (8, 0.1)]), // under 0.1: cum 0.09, 0.01
+        ]);
+        assert_eq!(added.len(), 3);
+        let toks: Vec<u32> = added.iter().map(|&i| t.token(i)).collect();
+        assert_eq!(toks, vec![5, 6, 7]); // 0.54, 0.36, 0.09 win over 0.01
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prune_hit_keeps_subtree_and_reroots() {
+        let mut t = PredictionTree::new(cfg(4, 2), 64, 0, 5);
+        t.expand_layer(&[cands(&[(1, 0.7), (2, 0.3)])]);
+        t.expand_layer(&[
+            cands(&[(3, 0.5), (4, 0.5)]),
+            cands(&[(5, 0.9), (6, 0.1)]),
+        ]);
+        assert_eq!(t.len(), 7);
+        // verified token 2 -> subtree of node "2" (index 2) survives
+        let out = t.prune(2);
+        match out {
+            PruneOutcome::Hit { hit_index, kept_old } => {
+                assert_eq!(hit_index, 1);
+                assert_eq!(kept_old[0], 2);
+            }
+            _ => panic!("expected hit"),
+        }
+        assert_eq!(t.token(0), 2);
+        assert_eq!(t.depth_of(0), 0);
+        assert!((t.prob[0] - 1.0).abs() < 1e-6);
+        assert_eq!(t.root_pos(), 6);
+        // surviving children are 5 and 6
+        let layer1: Vec<u32> = t.layer_range(1).map(|i| t.token(i)).collect();
+        assert_eq!(layer1, vec![5, 6]);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prune_miss_reports() {
+        let mut t = PredictionTree::new(cfg(4, 2), 64, 0, 0);
+        t.expand_layer(&[cands(&[(1, 0.7), (2, 0.3)])]);
+        let v0 = t.version();
+        assert_eq!(t.prune(99), PruneOutcome::Miss);
+        assert!(t.version() > v0);
+    }
+
+    #[test]
+    fn prune_on_rootonly_tree_is_miss() {
+        let mut t = PredictionTree::new(cfg(4, 2), 64, 0, 0);
+        assert_eq!(t.prune(1), PruneOutcome::Miss);
+    }
+
+    #[test]
+    fn node_budget_clamps_expansion() {
+        let mut t = PredictionTree::new(cfg(8, 8), 3, 0, 0);
+        let added = t.expand_layer(&[cands(&[(1, 0.4), (2, 0.3), (3, 0.2), (4, 0.1)])]);
+        assert_eq!(added.len(), 2); // budget 3 - 1 existing
+    }
+
+    #[test]
+    fn bias_rows_reflect_ancestry() {
+        let mut t = PredictionTree::new(cfg(4, 2), 64, 0, 0);
+        let l1 = t.expand_layer(&[cands(&[(1, 0.7), (2, 0.3)])]);
+        let rows = t.bias_rows(&l1, 8, -1e9);
+        // node 1 (idx 1): ancestors {0, 1}
+        assert_eq!(rows[0], 0.0);
+        assert_eq!(rows[1], 0.0);
+        assert_eq!(rows[2], -1e9);
+        // node 2 (idx 2): ancestors {0, 2}
+        assert_eq!(rows[8], 0.0);
+        assert_eq!(rows[9], -1e9);
+        assert_eq!(rows[10], 0.0);
+    }
+
+    #[test]
+    fn children_of_scans_bfs() {
+        let mut t = PredictionTree::new(cfg(4, 2), 64, 0, 0);
+        t.expand_layer(&[cands(&[(1, 0.7), (2, 0.3)])]);
+        t.expand_layer(&[cands(&[(3, 1.0)]), cands(&[(4, 1.0)])]);
+        assert_eq!(t.children_of(0), vec![1, 2]);
+        assert_eq!(t.children_of(1), vec![3]);
+        assert_eq!(t.children_of(3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn ids_survive_prune_and_resolve() {
+        let mut t = PredictionTree::new(cfg(4, 2), 64, 0, 0);
+        t.expand_layer(&[cands(&[(1, 0.7), (2, 0.3)])]);
+        t.expand_layer(&[cands(&[(3, 1.0)]), cands(&[(4, 1.0)])]);
+        let id4 = t.id(4); // token 4 under node "2"
+        let id3 = t.id(3);
+        t.prune(2);
+        assert_eq!(t.index_of_id(id4), Some(1));
+        assert_eq!(t.index_of_id(id3), None); // pruned away
+    }
+
+    /// Property: any sequence of expand/prune operations preserves every
+    /// structural invariant (BFS order, mask == ancestor chains, C
+    /// consistency, B == M·logP) and cache-compaction prefix ordering.
+    #[test]
+    fn prop_random_op_sequences_preserve_invariants() {
+        crate::proputil::forall(
+            "tree-op-sequences",
+            40,
+            0xBEEF,
+            |rng| {
+                let w = rng.range(2, 9);
+                let c = rng.range(2, 5);
+                let ops: Vec<u64> = (0..rng.range(4, 14)).map(|_| rng.next_u64()).collect();
+                (w, c, ops)
+            },
+            |(w, c, ops)| {
+                let cfg = TreeConfig {
+                    max_width: *w,
+                    max_children: *c,
+                    max_depth: 32,
+                };
+                let mut t = PredictionTree::new(cfg, 256, 0, 0);
+                let mut rng = crate::util::XorShiftRng::new(ops[0] ^ 0x5EED);
+                for &op in ops {
+                    if op % 3 != 0 || t.depth_count() < 2 {
+                        // expand with random distinct-token candidates
+                        let f = t.frontier().len();
+                        let cands: Vec<Candidates> = (0..f)
+                            .map(|_| {
+                                let n = rng.range(1, *c + 1);
+                                crate::proputil::gen::distinct_tokens(&mut rng, n, 120)
+                                    .into_iter()
+                                    .zip(crate::proputil::gen::prob_vec(&mut rng, n))
+                                    .collect()
+                            })
+                            .collect();
+                        t.expand_layer(&cands);
+                    } else {
+                        // prune on either a real second-layer token (hit) or
+                        // an unlikely one (miss)
+                        let x = if rng.chance(0.7) && t.depth_count() >= 2 {
+                            let r = t.layer_range(1);
+                            t.token(r.start + rng.below(r.len()))
+                        } else {
+                            125
+                        };
+                        match t.prune(x) {
+                            PruneOutcome::Hit { kept_old, .. } => {
+                                // kept_old ascending & unique (cache prefix
+                                // compaction relies on it)
+                                if kept_old.windows(2).any(|p| p[0] >= p[1]) {
+                                    return Err("kept_old not strictly ascending".into());
+                                }
+                            }
+                            PruneOutcome::Miss => {
+                                t = PredictionTree::new(cfg, 256, x, t.root_pos() + 1);
+                            }
+                        }
+                    }
+                    t.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cumulative_matches_mask_product_after_ops() {
+        let mut t = PredictionTree::new(cfg(8, 4), 256, 0, 0);
+        t.expand_layer(&[cands(&[(1, 0.5), (2, 0.25), (3, 0.25)])]);
+        t.expand_layer(&[
+            cands(&[(4, 0.5), (5, 0.5)]),
+            cands(&[(6, 1.0)]),
+            cands(&[(7, 0.8), (8, 0.2)]),
+        ]);
+        t.prune(1);
+        t.expand_layer(&[cands(&[(9, 0.6)]), cands(&[(9, 0.6)])]);
+        t.check_invariants().unwrap();
+    }
+}

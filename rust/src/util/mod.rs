@@ -1,0 +1,60 @@
+//! Small shared utilities: deterministic RNG, top-k selection, statistics.
+
+pub mod rng;
+pub mod stats;
+pub mod topk;
+
+pub use rng::XorShiftRng;
+pub use stats::Summary;
+pub use topk::{top_k_indices, top_k_weighted};
+
+/// Numerically safe log for probabilities (clamps at a tiny epsilon so the
+/// cumulative log-probability algebra of §3.3.3 never sees -inf).
+#[inline]
+pub fn safe_ln(p: f32) -> f32 {
+    p.max(1e-30).ln()
+}
+
+/// log-sum-exp over a slice (used by sampling and by tests).
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
+}
+
+/// Softmax in place.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let lse = log_sum_exp(xs);
+    for x in xs.iter_mut() {
+        *x = (*x - lse).exp();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lse_matches_naive() {
+        let xs = [0.5f32, -1.0, 2.0, 0.0];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((log_sum_exp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = [1.0f32, 2.0, 3.0, -5.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn safe_ln_no_neg_inf() {
+        assert!(safe_ln(0.0).is_finite());
+        assert!((safe_ln(1.0) - 0.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,56 @@
+//! Top-k selection helpers used by tree expansion (§3.3.3 "Tree Layer
+//! Generation") and by decoding (top-k sampling).
+
+/// Indices of the `k` largest values, in descending value order.
+/// Ties break toward the lower index (stable, matches jnp.top_k).
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(values.len());
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    // partial selection: O(n log k) via a simple sort on the slice is fine at
+    // our sizes (n <= width*children = 2048); keep it simple and stable.
+    idx.sort_by(|&a, &b| {
+        values[b]
+            .partial_cmp(&values[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// (index, value) pairs of the k largest entries, descending.
+pub fn top_k_weighted(values: &[f32], k: usize) -> Vec<(usize, f32)> {
+    top_k_indices(values, k)
+        .into_iter()
+        .map(|i| (i, values[i]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_largest() {
+        let v = [0.1f32, 5.0, -2.0, 3.0, 3.0];
+        assert_eq!(top_k_indices(&v, 3), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn k_larger_than_len() {
+        let v = [1.0f32, 2.0];
+        assert_eq!(top_k_indices(&v, 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn stable_on_ties() {
+        let v = [1.0f32, 1.0, 1.0];
+        assert_eq!(top_k_indices(&v, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn weighted_pairs() {
+        let v = [0.2f32, 0.8];
+        assert_eq!(top_k_weighted(&v, 1), vec![(1, 0.8)]);
+    }
+}

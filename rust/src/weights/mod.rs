@@ -1,0 +1,163 @@
+//! Loader for the `pdweights` (.pdw) container written by
+//! `python/compile/pdw.py`.
+//!
+//! Layout (little-endian): magic `PDW1`, u32 tensor count, then per tensor
+//! u16 name-len + name, u8 ndim, u32 dims[ndim], f32 data (row-major).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A named host tensor (f32, row-major).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// A loaded weight file: name -> tensor.
+#[derive(Debug, Default)]
+pub struct WeightMap {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl WeightMap {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open weights {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut r = Cursor { buf, pos: 0 };
+        if r.take(4)? != b"PDW1" {
+            bail!("bad magic");
+        }
+        let count = r.u32()? as usize;
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let nlen = r.u16()? as usize;
+            let name = String::from_utf8(r.take(nlen)?.to_vec())?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let n: usize = dims.iter().product::<usize>().max(1);
+            let raw = r.take(4 * n)?;
+            let mut data = vec![0f32; n];
+            for (i, chunk) in raw.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.insert(
+                name.clone(),
+                Tensor { name, dims, data },
+            );
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated pdw file at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_pdw() -> Vec<u8> {
+        // one tensor "w" of shape [2,2]
+        let mut b = Vec::new();
+        b.extend(b"PDW1");
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u16.to_le_bytes());
+        b.extend(b"w");
+        b.push(2u8);
+        b.extend(2u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend(v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let wm = WeightMap::parse(&sample_pdw()).unwrap();
+        let t = wm.get("w").unwrap();
+        assert_eq!(t.dims, vec![2, 2]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut b = sample_pdw();
+        b[0] = b'X';
+        assert!(WeightMap::parse(&b).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let b = sample_pdw();
+        assert!(WeightMap::parse(&b[..b.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let wm = WeightMap::parse(&sample_pdw()).unwrap();
+        assert!(wm.get("nope").is_err());
+    }
+}

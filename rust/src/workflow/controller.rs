@@ -1,0 +1,332 @@
+//! Meta-unit post-processing rules (paper Algorithm 4).
+//!
+//! Each rule [1]–[12] maps a completed task on node `x` at timestep `seq`
+//! to the tasks scheduled next and their dependency edges, expressed against
+//! the [`super::dag::Dag`]. Ranks: 0 = draft model S, 1..=n = pipeline nodes.
+//!
+//! The unit tests at the bottom replay a full pipeline purely through these
+//! rules (a miniature distributed executor) and assert the ordering
+//! properties of Fig. 2: prefill chains through the pipeline, decode
+//! timesteps overlap across groups, every timestep's work is barriered by
+//! its `(V,finish,all,seq)` task, and synchronization gates the next
+//! timestep when the final group ran.
+
+use super::dag::Dag;
+use super::task::{CompKind, TaskKey};
+
+/// Pipeline topology: `n` model nodes grouped into `d` contiguous groups
+/// (paper §3.1: G_1..G_d). Ranks inside `groups` are 1-based; rank 0 is S.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub n: usize,
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Equal-size grouping: n nodes into d groups (n % d == 0).
+    pub fn uniform(n: usize, d: usize) -> Self {
+        assert!(d >= 1 && n % d == 0, "n must be divisible by d");
+        let per = n / d;
+        let groups = (0..d)
+            .map(|g| (1 + g * per..1 + (g + 1) * per).collect())
+            .collect();
+        Self { n, groups }
+    }
+
+    pub fn d(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Is `rank` the last node of some group?
+    pub fn is_group_last(&self, rank: usize) -> bool {
+        self.groups.iter().any(|g| *g.last().unwrap() == rank)
+    }
+
+    /// Last nodes of groups 1..d-1 (excluding the final group) — the ranks
+    /// whose output crosses a group boundary into the next timestep.
+    pub fn inner_group_lasts(&self) -> Vec<usize> {
+        self.groups[..self.d() - 1]
+            .iter()
+            .map(|g| *g.last().unwrap())
+            .collect()
+    }
+
+    /// Group index (0-based) containing `rank`.
+    pub fn group_of(&self, rank: usize) -> usize {
+        self.groups
+            .iter()
+            .position(|g| g.contains(&rank))
+            .expect("rank not in any group")
+    }
+
+    /// Whether pipeline node `rank` is active at timestep `seq` during
+    /// pipeline fill: group g (0-based) first receives data at seq g+1.
+    pub fn active_at(&self, rank: usize, seq: u64) -> bool {
+        rank == 0 || seq >= self.group_of(rank) as u64 + 1
+    }
+
+    /// Whether the final group (and hence a SYNC) runs at `seq`.
+    pub fn sync_at(&self, seq: u64) -> bool {
+        seq >= self.d() as u64
+    }
+}
+
+/// Algorithm 4, parameterized by topology.
+#[derive(Debug, Clone)]
+pub struct MetaUnit {
+    pub topo: Topology,
+}
+
+impl MetaUnit {
+    pub fn new(topo: Topology) -> Self {
+        Self { topo }
+    }
+
+    /// Rule [1]: bootstrap at (x=0, seq=0) — prefill on S and L_1.
+    pub fn bootstrap(&self, dag: &mut Dag) {
+        dag.insert(TaskKey::compute(CompKind::Pre, 0, 0));
+        dag.insert(TaskKey::compute(CompKind::Pre, 1, 0));
+    }
+
+    /// Rules [2]–[3]: a prefill completed on `x`.
+    pub fn on_prefill_done(&self, dag: &mut Dag, x: usize) {
+        let n = self.topo.n;
+        if x != 0 && x != n {
+            // [2] forward the prompt through the pipeline
+            let t = TaskKey::transmit(x, x + 1, 0);
+            dag.insert(t);
+            dag.insert_with_dep(TaskKey::compute(CompKind::Pre, x + 1, 0), t);
+        } else if x == n {
+            // [3] prefill finished end-to-end: start decoding at S and L_1
+            dag.insert_with_dep(
+                TaskKey::compute(CompKind::Dec, 0, 1),
+                TaskKey::compute(CompKind::Pre, 0, 0),
+            );
+            dag.insert_with_dep(
+                TaskKey::compute(CompKind::Dec, 1, 1),
+                TaskKey::compute(CompKind::Pre, 1, 0),
+            );
+        }
+    }
+
+    /// Rules [4]–[10]: a decode completed on `x` at `seq`.
+    pub fn on_decode_done(&self, dag: &mut Dag, x: usize, seq: u64) {
+        let topo = &self.topo;
+        let n = topo.n;
+        let sync = topo.sync_at(seq);
+        let finish_all = TaskKey::finish_all(seq);
+
+        if x != 0 && !topo.is_group_last(x) {
+            // [4] intra-group forwarding within the same timestep
+            let t = TaskKey::transmit(x, x + 1, seq);
+            dag.insert(t);
+            dag.insert_with_dep(TaskKey::compute(CompKind::Dec, x + 1, seq), t);
+        }
+
+        if x == 0 {
+            // [5] the draft's next expansion waits for this timestep's barrier
+            dag.insert_with_dep(TaskKey::compute(CompKind::Dec, 0, seq + 1), finish_all);
+            // [6]/[7] wire the barrier to per-node finishes
+            if !sync {
+                for i in 0..=n {
+                    if topo.active_at(i, seq) {
+                        dag.insert_with_dep(finish_all, TaskKey::finish_node(i, seq));
+                    }
+                }
+            } else {
+                for i in 0..=n {
+                    dag.insert_with_dep(finish_all, TaskKey::finish_node(i, seq));
+                }
+            }
+        }
+
+        // [8] group boundary without sync: output crosses into seq+1
+        if (x == 0 || topo.inner_group_lasts().contains(&x)) && !sync {
+            let t = TaskKey::transmit(x, x + 1, seq);
+            dag.insert(t);
+            let next = TaskKey::compute(CompKind::Dec, x + 1, seq + 1);
+            dag.insert_with_dep(next, t);
+            dag.insert_with_dep(next, finish_all);
+        }
+
+        // [9] the final node verified a token: synchronize everyone
+        if x == n {
+            for i in 0..=n {
+                let s = TaskKey::compute(CompKind::Sync, i, seq);
+                if topo.active_at(i, seq) {
+                    dag.insert_with_dep(s, TaskKey::compute(CompKind::Dec, i, seq));
+                } else {
+                    dag.insert(s);
+                }
+            }
+        }
+
+        // [10] no sync phase this timestep: decode completion is the node's
+        // finish event
+        if !sync {
+            dag.insert(TaskKey::finish_node(x, seq));
+            dag.complete(TaskKey::finish_node(x, seq));
+        }
+    }
+
+    /// Rules [11]–[12]: a sync completed on `x` at `seq`.
+    pub fn on_sync_done(&self, dag: &mut Dag, x: usize, seq: u64, pruned_output_exists: bool) {
+        // [11]
+        dag.insert(TaskKey::finish_node(x, seq));
+        dag.complete(TaskKey::finish_node(x, seq));
+
+        // [12] forward pruned output across the group boundary
+        if (x == 0 || self.topo.inner_group_lasts().contains(&x)) && pruned_output_exists {
+            let t = TaskKey::transmit(x, x + 1, seq);
+            dag.insert(t);
+            let next = TaskKey::compute(CompKind::Dec, x + 1, seq + 1);
+            dag.insert_with_dep(next, t);
+            dag.insert_with_dep(next, TaskKey::finish_all(seq));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::dag::TaskState;
+
+    /// Replay the rules with an executor that completes every ready task in
+    /// FIFO order, recording the execution log.
+    fn run_pipeline(topo: Topology, max_seq: u64) -> Vec<TaskKey> {
+        let mu = MetaUnit::new(topo);
+        let mut dag = Dag::new();
+        mu.bootstrap(&mut dag);
+        let mut log = Vec::new();
+        let mut guard = 0;
+        while let Some(task) = dag.claim() {
+            guard += 1;
+            assert!(guard < 100_000, "runaway scheduler");
+            log.push(task);
+            dag.complete(task);
+            match task {
+                TaskKey::Compute { kind: CompKind::Pre, rank, .. } => {
+                    mu.on_prefill_done(&mut dag, rank);
+                }
+                TaskKey::Compute { kind: CompKind::Dec, rank, seq } => {
+                    if seq <= max_seq {
+                        mu.on_decode_done(&mut dag, rank, seq);
+                    }
+                }
+                TaskKey::Compute { kind: CompKind::Sync, rank, seq } => {
+                    mu.on_sync_done(&mut dag, rank, seq, true);
+                }
+                _ => {}
+            }
+        }
+        assert!(!dag.is_stuck(), "dag deadlocked");
+        log
+    }
+
+    fn pos(log: &[TaskKey], key: TaskKey) -> usize {
+        log.iter()
+            .position(|k| *k == key)
+            .unwrap_or_else(|| panic!("task {key} never executed"))
+    }
+
+    #[test]
+    fn prefill_chains_through_pipeline() {
+        let log = run_pipeline(Topology::uniform(3, 3), 2);
+        let p0 = pos(&log, TaskKey::compute(CompKind::Pre, 0, 0));
+        let p1 = pos(&log, TaskKey::compute(CompKind::Pre, 1, 0));
+        let p2 = pos(&log, TaskKey::compute(CompKind::Pre, 2, 0));
+        let p3 = pos(&log, TaskKey::compute(CompKind::Pre, 3, 0));
+        assert!(p1 < p2 && p2 < p3);
+        assert!(p0 < p3);
+    }
+
+    #[test]
+    fn decode_starts_after_prefill() {
+        let log = run_pipeline(Topology::uniform(3, 3), 2);
+        let pre_n = pos(&log, TaskKey::compute(CompKind::Pre, 3, 0));
+        let dec0 = pos(&log, TaskKey::compute(CompKind::Dec, 0, 1));
+        let dec1 = pos(&log, TaskKey::compute(CompKind::Dec, 1, 1));
+        assert!(pre_n < dec0 && pre_n < dec1);
+    }
+
+    #[test]
+    fn transmissions_precede_dependent_decodes() {
+        let log = run_pipeline(Topology::uniform(3, 3), 3);
+        for seq in 1..=2u64 {
+            let t = pos(&log, TaskKey::transmit(1, 2, seq));
+            let d = pos(&log, TaskKey::compute(CompKind::Dec, 2, seq + 1));
+            assert!(t < d, "seq {seq}: transmit after dependent decode");
+        }
+    }
+
+    #[test]
+    fn timestep_barrier_orders_draft_expansions() {
+        let log = run_pipeline(Topology::uniform(3, 3), 4);
+        for seq in 1..4u64 {
+            let a = pos(&log, TaskKey::compute(CompKind::Dec, 0, seq));
+            let b = pos(&log, TaskKey::compute(CompKind::Dec, 0, seq + 1));
+            assert!(a < b);
+        }
+    }
+
+    #[test]
+    fn sync_runs_when_final_group_active() {
+        let topo = Topology::uniform(3, 3);
+        assert!(!topo.sync_at(2));
+        assert!(topo.sync_at(3));
+        let log = run_pipeline(topo, 4);
+        // seq 3 is the first with the final group active -> syncs exist
+        for i in 0..=3 {
+            pos(&log, TaskKey::compute(CompKind::Sync, i, 3));
+        }
+        // and none at seq 2
+        assert!(!log
+            .iter()
+            .any(|k| matches!(k, TaskKey::Compute { kind: CompKind::Sync, seq: 2, .. })));
+    }
+
+    #[test]
+    fn sync_gates_next_timestep_decode() {
+        let log = run_pipeline(Topology::uniform(3, 3), 4);
+        // dec(1, 4) must come after sync(0, 3)'s transmit (rule 12)
+        let s = pos(&log, TaskKey::compute(CompKind::Sync, 0, 3));
+        let d = pos(&log, TaskKey::compute(CompKind::Dec, 1, 4));
+        assert!(s < d);
+    }
+
+    #[test]
+    fn grouped_topology_two_per_group() {
+        let topo = Topology::uniform(4, 2);
+        assert_eq!(topo.groups, vec![vec![1, 2], vec![3, 4]]);
+        assert!(topo.is_group_last(2) && topo.is_group_last(4));
+        assert!(!topo.is_group_last(1));
+        assert_eq!(topo.inner_group_lasts(), vec![2]);
+        let log = run_pipeline(topo, 3);
+        // intra-group forwarding: dec(1,s) -> T(1,2,s) -> dec(2,s)
+        let d1 = pos(&log, TaskKey::compute(CompKind::Dec, 1, 1));
+        let t = pos(&log, TaskKey::transmit(1, 2, 1));
+        let d2 = pos(&log, TaskKey::compute(CompKind::Dec, 2, 1));
+        assert!(d1 < t && t < d2);
+    }
+
+    #[test]
+    fn no_deadlock_long_run() {
+        for d in [1usize, 2, 3] {
+            let n = d * 2;
+            let log = run_pipeline(Topology::uniform(n, d), 8);
+            assert!(log.len() > 20);
+        }
+    }
+
+    #[test]
+    fn states_transition_cleanly() {
+        let topo = Topology::uniform(2, 2);
+        let mu = MetaUnit::new(topo);
+        let mut dag = Dag::new();
+        mu.bootstrap(&mut dag);
+        let k = TaskKey::compute(CompKind::Pre, 0, 0);
+        assert_eq!(dag.state_of(&k), Some(TaskState::Ready));
+        let claimed = dag.claim().unwrap();
+        assert_eq!(dag.state_of(&claimed), Some(TaskState::Running));
+    }
+}

@@ -1,0 +1,205 @@
+//! Generic dynamic task DAG: tasks become executable when all dependencies
+//! are completed (paper Appendix B: "each task node x becomes executable
+//! when all its dependent nodes pre_x are completed").
+//!
+//! Supports the paper's "flexible task insertion": a dependency may
+//! reference a task that has not been inserted yet — the edge is honored
+//! once the dependency completes. Completion of unknown tasks is recorded
+//! so late-inserted dependents see it.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use super::task::TaskKey;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Inserted, waiting for dependencies.
+    Pending,
+    /// All dependencies satisfied; waiting to be claimed.
+    Ready,
+    /// Claimed by an executor.
+    Running,
+    Done,
+}
+
+#[derive(Debug, Default)]
+pub struct Dag {
+    state: HashMap<TaskKey, TaskState>,
+    /// dep -> dependents
+    out_edges: HashMap<TaskKey, Vec<TaskKey>>,
+    /// task -> unmet dependency count
+    unmet: HashMap<TaskKey, usize>,
+    /// completed tasks (including ones never inserted explicitly)
+    done: HashSet<TaskKey>,
+    ready: VecDeque<TaskKey>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a task with no dependencies (immediately ready). No-op if the
+    /// task already exists.
+    pub fn insert(&mut self, key: TaskKey) {
+        if self.state.contains_key(&key) || self.done.contains(&key) {
+            return;
+        }
+        self.state.insert(key, TaskState::Ready);
+        self.unmet.insert(key, 0);
+        self.ready.push_back(key);
+    }
+
+    /// Insert `key` (if new) and add a dependency `key <- dep`
+    /// (paper notation `S(key) -> dep`). Duplicate edges are ignored.
+    pub fn insert_with_dep(&mut self, key: TaskKey, dep: TaskKey) {
+        self.insert(key);
+        if self.done.contains(&dep) {
+            return; // already satisfied
+        }
+        let deps = self.out_edges.entry(dep).or_default();
+        if deps.contains(&key) {
+            return;
+        }
+        deps.push(key);
+        let c = self.unmet.entry(key).or_insert(0);
+        *c += 1;
+        if *c == 1 {
+            // task moved from ready back to pending
+            self.state.insert(key, TaskState::Pending);
+            self.ready.retain(|k| k != &key);
+        }
+    }
+
+    pub fn state_of(&self, key: &TaskKey) -> Option<TaskState> {
+        if self.done.contains(key) {
+            return Some(TaskState::Done);
+        }
+        self.state.get(key).copied()
+    }
+
+    /// Claim the next ready task (FIFO).
+    pub fn claim(&mut self) -> Option<TaskKey> {
+        let key = self.ready.pop_front()?;
+        self.state.insert(key, TaskState::Running);
+        Some(key)
+    }
+
+    /// All currently ready tasks (without claiming).
+    pub fn ready_tasks(&self) -> Vec<TaskKey> {
+        self.ready.iter().copied().collect()
+    }
+
+    /// Mark a task complete, releasing dependents. Unknown tasks are
+    /// recorded as done (supports virtual/externally-executed tasks).
+    pub fn complete(&mut self, key: TaskKey) {
+        self.state.remove(&key);
+        self.unmet.remove(&key);
+        self.done.insert(key);
+        self.ready.retain(|k| k != &key);
+        if let Some(dependents) = self.out_edges.remove(&key) {
+            for d in dependents {
+                if self.done.contains(&d) {
+                    continue;
+                }
+                let c = self.unmet.entry(d).or_insert(0);
+                *c = c.saturating_sub(1);
+                if *c == 0 && self.state.get(&d) == Some(&TaskState::Pending) {
+                    self.state.insert(d, TaskState::Ready);
+                    self.ready.push_back(d);
+                }
+            }
+        }
+    }
+
+    pub fn is_done(&self, key: &TaskKey) -> bool {
+        self.done.contains(key)
+    }
+
+    /// Number of tasks not yet completed.
+    pub fn open_count(&self) -> usize {
+        self.state.len()
+    }
+
+    /// True if there are open tasks but nothing ready or running —
+    /// a dependency deadlock (used by tests / debug assertions).
+    pub fn is_stuck(&self) -> bool {
+        !self.state.is_empty()
+            && self
+                .state
+                .values()
+                .all(|s| *s == TaskState::Pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::task::CompKind;
+
+    fn t(seq: u64) -> TaskKey {
+        TaskKey::transmit(0, 1, seq)
+    }
+
+    fn c(rank: usize, seq: u64) -> TaskKey {
+        TaskKey::compute(CompKind::Dec, rank, seq)
+    }
+
+    #[test]
+    fn no_deps_is_ready() {
+        let mut d = Dag::new();
+        d.insert(t(0));
+        assert_eq!(d.state_of(&t(0)), Some(TaskState::Ready));
+        assert_eq!(d.claim(), Some(t(0)));
+        d.complete(t(0));
+        assert!(d.is_done(&t(0)));
+    }
+
+    #[test]
+    fn dependency_gates_readiness() {
+        let mut d = Dag::new();
+        d.insert_with_dep(c(1, 0), t(0));
+        assert_eq!(d.state_of(&c(1, 0)), Some(TaskState::Pending));
+        assert_eq!(d.claim(), None);
+        d.complete(t(0));
+        assert_eq!(d.state_of(&c(1, 0)), Some(TaskState::Ready));
+        assert_eq!(d.claim(), Some(c(1, 0)));
+    }
+
+    #[test]
+    fn dep_completed_before_insert_is_satisfied() {
+        let mut d = Dag::new();
+        d.complete(t(0));
+        d.insert_with_dep(c(1, 0), t(0));
+        assert_eq!(d.state_of(&c(1, 0)), Some(TaskState::Ready));
+    }
+
+    #[test]
+    fn multiple_deps_all_required() {
+        let mut d = Dag::new();
+        d.insert_with_dep(c(2, 1), t(0));
+        d.insert_with_dep(c(2, 1), c(1, 0));
+        d.complete(t(0));
+        assert_eq!(d.state_of(&c(2, 1)), Some(TaskState::Pending));
+        d.complete(c(1, 0));
+        assert_eq!(d.state_of(&c(2, 1)), Some(TaskState::Ready));
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut d = Dag::new();
+        d.insert_with_dep(c(1, 0), t(0));
+        d.insert_with_dep(c(1, 0), t(0));
+        d.complete(t(0));
+        assert_eq!(d.state_of(&c(1, 0)), Some(TaskState::Ready));
+    }
+
+    #[test]
+    fn stuck_detection() {
+        let mut d = Dag::new();
+        d.insert_with_dep(c(1, 0), t(9)); // t(9) never completes
+        assert!(d.is_stuck());
+        d.complete(t(9));
+        assert!(!d.is_stuck());
+    }
+}

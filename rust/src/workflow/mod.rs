@@ -1,0 +1,23 @@
+//! Workflow controller (paper Appendix B).
+//!
+//! A dynamic DAG of task tuples schedules the distributed computation:
+//!
+//! * transmission tasks `(T, src, dst, seq)`;
+//! * computation tasks `(C, type, rank, seq)` with `type ∈ {pre, dec, sync}`;
+//! * virtual tasks `(V, tag, target, seq)` used as control barriers.
+//!
+//! [`dag::Dag`] is the generic dependency engine (task insertion, dependency
+//! edges, readiness, completion). [`controller::MetaUnit`] encodes the
+//! firing rules [1]–[12] of Algorithm 4: given a completed task and the
+//! pipeline topology it emits the tasks and dependency edges to schedule
+//! next. The PipeDec engine drives its timestep loop through these rules;
+//! the unit tests replay small pipelines and assert the execution order the
+//! paper describes (Fig. 2).
+
+pub mod controller;
+pub mod dag;
+pub mod task;
+
+pub use controller::{MetaUnit, Topology};
+pub use dag::{Dag, TaskState};
+pub use task::{CompKind, TaskKey, VirtTarget};

@@ -1,0 +1,104 @@
+//! Task tuples of the workflow DAG (paper Appendix B).
+
+/// Computation task type (paper: `type ∈ {pre, dec, sync}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CompKind {
+    Pre,
+    Dec,
+    Sync,
+}
+
+/// Target of a virtual (control) task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum VirtTarget {
+    All,
+    Node(usize),
+}
+
+/// A task tuple. Ranks follow the paper: 0 is the draft model S, 1..=n are
+/// the pipeline nodes L_1..L_n.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskKey {
+    /// (T, src, dst, seq)
+    Transmit { src: usize, dst: usize, seq: u64 },
+    /// (C, kind, rank, seq)
+    Compute { kind: CompKind, rank: usize, seq: u64 },
+    /// (V, finish, target, seq)
+    Finish { target: VirtTarget, seq: u64 },
+}
+
+impl TaskKey {
+    pub fn seq(&self) -> u64 {
+        match *self {
+            TaskKey::Transmit { seq, .. } => seq,
+            TaskKey::Compute { seq, .. } => seq,
+            TaskKey::Finish { seq, .. } => seq,
+        }
+    }
+
+    pub fn transmit(src: usize, dst: usize, seq: u64) -> Self {
+        TaskKey::Transmit { src, dst, seq }
+    }
+
+    pub fn compute(kind: CompKind, rank: usize, seq: u64) -> Self {
+        TaskKey::Compute { kind, rank, seq }
+    }
+
+    pub fn finish_all(seq: u64) -> Self {
+        TaskKey::Finish {
+            target: VirtTarget::All,
+            seq,
+        }
+    }
+
+    pub fn finish_node(rank: usize, seq: u64) -> Self {
+        TaskKey::Finish {
+            target: VirtTarget::Node(rank),
+            seq,
+        }
+    }
+}
+
+impl std::fmt::Display for TaskKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            TaskKey::Transmit { src, dst, seq } => write!(f, "(T,{src},{dst},{seq})"),
+            TaskKey::Compute { kind, rank, seq } => {
+                let k = match kind {
+                    CompKind::Pre => "pre",
+                    CompKind::Dec => "dec",
+                    CompKind::Sync => "sync",
+                };
+                write!(f, "(C,{k},{rank},{seq})")
+            }
+            TaskKey::Finish { target, seq } => match target {
+                VirtTarget::All => write!(f, "(V,finish,all,{seq})"),
+                VirtTarget::Node(r) => write!(f, "(V,finish,{r},{seq})"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_paper_tuples() {
+        assert_eq!(TaskKey::transmit(1, 2, 3).to_string(), "(T,1,2,3)");
+        assert_eq!(
+            TaskKey::compute(CompKind::Dec, 4, 5).to_string(),
+            "(C,dec,4,5)"
+        );
+        assert_eq!(TaskKey::finish_all(1).to_string(), "(V,finish,all,1)");
+    }
+
+    #[test]
+    fn keys_hash_and_compare() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(TaskKey::transmit(0, 1, 0));
+        assert!(s.contains(&TaskKey::transmit(0, 1, 0)));
+        assert!(!s.contains(&TaskKey::transmit(0, 1, 1)));
+    }
+}

@@ -1,0 +1,135 @@
+//! Evaluation workloads: the six synthetic domains standing in for the
+//! paper's datasets (HumanEval, GSM8K, MMLU, WMT14, TriviaQA, DROP — see
+//! DESIGN.md inventory row 13).
+//!
+//! Prompts are generated at artifact-build time by
+//! `python/compile/corpus.py::domain_prompts` and shipped in
+//! `artifacts/prompts_{domain}.txt` (`\n%%%\n`-separated) so Rust and Python
+//! sample exactly the same items.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::XorShiftRng;
+
+/// Domain names in paper order with their dataset analogues.
+pub const DOMAINS: [(&str, &str); 6] = [
+    ("code", "HumanEval"),
+    ("math", "GSM8K"),
+    ("qa", "MMLU"),
+    ("translate", "WMT14 DE-EN"),
+    ("trivia", "TriviaQA-Wiki"),
+    ("reading", "DROP"),
+];
+
+/// One evaluation workload: a domain and its prompts.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub domain: String,
+    pub dataset_analogue: String,
+    pub prompts: Vec<String>,
+}
+
+impl Workload {
+    pub fn load(artifact_dir: &Path, domain: &str) -> Result<Self> {
+        let path = artifact_dir.join(format!("prompts_{domain}.txt"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let prompts: Vec<String> = text
+            .split("\n%%%\n")
+            .map(|s| s.to_string())
+            .filter(|s| !s.trim().is_empty())
+            .collect();
+        anyhow::ensure!(!prompts.is_empty(), "no prompts in {domain}");
+        let analogue = DOMAINS
+            .iter()
+            .find(|(d, _)| *d == domain)
+            .map(|(_, a)| a.to_string())
+            .unwrap_or_default();
+        Ok(Self {
+            domain: domain.to_string(),
+            dataset_analogue: analogue,
+            prompts,
+        })
+    }
+
+    /// All six domains.
+    pub fn load_all(artifact_dir: &Path) -> Result<Vec<Self>> {
+        DOMAINS
+            .iter()
+            .map(|(d, _)| Self::load(artifact_dir, d))
+            .collect()
+    }
+
+    /// Deterministic sample of up to `n` prompts (the paper samples 10 per
+    /// dataset).
+    pub fn sample(&self, n: usize, rng: &mut XorShiftRng) -> Vec<&str> {
+        let mut idx: Vec<usize> = (0..self.prompts.len()).collect();
+        for i in 0..idx.len() {
+            let j = rng.range(i, idx.len());
+            idx.swap(i, j);
+        }
+        idx.truncate(n.min(self.prompts.len()));
+        idx.into_iter().map(|i| self.prompts[i].as_str()).collect()
+    }
+}
+
+/// A mixed request stream for throughput runs (two per domain, as in the
+/// paper's Fig. 8 setup).
+pub fn mixed_stream(artifact_dir: &Path, per_domain: usize) -> Result<Vec<String>> {
+    let mut rng = XorShiftRng::new(0xF168);
+    let mut out = Vec::new();
+    for wl in Workload::load_all(artifact_dir)? {
+        for p in wl.sample(per_domain, &mut rng) {
+            out.push(p.to_string());
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = crate::artifacts_dir();
+        dir.join("prompts_code.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn all_domains_load() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let all = Workload::load_all(&dir).unwrap();
+        assert_eq!(all.len(), 6);
+        for wl in &all {
+            assert!(wl.prompts.len() >= 6, "{} too few prompts", wl.domain);
+            assert!(wl.prompts[0].starts_with(&format!("<{}>", wl.domain)));
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let wl = Workload::load(&dir, "math").unwrap();
+        let mut r1 = XorShiftRng::new(5);
+        let mut r2 = XorShiftRng::new(5);
+        assert_eq!(wl.sample(4, &mut r1), wl.sample(4, &mut r2));
+    }
+
+    #[test]
+    fn mixed_stream_interleaves_domains() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let s = mixed_stream(&dir, 2).unwrap();
+        assert_eq!(s.len(), 12);
+    }
+}

@@ -1,0 +1,69 @@
+//! Baseline engines over real artifacts: PP losslessness, STPP losslessness
+//! + acceptance, SLM sanity, and the cross-engine consistency the paper's
+//! comparisons rest on.
+
+use pipedec::baselines::{PpEngine, SlmEngine, StppEngine};
+use pipedec::config::{EngineConfig, TreeConfig};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+const PROMPT: &str = "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n";
+
+fn golden_target() -> Vec<u32> {
+    let text =
+        std::fs::read_to_string(artifacts().unwrap().join("golden_target.txt")).unwrap();
+    text.lines().nth(1).unwrap().split_whitespace()
+        .map(|t| t.parse().unwrap()).collect()
+}
+
+fn cfg(stages: usize) -> EngineConfig {
+    EngineConfig {
+        stages,
+        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 5 },
+        max_new_tokens: 20,
+        ..EngineConfig::default()
+    }
+}
+
+#[test]
+fn pp_matches_golden_greedy() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let mut e = PpEngine::new(&artifacts().unwrap(), cfg(4)).unwrap();
+    let r = e.decode(PROMPT).unwrap();
+    let golden = golden_target();
+    let n = golden.len().min(r.tokens.len());
+    assert_eq!(&r.tokens[..n], &golden[..n]);
+    assert!(r.modeled_s > 0.0);
+}
+
+#[test]
+fn stpp_is_lossless_and_accepts_multiple_per_round() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let mut e = StppEngine::new(&artifacts().unwrap(), cfg(2)).unwrap();
+    let r = e.decode(PROMPT).unwrap();
+    let golden = golden_target();
+    let n = golden.len().min(r.tokens.len());
+    assert_eq!(&r.tokens[..n], &golden[..n], "STPP output diverged");
+    assert!(r.accepted_per_round > 1.0,
+        "static tree should accept >1 token/round, got {}", r.accepted_per_round);
+}
+
+#[test]
+fn slm_decodes_plausibly() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let mut e = SlmEngine::new(&artifacts().unwrap(), cfg(1)).unwrap();
+    let r = e.decode(PROMPT).unwrap();
+    assert!(r.tokens.len() >= 10);
+    assert!(r.text.is_ascii());
+}
+
+#[test]
+fn pp_stage_count_does_not_change_output() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let a = PpEngine::new(&artifacts().unwrap(), cfg(1)).unwrap().decode(PROMPT).unwrap();
+    let b = PpEngine::new(&artifacts().unwrap(), cfg(8)).unwrap().decode(PROMPT).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+}

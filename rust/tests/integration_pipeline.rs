@@ -1,0 +1,157 @@
+//! End-to-end PipeDec engine tests over real artifacts.
+//!
+//! The central property is the paper's losslessness claim: speculative
+//! pipeline decoding with the dynamic tree produces *exactly* the sequence
+//! that plain greedy decoding of the target model produces, at any pipeline
+//! depth and tree configuration — speed changes, output does not.
+
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecEngine;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+fn engine(stages: usize, width: usize, children: usize) -> PipeDecEngine {
+    let cfg = EngineConfig {
+        stages,
+        tree: TreeConfig { max_width: width, max_children: children, max_depth: 16 },
+        max_new_tokens: 32,
+        ..EngineConfig::default()
+    };
+    PipeDecEngine::new(&artifacts().unwrap(), cfg).unwrap()
+}
+
+const PROMPT: &str = "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n";
+
+/// Golden greedy continuation from python (written by aot.py).
+fn golden_target() -> Vec<u32> {
+    let text =
+        std::fs::read_to_string(artifacts().unwrap().join("golden_target.txt")).unwrap();
+    text.lines()
+        .nth(1)
+        .unwrap()
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect()
+}
+
+#[test]
+fn pipedec_is_lossless_vs_golden() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let mut e = engine(4, 8, 8);
+    let r = e.decode(PROMPT).unwrap();
+    let golden = golden_target();
+    assert!(r.tokens.len() >= golden.len());
+    assert_eq!(&r.tokens[..golden.len()], &golden[..],
+        "PipeDec output diverged from plain greedy decoding");
+}
+
+#[test]
+fn losslessness_holds_across_depths_and_trees() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let golden = golden_target();
+    for (stages, w, c) in [(1, 4, 4), (2, 8, 4), (8, 8, 8)] {
+        let mut e = engine(stages, w, c);
+        let r = e.decode(PROMPT).unwrap();
+        assert_eq!(&r.tokens[..golden.len()], &golden[..],
+            "diverged at stages={stages} w={w} c={c}");
+    }
+}
+
+#[test]
+fn speculation_actually_hits() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let mut e = engine(4, 8, 8);
+    let r = e.decode(PROMPT).unwrap();
+    assert!(r.hits > 0, "no speculative hits at all");
+    assert!(r.accept_rate() > 0.5,
+        "accept rate {:.2} too low for a co-trained draft", r.accept_rate());
+    // steady-state pipelining: fewer timesteps than tokens * stages
+    assert!(r.timesteps < (r.tokens.len() * e.stages()) as u64,
+        "no pipelining benefit: {} timesteps for {} tokens", r.timesteps, r.tokens.len());
+}
+
+#[test]
+fn stochastic_decoding_runs_and_terminates() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let cfg = EngineConfig {
+        stages: 2,
+        tree: TreeConfig { max_width: 8, max_children: 8, max_depth: 16 },
+        max_new_tokens: 24,
+        temperature: 0.6,
+        top_p: 0.9,
+        top_k: 80,
+        seed: 7,
+        ..EngineConfig::default()
+    };
+    let mut e = PipeDecEngine::new(&artifacts().unwrap(), cfg).unwrap();
+    let r = e.decode(PROMPT).unwrap();
+    assert!(!r.tokens.is_empty());
+    assert!(r.tokens.iter().all(|&t| (t as usize) < 128));
+    // determinism under a fixed seed
+    let r2 = e.decode(PROMPT).unwrap();
+    assert_eq!(r.tokens, r2.tokens);
+}
+
+#[test]
+fn metrics_are_recorded() {
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let mut e = engine(2, 4, 4);
+    let r = e.decode(PROMPT).unwrap();
+    assert!(r.modeled_s > 0.0);
+    assert!(r.wall_s > 0.0);
+    assert_eq!(r.metrics.counter("tokens"), r.tokens.len() as u64);
+    assert!(e.link_stats.transfers > 0);
+}
+
+#[test]
+fn grouped_pipeline_is_lossless_and_faster_per_timestep() {
+    // paper §3.1: G_i = {2i-1, 2i} — the 7-stage config over 14 GPUs,
+    // here 4 groups over 8 stages
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let golden = golden_target();
+    let cfg = EngineConfig {
+        stages: 8,
+        group_size: 2,
+        tree: TreeConfig { max_width: 8, max_children: 8, max_depth: 16 },
+        max_new_tokens: 32,
+        ..EngineConfig::default()
+    };
+    let mut e = PipeDecEngine::new(&artifacts().unwrap(), cfg).unwrap();
+    assert_eq!(e.groups(), 4);
+    let r = e.decode(PROMPT).unwrap();
+    assert_eq!(&r.tokens[..golden.len()], &golden[..],
+        "grouped pipeline diverged");
+    // groups halve the pipeline depth: fewer timesteps than 1-stage groups
+    let mut e1 = engine(8, 8, 8);
+    let r1 = e1.decode(PROMPT).unwrap();
+    assert!(r.timesteps <= r1.timesteps,
+        "grouping should not increase timesteps ({} vs {})", r.timesteps, r1.timesteps);
+}
+
+#[test]
+fn ablation_tree_reuse_off_is_lossless_but_slower() {
+    // DESIGN.md ablation: disabling dynamic-tree reuse (every sync restarts
+    // the pipeline) must not change the output, only the timestep count —
+    // this isolates the dynamic prediction tree's contribution.
+    if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
+    let golden = golden_target();
+    let mut normal = engine(4, 8, 8);
+    let r_norm = normal.decode(PROMPT).unwrap();
+    let cfg = EngineConfig {
+        stages: 4,
+        tree: TreeConfig { max_width: 8, max_children: 8, max_depth: 16 },
+        max_new_tokens: 32,
+        ablate_tree_reuse: true,
+        ..EngineConfig::default()
+    };
+    let mut ablated = PipeDecEngine::new(&artifacts().unwrap(), cfg).unwrap();
+    let r_abl = ablated.decode(PROMPT).unwrap();
+    assert_eq!(&r_abl.tokens[..golden.len()], &golden[..], "ablation broke losslessness");
+    assert_eq!(r_abl.hits, 0);
+    assert!(r_abl.timesteps > r_norm.timesteps * 2,
+        "reuse should cut timesteps substantially ({} vs {})",
+        r_abl.timesteps, r_norm.timesteps);
+}

@@ -1,0 +1,91 @@
+//! Cross-language numerics: replay the golden greedy continuations (written
+//! by `python/compile/aot.py` with the python training-path forward) through
+//! the Rust runtime + AOT artifacts. Proves prefill, the dynamic-tree
+//! attention artifact, KV promotion, and the head all compose to the same
+//! argmax sequence as the reference model.
+
+use pipedec::kvcache::TwoLevelCache;
+use pipedec::model::{bias, ModelHandles};
+use pipedec::runtime::Runtime;
+use pipedec::util::top_k_indices;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+fn load_golden(dir: &std::path::Path, name: &str) -> (Vec<u32>, Vec<u32>) {
+    let text = std::fs::read_to_string(dir.join(format!("golden_{name}.txt"))).unwrap();
+    let mut lines = text.lines();
+    let parse = |l: &str| -> Vec<u32> {
+        l.split_whitespace().map(|t| t.parse().unwrap()).collect()
+    };
+    (parse(lines.next().unwrap()), parse(lines.next().unwrap()))
+}
+
+/// Greedy autoregressive decode through the artifacts: each new token is a
+/// width-1 tree block that is immediately promoted to the model level — the
+/// degenerate (width=1, always-hit) PipeDec configuration.
+fn greedy_decode(model_name: &str, steps: usize) -> (Vec<u32>, Vec<u32>) {
+    let dir = artifacts().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut m = ModelHandles::load(&rt, &dir, model_name).unwrap();
+    let c = m.cfg.clone();
+    let mut cache =
+        TwoLevelCache::new(c.n_layers, c.n_heads, c.head_dim, c.past_cap, c.tree_cap);
+
+    let (prompt, expected) = load_golden(&dir, model_name);
+    let logits = m.full_prefill(&rt, &mut cache, &prompt).unwrap();
+    let mut next = top_k_indices(&logits, 1)[0] as u32;
+
+    let mut produced = vec![next];
+    while produced.len() < steps {
+        let pos = cache.past_len() as i32;
+        let mut posv = vec![0i32; c.width_cap];
+        posv[0] = pos;
+        // width-1 block: self-only tree bias at slot 0
+        let tree_bias =
+            bias::pad_tree_bias_rows(vec![0.0; 0], 0, 0, c.width_cap, c.tree_cap);
+        let logits = m
+            .full_forward_tree_block(&rt, &mut cache, &[next], &posv, &tree_bias)
+            .unwrap();
+        next = top_k_indices(&logits[..c.vocab_size], 1)[0] as u32;
+        produced.push(next);
+        cache.promote_root_to_past().unwrap();
+        // tree level now holds only the promoted slot; drop it
+        cache.compact_tree(&[]);
+    }
+    (produced, expected)
+}
+
+#[test]
+fn target_greedy_matches_python_reference() {
+    if artifacts().is_none() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (produced, expected) = greedy_decode("target", 12);
+    assert_eq!(produced, expected, "target artifact decode diverged");
+}
+
+#[test]
+fn draft_greedy_matches_python_reference() {
+    if artifacts().is_none() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (produced, expected) = greedy_decode("draft", 12);
+    assert_eq!(produced, expected, "draft artifact decode diverged");
+}
+
+#[test]
+fn decoded_text_is_printable_corpus_style() {
+    if artifacts().is_none() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (produced, _) = greedy_decode("target", 12);
+    let text = pipedec::tokenizer::decode(&produced);
+    assert!(!text.is_empty());
+    assert!(text.chars().all(|c| c.is_ascii()));
+}

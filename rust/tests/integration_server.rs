@@ -1,0 +1,46 @@
+//! Server front end over the real PipeDec engine: FIFO service, latency
+//! accounting, backpressure.
+
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecEngine;
+use pipedec::server::{drain, summarize, Router};
+use pipedec::workload::mixed_stream;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+#[test]
+fn serves_a_mixed_queue_end_to_end() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    let cfg = EngineConfig {
+        stages: 2,
+        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
+        max_new_tokens: 12,
+        ..EngineConfig::default()
+    };
+    let mut engine = PipeDecEngine::new(&dir, cfg).unwrap();
+    let mut router = Router::new(16);
+    for p in mixed_stream(&dir, 1).unwrap().iter().take(3) {
+        router.submit(p).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    let done = drain(&mut router, |p| {
+        let r = engine.decode(p)?;
+        Ok((r.tokens.len(), r.modeled_s))
+    }).unwrap();
+    let (m, lat) = summarize(&done, t0.elapsed().as_secs_f64());
+    assert_eq!(m.counter("requests"), 3);
+    assert!(m.counter("tokens") >= 3 * 12 as u64);
+    assert_eq!(lat.len(), 3);
+    // FIFO: later arrivals wait longer
+    assert!(done[2].latency_s >= done[0].latency_s);
+}
+
+#[test]
+fn queue_backpressure() {
+    let mut router = Router::new(1);
+    router.submit("a").unwrap();
+    assert!(router.submit("b").is_err());
+}

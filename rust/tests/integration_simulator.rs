@@ -1,0 +1,95 @@
+//! Paper-scale simulator: reproduce the headline numbers' *shape* (who
+//! wins, by what factor, where crossovers fall) per EXPERIMENTS.md.
+
+use pipedec::sim::{simulate_pipedec, simulate_pp, simulate_slm, simulate_stpp,
+    throughput_tokens_per_s, ClusterSpec, HitModel};
+use pipedec::util::XorShiftRng;
+use pipedec::workload::DOMAINS;
+
+#[test]
+fn fig5_shape_holds_for_every_domain() {
+    let cluster = ClusterSpec::paper(14);
+    for (dom, _) in DOMAINS {
+        let hit = HitModel::default_for(dom);
+        let mut rng = XorShiftRng::new(1);
+        let pd = simulate_pipedec(&cluster, 32, 16, &hit, 512, &mut rng);
+        let pp = simulate_pp(&cluster, 512);
+        let st = simulate_stpp(&cluster, 16, 4, 4, &hit, 512, &mut rng);
+        let vs_pp = pp.s_per_token() / pd.s_per_token();
+        let vs_st = st.s_per_token() / pd.s_per_token();
+        assert!(vs_pp > 2.5, "{dom}: vs PP only {vs_pp:.2}x");
+        assert!(vs_st > 1.3, "{dom}: vs STPP only {vs_st:.2}x");
+    }
+}
+
+#[test]
+fn depth_ordering_7_14_21() {
+    let hit = HitModel::default_for("math");
+    let mut rng = XorShiftRng::new(2);
+    let t: Vec<f64> = [7usize, 14, 21].iter().map(|&n| {
+        simulate_pipedec(&ClusterSpec::paper(n), 32, 16, &hit, 512, &mut rng)
+            .s_per_token()
+    }).collect();
+    assert!(t[1] < t[0], "14 should beat 7");
+    // gains plateau: 14->21 improvement smaller than 7->14
+    let g1 = t[0] / t[1];
+    let g2 = t[1] / t[2].max(1e-9);
+    assert!(g2 < g1, "plateau expected: g1={g1:.2} g2={g2:.2}");
+}
+
+#[test]
+fn accuracy_improves_with_tree_width() {
+    let hit = HitModel::default_for("qa");
+    let cluster = ClusterSpec::paper(14);
+    let acc = |w: usize| {
+        let mut rng = XorShiftRng::new(3);
+        simulate_pipedec(&cluster, w, 16, &hit, 2048, &mut rng).accuracy()
+    };
+    assert!(acc(32) > acc(8));
+    assert!(acc(128) >= acc(32) - 0.02);
+}
+
+#[test]
+fn latency_u_shape_in_width() {
+    // latency improves from tiny widths then worsens as verification cost
+    // dominates — the Fig. 4 U-shape
+    let hit = HitModel::default_for("math");
+    let cluster = ClusterSpec::paper(14);
+    let lat = |w: usize| {
+        let mut rng = XorShiftRng::new(4);
+        simulate_pipedec(&cluster, w, 16, &hit, 1024, &mut rng).s_per_token()
+    };
+    let (l2, l32, l512) = (lat(2), lat(32), lat(512));
+    assert!(l32 < l2, "moderate width should beat tiny ({l32} vs {l2})");
+    assert!(l512 > l32, "huge width should pay verification cost");
+}
+
+#[test]
+fn throughput_crossover_in_k() {
+    let cluster = ClusterSpec::paper(14);
+    let hit = HitModel::default_for("math");
+    let mut rng = XorShiftRng::new(5);
+    let pd1 = throughput_tokens_per_s(&cluster, "pipedec", 1, 8, &hit, 32, 16, &mut rng);
+    let pp1 = throughput_tokens_per_s(&cluster, "pp", 1, 8, &hit, 32, 16, &mut rng);
+    let pd16 = throughput_tokens_per_s(&cluster, "pipedec", 16, 8, &hit, 32, 16, &mut rng);
+    let pp16 = throughput_tokens_per_s(&cluster, "pp", 16, 8, &hit, 32, 16, &mut rng);
+    assert!(pd1 > pp1, "k=1: PipeDec should lead");
+    assert!(pp16 > pd16, "k=16: PP should lead");
+}
+
+#[test]
+fn slm_comparison_point() {
+    let s = simulate_slm(256);
+    // 8B on L40 ~ 18-20 ms/token
+    assert!((0.012..0.03).contains(&s.s_per_token()));
+}
+
+#[test]
+fn deterministic_under_seed() {
+    let cluster = ClusterSpec::paper(14);
+    let hit = HitModel::default_for("code");
+    let a = simulate_pipedec(&cluster, 32, 16, &hit, 256, &mut XorShiftRng::new(9));
+    let b = simulate_pipedec(&cluster, 32, 16, &hit, 256, &mut XorShiftRng::new(9));
+    assert_eq!(a.seconds, b.seconds);
+    assert_eq!(a.hits, b.hits);
+}
