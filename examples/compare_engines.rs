@@ -1,12 +1,11 @@
-//! Compare all four engines (PipeDec / STPP / PP / SLM) on one prompt per
-//! workload domain — a miniature of the paper's Fig. 5 on the real
-//! artifact-backed engines.
+//! Compare every registered engine on one prompt per workload domain — a
+//! miniature of the paper's Fig. 5 on the real artifact-backed engines,
+//! iterating the `EngineKind` registry instead of naming engines by hand.
 //!
 //!     cargo run --release --offline --example compare_engines
 
-use pipedec::baselines::{PpEngine, SlmEngine, StppEngine};
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, DecodeOutput, Engine, EngineKind};
 use pipedec::metrics::Table;
 use pipedec::workload::Workload;
 
@@ -27,34 +26,51 @@ fn main() -> anyhow::Result<()> {
         ..EngineConfig::default()
     };
 
-    let mut pipedec = PipeDecEngine::new(&dir, cfg.clone())?;
-    let mut stpp = StppEngine::new(&dir, cfg.clone())?;
-    let mut pp = PpEngine::new(&dir, cfg.clone())?;
-    let mut slm = SlmEngine::new(&dir, cfg)?;
+    let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+    for kind in EngineKind::ALL {
+        engines.push(build_engine(kind, &dir, cfg.clone())?);
+    }
 
-    let mut table = Table::new(&[
-        "domain", "dataset", "pipedec ms/tok", "stpp ms/tok", "pp ms/tok",
-        "slm ms/tok", "accept",
-    ]);
+    let mut header: Vec<String> = vec!["domain".into(), "dataset".into()];
+    header.extend(EngineKind::ALL.iter().map(|k| format!("{k} ms/tok")));
+    header.push("accept".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+
     for wl in Workload::load_all(&dir)? {
         let prompt = &wl.prompts[0];
-        let r = pipedec.decode(prompt)?;
-        let s = stpp.decode(prompt)?;
-        let p = pp.decode(prompt)?;
-        let l = slm.decode(prompt)?;
-        // losslessness across speculative engines
-        let n = r.tokens.len().min(p.tokens.len()).min(s.tokens.len());
-        anyhow::ensure!(r.tokens[..n] == p.tokens[..n], "pipedec != pp on {}", wl.domain);
-        anyhow::ensure!(s.tokens[..n] == p.tokens[..n], "stpp != pp on {}", wl.domain);
-        table.row(vec![
-            wl.domain.clone(),
-            wl.dataset_analogue.clone(),
-            format!("{:.1}", 1e3 * r.modeled_s_per_token()),
-            format!("{:.1}", 1e3 * s.modeled_s_per_token()),
-            format!("{:.1}", 1e3 * p.modeled_s_per_token()),
-            format!("{:.1}", 1e3 * l.modeled_s_per_token()),
-            format!("{:.2}", r.accept_rate()),
-        ]);
+        let outputs: Vec<DecodeOutput> = engines
+            .iter_mut()
+            .map(|e| e.decode_prompt(prompt))
+            .collect::<anyhow::Result<_>>()?;
+
+        // losslessness: every speculative engine matches PP's greedy prefix
+        let idx_of = |kind: EngineKind| {
+            EngineKind::ALL.iter().position(|&k| k == kind).unwrap()
+        };
+        let pp = &outputs[idx_of(EngineKind::Pp)];
+        for (kind, out) in EngineKind::ALL.iter().zip(&outputs) {
+            if kind.is_speculative() {
+                let n = out.tokens.len().min(pp.tokens.len());
+                anyhow::ensure!(
+                    out.tokens[..n] == pp.tokens[..n],
+                    "{kind} != pp on {}",
+                    wl.domain
+                );
+            }
+        }
+
+        let mut row = vec![wl.domain.clone(), wl.dataset_analogue.clone()];
+        row.extend(
+            outputs
+                .iter()
+                .map(|o| format!("{:.1}", 1e3 * o.modeled_s_per_token())),
+        );
+        row.push(format!(
+            "{:.2}",
+            outputs[idx_of(EngineKind::PipeDec)].accept_rate()
+        ));
+        table.row(row);
     }
     println!("{}", table.render());
     println!("(modeled = parallel-schedule latency from measured per-stage times)");

@@ -1,14 +1,13 @@
 //! Quickstart: decode one prompt with PipeDec and with plain pipeline
-//! parallelism (PP) over the same artifacts, verify the outputs match
-//! token-for-token (losslessness), and compare latency.
+//! parallelism (PP) through the unified engine registry, verify the outputs
+//! match token-for-token (losslessness), and compare latency.
 //!
 //!     cargo run --release --offline --example quickstart
 //!
 //! Requires `make artifacts` to have run.
 
-use pipedec::baselines::PpEngine;
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, Engine, EngineKind};
 
 fn main() -> anyhow::Result<()> {
     let dir = pipedec::artifacts_dir();
@@ -31,37 +30,38 @@ fn main() -> anyhow::Result<()> {
     let prompt = "<math>\nquestion: carol packs 5 boxes with 6 coins each. total coins?\n";
     println!("prompt:\n{prompt}");
 
-    println!("[1/2] PipeDec (8-stage pipeline + draft in pipeline + dynamic tree)");
-    let mut pipedec = PipeDecEngine::new(&dir, cfg.clone())?;
-    let r = pipedec.decode(prompt)?;
-    println!("  completion: {:?}", r.text);
-    println!(
-        "  tokens={} timesteps={} accept_rate={:.2} modeled={:.1} ms/token",
-        r.tokens.len(),
-        r.timesteps,
-        r.accept_rate(),
-        1e3 * r.modeled_s_per_token()
-    );
+    let kinds = [EngineKind::PipeDec, EngineKind::Pp];
+    let mut outputs = Vec::new();
+    for (i, kind) in kinds.iter().enumerate() {
+        println!("[{}/{}] {} ({})", i + 1, kinds.len(), kind, kind.describe());
+        let mut engine = build_engine(*kind, &dir, cfg.clone())?;
+        let r = engine.decode_prompt(prompt)?;
+        println!("  completion: {:?}", r.text);
+        println!(
+            "  tokens={} modeled={:.1} ms/token",
+            r.tokens.len(),
+            1e3 * r.modeled_s_per_token()
+        );
+        if let Some(spec) = r.spec {
+            println!(
+                "  timesteps={} accept_rate={:.2}",
+                spec.timesteps,
+                spec.accept_rate()
+            );
+        }
+        outputs.push(r);
+    }
 
-    println!("[2/2] PP (same pipeline, no speculation)");
-    let mut pp = PpEngine::new(&dir, cfg)?;
-    let b = pp.decode(prompt)?;
-    println!("  completion: {:?}", b.text);
-    println!(
-        "  tokens={} modeled={:.1} ms/token",
-        b.tokens.len(),
-        1e3 * b.modeled_s_per_token()
-    );
-
-    let n = r.tokens.len().min(b.tokens.len());
+    let (pd, pp) = (&outputs[0], &outputs[1]);
+    let n = pd.tokens.len().min(pp.tokens.len());
     anyhow::ensure!(
-        r.tokens[..n] == b.tokens[..n],
+        pd.tokens[..n] == pp.tokens[..n],
         "losslessness violated: outputs differ"
     );
     println!("\noutputs identical over {n} tokens (lossless OK)");
     println!(
         "modeled speedup: {:.2}x",
-        b.modeled_s_per_token() / r.modeled_s_per_token()
+        pp.modeled_s_per_token() / pd.modeled_s_per_token()
     );
     Ok(())
 }

@@ -1,15 +1,16 @@
 //! End-to-end serving driver (DESIGN.md "End-to-end validation"): load the
 //! build-time model through the PJRT runtime and serve a batch of real
-//! requests from all six workload domains through the router + PipeDec
-//! engine, reporting per-request latency percentiles and aggregate
-//! throughput.
+//! requests from all six workload domains through the router + any
+//! registered engine, reporting per-request latency percentiles,
+//! time-to-first-token, and aggregate throughput.
 //!
-//!     cargo run --release --offline --example serve_batch [-- <k>]
+//!     cargo run --release --offline --example serve_batch [-- <k> [engine]]
 //!
-//! `k` = number of concurrent requests submitted up front (default 6).
+//! `k` = number of concurrent requests submitted up front (default 6);
+//! `engine` = registry name (pipedec | pp | stpp | slm, default pipedec).
 
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, EngineKind};
 use pipedec::server::{drain, summarize, Router};
 use pipedec::workload::mixed_stream;
 
@@ -23,6 +24,11 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(6);
+    let kind: EngineKind = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(EngineKind::PipeDec);
 
     let cfg = EngineConfig {
         stages: 4,
@@ -34,42 +40,41 @@ fn main() -> anyhow::Result<()> {
         max_new_tokens: 32,
         ..EngineConfig::default()
     };
-    let mut engine = PipeDecEngine::new(&dir, cfg)?;
+    let mut engine = build_engine(kind, &dir, cfg)?;
 
     // submit k requests (round-robin over the six domains, as in Fig. 8)
     let prompts = mixed_stream(&dir, (k + 5) / 6)?;
     let mut router = Router::new(64);
     for p in prompts.iter().take(k) {
-        router.submit(p)?;
+        router.submit_prompt(p)?;
     }
-    println!("serving {} queued requests through PipeDec-4-stage...", router.depth());
+    println!(
+        "serving {} queued requests through {kind} ({})...",
+        router.depth(),
+        kind.describe()
+    );
 
     let t0 = std::time::Instant::now();
-    let mut accept_rates = Vec::new();
-    let completions = drain(&mut router, |prompt| {
-        let r = engine.decode(prompt)?;
-        accept_rates.push(r.accept_rate());
-        Ok((r.tokens.len(), r.modeled_s))
-    })?;
+    let completions = drain(&mut router, engine.as_mut())?;
     let wall = t0.elapsed().as_secs_f64();
 
     let (metrics, lat) = summarize(&completions, wall);
-    println!("\nrequests:  {}", metrics.counter("requests"));
-    println!("tokens:    {}", metrics.counter("tokens"));
+    println!("\nrequests:    {}", metrics.counter("requests"));
+    println!("tokens:      {}", metrics.counter("tokens"));
     println!(
-        "latency:   p50={:.2}s p95={:.2}s p99={:.2}s (wall, incl. queueing)",
+        "latency:     p50={:.2}s p95={:.2}s p99={:.2}s (wall, incl. queueing)",
         lat.percentile(50.0),
         lat.percentile(95.0),
         lat.percentile(99.0)
     );
     println!(
-        "throughput: {:.1} tokens/s over {:.2}s wall",
-        metrics.counter("tokens") as f64 / wall,
-        wall
+        "first token: mean={:.2}s (service start -> first streamed token)",
+        metrics.summary("first_token_s").mean()
     );
     println!(
-        "mean accept rate: {:.2}",
-        accept_rates.iter().sum::<f64>() / accept_rates.len().max(1) as f64
+        "throughput:  {:.1} tokens/s over {:.2}s wall",
+        metrics.counter("tokens") as f64 / wall,
+        wall
     );
     Ok(())
 }

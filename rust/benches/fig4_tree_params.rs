@@ -7,7 +7,7 @@
 
 use pipedec::bench_support::{banner, emit};
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, Engine, EngineKind};
 use pipedec::metrics::Table;
 use pipedec::sim::{simulate_pipedec, ClusterSpec, HitModel};
 use pipedec::util::XorShiftRng;
@@ -35,8 +35,8 @@ fn main() {
                 max_new_tokens: 24,
                 ..EngineConfig::default()
             };
-            let mut e = PipeDecEngine::new(&dir, cfg).unwrap();
-            let r = e.decode(&prompt).unwrap();
+            let mut e = build_engine(EngineKind::PipeDec, &dir, cfg).unwrap();
+            let r = e.decode_prompt(&prompt).unwrap();
             let hm = HitModel::calibrated(r.accept_rate(), w, 8);
             if w == 32 { cal = Some(hm); }
             let mut rng = XorShiftRng::new(3);
@@ -63,8 +63,8 @@ fn main() {
             max_new_tokens: 24,
             ..EngineConfig::default()
         };
-        let mut e = PipeDecEngine::new(&dir, cfg).unwrap();
-        let r = e.decode(&prompt).unwrap();
+        let mut e = build_engine(EngineKind::PipeDec, &dir, cfg).unwrap();
+        let r = e.decode_prompt(&prompt).unwrap();
         ct.row(vec![c.to_string(), format!("{:.2}", r.accept_rate()),
             format!("{:.1}", 1e3 * r.modeled_s_per_token())]);
     }

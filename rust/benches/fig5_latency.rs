@@ -1,14 +1,14 @@
 //! Fig. 5 reproduction: single-task decode latency of PipeDec-7/14/21 vs
 //! PP, STPP, and SLM across the six workload domains.
 //!
-//! Real artifact-backed engines run at 8 stages and provide per-domain
-//! accept rates; the paper-scale 7/14/21-stage rows come from the simulator
-//! calibrated with those measured rates.
+//! Real artifact-backed engines run at 8 stages through the `EngineKind`
+//! registry and provide per-domain accept rates; the paper-scale
+//! 7/14/21-stage rows come from the simulator calibrated with those
+//! measured rates.
 
-use pipedec::baselines::{PpEngine, SlmEngine, StppEngine};
 use pipedec::bench_support::{banner, emit};
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, DecodeOutput, Engine, EngineKind};
 use pipedec::metrics::Table;
 use pipedec::sim::{simulate_pipedec, simulate_pp, simulate_slm, simulate_stpp,
     ClusterSpec, HitModel};
@@ -27,36 +27,47 @@ fn main() {
         max_new_tokens: 24,
         ..EngineConfig::default()
     };
-    let mut pd = PipeDecEngine::new(&dir, cfg.clone()).unwrap();
-    let mut st = StppEngine::new(&dir, cfg.clone()).unwrap();
-    let mut pp = PpEngine::new(&dir, cfg.clone()).unwrap();
-    let mut slm = SlmEngine::new(&dir, cfg).unwrap();
+    // one engine per registry entry, compared like for like
+    let mut engines: Vec<Box<dyn Engine>> = EngineKind::ALL
+        .iter()
+        .map(|&k| build_engine(k, &dir, cfg.clone()).unwrap())
+        .collect();
 
-    let mut real = Table::new(&["domain", "pipedec-8 ms/tok", "stpp ms/tok",
-        "pp ms/tok", "slm ms/tok", "accept"]);
+    let mut header: Vec<String> = vec!["domain".into()];
+    header.extend(EngineKind::ALL.iter().map(|k| format!("{k} ms/tok")));
+    header.push("accept".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut real = Table::new(&header_refs);
+
     let mut paper = Table::new(&["domain", "pd-7", "pd-14", "pd-21", "stpp",
         "pp", "slm", "x vs pp", "x vs stpp"]);
     let mut rng = XorShiftRng::new(0x55);
 
     for wl in Workload::load_all(&dir).unwrap() {
         // measured on the real engines (mean over 2 prompts)
-        let mut accept = 0.0;
-        let (mut a_pd, mut a_st, mut a_pp, mut a_slm) = (0.0, 0.0, 0.0, 0.0);
         let prompts: Vec<&str> = wl.prompts.iter().take(2).map(|s| s.as_str()).collect();
-        for p in &prompts {
-            let r = pd.decode(p).unwrap();
-            accept += r.accept_rate();
-            a_pd += r.modeled_s_per_token();
-            a_st += st.decode(p).unwrap().modeled_s_per_token();
-            a_pp += pp.decode(p).unwrap().modeled_s_per_token();
-            a_slm += slm.decode(p).unwrap().modeled_s_per_token();
-        }
         let n = prompts.len() as f64;
+        let pd_idx = EngineKind::ALL
+            .iter()
+            .position(|&k| k == EngineKind::PipeDec)
+            .unwrap();
+        let mut accept = 0.0;
+        let mut ms_per_kind = vec![0.0f64; EngineKind::ALL.len()];
+        for p in &prompts {
+            let outs: Vec<DecodeOutput> = engines
+                .iter_mut()
+                .map(|e| e.decode_prompt(p).unwrap())
+                .collect();
+            accept += outs[pd_idx].accept_rate();
+            for (ms, out) in ms_per_kind.iter_mut().zip(&outs) {
+                *ms += out.modeled_s_per_token();
+            }
+        }
         accept /= n;
-        real.row(vec![wl.domain.clone(),
-            format!("{:.1}", 1e3 * a_pd / n), format!("{:.1}", 1e3 * a_st / n),
-            format!("{:.1}", 1e3 * a_pp / n), format!("{:.1}", 1e3 * a_slm / n),
-            format!("{:.2}", accept)]);
+        let mut row = vec![wl.domain.clone()];
+        row.extend(ms_per_kind.iter().map(|ms| format!("{:.1}", 1e3 * ms / n)));
+        row.push(format!("{accept:.2}"));
+        real.row(row);
 
         // paper-scale rows, hit model calibrated from the measured accept
         let hm = HitModel::calibrated(accept, 8, 8);

@@ -2,10 +2,9 @@
 //! domain — PipeDec at several pipeline depths vs the static tree (STPP).
 //! (The paper draws this as a radar chart; we emit the same series as rows.)
 
-use pipedec::baselines::StppEngine;
 use pipedec::bench_support::{banner, emit};
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, Engine, EngineKind};
 use pipedec::metrics::Table;
 use pipedec::workload::Workload;
 
@@ -22,25 +21,25 @@ fn main() {
         max_new_tokens: 24,
         ..EngineConfig::default()
     };
-    let mut pd2 = PipeDecEngine::new(&dir, mk(2)).unwrap();
-    let mut pd4 = PipeDecEngine::new(&dir, mk(4)).unwrap();
-    let mut pd8 = PipeDecEngine::new(&dir, mk(8)).unwrap();
-    let mut stpp = StppEngine::new(&dir, mk(4)).unwrap();
+    let mut pd2 = build_engine(EngineKind::PipeDec, &dir, mk(2)).unwrap();
+    let mut pd4 = build_engine(EngineKind::PipeDec, &dir, mk(4)).unwrap();
+    let mut pd8 = build_engine(EngineKind::PipeDec, &dir, mk(8)).unwrap();
+    let mut stpp = build_engine(EngineKind::Stpp, &dir, mk(4)).unwrap();
 
     let mut t = Table::new(&["domain", "pipedec-2", "pipedec-4", "pipedec-8",
         "stpp accepted/round", "stpp per-level acc"]);
     for wl in Workload::load_all(&dir).unwrap() {
         let p = &wl.prompts[0];
-        let a2 = pd2.decode(p).unwrap().accept_rate();
-        let a4 = pd4.decode(p).unwrap().accept_rate();
-        let a8 = pd8.decode(p).unwrap().accept_rate();
-        let s = stpp.decode(p).unwrap();
+        let a2 = pd2.decode_prompt(p).unwrap().accept_rate();
+        let a4 = pd4.decode_prompt(p).unwrap().accept_rate();
+        let a8 = pd8.decode_prompt(p).unwrap().accept_rate();
+        let s = stpp.decode_prompt(p).unwrap();
         // STPP per-level acceptance probability from accepted/round m:
         // m = 1 + p + p^2 ... -> rough invert via m/(depth)
-        let per_level = ((s.accepted_per_round - 1.0)
-            / (s.accepted_per_round)).clamp(0.0, 1.0);
+        let per_level = ((s.accepted_per_round() - 1.0)
+            / (s.accepted_per_round())).clamp(0.0, 1.0);
         t.row(vec![wl.domain.clone(), format!("{a2:.2}"), format!("{a4:.2}"),
-            format!("{a8:.2}"), format!("{:.2}", s.accepted_per_round),
+            format!("{a8:.2}"), format!("{:.2}", s.accepted_per_round()),
             format!("{per_level:.2}")]);
     }
     emit("fig6_accuracy_radar", &t);

@@ -2,10 +2,9 @@
 //! top-p 0.9, top-k 80 — §4.3.3) for PipeDec and STPP: latency + accuracy,
 //! 5 repeats per input under sampling.
 
-use pipedec::baselines::StppEngine;
 use pipedec::bench_support::{banner, emit};
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, Engine, EngineKind};
 use pipedec::metrics::Table;
 use pipedec::workload::Workload;
 
@@ -31,26 +30,28 @@ fn main() {
     for wl in Workload::load_all(&dir).unwrap().iter().take(3) {
         let p = &wl.prompts[0];
         // greedy
-        let mut pd = PipeDecEngine::new(&dir, base.clone()).unwrap();
-        let mut st = StppEngine::new(&dir, base.clone()).unwrap();
-        let r = pd.decode(p).unwrap();
-        let s = st.decode(p).unwrap();
+        let mut pd = build_engine(EngineKind::PipeDec, &dir, base.clone()).unwrap();
+        let mut st = build_engine(EngineKind::Stpp, &dir, base.clone()).unwrap();
+        let r = pd.decode_prompt(p).unwrap();
+        let s = st.decode_prompt(p).unwrap();
         t.row(vec![wl.domain.clone(), "greedy".into(),
             format!("{:.1}", 1e3 * r.modeled_s_per_token()),
             format!("{:.2}", r.accept_rate()),
             format!("{:.1}", 1e3 * s.modeled_s_per_token()),
-            format!("{:.2}", s.accepted_per_round)]);
-        // stochastic: 5 repeats with distinct seeds
+            format!("{:.2}", s.accepted_per_round())]);
+        // stochastic: 5 repeats with distinct per-request seed overrides
+        // (one engine pair, re-seeded through DecodeRequest)
+        let mut pd = build_engine(EngineKind::PipeDec, &dir, stoch(0)).unwrap();
+        let mut st = build_engine(EngineKind::Stpp, &dir, stoch(0)).unwrap();
         let (mut lat, mut acc, mut slat, mut sacc) = (0.0, 0.0, 0.0, 0.0);
         for seed in 0..5u64 {
-            let mut pd = PipeDecEngine::new(&dir, stoch(seed)).unwrap();
-            let mut st = StppEngine::new(&dir, stoch(seed)).unwrap();
-            let r = pd.decode(p).unwrap();
-            let s = st.decode(p).unwrap();
+            let req = pipedec::engine::DecodeRequest::new(p).with_seed(seed);
+            let r = pd.decode(&req, &mut pipedec::engine::NullSink).unwrap();
+            let s = st.decode(&req, &mut pipedec::engine::NullSink).unwrap();
             lat += r.modeled_s_per_token();
             acc += r.accept_rate();
             slat += s.modeled_s_per_token();
-            sacc += s.accepted_per_round;
+            sacc += s.accepted_per_round();
         }
         t.row(vec![wl.domain.clone(), "stochastic".into(),
             format!("{:.1}", 1e3 * lat / 5.0), format!("{:.2}", acc / 5.0),

@@ -1,11 +1,16 @@
 //! Fig. 8 reproduction: throughput vs concurrency k under tight memory
 //! (batch cap 8). Paper-scale model via the simulator; plus a real-engine
-//! demonstration that PipeDec serves a queue one request at a time.
+//! demonstration that serves a queue through every registered engine via
+//! the router (registry-driven, `EngineKind::ALL`).
 
 use pipedec::bench_support::{banner, emit};
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::engine::{build_engine, EngineKind};
 use pipedec::metrics::Table;
+use pipedec::server::{drain, summarize, Router};
 use pipedec::sim::{throughput_tokens_per_s, ClusterSpec, HitModel};
 use pipedec::util::XorShiftRng;
+use pipedec::workload::mixed_stream;
 
 fn main() {
     banner("fig8_throughput",
@@ -15,13 +20,53 @@ fn main() {
     let mut rng = XorShiftRng::new(8);
     let mut t = Table::new(&["k", "pipedec tok/s", "stpp tok/s", "pp tok/s"]);
     for k in [1usize, 2, 4, 8, 16] {
-        let pd = throughput_tokens_per_s(&cluster, "pipedec", k, 8, &hit, 32, 16, &mut rng);
-        let st = throughput_tokens_per_s(&cluster, "stpp", k, 8, &hit, 32, 16, &mut rng);
-        let pp = throughput_tokens_per_s(&cluster, "pp", k, 8, &hit, 32, 16, &mut rng);
+        let pd = throughput_tokens_per_s(&cluster, EngineKind::PipeDec.name(), k, 8,
+            &hit, 32, 16, &mut rng);
+        let st = throughput_tokens_per_s(&cluster, EngineKind::Stpp.name(), k, 8,
+            &hit, 32, 16, &mut rng);
+        let pp = throughput_tokens_per_s(&cluster, EngineKind::Pp.name(), k, 8,
+            &hit, 32, 16, &mut rng);
         t.row(vec![k.to_string(), format!("{pd:.1}"), format!("{st:.1}"),
             format!("{pp:.1}")]);
     }
     emit("fig8_throughput", &t);
     println!("expected shape: PipeDec flat in k (single-task design), \
 comparable to STPP at the memory-capped batch; PP overtakes at high k");
+
+    // -- real engines: one router queue served by each registry entry --
+    let dir = pipedec::artifacts_dir();
+    if !dir.join("target_config.txt").exists() {
+        eprintln!("artifacts missing — skipping real-engine serving section");
+        return;
+    }
+    let cfg = EngineConfig {
+        stages: 4,
+        tree: TreeConfig { max_width: 8, max_children: 8, max_depth: 12 },
+        max_new_tokens: 16,
+        ..EngineConfig::default()
+    };
+    let k = 3usize;
+    let prompts = mixed_stream(&dir, 1).unwrap();
+    let mut rt = Table::new(&["engine", "requests", "tok/s", "p50 latency s",
+        "mean first-token s"]);
+    for kind in EngineKind::ALL {
+        let mut engine = build_engine(kind, &dir, cfg.clone()).unwrap();
+        let mut router = Router::new(16);
+        for p in prompts.iter().take(k) {
+            router.submit_prompt(p).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        let done = drain(&mut router, engine.as_mut()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let (m, lat) = summarize(&done, wall);
+        rt.row(vec![
+            kind.name().to_string(),
+            m.counter("requests").to_string(),
+            format!("{:.1}", m.counter("tokens") as f64 / wall.max(1e-9)),
+            format!("{:.2}", lat.percentile(50.0)),
+            format!("{:.2}", m.summary("first_token_s").mean()),
+        ]);
+    }
+    println!("-- real engines: k={k} queued requests per engine (registry) --");
+    emit("fig8_real_serving", &rt);
 }

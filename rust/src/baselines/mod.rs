@@ -9,8 +9,10 @@
 //! * **SLM** — the small model served standalone on one device
 //!   ([`slm::SlmEngine`]).
 //!
-//! All engines share the artifact runtime, sampling, and reporting so the
-//! figure benches compare like for like.
+//! All baselines implement the crate-wide [`crate::engine::Engine`] trait
+//! and return the unified [`crate::engine::DecodeOutput`], so the figure
+//! benches, server, and CLI compare like for like through
+//! [`crate::engine::build_engine`].
 
 pub mod pp;
 pub mod slm;
@@ -19,31 +21,3 @@ pub mod stpp;
 pub use pp::PpEngine;
 pub use slm::SlmEngine;
 pub use stpp::StppEngine;
-
-use crate::metrics::Metrics;
-
-/// Common result shape for baseline decodes.
-#[derive(Debug, Clone)]
-pub struct BaselineResult {
-    pub tokens: Vec<u32>,
-    pub text: String,
-    /// Wall-clock decode seconds.
-    pub wall_s: f64,
-    /// Modeled parallel-schedule seconds (pipeline-aware; equals wall-ish
-    /// time for SLM).
-    pub modeled_s: f64,
-    /// Accepted speculative tokens per verification round (STPP only; 0
-    /// elsewhere).
-    pub accepted_per_round: f64,
-    pub metrics: Metrics,
-}
-
-impl BaselineResult {
-    pub fn modeled_s_per_token(&self) -> f64 {
-        if self.tokens.is_empty() {
-            0.0
-        } else {
-            self.modeled_s / self.tokens.len() as f64
-        }
-    }
-}

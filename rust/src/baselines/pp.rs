@@ -8,9 +8,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::BaselineResult;
 use crate::config::EngineConfig;
-use crate::coordinator::sampling::{select_token, Sampling};
+use crate::coordinator::sampling::select_token;
+use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, TokenSink};
 use crate::kvcache::TwoLevelCache;
 use crate::metrics::Metrics;
 use crate::model::{bias, ModelHandles};
@@ -69,19 +69,35 @@ impl PpEngine {
     fn layer_range(&self, s: usize) -> std::ops::Range<usize> {
         s * self.layers_per_stage..(s + 1) * self.layers_per_stage
     }
+}
 
-    pub fn decode(&mut self, prompt: &str) -> Result<BaselineResult> {
-        let sampling = Sampling::from_engine(&self.cfg);
+impl Engine for PpEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Pp
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    fn decode(&mut self, req: &DecodeRequest, sink: &mut dyn TokenSink) -> Result<DecodeOutput> {
+        let (max_new, sampling, seed) = req.resolve(&self.cfg);
+        anyhow::ensure!(max_new >= 1, "max_new_tokens must be >= 1");
         for c in &mut self.stage_caches {
             c.reset();
         }
-        self.rng = XorShiftRng::new(self.cfg.seed);
+        self.rng = XorShiftRng::new(seed);
         let mut metrics = Metrics::new();
         let tc = self.target.cfg.clone();
         let w = tc.width_cap;
 
-        let max_prompt = tc.past_cap - self.cfg.max_new_tokens - 2;
-        let mut ids = tokenizer::encode(prompt);
+        anyhow::ensure!(
+            max_new + 2 < tc.past_cap,
+            "max_new_tokens {max_new} exceeds the model context budget ({})",
+            tc.past_cap
+        );
+        let max_prompt = tc.past_cap - max_new - 2;
+        let mut ids = tokenizer::encode(&req.prompt);
         ids.truncate(max_prompt);
         anyhow::ensure!(!ids.is_empty(), "empty prompt");
 
@@ -117,8 +133,9 @@ impl PpEngine {
         let wall0 = Instant::now();
         let mut modeled_s = 0.0;
         let mut decoded = vec![next];
+        sink.on_token(next);
         let d_bytes = tc.dim * w * 4;
-        while decoded.len() < self.cfg.max_new_tokens && next != tokenizer::EOS_ID {
+        while decoded.len() < max_new && next != tokenizer::EOS_ID {
             let pos0 = self.stage_caches[0].past_len();
             let mut pos = vec![0i32; w];
             pos[0] = pos0 as i32;
@@ -153,6 +170,7 @@ impl PpEngine {
             token_s += t0.elapsed().as_secs_f64();
             next = select_token(&logits[..v], &sampling, &mut self.rng);
             decoded.push(next);
+            sink.on_token(next);
             for c in &mut self.stage_caches {
                 c.promote_root_to_past()?;
                 c.clear_tree();
@@ -163,12 +181,12 @@ impl PpEngine {
         }
 
         metrics.incr("tokens", decoded.len() as u64);
-        Ok(BaselineResult {
+        Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,
             wall_s: wall0.elapsed().as_secs_f64(),
             modeled_s,
-            accepted_per_round: 0.0,
+            spec: None,
             metrics,
         })
     }

@@ -7,9 +7,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::BaselineResult;
 use crate::config::EngineConfig;
-use crate::coordinator::sampling::{select_token, Sampling};
+use crate::coordinator::sampling::select_token;
+use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, TokenSink};
 use crate::kvcache::TwoLevelCache;
 use crate::metrics::Metrics;
 use crate::model::{bias, ModelHandles};
@@ -43,16 +43,32 @@ impl SlmEngine {
             rng,
         })
     }
+}
 
-    pub fn decode(&mut self, prompt: &str) -> Result<BaselineResult> {
-        let sampling = Sampling::from_engine(&self.cfg);
+impl Engine for SlmEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Slm
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    fn decode(&mut self, req: &DecodeRequest, sink: &mut dyn TokenSink) -> Result<DecodeOutput> {
+        let (max_new, sampling, seed) = req.resolve(&self.cfg);
+        anyhow::ensure!(max_new >= 1, "max_new_tokens must be >= 1");
         self.cache.reset();
-        self.rng = XorShiftRng::new(self.cfg.seed);
+        self.rng = XorShiftRng::new(seed);
         let mut metrics = Metrics::new();
         let c = self.model.cfg.clone();
 
-        let max_prompt = c.past_cap - self.cfg.max_new_tokens - 2;
-        let mut ids = tokenizer::encode(prompt);
+        anyhow::ensure!(
+            max_new + 2 < c.past_cap,
+            "max_new_tokens {max_new} exceeds the model context budget ({})",
+            c.past_cap
+        );
+        let max_prompt = c.past_cap - max_new - 2;
+        let mut ids = tokenizer::encode(&req.prompt);
         ids.truncate(max_prompt);
         anyhow::ensure!(!ids.is_empty(), "empty prompt");
 
@@ -62,7 +78,8 @@ impl SlmEngine {
         let wall0 = Instant::now();
         let mut modeled_s = 0.0;
         let mut decoded = vec![next];
-        while decoded.len() < self.cfg.max_new_tokens && next != tokenizer::EOS_ID {
+        sink.on_token(next);
+        while decoded.len() < max_new && next != tokenizer::EOS_ID {
             let t0 = Instant::now();
             let mut pos = vec![0i32; c.width_cap];
             pos[0] = self.cache.past_len() as i32;
@@ -77,6 +94,7 @@ impl SlmEngine {
             )?;
             next = select_token(&logits[..c.vocab_size], &sampling, &mut self.rng);
             decoded.push(next);
+            sink.on_token(next);
             self.cache.promote_root_to_past()?;
             self.cache.compact_tree(&[]);
             let dt = t0.elapsed().as_secs_f64();
@@ -85,12 +103,12 @@ impl SlmEngine {
         }
 
         metrics.incr("tokens", decoded.len() as u64);
-        Ok(BaselineResult {
+        Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,
             wall_s: wall0.elapsed().as_secs_f64(),
             modeled_s,
-            accepted_per_round: 0.0,
+            spec: None,
             metrics,
         })
     }

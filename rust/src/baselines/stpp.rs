@@ -7,16 +7,17 @@
 //! exactly the "limited number of tree nodes" constraint the paper contrasts
 //! PipeDec against. The whole tree then traverses the pipeline once; the
 //! target's logits are walked from the root along matching children, and
-//! the longest accepted path is committed.
+//! the longest accepted path is committed (and streamed to the caller's
+//! `TokenSink` as one burst per round).
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::BaselineResult;
 use crate::config::EngineConfig;
-use crate::coordinator::sampling::{select_token, top_candidates, Sampling};
+use crate::coordinator::sampling::{select_token, top_candidates};
+use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, SpecStats, TokenSink};
 use crate::kvcache::TwoLevelCache;
 use crate::metrics::Metrics;
 use crate::model::{bias, ModelHandles};
@@ -137,20 +138,36 @@ impl StppEngine {
         }
         Ok((tree, secs))
     }
+}
 
-    pub fn decode(&mut self, prompt: &str) -> Result<BaselineResult> {
-        let sampling = Sampling::from_engine(&self.cfg);
+impl Engine for StppEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Stpp
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    fn decode(&mut self, req: &DecodeRequest, sink: &mut dyn TokenSink) -> Result<DecodeOutput> {
+        let (max_new, sampling, seed) = req.resolve(&self.cfg);
+        anyhow::ensure!(max_new >= 1, "max_new_tokens must be >= 1");
         for c in &mut self.stage_caches {
             c.reset();
         }
         self.draft_cache.reset();
-        self.rng = XorShiftRng::new(self.cfg.seed);
+        self.rng = XorShiftRng::new(seed);
         let mut metrics = Metrics::new();
         let tc = self.target.cfg.clone();
         let (w, v) = (tc.width_cap, tc.vocab_size);
 
-        let max_prompt = tc.past_cap - self.cfg.max_new_tokens - 2;
-        let mut ids = tokenizer::encode(prompt);
+        anyhow::ensure!(
+            max_new + 2 < tc.past_cap,
+            "max_new_tokens {max_new} exceeds the model context budget ({})",
+            tc.past_cap
+        );
+        let max_prompt = tc.past_cap - max_new - 2;
+        let mut ids = tokenizer::encode(&req.prompt);
         ids.truncate(max_prompt);
         anyhow::ensure!(!ids.is_empty(), "empty prompt");
 
@@ -185,10 +202,11 @@ impl StppEngine {
         let wall0 = Instant::now();
         let mut modeled_s = 0.0;
         let mut decoded = vec![next];
+        sink.on_token(next);
         let mut rounds = 0u64;
         let d_bytes = tc.dim * w * 4;
 
-        while decoded.len() < self.cfg.max_new_tokens && next != tokenizer::EOS_ID {
+        while decoded.len() < max_new && next != tokenizer::EOS_ID {
             rounds += 1;
             let root_pos = self.stage_caches[0].past_len();
             let (tree, draft_s) = self.build_static_tree(next, root_pos)?;
@@ -240,9 +258,7 @@ impl StppEngine {
             loop {
                 let x = select_token(&logits[node * v..(node + 1) * v], &sampling, &mut self.rng);
                 accepted.push(x);
-                if decoded.len() + accepted.len() >= self.cfg.max_new_tokens
-                    || x == tokenizer::EOS_ID
-                {
+                if decoded.len() + accepted.len() >= max_new || x == tokenizer::EOS_ID {
                     break;
                 }
                 match tree.children_of(node).into_iter().find(|&c| tree.token(c) == x) {
@@ -283,18 +299,26 @@ impl StppEngine {
 
             metrics.record("accepted_per_round", accepted.len() as f64);
             decoded.extend(&accepted);
+            for &t in &accepted {
+                sink.on_token(t);
+            }
             next = *accepted.last().unwrap();
         }
 
         let acc = metrics.summary("accepted_per_round").mean();
         metrics.incr("rounds", rounds);
         metrics.incr("tokens", decoded.len() as u64);
-        Ok(BaselineResult {
+        Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,
             wall_s: wall0.elapsed().as_secs_f64(),
             modeled_s,
-            accepted_per_round: acc,
+            spec: Some(SpecStats {
+                timesteps: rounds,
+                hits: 0,
+                misses: 0,
+                accepted_per_round: acc,
+            }),
             metrics,
         })
     }

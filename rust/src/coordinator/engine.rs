@@ -1,6 +1,7 @@
 //! The PipeDec engine (paper §3.2–§3.4): timestep-synchronous pipeline
 //! decoding of a single request with the draft model integrated into the
 //! pipeline and a dynamic prediction tree coordinating speculative state.
+//! Served through the crate-wide [`Engine`] trait.
 //!
 //! Execution model: the engine executes the per-timestep task set
 //! *sequentially but in dependency order* (the order the workflow DAG of
@@ -28,7 +29,8 @@
 //! 3. **sync phase** — when a data flow exits the last stage, the verified
 //!    token is decoded from the current root's logits row, the tree is
 //!    pruned (hit) or reinitialized (miss), KV caches promote the accepted
-//!    root and compact (§3.4.3).
+//!    root and compact (§3.4.3). Each verified token is streamed to the
+//!    caller's [`TokenSink`] at this point.
 
 use std::path::Path;
 use std::time::Instant;
@@ -37,6 +39,7 @@ use anyhow::{Context, Result};
 
 use super::sampling::{select_token, top_candidates, Sampling};
 use crate::config::EngineConfig;
+use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, SpecStats, TokenSink};
 use crate::kvcache::TwoLevelCache;
 use crate::metrics::Metrics;
 use crate::model::{bias, ModelHandles};
@@ -54,42 +57,6 @@ use crate::util::XorShiftRng;
 struct DataFlow {
     ids: Vec<u64>,
     hidden: Option<Vec<f32>>, // [W, d] padded; rows 0..ids.len() valid
-}
-
-/// Result of decoding one request.
-#[derive(Debug, Clone)]
-pub struct DecodeResult {
-    pub tokens: Vec<u32>,
-    pub text: String,
-    /// Timesteps executed during decode.
-    pub timesteps: u64,
-    /// Tree hits / misses at sync points.
-    pub hits: u64,
-    pub misses: u64,
-    /// Wall-clock decode seconds (single-core sequential execution).
-    pub wall_s: f64,
-    /// Modeled parallel-schedule decode seconds (see module docs).
-    pub modeled_s: f64,
-    pub metrics: Metrics,
-}
-
-impl DecodeResult {
-    pub fn accept_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
-            0.0
-        } else {
-            self.hits as f64 / total as f64
-        }
-    }
-
-    pub fn modeled_s_per_token(&self) -> f64 {
-        if self.tokens.is_empty() {
-            0.0
-        } else {
-            self.modeled_s / self.tokens.len() as f64
-        }
-    }
 }
 
 /// The PipeDec engine over AOT artifacts.
@@ -179,12 +146,12 @@ impl PipeDecEngine {
         stage * self.layers_per_stage..(stage + 1) * self.layers_per_stage
     }
 
-    fn reset(&mut self) {
+    fn reset(&mut self, seed: u64) {
         for c in &mut self.stage_caches {
             c.reset();
         }
         self.draft_cache.reset();
-        self.rng = XorShiftRng::new(self.cfg.seed);
+        self.rng = XorShiftRng::new(seed);
     }
 
     /// Pipeline prefill of the prompt through all target stages (the paper
@@ -357,15 +324,32 @@ impl PipeDecEngine {
         self.link_stats.record(bytes, &self.link);
         self.link.transfer_time(bytes)
     }
+}
 
-    /// Decode one request.
-    pub fn decode(&mut self, prompt: &str) -> Result<DecodeResult> {
-        let sampling = Sampling::from_engine(&self.cfg);
-        self.reset();
+impl Engine for PipeDecEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::PipeDec
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Decode one request, streaming each verified token at its sync point.
+    fn decode(&mut self, req: &DecodeRequest, sink: &mut dyn TokenSink) -> Result<DecodeOutput> {
+        let (max_new, sampling, seed) = req.resolve(&self.cfg);
+        anyhow::ensure!(max_new >= 1, "max_new_tokens must be >= 1");
+        self.reset(seed);
         let mut metrics = Metrics::new();
 
-        let max_prompt = self.target.cfg.past_cap - self.cfg.max_new_tokens - 2;
-        let mut prompt_ids = tokenizer::encode(prompt);
+        anyhow::ensure!(
+            max_new + 2 < self.target.cfg.past_cap,
+            "max_new_tokens {} exceeds the model context budget ({})",
+            max_new,
+            self.target.cfg.past_cap
+        );
+        let max_prompt = self.target.cfg.past_cap - max_new - 2;
+        let mut prompt_ids = tokenizer::encode(&req.prompt);
         prompt_ids.truncate(max_prompt);
         anyhow::ensure!(!prompt_ids.is_empty(), "empty prompt");
 
@@ -375,6 +359,7 @@ impl PipeDecEngine {
         let budget = self.target.cfg.tree_cap.min(self.draft.cfg.tree_cap);
         let mut tree = PredictionTree::new(self.cfg.tree, budget, first, prompt_ids.len());
         let mut decoded = vec![first];
+        sink.on_token(first);
 
         let groups = self.groups();
         let d_bytes = self.target.cfg.dim * self.target.cfg.width_cap * 4;
@@ -388,10 +373,9 @@ impl PipeDecEngine {
         let mut modeled_s = 0.0;
         let mut timesteps = 0u64;
         let (mut hits, mut misses) = (0u64, 0u64);
-        let max_timesteps =
-            (self.cfg.max_new_tokens as u64 + 8) * (groups as u64 + 2);
+        let max_timesteps = (max_new as u64 + 8) * (groups as u64 + 2);
 
-        'outer: while decoded.len() < self.cfg.max_new_tokens {
+        'outer: while decoded.len() < max_new {
             timesteps += 1;
             if timesteps > max_timesteps {
                 anyhow::bail!("timestep budget exceeded — engine stalled");
@@ -473,6 +457,7 @@ impl PipeDecEngine {
                     let v = self.target.cfg.vocab_size;
                     let x = select_token(&logits[row * v..(row + 1) * v], &sampling, &mut self.rng);
                     decoded.push(x);
+                    sink.on_token(x);
                     let outcome = if self.cfg.ablate_tree_reuse {
                         crate::tree::PruneOutcome::Miss
                     } else {
@@ -507,7 +492,6 @@ impl PipeDecEngine {
                         }
                     }
                     if x == tokenizer::EOS_ID {
-                        inputs = next_inputs;
                         break 'outer;
                     }
                 }
@@ -521,14 +505,17 @@ impl PipeDecEngine {
         metrics.incr("timesteps", timesteps);
         metrics.incr("hits", hits);
         metrics.incr("misses", misses);
-        Ok(DecodeResult {
+        Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,
-            timesteps,
-            hits,
-            misses,
             wall_s,
             modeled_s,
+            spec: Some(SpecStats {
+                timesteps,
+                hits,
+                misses,
+                accepted_per_round: 0.0,
+            }),
             metrics,
         })
     }

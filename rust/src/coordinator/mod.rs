@@ -4,12 +4,14 @@
 //! * [`engine::PipeDecEngine`] — the paper's system contribution: a
 //!   pipeline-parallel decoder for a single request with the draft model
 //!   integrated as pipeline rank 0, a dynamic prediction tree, two-level
-//!   KV caches, scheduled transfers, and hit/miss synchronization.
+//!   KV caches, scheduled transfers, and hit/miss synchronization. It is
+//!   served through the crate-wide [`crate::engine::Engine`] trait and
+//!   returns the unified [`crate::engine::DecodeOutput`].
 //! * [`sampling`] — greedy and stochastic (temperature/top-p/top-k) token
 //!   selection shared with the baselines.
 
 pub mod engine;
 pub mod sampling;
 
-pub use engine::{DecodeResult, PipeDecEngine};
+pub use engine::PipeDecEngine;
 pub use sampling::{select_token, top_candidates, Sampling};

@@ -1,0 +1,129 @@
+//! The engine registry: [`EngineKind`] names every decoding strategy in
+//! the crate and [`build_engine`] constructs one behind `Box<dyn Engine>`.
+//! This is the only place in the repo that maps engine names to concrete
+//! types — CLI, server, examples, and benches all go through it.
+
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::Result;
+
+use super::Engine;
+use crate::baselines::{PpEngine, SlmEngine, StppEngine};
+use crate::config::EngineConfig;
+use crate::coordinator::PipeDecEngine;
+
+/// Every decoding strategy the crate can serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// The paper's system: pipeline parallelism with the draft in the
+    /// pipeline and a dynamic prediction tree (§3).
+    PipeDec,
+    /// Standard pipeline parallelism, one token per traversal (§4.2).
+    Pp,
+    /// Static-tree pipeline speculative decoding (SpecInfer-style, §4.2).
+    Stpp,
+    /// The small model served standalone on one device (§4.2).
+    Slm,
+}
+
+impl EngineKind {
+    /// Registry order used by every "compare all engines" surface.
+    pub const ALL: [EngineKind; 4] = [
+        EngineKind::PipeDec,
+        EngineKind::Pp,
+        EngineKind::Stpp,
+        EngineKind::Slm,
+    ];
+
+    /// Stable CLI string (`--engine <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::PipeDec => "pipedec",
+            EngineKind::Pp => "pp",
+            EngineKind::Stpp => "stpp",
+            EngineKind::Slm => "slm",
+        }
+    }
+
+    /// One-line description for usage text and bench banners.
+    pub fn describe(self) -> &'static str {
+        match self {
+            EngineKind::PipeDec => "pipeline + draft-in-pipeline dynamic-tree speculation",
+            EngineKind::Pp => "plain pipeline parallelism, one token per traversal",
+            EngineKind::Stpp => "static-tree pipeline speculative decoding",
+            EngineKind::Slm => "draft-size model standalone on one device",
+        }
+    }
+
+    /// Engines whose output must match PP's greedy prefix (losslessness).
+    /// SLM runs a different (smaller) model, so it is excluded.
+    pub fn is_speculative(self) -> bool {
+        matches!(self, EngineKind::PipeDec | EngineKind::Stpp)
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        EngineKind::ALL
+            .into_iter()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown engine {s:?} (expected one of: {})",
+                    EngineKind::ALL.map(|k| k.name()).join(", ")
+                )
+            })
+    }
+}
+
+/// Construct an engine of the given kind over the AOT artifacts in
+/// `artifact_dir`.
+pub fn build_engine(
+    kind: EngineKind,
+    artifact_dir: &Path,
+    cfg: EngineConfig,
+) -> Result<Box<dyn Engine>> {
+    Ok(match kind {
+        EngineKind::PipeDec => Box::new(PipeDecEngine::new(artifact_dir, cfg)?),
+        EngineKind::Pp => Box::new(PpEngine::new(artifact_dir, cfg)?),
+        EngineKind::Stpp => Box::new(StppEngine::new(artifact_dir, cfg)?),
+        EngineKind::Slm => Box::new(SlmEngine::new(artifact_dir, cfg)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for kind in EngineKind::ALL {
+            assert_eq!(kind.name().parse::<EngineKind>().unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_rejected_with_candidates() {
+        let err = "warp-drive".parse::<EngineKind>().unwrap_err().to_string();
+        assert!(err.contains("pipedec"), "error should list candidates: {err}");
+    }
+
+    #[test]
+    fn registry_covers_speculative_split() {
+        let spec: Vec<_> = EngineKind::ALL
+            .into_iter()
+            .filter(|k| k.is_speculative())
+            .collect();
+        assert_eq!(spec, vec![EngineKind::PipeDec, EngineKind::Stpp]);
+    }
+}

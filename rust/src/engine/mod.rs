@@ -1,0 +1,248 @@
+//! The crate's public inference API: one trait, one request shape, one
+//! output shape, for every decoding strategy in the repo.
+//!
+//! Historically `PipeDecEngine::decode` returned `DecodeResult` while the
+//! three baselines returned `BaselineResult`, and every caller (CLI, server,
+//! examples, figure benches) re-implemented engine selection by hand. This
+//! module is the single seam they all go through instead:
+//!
+//! * [`Engine`] — `decode(&mut self, req, sink) -> DecodeOutput` plus
+//!   `kind()` / `name()` / `config()`; implemented by
+//!   [`crate::coordinator::PipeDecEngine`] and the three baselines.
+//! * [`DecodeRequest`] — prompt plus *per-request* overrides
+//!   (`max_new_tokens`, [`Sampling`], seed) resolved against the engine's
+//!   [`EngineConfig`] at decode time, so one long-lived engine can serve
+//!   heterogeneous requests.
+//! * [`DecodeOutput`] — the merged result shape: tokens, text, wall and
+//!   modeled (parallel-schedule) seconds, per-decode [`Metrics`], and an
+//!   optional [`SpecStats`] block for speculative engines.
+//! * [`TokenSink`] — streaming observer invoked once per *verified* token,
+//!   in order, so front ends can emit tokens as they are produced instead
+//!   of waiting for the full completion ([`NullSink`], [`VecSink`]).
+//! * [`EngineKind`] + [`build_engine`] — the registry: callers iterate
+//!   [`EngineKind::ALL`] or parse a kind from a CLI string and get a
+//!   `Box<dyn Engine>`; nothing outside this module matches on engine
+//!   names by hand.
+//!
+//! Future scaling work (SpecPipe-DB dynamic batching, async stage
+//! execution, alternative backends) lands as new [`Engine`] implementations
+//! behind the same API — see ROADMAP.md.
+
+pub mod factory;
+pub mod sink;
+
+pub use factory::{build_engine, EngineKind};
+pub use sink::{FnSink, NullSink, TokenSink, VecSink};
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::coordinator::sampling::Sampling;
+use crate::metrics::Metrics;
+
+/// One decode request: a prompt plus optional per-request overrides of the
+/// engine's configured limits. Fields left `None` fall back to the engine's
+/// [`EngineConfig`] via [`DecodeRequest::resolve`].
+#[derive(Debug, Clone, Default)]
+pub struct DecodeRequest {
+    pub prompt: String,
+    /// Override of `EngineConfig::max_new_tokens` for this request only.
+    pub max_new_tokens: Option<usize>,
+    /// Override of the engine's configured sampling policy.
+    pub sampling: Option<Sampling>,
+    /// Override of the engine's RNG seed (stochastic sampling replay).
+    pub seed: Option<u64>,
+}
+
+impl DecodeRequest {
+    pub fn new(prompt: &str) -> Self {
+        Self {
+            prompt: prompt.to_string(),
+            ..Self::default()
+        }
+    }
+
+    pub fn with_max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = Some(n);
+        self
+    }
+
+    pub fn with_sampling(mut self, sampling: Sampling) -> Self {
+        self.sampling = Some(sampling);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Resolve the request's overrides against an engine config, returning
+    /// the effective `(max_new_tokens, sampling, seed)` for this decode.
+    pub fn resolve(&self, cfg: &EngineConfig) -> (usize, Sampling, u64) {
+        (
+            self.max_new_tokens.unwrap_or(cfg.max_new_tokens),
+            self.sampling.unwrap_or_else(|| Sampling::from_engine(cfg)),
+            self.seed.unwrap_or(cfg.seed),
+        )
+    }
+}
+
+/// Speculation statistics, present on [`DecodeOutput`] only for engines
+/// that speculate (PipeDec, STPP).
+///
+/// Field semantics differ slightly by strategy and are documented per
+/// field; consumers should read the ones their engine kind defines.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecStats {
+    /// PipeDec: pipeline timesteps executed. STPP: verification rounds.
+    pub timesteps: u64,
+    /// PipeDec only: sync points where the verified token was in the tree.
+    pub hits: u64,
+    /// PipeDec only: sync points that reinitialized the tree.
+    pub misses: u64,
+    /// STPP only: mean tokens accepted per verification round.
+    pub accepted_per_round: f64,
+}
+
+impl SpecStats {
+    /// PipeDec hit rate at sync points (0 when no syncs happened).
+    pub fn accept_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Result of decoding one request — the merged successor of the old
+/// `DecodeResult` / `BaselineResult` pair.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    pub tokens: Vec<u32>,
+    pub text: String,
+    /// Wall-clock decode seconds (single-core sequential execution).
+    pub wall_s: f64,
+    /// Modeled parallel-schedule decode seconds (see the engine docs).
+    pub modeled_s: f64,
+    /// Speculation statistics; `None` for non-speculative engines (PP, SLM).
+    pub spec: Option<SpecStats>,
+    pub metrics: Metrics,
+}
+
+impl DecodeOutput {
+    pub fn modeled_s_per_token(&self) -> f64 {
+        if self.tokens.is_empty() {
+            0.0
+        } else {
+            self.modeled_s / self.tokens.len() as f64
+        }
+    }
+
+    /// PipeDec sync-point hit rate; 0 for engines without hit/miss syncs.
+    pub fn accept_rate(&self) -> f64 {
+        self.spec.map(|s| s.accept_rate()).unwrap_or(0.0)
+    }
+
+    /// STPP mean accepted tokens per round; 0 elsewhere.
+    pub fn accepted_per_round(&self) -> f64 {
+        self.spec.map(|s| s.accepted_per_round).unwrap_or(0.0)
+    }
+
+    /// Timesteps (PipeDec) / rounds (STPP); 0 for non-speculative engines.
+    pub fn timesteps(&self) -> u64 {
+        self.spec.map(|s| s.timesteps).unwrap_or(0)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.spec.map(|s| s.hits).unwrap_or(0)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.spec.map(|s| s.misses).unwrap_or(0)
+    }
+}
+
+/// A decoding strategy served behind one uniform surface.
+///
+/// Implementations must stream every token of the final output through the
+/// sink, in order, as soon as it is verified — the conformance suite
+/// (`rust/tests/engine_api.rs`) asserts `VecSink` contents equal
+/// `DecodeOutput::tokens` for every kind.
+pub trait Engine {
+    /// Which registry entry this engine is.
+    fn kind(&self) -> EngineKind;
+
+    /// The engine's effective configuration (after artifact clamping).
+    fn config(&self) -> &EngineConfig;
+
+    /// Decode one request, streaming verified tokens into `sink`.
+    fn decode(&mut self, req: &DecodeRequest, sink: &mut dyn TokenSink) -> Result<DecodeOutput>;
+
+    /// Stable CLI/registry name (`pipedec`, `pp`, `stpp`, `slm`).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Convenience: decode a bare prompt with no overrides and no
+    /// streaming observer.
+    fn decode_prompt(&mut self, prompt: &str) -> Result<DecodeOutput> {
+        self.decode(&DecodeRequest::new(prompt), &mut NullSink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_resolve_defaults_to_config() {
+        let cfg = EngineConfig::default();
+        let req = DecodeRequest::new("hi");
+        let (max_new, sampling, seed) = req.resolve(&cfg);
+        assert_eq!(max_new, cfg.max_new_tokens);
+        assert_eq!(sampling, Sampling::Greedy);
+        assert_eq!(seed, cfg.seed);
+    }
+
+    #[test]
+    fn request_overrides_win() {
+        let cfg = EngineConfig::default();
+        let req = DecodeRequest::new("hi")
+            .with_max_new_tokens(3)
+            .with_sampling(Sampling::llama_stochastic())
+            .with_seed(99);
+        let (max_new, sampling, seed) = req.resolve(&cfg);
+        assert_eq!(max_new, 3);
+        assert_eq!(sampling, Sampling::llama_stochastic());
+        assert_eq!(seed, 99);
+    }
+
+    #[test]
+    fn spec_stats_accept_rate() {
+        let s = SpecStats {
+            hits: 3,
+            misses: 1,
+            ..SpecStats::default()
+        };
+        assert!((s.accept_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(SpecStats::default().accept_rate(), 0.0);
+    }
+
+    #[test]
+    fn output_accessors_tolerate_missing_spec() {
+        let out = DecodeOutput {
+            tokens: vec![1, 2],
+            text: String::new(),
+            wall_s: 0.0,
+            modeled_s: 1.0,
+            spec: None,
+            metrics: Metrics::new(),
+        };
+        assert_eq!(out.accept_rate(), 0.0);
+        assert_eq!(out.timesteps(), 0);
+        assert!((out.modeled_s_per_token() - 0.5).abs() < 1e-12);
+    }
+}

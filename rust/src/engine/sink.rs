@@ -1,0 +1,84 @@
+//! Streaming token observers.
+//!
+//! Engines call [`TokenSink::on_token`] once per verified output token, in
+//! emission order, from inside the decode loop — the stream always equals
+//! the final `DecodeOutput::tokens`. Sinks let front ends surface tokens
+//! with first-token latency instead of full-completion latency: the CLI
+//! prints incrementally, the server records time-to-first-token.
+
+/// Observer of verified tokens during a decode.
+pub trait TokenSink {
+    /// Called once per verified token, in output order. Implementations
+    /// must be cheap: they run on the decode hot path.
+    fn on_token(&mut self, token: u32);
+}
+
+/// Discards the stream (batch callers that only want the final output).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TokenSink for NullSink {
+    fn on_token(&mut self, _token: u32) {}
+}
+
+/// Collects the stream — the conformance suite compares this against the
+/// final `DecodeOutput::tokens`.
+#[derive(Debug, Default, Clone)]
+pub struct VecSink {
+    tokens: Vec<u32>,
+}
+
+impl VecSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    pub fn into_tokens(self) -> Vec<u32> {
+        self.tokens
+    }
+}
+
+impl TokenSink for VecSink {
+    fn on_token(&mut self, token: u32) {
+        self.tokens.push(token);
+    }
+}
+
+/// Adapter: any closure observes the stream.
+pub struct FnSink<F: FnMut(u32)>(pub F);
+
+impl<F: FnMut(u32)> TokenSink for FnSink<F> {
+    fn on_token(&mut self, token: u32) {
+        (self.0)(token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_sink_collects_in_order() {
+        let mut s = VecSink::new();
+        for t in [5u32, 7, 2] {
+            s.on_token(t);
+        }
+        assert_eq!(s.tokens(), &[5, 7, 2]);
+        assert_eq!(s.into_tokens(), vec![5, 7, 2]);
+    }
+
+    #[test]
+    fn fn_sink_forwards() {
+        let mut seen = Vec::new();
+        {
+            let mut s = FnSink(|t| seen.push(t));
+            s.on_token(9);
+            s.on_token(1);
+        }
+        assert_eq!(seen, vec![9, 1]);
+    }
+}

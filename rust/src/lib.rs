@@ -9,19 +9,50 @@
 //!   (`python/compile/kernels/`);
 //! * L2 (build time) — LLaMA-style decoder lowered per entry point to HLO
 //!   text artifacts (`python/compile/model.py`, `aot.py`);
-//! * L3 (this crate) — the serving system: dynamic prediction tree,
-//!   two-level KV cache, pipeline engine with timestep groups, transmission
-//!   scheduler, workflow DAG controller, baselines (PP / STPP / SLM), a
-//!   calibrated cluster simulator for paper-scale figures, and a request
-//!   server.
+//! * L3 (this crate) — the serving system, organized around the public
+//!   inference API in [`engine`].
 //!
-//! Python never runs on the request path: artifacts are loaded and executed
-//! through the PJRT CPU client (`runtime`).
+//! # Module map
+//!
+//! The API layer every caller goes through:
+//!
+//! * [`engine`] — the crate's public inference surface: the [`engine::Engine`]
+//!   trait, unified [`engine::DecodeRequest`] / [`engine::DecodeOutput`]
+//!   shapes, the [`engine::TokenSink`] streaming observer, and the
+//!   [`engine::EngineKind`] registry + [`engine::build_engine`] factory.
+//!   New decoding strategies (SpecPipe-DB dynamic batching, async stages)
+//!   plug in here.
+//!
+//! The strategies served behind it:
+//!
+//! * [`coordinator`] — the PipeDec engine itself: timestep groups, draft in
+//!   the pipeline, dynamic prediction tree, hit/miss synchronization; plus
+//!   shared token sampling.
+//! * [`baselines`] — PP / STPP / SLM comparison engines (paper §4.2).
+//!
+//! The substrate they share:
+//!
+//! * [`runtime`], [`model`], [`weights`] — PJRT CPU execution of the AOT
+//!   artifacts (Python never runs on the request path).
+//! * [`tree`], [`kvcache`], [`schedule`], [`transport`], [`workflow`] — the
+//!   dynamic prediction tree, two-level KV cache, transmission scheduler,
+//!   link model, and the workflow DAG controller.
+//! * [`config`], [`tokenizer`], [`metrics`], [`util`] — configuration
+//!   (TOML subset), byte-level tokenizer, metrics/tables, numeric helpers.
+//!
+//! Serving, evaluation, and paper-scale extrapolation:
+//!
+//! * [`server`] — router + FIFO queue draining into any `dyn Engine` with
+//!   per-request overrides and time-to-first-token capture.
+//! * [`sim`] — calibrated cluster simulator for paper-scale figures.
+//! * [`workload`], [`bench_support`] — the six evaluation domains and the
+//!   bench harness used by `rust/benches/fig*.rs`.
 
 pub mod baselines;
 pub mod bench_support;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

@@ -1,39 +1,90 @@
-//! `pipedec` CLI: serve single prompts through any engine, run the paper-
-//! scale cluster simulator, or inspect artifacts.
+//! `pipedec` CLI: serve single prompts through any registered engine, drive
+//! the request server, run the paper-scale cluster simulator, or inspect
+//! artifacts.
 //!
-//! Subcommands (hand-rolled parsing; the offline vendor set has no clap):
-//!   pipedec decode  [--engine pipedec|pp|stpp|slm] [--stages N] [--width W]
-//!                   [--children C] [--max-new N] [--prompt TEXT|--domain D]
-//!                   [--temperature T] [--config FILE]
-//!   pipedec sim     [--stages N] [--width W] [--children C] [--tokens N]
-//!                   [--domain D]
-//!   pipedec info    # artifact + config summary
+//! Engine selection goes through the [`pipedec::engine`] registry
+//! (`EngineKind` + `build_engine`); this binary never matches on engine
+//! names by hand. Flags accept both `--flag value` and `--flag=value`;
+//! boolean flags need no value; unknown flags print the usage string.
 
 use std::collections::HashMap;
+use std::io::Write as _;
+use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
-use pipedec::baselines::{PpEngine, SlmEngine, StppEngine};
 use pipedec::config::EngineConfig;
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, DecodeRequest, EngineKind, NullSink, TokenSink};
+use pipedec::server::{drain, summarize, Router};
 use pipedec::sim::{simulate_pipedec, simulate_pp, simulate_stpp, ClusterSpec, HitModel};
+use pipedec::tokenizer;
 use pipedec::util::XorShiftRng;
-use pipedec::workload::Workload;
+use pipedec::workload::{mixed_stream, Workload};
 
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
+
+  pipedec decode  [--engine KIND] [--stages N] [--group-size G] [--width W]
+                  [--children C] [--max-new N] [--prompt TEXT | --domain D]
+                  [--temperature T] [--top-p P] [--top-k K] [--seed S]
+                  [--config FILE] [--no-stream]
+                  decode one prompt, streaming tokens as they are verified
+                  (--no-stream prints only the final completion)
+  pipedec serve   [--engine KIND] [--requests N] [--queue-cap N]
+                  [engine flags as for decode]
+                  submit N mixed-domain requests through the router and one
+                  engine worker (the Fig. 8 process-pool experiment)
+  pipedec sim     [--stages N] [--width W] [--children C] [--tokens N]
+                  [--domain D]
+                  paper-scale cluster simulation (70B / RTX3090)
+  pipedec info    artifact + config summary
+
+  KIND (--engine): pipedec  pipeline + draft-in-pipeline dynamic-tree speculation
+                   pp       plain pipeline parallelism, one token per traversal
+                   stpp     static-tree pipeline speculative decoding
+                   slm      draft-size model standalone on one device";
+
+/// Flags that take no value; everything else expects one.
+const BOOL_FLAGS: &[&str] = &["no-stream"];
+
+/// Parse `--flag value`, `--flag=value`, and bare boolean flags into a map,
+/// rejecting anything not in `allowed` with the usage string.
+fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        let Some(key) = a.strip_prefix("--") else {
-            bail!("unexpected argument: {a}");
+        let Some(body) = a.strip_prefix("--") else {
+            bail!("unexpected argument: {a}\n\n{USAGE}");
         };
-        let val = args.get(i + 1).context("flag needs a value")?;
-        out.insert(key.to_string(), val.clone());
-        i += 2;
+        let (key, inline_val) = match body.split_once('=') {
+            Some((k, v)) => (k.to_string(), Some(v.to_string())),
+            None => (body.to_string(), None),
+        };
+        if !allowed.contains(&key.as_str()) {
+            bail!("unknown flag --{key}\n\n{USAGE}");
+        }
+        let val = if let Some(v) = inline_val {
+            i += 1;
+            v
+        } else if BOOL_FLAGS.contains(&key.as_str()) {
+            i += 1;
+            "true".to_string()
+        } else {
+            let v = args
+                .get(i + 1)
+                .with_context(|| format!("flag --{key} needs a value\n\n{USAGE}"))?;
+            i += 2;
+            v.clone()
+        };
+        out.insert(key, val);
     }
     Ok(out)
 }
+
+const ENGINE_CFG_FLAGS: &[&str] = &[
+    "engine", "stages", "group-size", "width", "children", "max-new",
+    "temperature", "top-p", "top-k", "seed", "config",
+];
 
 fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     let mut cfg = match flags.get("config") {
@@ -42,6 +93,9 @@ fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     };
     if let Some(v) = flags.get("stages") {
         cfg.stages = v.parse()?;
+    }
+    if let Some(v) = flags.get("group-size") {
+        cfg.group_size = v.parse()?;
     }
     if let Some(v) = flags.get("width") {
         cfg.tree.max_width = v.parse()?;
@@ -55,11 +109,24 @@ fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     if let Some(v) = flags.get("temperature") {
         cfg.temperature = v.parse()?;
     }
+    if let Some(v) = flags.get("top-p") {
+        cfg.top_p = v.parse()?;
+    }
+    if let Some(v) = flags.get("top-k") {
+        cfg.top_k = v.parse()?;
+    }
     if let Some(v) = flags.get("seed") {
         cfg.seed = v.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
+    match flags.get("engine") {
+        Some(s) => EngineKind::from_str(s),
+        None => Ok(EngineKind::PipeDec),
+    }
 }
 
 fn pick_prompt(flags: &HashMap<String, String>) -> Result<String> {
@@ -71,47 +138,107 @@ fn pick_prompt(flags: &HashMap<String, String>) -> Result<String> {
     Ok(wl.prompts[0].clone())
 }
 
+/// Prints each verified token's text as soon as the engine emits it.
+struct StdoutSink;
+
+impl TokenSink for StdoutSink {
+    fn on_token(&mut self, token: u32) {
+        print!("{}", tokenizer::decode(&[token]));
+        let _ = std::io::stdout().flush();
+    }
+}
+
 fn cmd_decode(flags: HashMap<String, String>) -> Result<()> {
     let cfg = engine_cfg(&flags)?;
+    let kind = engine_kind(&flags)?;
     let prompt = pick_prompt(&flags)?;
+    // a bare --no-stream stores "true"; --no-stream=false re-enables
+    let no_stream = flags
+        .get("no-stream")
+        .is_some_and(|v| !matches!(v.as_str(), "false" | "0" | "no"));
+    let stream = !no_stream;
     let dir = pipedec::artifacts_dir();
-    let engine = flags.get("engine").map(|s| s.as_str()).unwrap_or("pipedec");
-    println!("engine={engine} stages={} tree=(w={},c={})", cfg.stages,
-        cfg.tree.max_width, cfg.tree.max_children);
+    println!(
+        "engine={kind} stages={} tree=(w={},c={})",
+        cfg.stages, cfg.tree.max_width, cfg.tree.max_children
+    );
     println!("--- prompt ---\n{prompt}\n--- completion ---");
-    match engine {
-        "pipedec" => {
-            let mut e = PipeDecEngine::new(&dir, cfg)?;
-            let r = e.decode(&prompt)?;
-            println!("{}", r.text);
-            println!(
-                "--- stats ---\ntokens={} timesteps={} hits={} misses={} accept={:.2}",
-                r.tokens.len(), r.timesteps, r.hits, r.misses, r.accept_rate()
-            );
-            println!(
-                "wall={:.2}s modeled={:.3}s ({:.1} ms/token modeled)",
-                r.wall_s, r.modeled_s, 1e3 * r.modeled_s_per_token()
-            );
-        }
-        "pp" => {
-            let r = PpEngine::new(&dir, cfg)?.decode(&prompt)?;
-            println!("{}", r.text);
-            println!("--- stats ---\ntokens={} wall={:.2}s modeled={:.3}s",
-                r.tokens.len(), r.wall_s, r.modeled_s);
-        }
-        "stpp" => {
-            let r = StppEngine::new(&dir, cfg)?.decode(&prompt)?;
-            println!("{}", r.text);
-            println!("--- stats ---\ntokens={} accepted/round={:.2} modeled={:.3}s",
-                r.tokens.len(), r.accepted_per_round, r.modeled_s);
-        }
-        "slm" => {
-            let r = SlmEngine::new(&dir, cfg)?.decode(&prompt)?;
-            println!("{}", r.text);
-            println!("--- stats ---\ntokens={} wall={:.2}s", r.tokens.len(), r.wall_s);
-        }
-        other => bail!("unknown engine {other}"),
+
+    let mut engine = build_engine(kind, &dir, cfg)?;
+    let req = DecodeRequest::new(&prompt);
+    let r = if stream {
+        let out = engine.decode(&req, &mut StdoutSink)?;
+        println!(); // terminate the streamed line
+        out
+    } else {
+        let out = engine.decode(&req, &mut NullSink)?;
+        println!("{}", out.text);
+        out
+    };
+
+    println!("--- stats ---");
+    println!(
+        "tokens={} wall={:.2}s modeled={:.3}s ({:.1} ms/token modeled)",
+        r.tokens.len(),
+        r.wall_s,
+        r.modeled_s,
+        1e3 * r.modeled_s_per_token()
+    );
+    if let Some(spec) = r.spec {
+        println!(
+            "spec: timesteps={} hits={} misses={} accept={:.2} accepted/round={:.2}",
+            spec.timesteps,
+            spec.hits,
+            spec.misses,
+            spec.accept_rate(),
+            spec.accepted_per_round
+        );
     }
+    Ok(())
+}
+
+fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
+    let cfg = engine_cfg(&flags)?;
+    let kind = engine_kind(&flags)?;
+    let n: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(6);
+    let cap: usize = flags.get("queue-cap").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    anyhow::ensure!(n >= 1, "--requests must be >= 1");
+    let dir = pipedec::artifacts_dir();
+
+    let mut engine = build_engine(kind, &dir, cfg)?;
+    let prompts = mixed_stream(&dir, (n + 5) / 6)?;
+    let mut router = Router::new(cap);
+    for p in prompts.iter().take(n) {
+        router.submit_prompt(p)?;
+    }
+    println!(
+        "serving {} queued requests through engine={kind} ({})...",
+        router.depth(),
+        kind.describe()
+    );
+
+    let t0 = std::time::Instant::now();
+    let completions = drain(&mut router, engine.as_mut())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let (metrics, lat) = summarize(&completions, wall);
+    println!("\nrequests:    {}", metrics.counter("requests"));
+    println!("tokens:      {}", metrics.counter("tokens"));
+    println!(
+        "latency:     p50={:.2}s p95={:.2}s p99={:.2}s (wall, incl. queueing)",
+        lat.percentile(50.0),
+        lat.percentile(95.0),
+        lat.percentile(99.0)
+    );
+    println!(
+        "first token: mean={:.2}s (service start -> first streamed token)",
+        metrics.summary("first_token_s").mean()
+    );
+    println!(
+        "throughput:  {:.1} tokens/s over {:.2}s wall",
+        metrics.counter("tokens") as f64 / wall.max(1e-9),
+        wall
+    );
     Ok(())
 }
 
@@ -151,17 +278,35 @@ fn cmd_info() -> Result<()> {
             cfg.width_cap, cfg.tree_cap, cfg.past_cap
         );
     }
+    println!("engines:");
+    for kind in EngineKind::ALL {
+        println!("  {:8} {}", kind.name(), kind.describe());
+    }
     Ok(())
 }
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    let decode_flags: Vec<&str> = ENGINE_CFG_FLAGS
+        .iter()
+        .chain(["prompt", "domain", "no-stream"].iter())
+        .copied()
+        .collect();
+    let serve_flags: Vec<&str> = ENGINE_CFG_FLAGS
+        .iter()
+        .chain(["requests", "queue-cap"].iter())
+        .copied()
+        .collect();
     match args.first().map(|s| s.as_str()) {
-        Some("decode") => cmd_decode(parse_flags(&args[1..])?),
-        Some("sim") => cmd_sim(parse_flags(&args[1..])?),
+        Some("decode") => cmd_decode(parse_flags(&args[1..], &decode_flags)?),
+        Some("serve") => cmd_serve(parse_flags(&args[1..], &serve_flags)?),
+        Some("sim") => cmd_sim(parse_flags(
+            &args[1..],
+            &["stages", "width", "children", "tokens", "domain"],
+        )?),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: pipedec <decode|sim|info> [flags]  (see rust/src/main.rs)");
+            eprintln!("{USAGE}");
             Ok(())
         }
     }

@@ -4,15 +4,19 @@
 //! to one request), so the server runs one engine worker and a bounded
 //! admission queue; the paper's Fig. 8 process-pool experiment maps to
 //! submitting `k` concurrent requests and measuring completion throughput.
-//! The router is engine-agnostic: any `FnMut(&str) -> Result<(Vec<u32>,
-//! f64)>` can serve, which lets tests and benches run PP/STPP/SLM behind
-//! the same front end.
+//! The router is engine-agnostic: it queues [`DecodeRequest`]s (prompt plus
+//! per-request overrides) and [`drain`] serves them through any
+//! `&mut dyn Engine` — all four [`crate::engine::EngineKind`]s go through
+//! the same front end via [`crate::engine::build_engine`]. Service is
+//! streaming-aware: the worker observes the engine's token stream and
+//! records time-to-first-token on every [`Completion`].
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::engine::{DecodeRequest, Engine, TokenSink};
 use crate::metrics::Metrics;
 use crate::util::Summary;
 
@@ -20,7 +24,7 @@ use crate::util::Summary;
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    pub prompt: String,
+    pub req: DecodeRequest,
     pub arrived_at: f64,
 }
 
@@ -28,10 +32,16 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
+    /// Registry name of the engine that served the request.
+    pub engine: &'static str,
     pub tokens: usize,
     /// queueing delay + service, seconds
     pub latency_s: f64,
     pub service_s: f64,
+    /// Service start until the first streamed token, seconds.
+    pub first_token_s: f64,
+    /// Modeled parallel-schedule decode seconds reported by the engine.
+    pub modeled_s: f64,
 }
 
 /// FIFO admission queue with a capacity bound (backpressure).
@@ -53,17 +63,23 @@ impl Router {
         }
     }
 
+    /// Queue a full decode request (prompt + per-request overrides).
     /// Returns the request id, or Err when the queue is full.
-    pub fn submit(&mut self, prompt: &str) -> Result<u64> {
+    pub fn submit(&mut self, req: DecodeRequest) -> Result<u64> {
         anyhow::ensure!(self.queue.len() < self.capacity, "queue full");
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push_back(Request {
             id,
-            prompt: prompt.to_string(),
+            req,
             arrived_at: self.clock0.elapsed().as_secs_f64(),
         });
         Ok(id)
+    }
+
+    /// Convenience: queue a bare prompt with no overrides.
+    pub fn submit_prompt(&mut self, prompt: &str) -> Result<u64> {
+        self.submit(DecodeRequest::new(prompt))
     }
 
     pub fn depth(&self) -> usize {
@@ -79,28 +95,58 @@ impl Router {
     }
 }
 
-/// Serve everything currently queued through a decode function, FIFO.
-/// Returns per-request completions.
-pub fn drain<F>(router: &mut Router, mut decode: F) -> Result<Vec<Completion>>
-where
-    F: FnMut(&str) -> Result<(usize, f64)>,
-{
+/// Records the instant of the first streamed token relative to service
+/// start — the server's time-to-first-token probe.
+struct FirstTokenProbe {
+    start: Instant,
+    first_s: Option<f64>,
+    tokens: usize,
+}
+
+impl FirstTokenProbe {
+    fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            first_s: None,
+            tokens: 0,
+        }
+    }
+}
+
+impl TokenSink for FirstTokenProbe {
+    fn on_token(&mut self, _token: u32) {
+        if self.first_s.is_none() {
+            self.first_s = Some(self.start.elapsed().as_secs_f64());
+        }
+        self.tokens += 1;
+    }
+}
+
+/// Serve everything currently queued through an engine, FIFO. Returns
+/// per-request completions with full-latency and first-token timings.
+pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Completion>> {
     let mut out = Vec::new();
     while let Some(req) = router.pop() {
-        let t0 = Instant::now();
-        let (tokens, _modeled) = decode(&req.prompt)?;
-        let service = t0.elapsed().as_secs_f64();
+        let mut probe = FirstTokenProbe::new();
+        let result = engine.decode(&req.req, &mut probe)?;
+        let service = probe.start.elapsed().as_secs_f64();
+        debug_assert_eq!(probe.tokens, result.tokens.len());
         out.push(Completion {
             id: req.id,
-            tokens,
+            engine: engine.name(),
+            tokens: result.tokens.len(),
             latency_s: router.now() - req.arrived_at,
             service_s: service,
+            first_token_s: probe.first_s.unwrap_or(service),
+            modeled_s: result.modeled_s,
         });
     }
     Ok(out)
 }
 
 /// Aggregate a batch of completions into the numbers Fig. 8 reports.
+/// Returns counters/series (including `first_token_s`) and the full-latency
+/// sample summary.
 pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) {
     let mut m = Metrics::new();
     let mut lat = Vec::new();
@@ -109,6 +155,7 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
         m.incr("requests", 1);
         m.incr("tokens", c.tokens as u64);
         m.record("latency_s", c.latency_s);
+        m.record("first_token_s", c.first_token_s);
         lat.push(c.latency_s);
         total_tokens += c.tokens;
     }
@@ -121,37 +168,99 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::EngineConfig;
+    use crate::engine::{DecodeOutput, EngineKind};
+    use crate::tokenizer;
+
+    /// Test double: "decodes" by echoing the prompt's token ids, streaming
+    /// each one — exercises the trait-object service path without artifacts.
+    struct EchoEngine {
+        cfg: EngineConfig,
+    }
+
+    impl EchoEngine {
+        fn new() -> Self {
+            Self {
+                cfg: EngineConfig::default(),
+            }
+        }
+    }
+
+    impl Engine for EchoEngine {
+        fn kind(&self) -> EngineKind {
+            EngineKind::Pp
+        }
+
+        fn config(&self) -> &EngineConfig {
+            &self.cfg
+        }
+
+        fn decode(
+            &mut self,
+            req: &DecodeRequest,
+            sink: &mut dyn TokenSink,
+        ) -> Result<DecodeOutput> {
+            let (max_new, _, _) = req.resolve(&self.cfg);
+            let mut tokens = tokenizer::encode(&req.prompt);
+            tokens.truncate(max_new);
+            for &t in &tokens {
+                sink.on_token(t);
+            }
+            Ok(DecodeOutput {
+                text: tokenizer::decode(&tokens),
+                tokens,
+                wall_s: 0.0,
+                modeled_s: 0.0,
+                spec: None,
+                metrics: Metrics::new(),
+            })
+        }
+    }
 
     #[test]
     fn fifo_order_and_ids() {
         let mut r = Router::new(4);
-        let a = r.submit("a").unwrap();
-        let b = r.submit("b").unwrap();
+        let a = r.submit_prompt("a").unwrap();
+        let b = r.submit_prompt("b").unwrap();
         assert!(a < b);
-        assert_eq!(r.pop().unwrap().prompt, "a");
-        assert_eq!(r.pop().unwrap().prompt, "b");
+        assert_eq!(r.pop().unwrap().req.prompt, "a");
+        assert_eq!(r.pop().unwrap().req.prompt, "b");
         assert!(r.pop().is_none());
     }
 
     #[test]
     fn backpressure_rejects_overflow() {
         let mut r = Router::new(2);
-        r.submit("a").unwrap();
-        r.submit("b").unwrap();
-        assert!(r.submit("c").is_err());
+        r.submit_prompt("a").unwrap();
+        r.submit_prompt("b").unwrap();
+        assert!(r.submit_prompt("c").is_err());
     }
 
     #[test]
     fn drain_serves_all_and_measures() {
         let mut r = Router::new(8);
         for i in 0..3 {
-            r.submit(&format!("p{i}")).unwrap();
+            r.submit_prompt(&format!("p{i}")).unwrap();
         }
-        let done = drain(&mut r, |p| Ok((p.len(), 0.0))).unwrap();
+        let mut engine = EchoEngine::new();
+        let done = drain(&mut r, &mut engine).unwrap();
         assert_eq!(done.len(), 3);
         assert!(done.iter().all(|c| c.latency_s >= 0.0));
+        assert!(done.iter().all(|c| c.first_token_s <= c.service_s));
+        assert!(done.iter().all(|c| c.engine == "pp"));
         let (m, lat) = summarize(&done, 1.0);
         assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.samples("first_token_s").len(), 3);
         assert_eq!(lat.len(), 3);
+    }
+
+    #[test]
+    fn per_request_override_is_carried_through_the_queue() {
+        let mut r = Router::new(4);
+        r.submit(DecodeRequest::new("hello world").with_max_new_tokens(3))
+            .unwrap();
+        let mut engine = EchoEngine::new();
+        let done = drain(&mut r, &mut engine).unwrap();
+        assert_eq!(done[0].tokens, 3);
     }
 }

@@ -1,0 +1,96 @@
+//! Trait-conformance suite for the unified engine API: every
+//! `EngineKind` must (a) stream exactly its final token sequence through
+//! the `TokenSink`, (b) if speculative, match PP's greedy prefix
+//! (losslessness), and (c) honor per-request `max_new_tokens` overrides
+//! without mutating the engine's configuration.
+
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::engine::{build_engine, DecodeRequest, Engine, EngineKind, VecSink};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+const PROMPT: &str = "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n";
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        stages: 2,
+        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
+        max_new_tokens: 20,
+        ..EngineConfig::default()
+    }
+}
+
+#[test]
+fn registry_builds_all_kinds_with_matching_identity() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    for kind in EngineKind::ALL {
+        let e = build_engine(kind, &dir, cfg()).unwrap();
+        assert_eq!(e.kind(), kind);
+        assert_eq!(e.name(), kind.name());
+        assert_eq!(e.config().stages, cfg().stages);
+        // registry names parse back to the same kind (CLI round trip)
+        assert_eq!(e.name().parse::<EngineKind>().unwrap(), kind);
+    }
+}
+
+#[test]
+fn streamed_tokens_equal_final_tokens_for_every_kind() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    for kind in EngineKind::ALL {
+        let mut e = build_engine(kind, &dir, cfg()).unwrap();
+        let mut sink = VecSink::new();
+        let out = e.decode(&DecodeRequest::new(PROMPT), &mut sink).unwrap();
+        assert!(!out.tokens.is_empty(), "{kind}: empty decode");
+        assert_eq!(sink.tokens(), &out.tokens[..],
+            "{kind}: streamed tokens diverge from final output");
+    }
+}
+
+#[test]
+fn speculative_kinds_match_pp_greedy_prefix() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    let pp = build_engine(EngineKind::Pp, &dir, cfg()).unwrap()
+        .decode_prompt(PROMPT).unwrap();
+    for kind in EngineKind::ALL.into_iter().filter(|k| k.is_speculative()) {
+        let mut e = build_engine(kind, &dir, cfg()).unwrap();
+        let out = e.decode_prompt(PROMPT).unwrap();
+        let n = out.tokens.len().min(pp.tokens.len());
+        assert_eq!(&out.tokens[..n], &pp.tokens[..n],
+            "{kind} diverged from PP greedy decoding (losslessness)");
+        assert!(out.spec.is_some(), "{kind}: speculative engine must report SpecStats");
+    }
+}
+
+#[test]
+fn spec_stats_presence_matches_registry_split() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    for kind in EngineKind::ALL {
+        let mut e = build_engine(kind, &dir, cfg()).unwrap();
+        let out = e.decode_prompt(PROMPT).unwrap();
+        assert_eq!(out.spec.is_some(), kind.is_speculative(),
+            "{kind}: SpecStats presence disagrees with is_speculative()");
+    }
+}
+
+#[test]
+fn per_request_max_new_tokens_override_is_honored_everywhere() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    for kind in EngineKind::ALL {
+        let mut e = build_engine(kind, &dir, cfg()).unwrap();
+        let short = e
+            .decode(&DecodeRequest::new(PROMPT).with_max_new_tokens(6),
+                &mut pipedec::engine::NullSink)
+            .unwrap();
+        assert!(short.tokens.len() <= 6,
+            "{kind}: override ignored ({} tokens)", short.tokens.len());
+        // the engine's own config is untouched by the override
+        assert_eq!(e.config().max_new_tokens, cfg().max_new_tokens,
+            "{kind}: decode mutated the engine config");
+        let full = e.decode_prompt(PROMPT).unwrap();
+        assert!(full.tokens.len() >= short.tokens.len(),
+            "{kind}: default run shorter than overridden run");
+    }
+}

@@ -4,6 +4,7 @@
 
 use pipedec::baselines::{PpEngine, SlmEngine, StppEngine};
 use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::engine::Engine;
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = pipedec::artifacts_dir();
@@ -32,30 +33,31 @@ fn cfg(stages: usize) -> EngineConfig {
 fn pp_matches_golden_greedy() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
     let mut e = PpEngine::new(&artifacts().unwrap(), cfg(4)).unwrap();
-    let r = e.decode(PROMPT).unwrap();
+    let r = e.decode_prompt(PROMPT).unwrap();
     let golden = golden_target();
     let n = golden.len().min(r.tokens.len());
     assert_eq!(&r.tokens[..n], &golden[..n]);
     assert!(r.modeled_s > 0.0);
+    assert!(r.spec.is_none(), "PP does not speculate");
 }
 
 #[test]
 fn stpp_is_lossless_and_accepts_multiple_per_round() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
     let mut e = StppEngine::new(&artifacts().unwrap(), cfg(2)).unwrap();
-    let r = e.decode(PROMPT).unwrap();
+    let r = e.decode_prompt(PROMPT).unwrap();
     let golden = golden_target();
     let n = golden.len().min(r.tokens.len());
     assert_eq!(&r.tokens[..n], &golden[..n], "STPP output diverged");
-    assert!(r.accepted_per_round > 1.0,
-        "static tree should accept >1 token/round, got {}", r.accepted_per_round);
+    assert!(r.accepted_per_round() > 1.0,
+        "static tree should accept >1 token/round, got {}", r.accepted_per_round());
 }
 
 #[test]
 fn slm_decodes_plausibly() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
     let mut e = SlmEngine::new(&artifacts().unwrap(), cfg(1)).unwrap();
-    let r = e.decode(PROMPT).unwrap();
+    let r = e.decode_prompt(PROMPT).unwrap();
     assert!(r.tokens.len() >= 10);
     assert!(r.text.is_ascii());
 }
@@ -63,7 +65,9 @@ fn slm_decodes_plausibly() {
 #[test]
 fn pp_stage_count_does_not_change_output() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
-    let a = PpEngine::new(&artifacts().unwrap(), cfg(1)).unwrap().decode(PROMPT).unwrap();
-    let b = PpEngine::new(&artifacts().unwrap(), cfg(8)).unwrap().decode(PROMPT).unwrap();
+    let a = PpEngine::new(&artifacts().unwrap(), cfg(1)).unwrap()
+        .decode_prompt(PROMPT).unwrap();
+    let b = PpEngine::new(&artifacts().unwrap(), cfg(8)).unwrap()
+        .decode_prompt(PROMPT).unwrap();
     assert_eq!(a.tokens, b.tokens);
 }

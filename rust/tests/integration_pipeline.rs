@@ -7,6 +7,7 @@
 
 use pipedec::config::{EngineConfig, TreeConfig};
 use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::Engine;
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = pipedec::artifacts_dir();
@@ -41,7 +42,7 @@ fn golden_target() -> Vec<u32> {
 fn pipedec_is_lossless_vs_golden() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
     let mut e = engine(4, 8, 8);
-    let r = e.decode(PROMPT).unwrap();
+    let r = e.decode_prompt(PROMPT).unwrap();
     let golden = golden_target();
     assert!(r.tokens.len() >= golden.len());
     assert_eq!(&r.tokens[..golden.len()], &golden[..],
@@ -54,7 +55,7 @@ fn losslessness_holds_across_depths_and_trees() {
     let golden = golden_target();
     for (stages, w, c) in [(1, 4, 4), (2, 8, 4), (8, 8, 8)] {
         let mut e = engine(stages, w, c);
-        let r = e.decode(PROMPT).unwrap();
+        let r = e.decode_prompt(PROMPT).unwrap();
         assert_eq!(&r.tokens[..golden.len()], &golden[..],
             "diverged at stages={stages} w={w} c={c}");
     }
@@ -64,13 +65,13 @@ fn losslessness_holds_across_depths_and_trees() {
 fn speculation_actually_hits() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
     let mut e = engine(4, 8, 8);
-    let r = e.decode(PROMPT).unwrap();
-    assert!(r.hits > 0, "no speculative hits at all");
+    let r = e.decode_prompt(PROMPT).unwrap();
+    assert!(r.hits() > 0, "no speculative hits at all");
     assert!(r.accept_rate() > 0.5,
         "accept rate {:.2} too low for a co-trained draft", r.accept_rate());
     // steady-state pipelining: fewer timesteps than tokens * stages
-    assert!(r.timesteps < (r.tokens.len() * e.stages()) as u64,
-        "no pipelining benefit: {} timesteps for {} tokens", r.timesteps, r.tokens.len());
+    assert!(r.timesteps() < (r.tokens.len() * e.stages()) as u64,
+        "no pipelining benefit: {} timesteps for {} tokens", r.timesteps(), r.tokens.len());
 }
 
 #[test]
@@ -87,11 +88,11 @@ fn stochastic_decoding_runs_and_terminates() {
         ..EngineConfig::default()
     };
     let mut e = PipeDecEngine::new(&artifacts().unwrap(), cfg).unwrap();
-    let r = e.decode(PROMPT).unwrap();
+    let r = e.decode_prompt(PROMPT).unwrap();
     assert!(!r.tokens.is_empty());
     assert!(r.tokens.iter().all(|&t| (t as usize) < 128));
     // determinism under a fixed seed
-    let r2 = e.decode(PROMPT).unwrap();
+    let r2 = e.decode_prompt(PROMPT).unwrap();
     assert_eq!(r.tokens, r2.tokens);
 }
 
@@ -99,7 +100,7 @@ fn stochastic_decoding_runs_and_terminates() {
 fn metrics_are_recorded() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
     let mut e = engine(2, 4, 4);
-    let r = e.decode(PROMPT).unwrap();
+    let r = e.decode_prompt(PROMPT).unwrap();
     assert!(r.modeled_s > 0.0);
     assert!(r.wall_s > 0.0);
     assert_eq!(r.metrics.counter("tokens"), r.tokens.len() as u64);
@@ -121,14 +122,14 @@ fn grouped_pipeline_is_lossless_and_faster_per_timestep() {
     };
     let mut e = PipeDecEngine::new(&artifacts().unwrap(), cfg).unwrap();
     assert_eq!(e.groups(), 4);
-    let r = e.decode(PROMPT).unwrap();
+    let r = e.decode_prompt(PROMPT).unwrap();
     assert_eq!(&r.tokens[..golden.len()], &golden[..],
         "grouped pipeline diverged");
     // groups halve the pipeline depth: fewer timesteps than 1-stage groups
     let mut e1 = engine(8, 8, 8);
-    let r1 = e1.decode(PROMPT).unwrap();
-    assert!(r.timesteps <= r1.timesteps,
-        "grouping should not increase timesteps ({} vs {})", r.timesteps, r1.timesteps);
+    let r1 = e1.decode_prompt(PROMPT).unwrap();
+    assert!(r.timesteps() <= r1.timesteps(),
+        "grouping should not increase timesteps ({} vs {})", r.timesteps(), r1.timesteps());
 }
 
 #[test]
@@ -139,7 +140,7 @@ fn ablation_tree_reuse_off_is_lossless_but_slower() {
     if artifacts().is_none() { eprintln!("skipping: no artifacts"); return; }
     let golden = golden_target();
     let mut normal = engine(4, 8, 8);
-    let r_norm = normal.decode(PROMPT).unwrap();
+    let r_norm = normal.decode_prompt(PROMPT).unwrap();
     let cfg = EngineConfig {
         stages: 4,
         tree: TreeConfig { max_width: 8, max_children: 8, max_depth: 16 },
@@ -148,10 +149,10 @@ fn ablation_tree_reuse_off_is_lossless_but_slower() {
         ..EngineConfig::default()
     };
     let mut ablated = PipeDecEngine::new(&artifacts().unwrap(), cfg).unwrap();
-    let r_abl = ablated.decode(PROMPT).unwrap();
+    let r_abl = ablated.decode_prompt(PROMPT).unwrap();
     assert_eq!(&r_abl.tokens[..golden.len()], &golden[..], "ablation broke losslessness");
-    assert_eq!(r_abl.hits, 0);
-    assert!(r_abl.timesteps > r_norm.timesteps * 2,
+    assert_eq!(r_abl.hits(), 0);
+    assert!(r_abl.timesteps() > r_norm.timesteps() * 2,
         "reuse should cut timesteps substantially ({} vs {})",
-        r_abl.timesteps, r_norm.timesteps);
+        r_abl.timesteps(), r_norm.timesteps());
 }

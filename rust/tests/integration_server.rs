@@ -1,8 +1,9 @@
-//! Server front end over the real PipeDec engine: FIFO service, latency
-//! accounting, backpressure.
+//! Server front end over real engines behind `Box<dyn Engine>`: FIFO
+//! service, latency + first-token accounting, per-request overrides,
+//! backpressure.
 
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::PipeDecEngine;
+use pipedec::engine::{build_engine, DecodeRequest, EngineKind};
 use pipedec::server::{drain, summarize, Router};
 use pipedec::workload::mixed_stream;
 
@@ -11,36 +12,53 @@ fn artifacts() -> Option<std::path::PathBuf> {
     dir.join("target_config.txt").exists().then_some(dir)
 }
 
-#[test]
-fn serves_a_mixed_queue_end_to_end() {
-    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
-    let cfg = EngineConfig {
+fn cfg() -> EngineConfig {
+    EngineConfig {
         stages: 2,
         tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
         max_new_tokens: 12,
         ..EngineConfig::default()
-    };
-    let mut engine = PipeDecEngine::new(&dir, cfg).unwrap();
+    }
+}
+
+#[test]
+fn serves_a_mixed_queue_end_to_end() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    let mut engine = build_engine(EngineKind::PipeDec, &dir, cfg()).unwrap();
     let mut router = Router::new(16);
     for p in mixed_stream(&dir, 1).unwrap().iter().take(3) {
-        router.submit(p).unwrap();
+        router.submit_prompt(p).unwrap();
     }
     let t0 = std::time::Instant::now();
-    let done = drain(&mut router, |p| {
-        let r = engine.decode(p)?;
-        Ok((r.tokens.len(), r.modeled_s))
-    }).unwrap();
+    let done = drain(&mut router, engine.as_mut()).unwrap();
     let (m, lat) = summarize(&done, t0.elapsed().as_secs_f64());
     assert_eq!(m.counter("requests"), 3);
-    assert!(m.counter("tokens") >= 3 * 12 as u64);
+    assert!(m.counter("tokens") >= 3 * 12);
     assert_eq!(lat.len(), 3);
     // FIFO: later arrivals wait longer
     assert!(done[2].latency_s >= done[0].latency_s);
+    // streaming-aware capture: first token lands before full service ends
+    assert!(done.iter().all(|c| c.first_token_s > 0.0));
+    assert!(done.iter().all(|c| c.first_token_s <= c.service_s));
+    assert!(done.iter().all(|c| c.engine == "pipedec"));
+}
+
+#[test]
+fn per_request_max_new_override_is_served() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    let mut engine = build_engine(EngineKind::PipeDec, &dir, cfg()).unwrap();
+    let prompt = &mixed_stream(&dir, 1).unwrap()[0];
+    let mut router = Router::new(4);
+    router.submit(DecodeRequest::new(prompt).with_max_new_tokens(4)).unwrap();
+    router.submit_prompt(prompt).unwrap();
+    let done = drain(&mut router, engine.as_mut()).unwrap();
+    assert!(done[0].tokens <= 4, "override ignored: {} tokens", done[0].tokens);
+    assert!(done[1].tokens >= done[0].tokens);
 }
 
 #[test]
 fn queue_backpressure() {
     let mut router = Router::new(1);
-    router.submit("a").unwrap();
-    assert!(router.submit("b").is_err());
+    router.submit_prompt("a").unwrap();
+    assert!(router.submit_prompt("b").is_err());
 }
