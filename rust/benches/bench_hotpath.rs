@@ -1,0 +1,104 @@
+//! Perf smoke benchmark for the device-resident hot path (ISSUE 2): runs a
+//! short fixed-seed PipeDec decode and writes `BENCH_hotpath.json` with
+//! per-timestep wall time, modeled parallel latency, and host↔device bytes
+//! moved, so the perf trajectory is tracked from this PR onward (CI uploads
+//! the file as a workflow artifact; the step is non-gating).
+//!
+//! Without built artifacts the bench still writes a `skipped` marker so the
+//! CI artifact step always has a file to collect.
+
+use pipedec::bench_support::banner;
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::engine::{build_engine, DecodeRequest, EngineKind, NullSink};
+use pipedec::runtime::TransferSnapshot;
+
+const OUT: &str = "BENCH_hotpath.json";
+const PROMPT: &str =
+    "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n";
+const SEED: u64 = 7;
+const MAX_NEW: usize = 16;
+
+fn write_out(json: String) {
+    println!("{json}");
+    if let Err(e) = std::fs::write(OUT, json) {
+        eprintln!("warning: could not write {OUT}: {e}");
+    } else {
+        println!("[json] {OUT}");
+    }
+}
+
+fn main() {
+    banner("bench_hotpath", "device-resident hot path: fixed-seed PipeDec decode");
+
+    let dir = pipedec::artifacts_dir();
+    if !dir.join("target_config.txt").exists() {
+        write_out(
+            "{\n  \"bench\": \"hotpath\",\n  \"skipped\": true,\n  \
+             \"reason\": \"no artifacts\"\n}\n"
+                .to_string(),
+        );
+        return;
+    }
+
+    let cfg = EngineConfig {
+        stages: 2,
+        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
+        max_new_tokens: MAX_NEW,
+        seed: SEED,
+        ..EngineConfig::default()
+    };
+    let mut engine = build_engine(EngineKind::PipeDec, &dir, cfg).unwrap();
+    let req = DecodeRequest::new(PROMPT).with_seed(SEED);
+
+    // one warmup decode (compilation caches, allocator), one measured
+    engine.decode(&req, &mut NullSink).unwrap();
+    let out = engine.decode(&req, &mut NullSink).unwrap();
+
+    let m = &out.metrics;
+    let timesteps = m.counter("timesteps").max(1);
+    // one definition of moved/unoptimized/reduction: the library's snapshot
+    let hd = TransferSnapshot {
+        up: m.counter("hd_up_bytes"),
+        down: m.counter("hd_down_bytes"),
+        saved: m.counter("hd_saved_bytes"),
+        saved_kv: m.counter("hd_saved_kv_bytes"),
+    };
+    let (up, down, saved, saved_kv) = (hd.up, hd.down, hd.saved, hd.saved_kv);
+    let per_ts = |v: u64| v as f64 / timesteps as f64;
+    let reduction = hd.reduction_factor();
+
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"skipped\": false,\n  \
+         \"engine\": \"pipedec\",\n  \"seed\": {SEED},\n  \
+         \"max_new_tokens\": {MAX_NEW},\n  \"tokens\": {tokens},\n  \
+         \"timesteps\": {timesteps},\n  \"wall_s\": {wall:.6},\n  \
+         \"per_timestep_wall_us\": {ts_us:.1},\n  \
+         \"modeled_s\": {modeled:.6},\n  \
+         \"modeled_s_per_token\": {modeled_tok:.6},\n  \
+         \"hd_up_bytes\": {up},\n  \"hd_down_bytes\": {down},\n  \
+         \"hd_saved_bytes\": {saved},\n  \"hd_saved_kv_bytes\": {saved_kv},\n  \
+         \"hd_moved_bytes_per_timestep\": {moved_ts:.0},\n  \
+         \"hd_unoptimized_bytes_per_timestep\": {unopt_ts:.0},\n  \
+         \"hd_reduction_factor\": {reduction:.2}\n}}\n",
+        tokens = out.tokens.len(),
+        wall = out.wall_s,
+        ts_us = out.wall_s / timesteps as f64 * 1e6,
+        modeled = out.modeled_s,
+        modeled_tok = out.modeled_s_per_token(),
+        moved_ts = per_ts(hd.moved()),
+        unopt_ts = per_ts(hd.unoptimized()),
+    );
+    write_out(json);
+
+    assert!(
+        reduction >= 2.0,
+        "device-resident path must cut per-timestep host<->device bytes \
+         by >= 2x (got {reduction:.2}x)"
+    );
+    // the >=2x gate is satisfiable by resident weights alone; gate the KV
+    // mirror separately so a broken epoch/dirty path fails the bench
+    assert!(
+        saved_kv > 0,
+        "KV device mirror never served a clean level during decode"
+    );
+}

@@ -1,6 +1,7 @@
 //! L3 hot-path micro-benchmarks (EXPERIMENTS.md §Perf): dynamic-tree
-//! update/prune, bit-mask algebra, scheduler dispatch, literal construction
-//! and artifact execution overhead.
+//! update/prune, bit-mask algebra, scheduler dispatch, literal construction,
+//! artifact execution overhead, and the device-resident KV/bias caches
+//! (dirty re-upload vs clean reuse, incremental past-bias update).
 
 use pipedec::bench_support::{banner, emit, fmt_s, time_fn};
 use pipedec::config::TreeConfig;
@@ -127,6 +128,47 @@ fn main() {
         });
         table.row(vec!["literal build".into(), "past_k [4,512,32]".into(),
             fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+
+        // device KV mirror: dirty re-upload vs clean reuse (§Perf iter 4)
+        {
+            use pipedec::kvcache::device::DeviceKvCache;
+            let mut kv =
+                TwoLevelCache::new(1, c.n_heads, c.head_dim, c.past_cap, c.tree_cap);
+            let mut dev = DeviceKvCache::new(1);
+            let block = vec![0.1f32; c.n_heads * c.head_dim];
+            let s = time_fn(3, 20, || {
+                // count=0 append: dirties the layer without growing it
+                kv.append_tree_block(0, &block, &block, 1, 0).unwrap();
+                dev.ensure_tree(&rt, &kv, 0).unwrap();
+            });
+            table.row(vec!["kv mirror dirty".into(), "tree k+v".into(),
+                fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+            let s = time_fn(3, 50, || {
+                dev.ensure_tree(&rt, &kv, 0).unwrap();
+            });
+            table.row(vec!["kv mirror clean".into(), "tree k+v".into(),
+                fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+        }
+
+        // incremental past-bias maintenance vs full rebuild
+        {
+            use pipedec::model::bias::{past_bias, PastBiasCache};
+            let mut pbc = PastBiasCache::new(c.width_cap, c.past_cap);
+            let mut len = 0usize;
+            let s = time_fn(5, 100, || {
+                len = (len + 1) % (c.past_cap + 1);
+                std::hint::black_box(pbc.rows(len));
+            });
+            table.row(vec!["past bias incr".into(),
+                format!("W={} P={}", c.width_cap, c.past_cap),
+                fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+            let s = time_fn(5, 100, || {
+                std::hint::black_box(past_bias(c.past_cap / 2, c.width_cap, c.past_cap));
+            });
+            table.row(vec!["past bias full".into(),
+                format!("W={} P={}", c.width_cap, c.past_cap),
+                fmt_s(s.mean()), fmt_s(s.percentile(99.0))]);
+        }
     }
 
     emit("micro_hotpath", &table);

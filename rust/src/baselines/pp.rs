@@ -130,6 +130,7 @@ impl Engine for PpEngine {
         );
 
         // decode: one token per full pipeline pass
+        let hd_prefill = self.rt.stats().snapshot();
         let wall0 = Instant::now();
         let mut modeled_s = 0.0;
         let mut decoded = vec![next];
@@ -145,8 +146,6 @@ impl Engine for PpEngine {
             let mut token_s = 0.0;
             for s in 0..self.cfg.stages {
                 let t0 = Instant::now();
-                let past_bias =
-                    bias::past_bias(self.stage_caches[s].past_len(), w, tc.past_cap);
                 let r = self.layer_range(s);
                 h = self.target.stage_forward(
                     &self.rt,
@@ -155,7 +154,6 @@ impl Engine for PpEngine {
                     h,
                     1,
                     &pos,
-                    &past_bias,
                     &tree_bias,
                 )?;
                 token_s += t0.elapsed().as_secs_f64();
@@ -181,6 +179,11 @@ impl Engine for PpEngine {
         }
 
         metrics.incr("tokens", decoded.len() as u64);
+        self.rt
+            .stats()
+            .snapshot()
+            .delta_since(&hd_prefill)
+            .record_hd_metrics(&mut metrics);
         Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,

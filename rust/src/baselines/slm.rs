@@ -75,6 +75,7 @@ impl Engine for SlmEngine {
         let logits = self.model.full_prefill(&self.rt, &mut self.cache, &ids)?;
         let mut next = select_token(&logits, &sampling, &mut self.rng);
 
+        let hd_prefill = self.rt.stats().snapshot();
         let wall0 = Instant::now();
         let mut modeled_s = 0.0;
         let mut decoded = vec![next];
@@ -103,6 +104,11 @@ impl Engine for SlmEngine {
         }
 
         metrics.incr("tokens", decoded.len() as u64);
+        self.rt
+            .stats()
+            .snapshot()
+            .delta_since(&hd_prefill)
+            .record_hd_metrics(&mut metrics);
         Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,

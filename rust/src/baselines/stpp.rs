@@ -199,6 +199,7 @@ impl Engine for StppEngine {
         );
         self.draft.full_prefill(&self.rt, &mut self.draft_cache, &ids)?;
 
+        let hd_prefill = self.rt.stats().snapshot();
         let wall0 = Instant::now();
         let mut modeled_s = 0.0;
         let mut decoded = vec![next];
@@ -227,8 +228,6 @@ impl Engine for StppEngine {
             let mut pass_s = 0.0;
             for s in 0..self.cfg.stages {
                 let t0 = Instant::now();
-                let past_bias =
-                    bias::past_bias(self.stage_caches[s].past_len(), w, tc.past_cap);
                 let r = self.layer_range(s);
                 h = self.target.stage_forward(
                     &self.rt,
@@ -237,7 +236,6 @@ impl Engine for StppEngine {
                     h,
                     count,
                     &pos,
-                    &past_bias,
                     &tree_bias,
                 )?;
                 pass_s += t0.elapsed().as_secs_f64();
@@ -308,6 +306,11 @@ impl Engine for StppEngine {
         let acc = metrics.summary("accepted_per_round").mean();
         metrics.incr("rounds", rounds);
         metrics.incr("tokens", decoded.len() as u64);
+        self.rt
+            .stats()
+            .snapshot()
+            .delta_since(&hd_prefill)
+            .record_hd_metrics(&mut metrics);
         Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,

@@ -236,12 +236,14 @@ impl PipeDecEngine {
 
     /// Stage phase for one stage: filter stale rows, run the layer span,
     /// return the outgoing data flow (None if everything was pruned away).
+    /// The past bias comes from the model's incremental bias cache keyed
+    /// off the stage cache's `past_len` (all stages agree on it because
+    /// promotions are synchronized).
     fn stage_phase(
         &mut self,
         stage: usize,
         df: DataFlow,
         tree: &PredictionTree,
-        past_bias: &[f32],
     ) -> Result<(Option<DataFlow>, f64)> {
         let tc = self.target.cfg.clone();
         let w = tc.width_cap;
@@ -300,7 +302,6 @@ impl PipeDecEngine {
             hidden,
             count,
             &pos,
-            past_bias,
             &tree_bias,
         )?;
         let ids = indices.iter().map(|&i| tree.id(i)).collect();
@@ -353,8 +354,16 @@ impl Engine for PipeDecEngine {
         prompt_ids.truncate(max_prompt);
         anyhow::ensure!(!prompt_ids.is_empty(), "empty prompt");
 
+        let hd_start = self.rt.stats().snapshot();
         let (first, prefill_s) = self.prefill(&prompt_ids, &sampling)?;
         metrics.record("prefill_s", prefill_s);
+        let hd_prefill = self.rt.stats().snapshot();
+        {
+            let d = hd_prefill.delta_since(&hd_start);
+            metrics.incr("hd_prefill_up_bytes", d.up);
+            metrics.incr("hd_prefill_down_bytes", d.down);
+            metrics.incr("hd_prefill_saved_bytes", d.saved);
+        }
 
         let budget = self.target.cfg.tree_cap.min(self.draft.cfg.tree_cap);
         let mut tree = PredictionTree::new(self.cfg.tree, budget, first, prompt_ids.len());
@@ -392,20 +401,13 @@ impl Engine for PipeDecEngine {
             let mut exit_df: Option<DataFlow> = None;
             let mut group_times = vec![0.0f64; groups];
             let mut transfer_times: Vec<f64> = Vec::new();
-            // all stages share past_len (promotions are synchronized), so
-            // one past-bias build serves the whole timestep (§Perf iter 2)
-            let past_bias = bias::past_bias(
-                self.stage_caches[0].past_len(),
-                self.target.cfg.width_cap,
-                self.target.cfg.past_cap,
-            );
             for g in 0..groups {
                 let Some(df0) = inputs[g].take() else { continue };
                 let span = self.group_stages(g);
                 let mut df = Some(df0);
                 for stage in span.clone() {
                     let Some(cur) = df.take() else { break };
-                    let (out, secs) = self.stage_phase(stage, cur, &tree, &past_bias)?;
+                    let (out, secs) = self.stage_phase(stage, cur, &tree)?;
                     group_times[g] += secs;
                     if out.is_some() && stage + 1 < span.end {
                         // intra-group hop: same timestep, scheduled transfer
@@ -505,6 +507,14 @@ impl Engine for PipeDecEngine {
         metrics.incr("timesteps", timesteps);
         metrics.incr("hits", hits);
         metrics.incr("misses", misses);
+        // decode-loop host↔device traffic (excluding prefill): what the
+        // device-resident path moved vs what argument-per-call marshalling
+        // would have moved (BENCH_hotpath.json reads these)
+        self.rt
+            .stats()
+            .snapshot()
+            .delta_since(&hd_prefill)
+            .record_hd_metrics(&mut metrics);
         Ok(DecodeOutput {
             text: tokenizer::decode(&decoded),
             tokens: decoded,

@@ -1,0 +1,121 @@
+//! Device-resident mirror of one [`TwoLevelCache`] (ISSUE 2 tentpole).
+//!
+//! PJRT buffers are immutable, so the mirror is a *versioned* copy: each
+//! layer's four tensors (`past_k/past_v` `[H, P, hd]`, `tree_k/tree_v`
+//! `[H, T, hd]`) are uploaded tagged with the host cache's mutation epoch
+//! for that layer/level, and re-uploaded only when the host epoch has
+//! moved on. The seed path re-marshalled all four tensors for every layer
+//! on every `layer_forward` call; with the mirror, a clean level costs
+//! nothing and its would-be bytes are credited to
+//! [`crate::runtime::TransferStats::add_saved`] so benches can report the
+//! reduction.
+//!
+//! The mirror is keyed off-device by [`TwoLevelCache::id`] (see
+//! [`crate::model::ModelHandles`]), holds no reference to the host cache,
+//! and is safe to drop and rebuild at any time — worst case is one full
+//! re-upload.
+
+use anyhow::Result;
+
+use super::TwoLevelCache;
+use crate::runtime::{DeviceBuffer, Runtime};
+
+/// One level's device copy: the epoch it was uploaded at plus k/v buffers.
+struct LevelSlot {
+    epoch: u64,
+    k: DeviceBuffer,
+    v: DeviceBuffer,
+}
+
+#[derive(Default)]
+struct LayerSlot {
+    past: Option<LevelSlot>,
+    tree: Option<LevelSlot>,
+}
+
+/// Per-cache device mirror; one slot pair (past/tree) per stage layer.
+pub struct DeviceKvCache {
+    slots: Vec<LayerSlot>,
+    uploads: u64,
+    reuses: u64,
+}
+
+impl DeviceKvCache {
+    pub fn new(layers: usize) -> Self {
+        Self {
+            slots: (0..layers).map(|_| LayerSlot::default()).collect(),
+            uploads: 0,
+            reuses: 0,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// (full uploads performed, clean reuses served) across both levels.
+    pub fn upload_counts(&self) -> (u64, u64) {
+        (self.uploads, self.reuses)
+    }
+
+    /// Bring layer `l`'s past-level device copy up to date with `cache`.
+    pub fn ensure_past(&mut self, rt: &Runtime, cache: &TwoLevelCache, l: usize) -> Result<()> {
+        self.ensure_level(rt, cache, l, true)
+    }
+
+    /// Bring layer `l`'s tree-level device copy up to date with `cache`.
+    pub fn ensure_tree(&mut self, rt: &Runtime, cache: &TwoLevelCache, l: usize) -> Result<()> {
+        self.ensure_level(rt, cache, l, false)
+    }
+
+    /// Shared sync for one layer × level: clean ⇒ credit `saved_kv` and
+    /// reuse the buffers; dirty ⇒ upload a fresh k/v pair tagged with the
+    /// host epoch.
+    fn ensure_level(
+        &mut self,
+        rt: &Runtime,
+        cache: &TwoLevelCache,
+        l: usize,
+        past: bool,
+    ) -> Result<()> {
+        let epoch = if past { cache.past_epoch(l) } else { cache.tree_epoch(l) };
+        let slot = if past { &self.slots[l].past } else { &self.slots[l].tree };
+        if let Some(s) = slot {
+            if s.epoch == epoch {
+                self.reuses += 1;
+                rt.stats().add_saved_kv(2 * level_bytes(cache, past));
+                return Ok(());
+            }
+        }
+        let cap = if past { cache.past_cap() } else { cache.tree_cap() };
+        let dims = [cache.heads(), cap, cache.head_dim()];
+        let (ks, vs) = if past {
+            (cache.past_k_layer(l), cache.past_v_layer(l))
+        } else {
+            (cache.tree_k_layer(l), cache.tree_v_layer(l))
+        };
+        let k = rt.upload_f32(ks, &dims)?;
+        let v = rt.upload_f32(vs, &dims)?;
+        let slot = if past { &mut self.slots[l].past } else { &mut self.slots[l].tree };
+        *slot = Some(LevelSlot { epoch, k, v });
+        self.uploads += 1;
+        Ok(())
+    }
+
+    /// Device (k, v) of layer `l`'s past level; `None` before the first
+    /// [`DeviceKvCache::ensure_past`].
+    pub fn past(&self, l: usize) -> Option<(&DeviceBuffer, &DeviceBuffer)> {
+        self.slots[l].past.as_ref().map(|s| (&s.k, &s.v))
+    }
+
+    /// Device (k, v) of layer `l`'s tree level.
+    pub fn tree(&self, l: usize) -> Option<(&DeviceBuffer, &DeviceBuffer)> {
+        self.slots[l].tree.as_ref().map(|s| (&s.k, &s.v))
+    }
+}
+
+/// Bytes of one `[H, CAP, hd]` f32 tensor for a level of `cache`.
+fn level_bytes(cache: &TwoLevelCache, past: bool) -> usize {
+    let cap = if past { cache.past_cap() } else { cache.tree_cap() };
+    cache.heads() * cap * cache.head_dim() * 4
+}

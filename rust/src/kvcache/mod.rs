@@ -20,11 +20,51 @@
 //! then the tree level is compacted to the surviving subtree
 //! (`compact_tree` with the `kept_old` list from
 //! [`crate::tree::PredictionTree::prune`]) or cleared on a miss.
+//!
+//! # Dirty tracking for the device mirror
+//!
+//! Each cache carries per-layer **mutation epochs** for both levels
+//! (`past_epoch` / `tree_epoch`), bumped by exactly the mutations that
+//! change tensor *contents*:
+//!
+//! * `append_tree_block` / `append_past_block` — that layer only;
+//! * `promote_root_to_past` / `promote_slot_to_past` — the past level of
+//!   every layer (one slot written per layer);
+//! * `compact_tree` — the tree level of every layer, but only when a slot
+//!   actually moved;
+//! * `clear_tree` / `reset` / `commit_*` — lengths only, **no** epoch bump:
+//!   stale device data past the active length is masked by the attention
+//!   biases, so the device copy stays valid.
+//!
+//! [`device::DeviceKvCache`] compares these epochs against the epoch it
+//! last uploaded and re-uploads a layer's tensors only when they diverge.
+//!
+//! Known granularity limit: promotion writes a single row but dirties the
+//! whole past level (epochs are per layer × level, and PJRT buffers are
+//! immutable — there is no partial upload), so each accepted token still
+//! re-uploads the past tensors once. Removing that cost needs a
+//! device-side cache-append entry point (buffer donation / scatter in the
+//! artifact) — see ROADMAP.md.
+//! Caches also carry a process-unique [`TwoLevelCache::id`] so one model
+//! can keep independent device mirrors for many caches (per pipeline
+//! stage, draft vs target); cloning a cache assigns a fresh id so a clone
+//! never aliases the original's device state.
+
+pub mod device;
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{ensure, Result};
 
-#[derive(Debug, Clone)]
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_cache_id() -> u64 {
+    NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+#[derive(Debug)]
 pub struct TwoLevelCache {
+    id: u64,
     layers: usize,
     heads: usize,
     head_dim: usize,
@@ -38,6 +78,35 @@ pub struct TwoLevelCache {
     tree_k: Vec<f32>,
     tree_v: Vec<f32>,
     tree_len: usize,
+
+    /// Monotonic per-cache mutation clock feeding the per-layer epochs.
+    clock: u64,
+    past_epoch: Vec<u64>,
+    tree_epoch: Vec<u64>,
+}
+
+impl Clone for TwoLevelCache {
+    /// Clones get a fresh [`TwoLevelCache::id`] so device mirrors keyed by
+    /// id never alias across clones (their epochs advance independently).
+    fn clone(&self) -> Self {
+        Self {
+            id: fresh_cache_id(),
+            layers: self.layers,
+            heads: self.heads,
+            head_dim: self.head_dim,
+            past_cap: self.past_cap,
+            tree_cap: self.tree_cap,
+            past_k: self.past_k.clone(),
+            past_v: self.past_v.clone(),
+            past_len: self.past_len,
+            tree_k: self.tree_k.clone(),
+            tree_v: self.tree_v.clone(),
+            tree_len: self.tree_len,
+            clock: self.clock,
+            past_epoch: self.past_epoch.clone(),
+            tree_epoch: self.tree_epoch.clone(),
+        }
+    }
 }
 
 impl TwoLevelCache {
@@ -51,6 +120,7 @@ impl TwoLevelCache {
         let past = layers * heads * past_cap * head_dim;
         let tree = layers * heads * tree_cap * head_dim;
         Self {
+            id: fresh_cache_id(),
             layers,
             heads,
             head_dim,
@@ -62,7 +132,16 @@ impl TwoLevelCache {
             tree_k: vec![0.0; tree],
             tree_v: vec![0.0; tree],
             tree_len: 0,
+            clock: 0,
+            past_epoch: vec![0; layers],
+            tree_epoch: vec![0; layers],
         }
+    }
+
+    /// Process-unique identity of this cache (stable across mutations,
+    /// fresh on clone) — the key for per-cache device mirrors.
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     pub fn past_len(&self) -> usize {
@@ -83,6 +162,50 @@ impl TwoLevelCache {
 
     pub fn layers(&self) -> usize {
         self.layers
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Mutation epoch of layer `l`'s model-level (past) tensors.
+    pub fn past_epoch(&self, l: usize) -> u64 {
+        self.past_epoch[l]
+    }
+
+    /// Mutation epoch of layer `l`'s tree-level tensors.
+    pub fn tree_epoch(&self, l: usize) -> u64 {
+        self.tree_epoch[l]
+    }
+
+    fn bump_past(&mut self, l: usize) {
+        self.clock += 1;
+        self.past_epoch[l] = self.clock;
+    }
+
+    fn bump_tree(&mut self, l: usize) {
+        self.clock += 1;
+        self.tree_epoch[l] = self.clock;
+    }
+
+    fn bump_past_all(&mut self) {
+        self.clock += 1;
+        let c = self.clock;
+        for e in &mut self.past_epoch {
+            *e = c;
+        }
+    }
+
+    fn bump_tree_all(&mut self) {
+        self.clock += 1;
+        let c = self.clock;
+        for e in &mut self.tree_epoch {
+            *e = c;
+        }
     }
 
     #[inline]
@@ -133,7 +256,9 @@ impl TwoLevelCache {
             self.tree_len,
             self.tree_cap
         );
-        self.copy_block(l, k_block, v_block, block_w, count, true)
+        self.copy_block(l, k_block, v_block, block_w, count, true)?;
+        self.bump_tree(l);
+        Ok(())
     }
 
     /// Write a new KV block into the model level at
@@ -153,7 +278,9 @@ impl TwoLevelCache {
             self.past_len,
             self.past_cap
         );
-        self.copy_block(l, k_block, v_block, block_w, count, false)
+        self.copy_block(l, k_block, v_block, block_w, count, false)?;
+        self.bump_past(l);
+        Ok(())
     }
 
     fn copy_block(
@@ -225,6 +352,7 @@ impl TwoLevelCache {
             }
         }
         self.past_len += 1;
+        self.bump_past_all();
         Ok(())
     }
 
@@ -247,6 +375,7 @@ impl TwoLevelCache {
             }
         }
         self.past_len += 1;
+        self.bump_past_all();
         Ok(())
     }
 
@@ -262,6 +391,7 @@ impl TwoLevelCache {
             .copied()
             .take_while(|&s| s < self.tree_len)
             .collect();
+        let moved = keep.iter().enumerate().any(|(n, &o)| n != o);
         for l in 0..self.layers {
             for h in 0..self.heads {
                 let base = l * ts + h * self.tree_cap * hd;
@@ -276,14 +406,20 @@ impl TwoLevelCache {
             }
         }
         self.tree_len = keep.len();
+        if moved {
+            self.bump_tree_all();
+        }
     }
 
-    /// Drop all tree-level entries (miss path).
+    /// Drop all tree-level entries (miss path). Length-only: device
+    /// mirrors stay valid because stale slots are bias-masked.
     pub fn clear_tree(&mut self) {
         self.tree_len = 0;
     }
 
-    /// Reset everything (new request).
+    /// Reset everything (new request). Length-only — see
+    /// [`TwoLevelCache::clear_tree`]; subsequent appends overwrite slot 0
+    /// onward and bump epochs then.
     pub fn reset(&mut self) {
         self.past_len = 0;
         self.tree_len = 0;
@@ -400,6 +536,63 @@ mod tests {
         let mut c = TwoLevelCache::new(1, 1, 2, 2, 2);
         let k = vec![0.0; 1 * 3 * 2];
         assert!(c.append_tree_block(0, &k, &k, 3, 3).is_err());
+    }
+
+    #[test]
+    fn epochs_track_only_content_mutations() {
+        let mut c = TwoLevelCache::new(2, 1, 2, 8, 8);
+        let (p0, t0) = (c.past_epoch(0), c.tree_epoch(0));
+
+        // append to layer 0's tree: only that layer's tree epoch moves
+        let k = vec![1.0f32; 2];
+        c.append_tree_block(0, &k, &k, 1, 1).unwrap();
+        assert!(c.tree_epoch(0) > t0);
+        assert_eq!(c.tree_epoch(1), 0);
+        assert_eq!(c.past_epoch(0), p0);
+
+        // commit / clear are length-only
+        let t1 = c.tree_epoch(0);
+        c.commit_tree(1);
+        c.clear_tree();
+        assert_eq!(c.tree_epoch(0), t1);
+
+        // promote touches the past level of every layer, not the tree
+        c.append_tree_block(0, &k, &k, 1, 1).unwrap();
+        c.append_tree_block(1, &k, &k, 1, 1).unwrap();
+        c.commit_tree(1);
+        let t2 = c.tree_epoch(0);
+        c.promote_root_to_past().unwrap();
+        assert!(c.past_epoch(0) > p0);
+        assert!(c.past_epoch(1) > 0);
+        assert_eq!(c.tree_epoch(0), t2);
+
+        // identity compaction leaves tree epochs alone; a real move bumps
+        c.compact_tree(&[]);
+        assert_eq!(c.tree_epoch(0), t2);
+        for slot in 0..3 {
+            let kk = vec![slot as f32; 2];
+            c.append_tree_block(0, &kk, &kk, 1, 1).unwrap();
+            c.append_tree_block(1, &kk, &kk, 1, 1).unwrap();
+            c.commit_tree(1);
+        }
+        let t3 = c.tree_epoch(0);
+        c.compact_tree(&[0, 1, 2]); // identity prefix: nothing moved
+        assert_eq!(c.tree_epoch(0), t3);
+        c.append_tree_block(0, &k, &k, 1, 1).unwrap();
+        c.append_tree_block(1, &k, &k, 1, 1).unwrap();
+        c.commit_tree(1);
+        let t4 = c.tree_epoch(1);
+        c.compact_tree(&[1, 3]); // slots move: all layers bump
+        assert!(c.tree_epoch(0) > t4);
+        assert!(c.tree_epoch(1) > t4);
+    }
+
+    #[test]
+    fn clone_gets_fresh_identity() {
+        let c = TwoLevelCache::new(1, 1, 2, 4, 4);
+        let d = c.clone();
+        assert_ne!(c.id(), d.id(), "clones must not alias device mirrors");
+        assert_eq!(c.past_len(), d.past_len());
     }
 
     #[test]

@@ -32,11 +32,22 @@
 //!
 //! The substrate they share:
 //!
-//! * [`runtime`], [`model`], [`weights`] — PJRT CPU execution of the AOT
-//!   artifacts (Python never runs on the request path).
+//! * [`runtime`], [`model`], [`weights`] — PJRT execution of the AOT
+//!   artifacts (Python never runs on the request path). The hot path is
+//!   **device-resident**: [`runtime::Executable::run_bufs`] executes with
+//!   [`runtime::DeviceBuffer`] arguments, weights upload once at load,
+//!   per-cache [`kvcache::device::DeviceKvCache`] mirrors re-upload KV
+//!   tensors only when their mutation epoch moved, the past bias grows
+//!   incrementally ([`model::bias::PastBiasCache`]), and hidden states hand
+//!   off between a stage's layers without host `Vec` round-trips (the
+//!   output tuple still crosses to the host once per layer — see the
+//!   [`model`] docs for the exact boundary).
+//!   [`runtime::TransferStats`] accounts the host↔device traffic
+//!   (`rust/benches/bench_hotpath.rs` → `BENCH_hotpath.json`).
 //! * [`tree`], [`kvcache`], [`schedule`], [`transport`], [`workflow`] — the
-//!   dynamic prediction tree, two-level KV cache, transmission scheduler,
-//!   link model, and the workflow DAG controller.
+//!   dynamic prediction tree, two-level KV cache (with per-layer dirty
+//!   epochs feeding the device mirror), transmission scheduler, link
+//!   model, and the workflow DAG controller.
 //! * [`config`], [`tokenizer`], [`metrics`], [`util`] — configuration
 //!   (TOML subset), byte-level tokenizer, metrics/tables, numeric helpers.
 //!

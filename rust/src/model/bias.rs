@@ -16,6 +16,60 @@ pub fn past_bias(past_len: usize, w: usize, p: usize) -> Vec<f32> {
     out
 }
 
+/// Incrementally maintained `[W, P]` past-validity bias (ISSUE 2
+/// satellite): `past_len` only grows during a request, so instead of
+/// rebuilding the full `W×P` row block every prefill chunk and every
+/// timestep ([`past_bias`] from scratch), the cache opens just the newly
+/// valid columns. A shrink (new request) re-masks the now-invalid columns
+/// — still touching only the delta. `epoch()` lets a device mirror skip
+/// re-uploading an unchanged row block.
+#[derive(Debug, Clone)]
+pub struct PastBiasCache {
+    w: usize,
+    p: usize,
+    len: usize,
+    rows: Vec<f32>,
+    epoch: u64,
+}
+
+impl PastBiasCache {
+    pub fn new(w: usize, p: usize) -> Self {
+        Self {
+            w,
+            p,
+            len: 0,
+            rows: vec![NEG; w * p],
+            epoch: 0,
+        }
+    }
+
+    /// Bumped every time the row block's contents change.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The `[W, P]` bias rows for `past_len`, updated incrementally.
+    pub fn rows(&mut self, past_len: usize) -> &[f32] {
+        let new = past_len.min(self.p);
+        let old = self.len;
+        if new != old {
+            let (lo, hi, val) = if new > old {
+                (old, new, 0.0) // grew: open the fresh columns
+            } else {
+                (new, old, NEG) // shrank (new request): re-mask
+            };
+            for r in 0..self.w {
+                for v in &mut self.rows[r * self.p + lo..r * self.p + hi] {
+                    *v = val;
+                }
+            }
+            self.len = new;
+            self.epoch += 1;
+        }
+        &self.rows
+    }
+}
+
 /// `[W, T]` prefill bias: the current chunk is appended at `tree_len`;
 /// row i attends causally to block columns `tree_len..=tree_len+i` while
 /// `i < valid`. Fully-masked padding rows keep self-attention open so the
@@ -69,6 +123,23 @@ mod tests {
     fn past_bias_opens_prefix() {
         let b = past_bias(2, 2, 4);
         assert_eq!(b, vec![0.0, 0.0, NEG, NEG, 0.0, 0.0, NEG, NEG]);
+    }
+
+    #[test]
+    fn past_bias_cache_matches_rebuild_through_grow_and_shrink() {
+        let (w, p) = (3, 6);
+        let mut cache = PastBiasCache::new(w, p);
+        let e0 = cache.epoch();
+        // grow-only sequence, then a shrink (new request), then regrow
+        for len in [0usize, 2, 2, 5, 6, 8, 1, 4] {
+            let got = cache.rows(len).to_vec();
+            assert_eq!(got, past_bias(len, w, p), "len={len}");
+        }
+        assert!(cache.epoch() > e0);
+        // unchanged length does not bump the epoch
+        let e = cache.epoch();
+        cache.rows(4);
+        assert_eq!(cache.epoch(), e);
     }
 
     #[test]

@@ -10,17 +10,48 @@
 //!   tree_len (i32 scalar), pos[W] i32, past_bias[W,P], tree_bias[W,T]
 //! -> (h'[W,d], k_new[H,W,hd], v_new[H,W,hd])
 //! ```
+//!
+//! # Device-resident hot path (EXPERIMENTS.md §Perf iteration 4)
+//!
+//! Every artifact call runs through [`crate::runtime::Executable::run_bufs`]
+//! with device-resident arguments:
+//!
+//! * **weights** — the nine per-layer tensors plus `emb` / `final_norm`
+//!   are uploaded once at load and never marshalled again;
+//! * **KV cache** — each [`TwoLevelCache`] gets a [`DeviceKvCache`] mirror
+//!   (keyed by [`TwoLevelCache::id`]) whose per-layer tensors re-upload
+//!   only when the host cache's mutation epoch moved;
+//! * **past bias** — a grow-only [`bias::PastBiasCache`] row block with a
+//!   cached device buffer, re-uploaded only when `past_len` changed;
+//! * **hidden states** — inside a stage span the running hidden block is
+//!   handed from layer to layer without a host `Vec<f32>` round-trip.
+//!   Note the honest limit: the layer artifact returns one *tuple*
+//!   (`h'`, `k_new`, `v_new`) and this `xla` wrapper has no buffer-level
+//!   tuple split, so the tuple is fetched to a host literal once per
+//!   layer regardless (the new KV must reach the host cache anyway);
+//!   the handoff re-uploads the fetched `h'` literal directly (`W·d`
+//!   bytes, counted by [`TransferStats`]) instead of decoding, padding,
+//!   revalidating, and re-encoding it. The `Vec<f32>` conversion happens
+//!   once, at the stage boundary where the result crosses the pipeline
+//!   link.
+//!
+//! Per-span dynamics (`pos`, `tree_bias`, `tree_len`) upload once per
+//! stage pass instead of once per layer.
 
 pub mod bias;
 
+use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
 use crate::config::ArtifactConfig;
+use crate::kvcache::device::DeviceKvCache;
 use crate::kvcache::TwoLevelCache;
-use crate::runtime::{lit_f32, lit_i32, scalar_i32, to_vec_f32, ArtifactSet, Runtime};
+use crate::runtime::{to_vec_f32, DeviceBuffer, Executable, Runtime, TransferStats};
 use crate::weights::WeightMap;
+
+use self::bias::PastBiasCache;
 
 /// Names of the nine per-layer weight tensors, in artifact argument order
 /// (== `python/compile/model.py::LAYER_WEIGHT_ORDER`).
@@ -35,19 +66,59 @@ pub struct LayerOut {
     pub v_new: Vec<f32>,
 }
 
-/// One loaded model (target or draft): artifact executables + weight
-/// literals built once at load time.
+/// Execute one `*_layer` call with device-resident arguments. The single
+/// place that knows the artifact argument order (9 weights + 9 dynamics,
+/// see the module header) and the per-call transfer accounting — both the
+/// span runner and [`ModelHandles::layer_forward`] go through here. A free
+/// function (not a method) so callers can hold disjoint `&mut` borrows of
+/// other `ModelHandles` fields.
+#[allow(clippy::too_many_arguments)]
+fn exec_layer(
+    layer_exe: &Executable,
+    weight_bufs: &[DeviceBuffer],
+    weight_bytes: usize,
+    stats: &TransferStats,
+    fetch_bytes: usize,
+    dynamics: [&DeviceBuffer; 9], // h, past_k, past_v, tree_k, tree_v, tree_len, pos, past_bias, tree_bias
+) -> Result<Vec<xla::Literal>> {
+    let mut args: Vec<&DeviceBuffer> = weight_bufs.iter().collect();
+    args.extend(dynamics);
+    stats.add_saved(weight_bytes); // resident weights
+    let out = layer_exe.run_bufs(&args)?;
+    anyhow::ensure!(out.len() == 3, "layer artifact returns 3 outputs");
+    stats.add_down(fetch_bytes);
+    Ok(out)
+}
+
+/// One loaded model (target or draft): pre-resolved entry-point
+/// executables + device-resident weight buffers built once at load time.
 pub struct ModelHandles {
     /// Effective artifact config: `width_cap` reflects the selected width
     /// bucket, so every shape computation below sizes to the loaded variant.
     pub cfg: ArtifactConfig,
-    artifacts: ArtifactSet,
-    /// Entry-name suffix of the selected width bucket ("" = full cap,
-    /// "_w8" = the narrow variant; EXPERIMENTS.md §Perf iteration 3).
-    suffix: String,
-    emb_lit: xla::Literal,
-    final_norm_lit: xla::Literal,
-    layer_lits: Vec<Vec<xla::Literal>>,
+    // Entry points resolved once at load (the old per-call ArtifactSet
+    // lookup paid a format! + double HashMap probe per layer call).
+    embed_exe: Executable,
+    layer_exe: Executable,
+    head_exe: Executable,
+    // Device-resident weights.
+    emb_buf: DeviceBuffer,
+    emb_bytes: usize,
+    final_norm_buf: DeviceBuffer,
+    final_norm_bytes: usize,
+    layer_bufs: Vec<Vec<DeviceBuffer>>,
+    layer_bytes: Vec<usize>,
+    // Incrementally maintained past bias + its device copy.
+    past_bias: PastBiasCache,
+    past_bias_buf: Option<(u64, DeviceBuffer)>,
+    // Per-cache KV mirrors, keyed by `TwoLevelCache::id`. Lifetime
+    // contract: entries are never evicted, so callers must create their
+    // caches once per engine and `reset()` them between requests (as all
+    // four engines do) — minting or cloning a fresh cache per request
+    // against a long-lived ModelHandles would strand the dead cache's
+    // mirror here. Request-scoped cache churn (SpecPipe-DB batching)
+    // needs an eviction hook first — see ROADMAP.md.
+    dev_kv: HashMap<u64, DeviceKvCache>,
 }
 
 impl ModelHandles {
@@ -69,40 +140,59 @@ impl ModelHandles {
         let narrow = dir.join(format!("{name}_layer_w8.hlo.txt"));
         let suffix = if want_width <= 8 && narrow.exists() {
             cfg.width_cap = 8;
-            "_w8".to_string()
+            "_w8"
         } else {
-            String::new()
+            ""
         };
         let weights = WeightMap::load(&dir.join(format!("weights_{name}.pdw")))?;
-        let mut artifacts = ArtifactSet::new(dir, name);
-        // eagerly compile the three entry points
-        for e in ["embed", "layer", "head"] {
-            artifacts.entry(rt, &format!("{e}{suffix}"))?;
-        }
+
+        let embed_exe =
+            rt.load_hlo_text(&dir.join(format!("{name}_embed{suffix}.hlo.txt")))?;
+        let layer_exe =
+            rt.load_hlo_text(&dir.join(format!("{name}_layer{suffix}.hlo.txt")))?;
+        let head_exe = rt.load_hlo_text(&dir.join(format!("{name}_head{suffix}.hlo.txt")))?;
 
         let emb = weights.get("emb")?;
-        let emb_lit = lit_f32(&emb.data, &[cfg.vocab_size, cfg.dim])?;
+        let emb_bytes = emb.data.len() * 4;
+        let emb_buf = rt.upload_f32(&emb.data, &[cfg.vocab_size, cfg.dim])?;
         let fnorm = weights.get("final_norm")?;
-        let final_norm_lit = lit_f32(&fnorm.data, &[cfg.dim])?;
+        let final_norm_bytes = fnorm.data.len() * 4;
+        let final_norm_buf = rt.upload_f32(&fnorm.data, &[cfg.dim])?;
 
-        let mut layer_lits = Vec::with_capacity(cfg.n_layers);
+        let mut layer_bufs = Vec::with_capacity(cfg.n_layers);
+        let mut layer_bytes = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
-            let mut lits = Vec::with_capacity(9);
-            for w in LAYER_WEIGHT_ORDER {
+            let mut bufs = Vec::with_capacity(9);
+            let mut bytes = 0usize;
+            for wname in LAYER_WEIGHT_ORDER {
                 let t = weights
-                    .get(&format!("layers.{l}.{w}"))
-                    .with_context(|| format!("layer {l} weight {w}"))?;
-                lits.push(lit_f32(&t.data, &t.dims)?);
+                    .get(&format!("layers.{l}.{wname}"))
+                    .with_context(|| format!("layer {l} weight {wname}"))?;
+                bytes += t.data.len() * 4;
+                bufs.push(rt.upload_f32(&t.data, &t.dims)?);
             }
-            layer_lits.push(lits);
+            layer_bufs.push(bufs);
+            layer_bytes.push(bytes);
         }
+        rt.stats().add_resident(
+            emb_bytes + final_norm_bytes + layer_bytes.iter().sum::<usize>(),
+        );
+
+        let past_bias = PastBiasCache::new(cfg.width_cap, cfg.past_cap);
         Ok(Self {
             cfg,
-            artifacts,
-            suffix,
-            emb_lit,
-            final_norm_lit,
-            layer_lits,
+            embed_exe,
+            layer_exe,
+            head_exe,
+            emb_buf,
+            emb_bytes,
+            final_norm_buf,
+            final_norm_bytes,
+            layer_bufs,
+            layer_bytes,
+            past_bias,
+            past_bias_buf: None,
+            dev_kv: HashMap::new(),
         })
     }
 
@@ -119,15 +209,34 @@ impl ModelHandles {
         for (i, &t) in tokens.iter().enumerate() {
             padded[i] = t as i32;
         }
-        let toks = lit_i32(&padded, &[w])?;
-        let args = [&self.emb_lit, &toks];
-        let out = self.artifacts.entry(rt, &format!("embed{}", self.suffix))?.run_refs(&args)?;
+        let toks = rt.upload_i32(&padded, &[w])?;
+        rt.stats().add_saved(self.emb_bytes); // emb matrix is resident
+        let out = self.embed_exe.run_bufs(&[&self.emb_buf, &toks])?;
+        rt.stats().add_down(w * self.cfg.dim * 4);
         to_vec_f32(&out[0])
+    }
+
+    /// Bring the cached `[W, P]` past-bias device buffer up to date with
+    /// `past_len` (incremental host update + upload only on change).
+    fn ensure_past_bias(&mut self, rt: &Runtime, past_len: usize) -> Result<()> {
+        let (w, p) = (self.cfg.width_cap, self.cfg.past_cap);
+        let _ = self.past_bias.rows(past_len);
+        let epoch = self.past_bias.epoch();
+        match &self.past_bias_buf {
+            Some((e, _)) if *e == epoch => rt.stats().add_saved(w * p * 4),
+            _ => {
+                let buf = rt.upload_f32(self.past_bias.rows(past_len), &[w, p])?;
+                self.past_bias_buf = Some((epoch, buf));
+            }
+        }
+        Ok(())
     }
 
     /// One transformer layer over a node block with the two-level cache of
     /// the owning stage. `layer` is the model-wide layer index;
-    /// `layer_in_stage` indexes into `cache`.
+    /// `layer_in_stage` indexes into `cache`. Explicit bias rows are
+    /// uploaded per call — stage spans should prefer
+    /// [`ModelHandles::stage_forward`], which reuses cached device state.
     #[allow(clippy::too_many_arguments)]
     pub fn layer_forward(
         &mut self,
@@ -141,31 +250,36 @@ impl ModelHandles {
         tree_bias: &[f32],
     ) -> Result<LayerOut> {
         let c = &self.cfg;
-        let (w, p, t, nh, hd) = (c.width_cap, c.past_cap, c.tree_cap, c.n_heads, c.head_dim);
-        anyhow::ensure!(hidden.len() == w * c.dim, "hidden shape");
+        let (w, p, t, nh, hd, dim) =
+            (c.width_cap, c.past_cap, c.tree_cap, c.n_heads, c.head_dim, c.dim);
+        anyhow::ensure!(hidden.len() == w * dim, "hidden shape");
         anyhow::ensure!(pos.len() == w, "pos shape");
         anyhow::ensure!(past_bias.len() == w * p, "past_bias shape");
         anyhow::ensure!(tree_bias.len() == w * t, "tree_bias shape");
 
-        // dynamic operands are built per call; weight literals are borrowed
-        // (a deep literal clone of ~0.9 MB/layer otherwise dominates the
-        // call — EXPERIMENTS.md §Perf)
-        let dynamic: Vec<xla::Literal> = vec![
-            lit_f32(hidden, &[w, c.dim])?,
-            lit_f32(cache.past_k_layer(layer_in_stage), &[nh, p, hd])?,
-            lit_f32(cache.past_v_layer(layer_in_stage), &[nh, p, hd])?,
-            lit_f32(cache.tree_k_layer(layer_in_stage), &[nh, t, hd])?,
-            lit_f32(cache.tree_v_layer(layer_in_stage), &[nh, t, hd])?,
-            scalar_i32(cache.tree_len() as i32)?,
-            lit_i32(pos, &[w])?,
-            lit_f32(past_bias, &[w, p])?,
-            lit_f32(tree_bias, &[w, t])?,
-        ];
-        let mut args: Vec<&xla::Literal> = self.layer_lits[layer].iter().collect();
-        args.extend(dynamic.iter());
+        let h_buf = rt.upload_f32(hidden, &[w, dim])?;
+        let tlen_buf = rt.upload_i32(&[cache.tree_len() as i32], &[])?;
+        let pos_buf = rt.upload_i32(pos, &[w])?;
+        let pb_buf = rt.upload_f32(past_bias, &[w, p])?;
+        let tb_buf = rt.upload_f32(tree_bias, &[w, t])?;
 
-        let out = self.artifacts.entry(rt, &format!("layer{}", self.suffix))?.run_refs(&args)?;
-        anyhow::ensure!(out.len() == 3, "layer artifact returns 3 outputs");
+        let dev = self
+            .dev_kv
+            .entry(cache.id())
+            .or_insert_with(|| DeviceKvCache::new(cache.layers()));
+        dev.ensure_past(rt, cache, layer_in_stage)?;
+        dev.ensure_tree(rt, cache, layer_in_stage)?;
+        let (pk, pv) = dev.past(layer_in_stage).expect("ensured above");
+        let (tk, tv) = dev.tree(layer_in_stage).expect("ensured above");
+
+        let out = exec_layer(
+            &self.layer_exe,
+            &self.layer_bufs[layer],
+            self.layer_bytes[layer],
+            rt.stats(),
+            (w * dim + 2 * nh * w * hd) * 4,
+            [&h_buf, pk, pv, tk, tv, &tlen_buf, &pos_buf, &pb_buf, &tb_buf],
+        )?;
         Ok(LayerOut {
             hidden: to_vec_f32(&out[0])?,
             k_new: to_vec_f32(&out[1])?,
@@ -173,73 +287,142 @@ impl ModelHandles {
         })
     }
 
+    /// Shared span runner for decode (`to_tree`) and prefill (`!to_tree`):
+    /// uploads the dynamic operands once, walks the layer span handing the
+    /// hidden block layer→layer without `Vec<f32>` round-trips (see the
+    /// module header for the per-layer tuple-fetch caveat), appends each
+    /// layer's new KV to `cache`, and converts the hidden block to a host
+    /// `Vec` once at the span boundary. The caller commits the cache.
+    #[allow(clippy::too_many_arguments)]
+    fn run_span(
+        &mut self,
+        rt: &Runtime,
+        layer_range: std::ops::Range<usize>,
+        cache: &mut TwoLevelCache,
+        hidden: Vec<f32>,
+        count: usize,
+        pos: &[i32],
+        tree_bias: &[f32],
+        to_tree: bool,
+    ) -> Result<Vec<f32>> {
+        let (w, t, nh, hd, dim) = (
+            self.cfg.width_cap,
+            self.cfg.tree_cap,
+            self.cfg.n_heads,
+            self.cfg.head_dim,
+            self.cfg.dim,
+        );
+        anyhow::ensure!(hidden.len() == w * dim, "hidden shape");
+        anyhow::ensure!(pos.len() == w, "pos shape");
+        anyhow::ensure!(tree_bias.len() == w * t, "tree_bias shape");
+        anyhow::ensure!(layer_range.end <= self.cfg.n_layers, "layer range out of bounds");
+        let span = layer_range.len();
+        anyhow::ensure!(span >= 1, "empty layer range");
+
+        self.ensure_past_bias(rt, cache.past_len())?;
+
+        // per-span dynamic operands: uploaded once, not once per layer
+        let mut h_buf = rt.upload_f32(&hidden, &[w, dim])?;
+        let tlen_buf = rt.upload_i32(&[cache.tree_len() as i32], &[])?;
+        let pos_buf = rt.upload_i32(pos, &[w])?;
+        let tb_buf = rt.upload_f32(tree_bias, &[w, t])?;
+
+        let dev = self
+            .dev_kv
+            .entry(cache.id())
+            .or_insert_with(|| DeviceKvCache::new(cache.layers()));
+        let stats = rt.stats();
+        let mut h_last: Option<xla::Literal> = None;
+        for (lis, layer) in layer_range.enumerate() {
+            dev.ensure_past(rt, cache, lis)?;
+            dev.ensure_tree(rt, cache, lis)?;
+            let (pk, pv) = dev.past(lis).expect("ensured above");
+            let (tk, tv) = dev.tree(lis).expect("ensured above");
+            let pb_buf = &self.past_bias_buf.as_ref().expect("ensured above").1;
+
+            let out = exec_layer(
+                &self.layer_exe,
+                &self.layer_bufs[layer],
+                self.layer_bytes[layer],
+                stats,
+                (w * dim + 2 * nh * w * hd) * 4,
+                [&h_buf, pk, pv, tk, tv, &tlen_buf, &pos_buf, pb_buf, &tb_buf],
+            )?;
+
+            let k_new = to_vec_f32(&out[1])?;
+            let v_new = to_vec_f32(&out[2])?;
+            if to_tree {
+                cache.append_tree_block(lis, &k_new, &v_new, w, count)?;
+            } else {
+                cache.append_past_block(lis, &k_new, &v_new, w, count)?;
+            }
+
+            let h_lit = out.into_iter().next().expect("len checked");
+            if lis + 1 < span {
+                // handoff: the next layer consumes the fetched h' literal
+                // directly — no Vec<f32> decode/pad/re-encode
+                h_buf = rt.upload_literal(&h_lit)?;
+                stats.add_up(w * dim * 4);
+            }
+            h_last = Some(h_lit);
+        }
+        // single Vec<f32> conversion at the span boundary
+        to_vec_f32(&h_last.expect("span >= 1"))
+    }
+
     /// Final norm + tied head: hidden `[W, d]` -> logits `[W, V]`.
     pub fn head(&mut self, rt: &Runtime, hidden: &[f32]) -> Result<Vec<f32>> {
         let c = &self.cfg;
         anyhow::ensure!(hidden.len() == c.width_cap * c.dim, "hidden shape");
-        let h = lit_f32(hidden, &[c.width_cap, c.dim])?;
-        let args = [&self.final_norm_lit, &self.emb_lit, &h];
-        let out = self.artifacts.entry(rt, &format!("head{}", self.suffix))?.run_refs(&args)?;
+        let h = rt.upload_f32(hidden, &[c.width_cap, c.dim])?;
+        rt.stats().add_saved(self.final_norm_bytes + self.emb_bytes);
+        let out = self.head_exe.run_bufs(&[&self.final_norm_buf, &self.emb_buf, &h])?;
+        rt.stats().add_down(c.width_cap * c.vocab_size * 4);
         to_vec_f32(&out[0])
     }
 
     /// Run a block through a contiguous span of layers (a pipeline stage),
     /// appending the new tree-level KV of each layer to `cache` and
-    /// committing `count` slots. Returns the final hidden states.
+    /// committing `count` slots. The past bias is derived internally from
+    /// `cache.past_len()` via the incremental bias cache. Returns the
+    /// final hidden states.
     #[allow(clippy::too_many_arguments)]
     pub fn stage_forward(
         &mut self,
         rt: &Runtime,
         layer_range: std::ops::Range<usize>,
         cache: &mut TwoLevelCache,
-        mut hidden: Vec<f32>,
+        hidden: Vec<f32>,
         count: usize,
         pos: &[i32],
-        past_bias: &[f32],
         tree_bias: &[f32],
     ) -> Result<Vec<f32>> {
-        let w = self.cfg.width_cap;
-        for (lis, layer) in layer_range.enumerate() {
-            let out = self.layer_forward(
-                rt, layer, lis, cache, &hidden, pos, past_bias, tree_bias,
-            )?;
-            cache.append_tree_block(lis, &out.k_new, &out.v_new, w, count)?;
-            hidden = out.hidden;
-        }
+        let h = self.run_span(rt, layer_range, cache, hidden, count, pos, tree_bias, true)?;
         cache.commit_tree(count);
-        Ok(hidden)
+        Ok(h)
     }
 
     /// Prefill a prompt chunk through a span of layers: the chunk plays the
     /// "predicted" segment with a causal in-block bias (see
     /// `python/compile/model.py` docstring), and the resulting KV is
     /// appended to the **model level** of the cache.
-    #[allow(clippy::too_many_arguments)]
     pub fn prefill_chunk(
         &mut self,
         rt: &Runtime,
         layer_range: std::ops::Range<usize>,
         cache: &mut TwoLevelCache,
-        mut hidden: Vec<f32>,
+        hidden: Vec<f32>,
         count: usize,
         start_pos: usize,
     ) -> Result<Vec<f32>> {
-        let c = &self.cfg;
-        let w = c.width_cap;
+        let (w, t) = (self.cfg.width_cap, self.cfg.tree_cap);
         let pos: Vec<i32> = (0..w).map(|i| (start_pos + i) as i32).collect();
-        let past_bias = bias::past_bias(cache.past_len(), w, c.past_cap);
         // in-block causal bias over the tree segment appended at slot 0
-        let tree_bias = bias::causal_block_bias(count, 0, w, c.tree_cap);
+        let tree_bias = bias::causal_block_bias(count, 0, w, t);
         anyhow::ensure!(cache.tree_len() == 0, "prefill requires empty tree level");
-        for (lis, layer) in layer_range.enumerate() {
-            let out = self.layer_forward(
-                rt, layer, lis, cache, &hidden, &pos, &past_bias, &tree_bias,
-            )?;
-            cache.append_past_block(lis, &out.k_new, &out.v_new, w, count)?;
-            hidden = out.hidden;
-        }
+        let h = self.run_span(rt, layer_range, cache, hidden, count, &pos, &tree_bias, false)?;
         cache.commit_past(count);
-        Ok(hidden)
+        Ok(h)
     }
 
     /// Full-model pass over a tree block (used by the draft node and the
@@ -253,19 +436,8 @@ impl ModelHandles {
         tree_bias: &[f32],
     ) -> Result<Vec<f32>> {
         let hidden = self.embed(rt, tokens)?;
-        let past_bias =
-            bias::past_bias(cache.past_len(), self.cfg.width_cap, self.cfg.past_cap);
         let n = self.cfg.n_layers;
-        let h = self.stage_forward(
-            rt,
-            0..n,
-            cache,
-            hidden,
-            tokens.len(),
-            pos,
-            &past_bias,
-            tree_bias,
-        )?;
+        let h = self.stage_forward(rt, 0..n, cache, hidden, tokens.len(), pos, tree_bias)?;
         self.head(rt, &h)
     }
 
@@ -336,5 +508,27 @@ mod tests {
         let top = top_k_indices(&logits, 1)[0];
         assert!(top >= 3, "greedy next token {top} should not be PAD/BOS");
         assert_eq!(cache.past_len(), prompt.len());
+    }
+
+    #[test]
+    fn device_cache_skips_clean_reuploads_across_prefill_chunks() {
+        // During prefill the tree level never mutates, so after the first
+        // chunk the tree tensors must be served from the device mirror.
+        let Some((rt, mut m)) = setup() else { return };
+        let c = m.cfg.clone();
+        let mut cache = TwoLevelCache::new(
+            c.n_layers, c.n_heads, c.head_dim, c.past_cap, c.tree_cap,
+        );
+        let prompt: Vec<u32> = crate::tokenizer::encode(
+            "<math>\nquestion: a long enough prompt to span several chunks",
+        );
+        let before = rt.stats().snapshot();
+        m.full_prefill(&rt, &mut cache, &prompt).unwrap();
+        let d = rt.stats().snapshot().delta_since(&before);
+        assert!(
+            d.saved > 0,
+            "prefill should serve some operands from device residency"
+        );
+        assert!(d.reduction_factor() > 1.0);
     }
 }

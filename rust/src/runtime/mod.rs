@@ -8,29 +8,193 @@
 //!
 //! All entry points are lowered with `return_tuple=True`, so every
 //! execution returns a tuple literal which [`Executable::run`] decomposes.
+//!
+//! # Execution paths
+//!
+//! There are two ways to feed an entry point:
+//!
+//! * **literal path** ([`Executable::run`] / [`Executable::run_refs`]) —
+//!   host [`xla::Literal`] arguments are shipped to the device on every
+//!   call. Simple, but each call re-marshals every operand.
+//! * **buffer path** ([`Executable::run_bufs`]) — arguments are
+//!   device-resident [`DeviceBuffer`]s created once via
+//!   [`Runtime::upload_f32`] / [`Runtime::upload_i32`] /
+//!   [`Runtime::upload_literal`] and reused across calls. This is the hot
+//!   path: weights, KV tensors, and bias rows stay on the device and only
+//!   dirty regions are re-uploaded (EXPERIMENTS.md §Perf iteration 4).
+//!
+//! Host↔device traffic on both paths is tracked by [`TransferStats`]
+//! (bytes uploaded, fetched, and — for cache-served arguments — the bytes
+//! a naive re-upload would have moved), so benches and engines can report
+//! the marshalling volume per decode.
 
 pub mod literal;
 
 pub use literal::{lit_f32, lit_i32, scalar_i32, to_vec_f32};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
+
+/// A device-resident PJRT value. Buffers are immutable once created;
+/// "updating" one means uploading a replacement.
+pub type DeviceBuffer = xla::PjRtBuffer;
+
+/// Monotonic host↔device transfer accounting for one [`Runtime`].
+///
+/// * `up` — bytes actually uploaded (host → device);
+/// * `down` — bytes fetched back (device → host);
+/// * `saved` — bytes an argument-per-call path would have uploaded but the
+///   buffer cache served from device residency instead;
+/// * `resident` — bytes currently pinned on the device by load-time weight
+///   uploads (informational).
+///
+/// Counters only ever grow; consumers diff [`TransferStats::snapshot`]s.
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    up: AtomicU64,
+    down: AtomicU64,
+    saved: AtomicU64,
+    saved_kv: AtomicU64,
+    resident: AtomicU64,
+}
+
+impl TransferStats {
+    pub fn add_up(&self, bytes: usize) {
+        self.up.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_down(&self, bytes: usize) {
+        self.down.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_saved(&self, bytes: usize) {
+        self.saved.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// KV-mirror savings: counted into `saved` *and* a KV-specific bucket
+    /// so benches can gate the mirror's effectiveness separately from the
+    /// (much larger) resident-weight credit.
+    pub fn add_saved_kv(&self, bytes: usize) {
+        self.saved.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.saved_kv.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_resident(&self, bytes: usize) {
+        self.resident.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            up: self.up.load(Ordering::Relaxed),
+            down: self.down.load(Ordering::Relaxed),
+            saved: self.saved.load(Ordering::Relaxed),
+            saved_kv: self.saved_kv.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the transfer counters; subtract two to get the
+/// traffic of a region of code.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub up: u64,
+    pub down: u64,
+    pub saved: u64,
+    /// Subset of `saved` credited by the KV device mirror.
+    pub saved_kv: u64,
+}
+
+impl TransferSnapshot {
+    /// Traffic since `earlier` (counters are monotonic).
+    pub fn delta_since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            up: self.up - earlier.up,
+            down: self.down - earlier.down,
+            saved: self.saved - earlier.saved,
+            saved_kv: self.saved_kv - earlier.saved_kv,
+        }
+    }
+
+    /// Bytes moved (up + down).
+    pub fn moved(&self) -> u64 {
+        self.up + self.down
+    }
+
+    /// Bytes the unoptimized argument-per-call path would have moved.
+    pub fn unoptimized(&self) -> u64 {
+        self.up + self.down + self.saved
+    }
+
+    /// Traffic reduction factor vs the unoptimized path (>= 1.0).
+    pub fn reduction_factor(&self) -> f64 {
+        if self.moved() == 0 {
+            1.0
+        } else {
+            self.unoptimized() as f64 / self.moved() as f64
+        }
+    }
+
+    /// Record this delta under the standard `hd_*` metric names every
+    /// engine reports (the single definition of those counter names).
+    pub fn record_hd_metrics(&self, metrics: &mut crate::metrics::Metrics) {
+        metrics.incr("hd_up_bytes", self.up);
+        metrics.incr("hd_down_bytes", self.down);
+        metrics.incr("hd_saved_bytes", self.saved);
+        metrics.incr("hd_saved_kv_bytes", self.saved_kv);
+    }
+}
 
 /// Thin wrapper over the PJRT CPU client.
 pub struct Runtime {
     client: xla::PjRtClient,
+    stats: TransferStats,
 }
 
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self { client })
+        Ok(Self {
+            client,
+            stats: TransferStats::default(),
+        })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Host↔device transfer counters for this client.
+    pub fn stats(&self) -> &TransferStats {
+        &self.stats
+    }
+
+    /// Upload a host literal to a device buffer (counted by the caller when
+    /// the size is known; see [`Runtime::upload_f32`]).
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<DeviceBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("upload literal: {e:?}"))
+    }
+
+    /// Upload row-major f32 data as a device buffer of the given shape.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuffer> {
+        let lit = lit_f32(data, dims)?;
+        self.stats.add_up(data.len() * 4);
+        self.upload_literal(&lit)
+    }
+
+    /// Upload i32 data as a device buffer of the given shape (`&[]` for a
+    /// scalar).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuffer> {
+        let lit = lit_i32(data, dims)?;
+        self.stats.add_up(data.len() * 4);
+        self.upload_literal(&lit)
     }
 
     /// Load + compile one HLO text artifact.
@@ -78,44 +242,33 @@ impl Executable {
             .exe
             .execute::<&xla::Literal>(args)
             .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
-        let lit = out[0][0]
+        Self::decompose(&self.name, &out[0][0])
+    }
+
+    /// Execute with device-resident buffers — no argument marshalling at
+    /// all; only the output tuple crosses back to the host
+    /// (EXPERIMENTS.md §Perf iteration 4).
+    pub fn run_bufs(&self, args: &[&DeviceBuffer]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute_b::<&DeviceBuffer>(args)
+            .map_err(|e| anyhow::anyhow!("execute(buffers) {}: {e:?}", self.name))?;
+        Self::decompose(&self.name, &out[0][0])
+    }
+
+    fn decompose(name: &str, buf: &DeviceBuffer) -> Result<Vec<xla::Literal>> {
+        let lit = buf
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result of {}: {e:?}", self.name))?;
+            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;
         lit.to_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose result of {}: {e:?}", self.name))
+            .map_err(|e| anyhow::anyhow!("decompose result of {name}: {e:?}"))
     }
 }
 
-/// Lazy registry of the artifact set for one model (`target` / `draft`).
-pub struct ArtifactSet {
-    dir: PathBuf,
-    model: String,
-    cache: HashMap<String, Executable>,
-}
-
-impl ArtifactSet {
-    pub fn new(dir: &Path, model: &str) -> Self {
-        Self {
-            dir: dir.to_path_buf(),
-            model: model.to_string(),
-            cache: HashMap::new(),
-        }
-    }
-
-    pub fn model(&self) -> &str {
-        &self.model
-    }
-
-    /// Compile-once accessor for `{model}_{entry}.hlo.txt`.
-    pub fn entry(&mut self, rt: &Runtime, entry: &str) -> Result<&Executable> {
-        if !self.cache.contains_key(entry) {
-            let path = self.dir.join(format!("{}_{entry}.hlo.txt", self.model));
-            let exe = rt.load_hlo_text(&path)?;
-            self.cache.insert(entry.to_string(), exe);
-        }
-        Ok(self.cache.get(entry).unwrap())
-    }
-}
+// Note: the old `ArtifactSet` lazy registry was deleted — `ModelHandles`
+// resolves its three entry points once at load time via `load_hlo_text`
+// and keeps the [`Executable`]s directly (ISSUE 2 satellite: the registry
+// path paid a `format!` + double `HashMap` lookup per layer call).
 
 #[cfg(test)]
 mod tests {
@@ -123,7 +276,7 @@ mod tests {
 
     /// These tests need built artifacts; they are skipped (not failed) when
     /// `artifacts/` is absent so `cargo test` works pre-`make artifacts`.
-    fn artifacts() -> Option<PathBuf> {
+    fn artifacts() -> Option<std::path::PathBuf> {
         let dir = crate::artifacts_dir();
         dir.join("target_config.txt").exists().then_some(dir)
     }
@@ -132,6 +285,37 @@ mod tests {
     fn cpu_client_boots() {
         let rt = Runtime::cpu().unwrap();
         assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn transfer_snapshot_arithmetic() {
+        let s = TransferStats::default();
+        s.add_up(100);
+        s.add_down(50);
+        let a = s.snapshot();
+        s.add_up(20);
+        s.add_saved(180);
+        let b = s.snapshot();
+        let d = b.delta_since(&a);
+        assert_eq!(d.up, 20);
+        assert_eq!(d.down, 0);
+        assert_eq!(d.saved, 180);
+        assert_eq!(d.moved(), 20);
+        assert_eq!(d.unoptimized(), 200);
+        assert!((d.reduction_factor() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upload_roundtrips_through_device() {
+        let Ok(rt) = Runtime::cpu() else {
+            eprintln!("skipping: no PJRT client");
+            return;
+        };
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let buf = rt.upload_f32(&data, &[2, 2]).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+        assert_eq!(rt.stats().snapshot().up, 16);
     }
 
     #[test]
@@ -159,5 +343,36 @@ mod tests {
         for (a, b) in h[..cfg.dim].iter().zip(row) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn buffer_path_matches_literal_path() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let cfg =
+            crate::config::ArtifactConfig::load(&dir.join("target_config.txt")).unwrap();
+        let exe = rt.load_hlo_text(&dir.join("target_embed.hlo.txt")).unwrap();
+        let weights =
+            crate::weights::WeightMap::load(&dir.join("weights_target.pdw")).unwrap();
+        let emb = weights.get("emb").unwrap();
+        let tokens = vec![5i32; cfg.width_cap];
+
+        let lit_out = exe
+            .run(&[
+                lit_f32(&emb.data, &[cfg.vocab_size, cfg.dim]).unwrap(),
+                lit_i32(&tokens, &[cfg.width_cap]).unwrap(),
+            ])
+            .unwrap();
+        let emb_buf = rt.upload_f32(&emb.data, &[cfg.vocab_size, cfg.dim]).unwrap();
+        let tok_buf = rt.upload_i32(&tokens, &[cfg.width_cap]).unwrap();
+        let buf_out = exe.run_bufs(&[&emb_buf, &tok_buf]).unwrap();
+        assert_eq!(
+            to_vec_f32(&lit_out[0]).unwrap(),
+            to_vec_f32(&buf_out[0]).unwrap(),
+            "device-resident execution diverged from the literal path"
+        );
     }
 }

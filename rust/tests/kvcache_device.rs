@@ -1,0 +1,149 @@
+//! Property-style conformance of the device KV mirror (ISSUE 2): after
+//! every mutation of a [`TwoLevelCache`] — `append_tree_block` →
+//! `commit_tree` → `promote_root_to_past` → `compact_tree`, including the
+//! clear-on-miss path — the buffers a [`DeviceKvCache`] serves must decode
+//! to exactly the host `Vec<f32>` tensors, and clean levels must be served
+//! without re-upload.
+//!
+//! Needs only a PJRT CPU client (no compiled artifacts); skipped when the
+//! client cannot boot.
+
+use pipedec::kvcache::device::DeviceKvCache;
+use pipedec::kvcache::TwoLevelCache;
+use pipedec::runtime::{to_vec_f32, Runtime};
+use pipedec::util::XorShiftRng;
+
+const LAYERS: usize = 2;
+const HEADS: usize = 2;
+const HD: usize = 2;
+const PAST_CAP: usize = 6;
+const TREE_CAP: usize = 5;
+const W: usize = 3;
+
+fn fetch(buf: &pipedec::runtime::DeviceBuffer) -> Vec<f32> {
+    to_vec_f32(&buf.to_literal_sync().unwrap()).unwrap()
+}
+
+/// Sync every layer of the mirror and compare all four tensors against the
+/// host cache.
+fn assert_mirror_matches(rt: &Runtime, cache: &TwoLevelCache, dev: &mut DeviceKvCache) {
+    for l in 0..cache.layers() {
+        dev.ensure_past(rt, cache, l).unwrap();
+        dev.ensure_tree(rt, cache, l).unwrap();
+        let (pk, pv) = dev.past(l).unwrap();
+        assert_eq!(fetch(pk), cache.past_k_layer(l), "past_k layer {l}");
+        assert_eq!(fetch(pv), cache.past_v_layer(l), "past_v layer {l}");
+        let (tk, tv) = dev.tree(l).unwrap();
+        assert_eq!(fetch(tk), cache.tree_k_layer(l), "tree_k layer {l}");
+        assert_eq!(fetch(tv), cache.tree_v_layer(l), "tree_v layer {l}");
+    }
+}
+
+fn rand_block(rng: &mut XorShiftRng) -> Vec<f32> {
+    (0..HEADS * W * HD).map(|_| rng.next_f32()).collect()
+}
+
+/// Random mutation driver: every reachable cache transition, mirror-checked
+/// after each step.
+fn drive(seed: u64, steps: usize) {
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: no PJRT client");
+        return;
+    };
+    let mut rng = XorShiftRng::new(seed);
+    let mut cache = TwoLevelCache::new(LAYERS, HEADS, HD, PAST_CAP, TREE_CAP);
+    let mut dev = DeviceKvCache::new(LAYERS);
+    assert_mirror_matches(&rt, &cache, &mut dev);
+
+    for step in 0..steps {
+        match rng.below(6) {
+            // append one tree block to every layer, then commit
+            0 if cache.tree_len() < cache.tree_cap() => {
+                let room = cache.tree_cap() - cache.tree_len();
+                let count = 1 + rng.below(room.min(W));
+                for l in 0..LAYERS {
+                    let (k, v) = (rand_block(&mut rng), rand_block(&mut rng));
+                    cache.append_tree_block(l, &k, &v, W, count).unwrap();
+                }
+                cache.commit_tree(count);
+            }
+            // prefill-style past append
+            1 if cache.past_len() < cache.past_cap() => {
+                let room = cache.past_cap() - cache.past_len();
+                let count = 1 + rng.below(room.min(W));
+                for l in 0..LAYERS {
+                    let (k, v) = (rand_block(&mut rng), rand_block(&mut rng));
+                    cache.append_past_block(l, &k, &v, W, count).unwrap();
+                }
+                cache.commit_past(count);
+            }
+            // sync-point promotion
+            2 if cache.tree_len() >= 1 && cache.past_len() < cache.past_cap() => {
+                cache.promote_root_to_past().unwrap();
+            }
+            // hit-path compaction: random ascending survivor subset
+            3 if cache.tree_len() > 0 => {
+                let kept: Vec<usize> =
+                    (0..cache.tree_len()).filter(|_| rng.chance(0.5)).collect();
+                cache.compact_tree(&kept);
+            }
+            // miss path: clear, then (often) immediately overwrite stale
+            // slots — the mirror must pick up the overwrite
+            4 => {
+                cache.clear_tree();
+                if rng.chance(0.7) {
+                    for l in 0..LAYERS {
+                        let (k, v) = (rand_block(&mut rng), rand_block(&mut rng));
+                        cache.append_tree_block(l, &k, &v, W, 1).unwrap();
+                    }
+                    cache.commit_tree(1);
+                }
+            }
+            // new request
+            5 if step % 17 == 0 => cache.reset(),
+            _ => continue,
+        }
+        assert_mirror_matches(&rt, &cache, &mut dev);
+    }
+
+    // the mirror must have served clean levels from device residency
+    let (uploads, reuses) = dev.upload_counts();
+    assert!(uploads > 0, "mirror never uploaded");
+    assert!(
+        reuses > 0,
+        "mirror never reused a clean level across {steps} steps"
+    );
+}
+
+#[test]
+fn mirror_matches_host_across_mutation_sequences() {
+    for seed in [1u64, 7, 42] {
+        drive(seed, 60);
+    }
+}
+
+#[test]
+fn clean_resync_is_upload_free() {
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: no PJRT client");
+        return;
+    };
+    let mut rng = XorShiftRng::new(3);
+    let mut cache = TwoLevelCache::new(LAYERS, HEADS, HD, PAST_CAP, TREE_CAP);
+    for l in 0..LAYERS {
+        let (k, v) = (rand_block(&mut rng), rand_block(&mut rng));
+        cache.append_tree_block(l, &k, &v, W, 2).unwrap();
+    }
+    cache.commit_tree(2);
+    let mut dev = DeviceKvCache::new(LAYERS);
+    assert_mirror_matches(&rt, &cache, &mut dev);
+    let (uploads_after_first, _) = dev.upload_counts();
+    let before = rt.stats().snapshot();
+    // no mutations in between: the second sync moves zero bytes
+    assert_mirror_matches(&rt, &cache, &mut dev);
+    let d = rt.stats().snapshot().delta_since(&before);
+    assert_eq!(d.up, 0, "clean resync must not upload");
+    assert!(d.saved_kv > 0, "clean resync must credit KV saved bytes");
+    assert_eq!(d.saved, d.saved_kv, "only the KV mirror ran here");
+    assert_eq!(dev.upload_counts().0, uploads_after_first);
+}
