@@ -1,17 +1,20 @@
 //! End-to-end serving driver (DESIGN.md "End-to-end validation"): load the
 //! build-time model through the PJRT runtime and serve a batch of real
-//! requests from all six workload domains through the router + any
-//! registered engine, reporting per-request latency percentiles,
-//! time-to-first-token, and aggregate throughput.
+//! requests from all six workload domains through the router and the
+//! continuous-batching scheduler, reporting per-request latency
+//! percentiles, time-to-first-token, time-between-tokens, and aggregate
+//! throughput. With `pipedec-db` the pipeline interleaves requests; every
+//! other engine serves FIFO one-at-a-time through the same loop.
 //!
 //!     cargo run --release --offline --example serve_batch [-- <k> [engine]]
 //!
 //! `k` = number of concurrent requests submitted up front (default 6);
-//! `engine` = registry name (pipedec | pp | stpp | slm, default pipedec).
+//! `engine` = registry name (pipedec | pipedec-db | pp | stpp | slm,
+//! default pipedec-db).
 
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::engine::{build_engine, EngineKind};
-use pipedec::server::{drain, summarize, Router};
+use pipedec::engine::{build_scheduled_engine, EngineKind};
+use pipedec::server::{serve_until_idle, summarize, Router};
 use pipedec::workload::mixed_stream;
 
 fn main() -> anyhow::Result<()> {
@@ -28,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         .nth(2)
         .map(|s| s.parse())
         .transpose()?
-        .unwrap_or(EngineKind::PipeDec);
+        .unwrap_or(EngineKind::PipeDecDb);
 
     let cfg = EngineConfig {
         stages: 4,
@@ -40,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         max_new_tokens: 32,
         ..EngineConfig::default()
     };
-    let mut engine = build_engine(kind, &dir, cfg)?;
+    let mut sched = build_scheduled_engine(kind, &dir, cfg)?;
 
     // submit k requests (round-robin over the six domains, as in Fig. 8)
     let prompts = mixed_stream(&dir, (k + 5) / 6)?;
@@ -55,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let completions = drain(&mut router, engine.as_mut())?;
+    let completions = serve_until_idle(&mut router, sched.as_mut())?;
     let wall = t0.elapsed().as_secs_f64();
 
     let (metrics, lat) = summarize(&completions, wall);
@@ -68,8 +71,16 @@ fn main() -> anyhow::Result<()> {
         lat.percentile(99.0)
     );
     println!(
-        "first token: mean={:.2}s (service start -> first streamed token)",
+        "first token: mean={:.2}s (admission -> first streamed token)",
         metrics.summary("first_token_s").mean()
+    );
+    println!(
+        "inter-token: mean={:.3}s (mean time between streamed tokens)",
+        metrics.summary("tbt_s").mean()
+    );
+    println!(
+        "queue depth: mean={:.1} at admission",
+        metrics.summary("queue_depth").mean()
     );
     println!(
         "throughput:  {:.1} tokens/s over {:.2}s wall",

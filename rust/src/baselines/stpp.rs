@@ -317,7 +317,8 @@ impl Engine for StppEngine {
             wall_s: wall0.elapsed().as_secs_f64(),
             modeled_s,
             spec: Some(SpecStats {
-                timesteps: rounds,
+                timesteps: 0, // STPP has no pipeline-timestep notion
+                rounds,
                 hits: 0,
                 misses: 0,
                 accepted_per_round: acc,

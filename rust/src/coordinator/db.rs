@@ -1,0 +1,625 @@
+//! SpecPipe-DB: the paper's multi-request variant — PipeDec with dynamic
+//! batching, filling pipeline slots with speculative tokens from
+//! *different* requests.
+//!
+//! The single-task [`super::PipeDecEngine`] commits every pipeline stage to
+//! one request: after a miss the pipeline refills for `groups` timesteps
+//! producing nothing, and at the start/end of a request most slots idle.
+//! SpecPipe-DB serves the same per-request math (shared with the solo
+//! engine via [`super::pipeline`]) but schedules it *continuously*:
+//!
+//! * every live [`Session`] owns its prediction tree plus a full set of
+//!   per-request [`TwoLevelCache`]s (one per stage + the draft cache), so
+//!   requests never share KV state — device mirrors are released at
+//!   session teardown via [`ModelHandles::release_cache`];
+//! * the pipeline itself is a ring of `groups` slots, each holding one
+//!   in-flight [`DataFlow`] tagged with its owning session; per timestep
+//!   every occupied slot advances one group (possibly a different session
+//!   per slot — the dynamic batch);
+//! * pipeline slot 0 is granted round-robin: a session's pending root flow
+//!   (fresh admission or miss restart) or one draft expansion of its tree
+//!   (the draft device serves one session per timestep, exactly like rank
+//!   0 in the paper);
+//! * queued sessions are admitted whenever a session slot frees up, so
+//!   admission overlaps with decode — the refill/idle timesteps that solo
+//!   PipeDec wastes now carry other requests' flows, which is where the
+//!   Fig. 8 throughput gain over one-at-a-time serving comes from;
+//! * sync points (verify / prune / promote) are per-session, so pruning
+//!   propagation never crosses sessions and greedy outputs are identical
+//!   to a solo decode (asserted by `rust/tests/scheduler.rs` and the
+//!   `fig8_throughput` bench).
+//!
+//! Served both ways: natively as a [`ScheduledEngine`] (the continuous
+//! server loop) and as a one-shot [`Engine`] (a decode = one session
+//! stepped to completion), so `EngineKind::PipeDecDb` passes the same
+//! conformance suite as every other registry entry.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::pipeline::{self, DataFlow};
+use super::sampling::{select_token, Sampling};
+use crate::config::EngineConfig;
+use crate::engine::{
+    DecodeOutput, DecodeRequest, Engine, EngineKind, NullSink, ScheduledEngine, Session,
+    SessionId, SessionRecord, SessionStatus, SpecStats, StepReport, TokenSink,
+};
+use crate::kvcache::TwoLevelCache;
+use crate::metrics::Metrics;
+use crate::model::ModelHandles;
+use crate::runtime::Runtime;
+use crate::schedule::CentralScheduler;
+use crate::tokenizer;
+use crate::transport::{LinkModel, LinkStats};
+use crate::tree::{PredictionTree, PruneOutcome};
+use crate::util::XorShiftRng;
+
+/// One in-flight data flow, tagged with its owning session.
+struct SlotFlow {
+    session: SessionId,
+    df: DataFlow,
+}
+
+/// A live session: the shared [`Session`] shell plus the SpecPipe-DB
+/// decode state (tree, per-request sampling/RNG, counters).
+/// `base.caches` holds one cache per pipeline stage plus the draft cache
+/// last (index `cfg.stages`).
+struct DbSession {
+    base: Session,
+    tree: PredictionTree,
+    rng: XorShiftRng,
+    sampling: Sampling,
+    max_new: usize,
+    budget: usize,
+    /// Flow waiting to enter pipeline slot 0 (root after admission or a
+    /// miss restart).
+    entry: Option<DataFlow>,
+    timesteps: u64,
+    hits: u64,
+    misses: u64,
+    modeled_s: f64,
+    prefill_s: f64,
+    wall0: Instant,
+}
+
+/// The SpecPipe-DB engine over AOT artifacts.
+pub struct PipeDecDbEngine {
+    rt: Runtime,
+    target: ModelHandles,
+    draft: ModelHandles,
+    pub cfg: EngineConfig,
+    layers_per_stage: usize,
+    link: LinkModel,
+    pub link_stats: LinkStats,
+    scheduler: CentralScheduler,
+    next_id: u64,
+    queue: VecDeque<Session>,
+    live: Vec<DbSession>,
+    done: Vec<SessionRecord>,
+    /// Pipeline ring: one in-flight flow per timestep group.
+    slots: Vec<Option<SlotFlow>>,
+    /// Round-robin cursor over `live` for granting slot 0.
+    entry_cursor: usize,
+    /// Maximum concurrently admitted sessions (= pipeline groups).
+    max_live: usize,
+    steps: u64,
+    stalled_for: u64,
+}
+
+impl PipeDecDbEngine {
+    pub fn new(artifact_dir: &Path, mut cfg: EngineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let rt = Runtime::cpu()?;
+        let target =
+            ModelHandles::load_with_width(&rt, artifact_dir, "target", cfg.tree.max_width)?;
+        let draft =
+            ModelHandles::load_with_width(&rt, artifact_dir, "draft", cfg.tree.max_width)?;
+        anyhow::ensure!(
+            target.cfg.n_layers % cfg.stages == 0,
+            "stages {} must divide target layers {}",
+            cfg.stages,
+            target.cfg.n_layers
+        );
+        let layers_per_stage = target.cfg.n_layers / cfg.stages;
+        cfg.tree.max_width = cfg
+            .tree
+            .max_width
+            .min(target.cfg.width_cap)
+            .min(draft.cfg.width_cap);
+        cfg.tree.max_children = cfg.tree.max_children.min(target.cfg.vocab_size);
+        let groups = cfg.stages / cfg.group_size;
+        Ok(Self {
+            rt,
+            target,
+            draft,
+            cfg,
+            layers_per_stage,
+            link: LinkModel::pcie_p2p(),
+            link_stats: LinkStats::default(),
+            scheduler: CentralScheduler::new(),
+            next_id: 0,
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            done: Vec::new(),
+            slots: (0..groups).map(|_| None).collect(),
+            entry_cursor: 0,
+            max_live: groups,
+            steps: 0,
+            stalled_for: 0,
+        })
+    }
+
+    fn groups(&self) -> usize {
+        self.cfg.stages / self.cfg.group_size
+    }
+
+    fn live_index(&self, id: SessionId) -> Option<usize> {
+        self.live.iter().position(|s| s.base.id == id)
+    }
+
+    /// Account one inter-node transfer through the central scheduler and
+    /// the link model; returns the modeled wire seconds.
+    fn account_transfer(&mut self, src: usize, dst: usize, bytes: usize, seq: u64) -> f64 {
+        let id = self.scheduler.submit(src, dst, bytes, seq);
+        let dispatched = self.scheduler.tick();
+        debug_assert!(dispatched.iter().any(|d| d.task.id == id));
+        self.scheduler.notify_finish(id);
+        self.scheduler.tick();
+        self.link_stats.record(bytes, &self.link);
+        self.link.transfer_time(bytes)
+    }
+
+    /// Admit one queued session: mint its per-request caches, run the
+    /// pipeline prefill (emitting the first token), and build its tree.
+    fn admit(&mut self, mut shell: Session) -> Result<DbSession> {
+        let (max_new, sampling, seed) = shell.req.resolve(&self.cfg);
+        let tc = self.target.cfg.clone();
+        let dc = self.draft.cfg.clone();
+        let lps = self.layers_per_stage;
+        let stages = self.cfg.stages;
+        let mut rng = XorShiftRng::new(seed);
+
+        // per-session caches: one per pipeline stage + the draft cache last
+        let mut caches: Vec<TwoLevelCache> = (0..stages)
+            .map(|_| TwoLevelCache::new(lps, tc.n_heads, tc.head_dim, tc.past_cap, tc.tree_cap))
+            .collect();
+        caches.push(TwoLevelCache::new(
+            dc.n_layers,
+            dc.n_heads,
+            dc.head_dim,
+            dc.past_cap,
+            dc.tree_cap,
+        ));
+        shell.caches = caches;
+
+        // pipeline prefill through all target stages (plain sequential
+        // pre-filling, §3.4.1), as in the solo engine's prefill
+        let w = tc.width_cap;
+        let t0 = Instant::now();
+        let prompt = shell.prompt_ids.clone();
+        let mut last_h = None;
+        let mut last_count = 0;
+        for chunk in prompt.chunks(w) {
+            let start = shell.caches[0].past_len();
+            let mut h = self.target.embed(&self.rt, chunk)?;
+            for s in 0..stages {
+                let range = s * lps..(s + 1) * lps;
+                h = self.target.prefill_chunk(
+                    &self.rt,
+                    range,
+                    &mut shell.caches[s],
+                    h,
+                    chunk.len(),
+                    start,
+                )?;
+            }
+            last_count = chunk.len();
+            last_h = Some(h);
+        }
+        let h = last_h.context("empty prompt")?;
+        let logits = self.target.head(&self.rt, &h)?;
+        let v = tc.vocab_size;
+        let row = &logits[(last_count - 1) * v..last_count * v];
+        let first = select_token(row, &sampling, &mut rng);
+        // draft prefill (parallel with the target on the real testbed)
+        self.draft
+            .full_prefill(&self.rt, &mut shell.caches[stages], &prompt)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        let budget = tc.tree_cap.min(dc.tree_cap);
+        let tree = PredictionTree::new(self.cfg.tree, budget, first, prompt.len());
+        shell.status = SessionStatus::Running;
+        shell.emit(first);
+        Ok(DbSession {
+            entry: Some(DataFlow::root(&tree)),
+            tree,
+            rng,
+            sampling,
+            max_new,
+            budget,
+            timesteps: 0,
+            hits: 0,
+            misses: 0,
+            modeled_s: 0.0,
+            prefill_s,
+            wall0: Instant::now(),
+            base: shell,
+        })
+    }
+
+    /// Remove a live session: purge its in-flight flows, release its
+    /// device KV mirrors, drop its host caches, and (when finished) build
+    /// the final [`DecodeOutput`]. Returns the session id.
+    fn retire(
+        &mut self,
+        si: usize,
+        finished: bool,
+        next_slots: &mut [Option<SlotFlow>],
+    ) -> SessionId {
+        let sess = self.live.remove(si);
+        let id = sess.base.id;
+        if self.entry_cursor > si {
+            self.entry_cursor -= 1;
+        }
+        for slot in self.slots.iter_mut().chain(next_slots.iter_mut()) {
+            if slot.as_ref().is_some_and(|f| f.session == id) {
+                *slot = None;
+            }
+        }
+        // per-request cache churn would leak device mirrors without this
+        // (the ROADMAP eviction-hook note from PR 2)
+        let stages = self.cfg.stages;
+        for (i, c) in sess.base.caches.iter().enumerate() {
+            if i < stages {
+                self.target.release_cache(c.id());
+            } else {
+                self.draft.release_cache(c.id());
+            }
+        }
+        let record = if finished {
+            let mut metrics = Metrics::new();
+            metrics.incr("tokens", sess.base.tokens.len() as u64);
+            metrics.incr("timesteps", sess.timesteps);
+            metrics.incr("hits", sess.hits);
+            metrics.incr("misses", sess.misses);
+            metrics.record("prefill_s", sess.prefill_s);
+            let output = DecodeOutput {
+                text: tokenizer::decode(&sess.base.tokens),
+                tokens: sess.base.tokens.clone(),
+                wall_s: sess.wall0.elapsed().as_secs_f64(),
+                modeled_s: sess.modeled_s,
+                spec: Some(SpecStats {
+                    timesteps: sess.timesteps,
+                    rounds: 0,
+                    hits: sess.hits,
+                    misses: sess.misses,
+                    accepted_per_round: 0.0,
+                }),
+                metrics,
+            };
+            sess.base.into_record(SessionStatus::Finished, Some(output))
+        } else {
+            sess.base.into_record(SessionStatus::Cancelled, None)
+        };
+        self.done.push(record);
+        id
+    }
+
+    /// One pipeline timestep across all live sessions (Fig. 2, batched):
+    /// admission → stage phase per occupied slot → draft/entry grant of
+    /// slot 0 → per-session sync of exiting flows.
+    fn step_impl(&mut self) -> Result<StepReport> {
+        let mut report = StepReport::default();
+        self.steps += 1;
+        let seq = self.steps;
+        let groups = self.groups();
+        let gs = self.cfg.group_size;
+        let lps = self.layers_per_stage;
+        let d_bytes = self.target.cfg.dim * self.target.cfg.width_cap * 4;
+        let mut next_slots: Vec<Option<SlotFlow>> = (0..groups).map(|_| None).collect();
+
+        // ---- admission: fill free session slots from the FIFO queue ----
+        while self.live.len() < self.max_live && !self.queue.is_empty() {
+            let shell = self.queue.pop_front().expect("non-empty queue");
+            let sess = self.admit(shell)?;
+            let id = sess.base.id;
+            let first = *sess.base.tokens.last().expect("prefill emits a token");
+            report.admitted.push(id);
+            report.emitted.push((id, first));
+            self.live.push(sess);
+            let si = self.live.len() - 1;
+            if self.live[si].base.tokens.len() >= self.live[si].max_new {
+                let fid = self.retire(si, true, &mut next_slots);
+                report.finished.push(fid);
+            }
+        }
+
+        // ---- stage phase: every occupied slot advances one group ----
+        let mut exits: Vec<(SessionId, DataFlow)> = Vec::new();
+        let mut group_times = vec![0.0f64; groups];
+        let mut transfer_times: Vec<f64> = Vec::new();
+        for g in 0..groups {
+            let Some(flow) = self.slots[g].take() else { continue };
+            let owner = flow.session;
+            let Some(si) = self.live_index(owner) else {
+                continue; // owner retired while the flow was in flight
+            };
+            let span = g * gs..(g + 1) * gs;
+            let mut df = Some(flow.df);
+            for stage in span.clone() {
+                let Some(cur) = df.take() else { break };
+                let range = stage * lps..(stage + 1) * lps;
+                let sess = &mut self.live[si];
+                let (out, secs) = pipeline::run_stage(
+                    &mut self.target,
+                    &self.rt,
+                    range,
+                    &mut sess.base.caches[stage],
+                    cur,
+                    &sess.tree,
+                )?;
+                group_times[g] += secs;
+                if out.is_some() && stage + 1 < span.end {
+                    // intra-group hop: same timestep, scheduled transfer
+                    group_times[g] += self.account_transfer(stage + 1, stage + 2, d_bytes, seq);
+                }
+                df = out;
+            }
+            let Some(out) = df else { continue };
+            if g + 1 < groups {
+                transfer_times.push(self.account_transfer(span.end, span.end + 1, d_bytes, seq));
+                next_slots[g + 1] = Some(SlotFlow {
+                    session: owner,
+                    df: out,
+                });
+            } else {
+                exits.push((owner, out));
+            }
+        }
+
+        // ---- draft/entry phase: grant slot 0 to one live session ----
+        // (the draft device — pipeline rank 0 — serves one session per
+        // timestep; pending root flows take priority over tree expansion)
+        let mut draft_s = 0.0f64;
+        if next_slots[0].is_none() {
+            let n = self.live.len();
+            let mc = self.cfg.tree.max_children;
+            let di = self.cfg.stages; // draft cache index in session caches
+            for k in 0..n {
+                let si = (self.entry_cursor + k) % n;
+                let (id, df) = if let Some(df) = self.live[si].entry.take() {
+                    (self.live[si].base.id, df)
+                } else {
+                    let sess = &mut self.live[si];
+                    let (flow, secs) = pipeline::draft_expand(
+                        &mut self.draft,
+                        &self.rt,
+                        &mut sess.base.caches[di],
+                        &mut sess.tree,
+                        mc,
+                    )?;
+                    draft_s += secs;
+                    let Some(df) = flow else { continue };
+                    (self.live[si].base.id, df)
+                };
+                // draft (rank 0) -> L_1: token ids only
+                transfer_times.push(self.account_transfer(0, 1, df.entry_bytes(), seq));
+                next_slots[0] = Some(SlotFlow { session: id, df });
+                self.entry_cursor = (si + 1) % n;
+                break;
+            }
+        }
+
+        // paper latency model: max(T_draft, C·max(T_group_i) + max(T_t,i))
+        let max_group = group_times.iter().cloned().fold(0.0, f64::max);
+        let max_tx = transfer_times.iter().cloned().fold(0.0, f64::max);
+        let mut step_modeled = draft_s.max(max_group + max_tx);
+
+        // ---- sync phase: each exiting flow verifies one token for its
+        // session; pruning propagation is scoped to that session ----
+        let mut to_finish: Vec<SessionId> = Vec::new();
+        for (id, df) in exits {
+            let Some(si) = self.live_index(id) else { continue };
+            let head_t = Instant::now();
+            let hidden = df.hidden.as_ref().context("exit flow carries hidden states")?;
+            let logits = self.target.head(&self.rt, hidden)?;
+            step_modeled += head_t.elapsed().as_secs_f64();
+            let v = self.target.cfg.vocab_size;
+            let ablate = self.cfg.ablate_tree_reuse;
+            let sess = &mut self.live[si];
+            let root_id = sess.tree.id(0);
+            let Some(row) = df.ids.iter().position(|&x| x == root_id) else {
+                continue; // stale exit (root pruned away earlier)
+            };
+            let x = select_token(
+                &logits[row * v..(row + 1) * v],
+                &sess.sampling,
+                &mut sess.rng,
+            );
+            sess.base.emit(x);
+            report.emitted.push((id, x));
+            let outcome = if ablate {
+                PruneOutcome::Miss
+            } else {
+                sess.tree.prune(x)
+            };
+            match outcome {
+                PruneOutcome::Hit { kept_old, .. } => {
+                    sess.hits += 1;
+                    // all stage caches and the draft cache promote/compact
+                    for c in &mut sess.base.caches {
+                        c.promote_root_to_past()?;
+                        c.compact_tree(&kept_old);
+                    }
+                }
+                PruneOutcome::Miss => {
+                    sess.misses += 1;
+                    for c in &mut sess.base.caches {
+                        c.promote_root_to_past()?;
+                        c.clear_tree();
+                    }
+                    let root_pos = sess.base.caches[0].past_len();
+                    sess.tree = PredictionTree::new(self.cfg.tree, sess.budget, x, root_pos);
+                    // in-flight flows of this session are stale: restart
+                    for slot in next_slots.iter_mut() {
+                        if slot.as_ref().is_some_and(|f| f.session == id) {
+                            *slot = None;
+                        }
+                    }
+                    sess.entry = Some(DataFlow::root(&sess.tree));
+                }
+            }
+            if sess.base.tokens.len() >= sess.max_new || x == tokenizer::EOS_ID {
+                to_finish.push(id);
+            }
+        }
+
+        // attribute the step's modeled cost evenly across the sessions that
+        // were live this step — including the ones about to finish, so the
+        // per-session shares sum exactly to the total modeled serving time
+        // and a finishing session's last timestep is counted
+        if !self.live.is_empty() {
+            let share = step_modeled / self.live.len() as f64;
+            for s in &mut self.live {
+                s.timesteps += 1;
+                s.modeled_s += share;
+            }
+        }
+        for id in to_finish {
+            if let Some(si) = self.live_index(id) {
+                let fid = self.retire(si, true, &mut next_slots);
+                report.finished.push(fid);
+            }
+        }
+
+        self.slots = next_slots;
+        report.live = self.live.len();
+        report.queued = self.queue.len();
+        report.modeled_step_s = step_modeled;
+
+        // stall detection: with live sessions, some token must appear
+        // within one entry round-trip (slot-0 wait + pipeline traversal)
+        if report.made_progress() || self.live.is_empty() {
+            self.stalled_for = 0;
+        } else {
+            self.stalled_for += 1;
+            let limit = ((self.max_live + groups) as u64) * 4 + 64;
+            anyhow::ensure!(
+                self.stalled_for <= limit,
+                "scheduler stalled: {} steps without progress ({} live sessions)",
+                self.stalled_for,
+                self.live.len()
+            );
+        }
+        Ok(report)
+    }
+}
+
+impl ScheduledEngine for PipeDecDbEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::PipeDecDb
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    fn submit(&mut self, req: DecodeRequest, sink: Box<dyn TokenSink>) -> Result<SessionId> {
+        let (max_new, _, _) = req.resolve(&self.cfg);
+        anyhow::ensure!(max_new >= 1, "max_new_tokens must be >= 1");
+        anyhow::ensure!(
+            max_new + 2 < self.target.cfg.past_cap,
+            "max_new_tokens {} exceeds the model context budget ({})",
+            max_new,
+            self.target.cfg.past_cap
+        );
+        let max_prompt = self.target.cfg.past_cap - max_new - 2;
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        let mut shell = Session::new(id, req, sink);
+        shell.prompt_ids.truncate(max_prompt);
+        anyhow::ensure!(!shell.prompt_ids.is_empty(), "empty prompt");
+        self.queue.push_back(shell);
+        Ok(id)
+    }
+
+    fn step(&mut self) -> Result<StepReport> {
+        self.step_impl()
+    }
+
+    fn cancel(&mut self, id: SessionId) -> bool {
+        if let Some(qi) = self.queue.iter().position(|s| s.id == id) {
+            let shell = self.queue.remove(qi).expect("position is in bounds");
+            self.done
+                .push(shell.into_record(SessionStatus::Cancelled, None));
+            return true;
+        }
+        if let Some(si) = self.live_index(id) {
+            self.retire(si, false, &mut []);
+            return true;
+        }
+        false
+    }
+
+    fn poll(&mut self, id: SessionId) -> Option<DecodeOutput> {
+        let i = self
+            .done
+            .iter()
+            .position(|s| s.id == id && s.output.is_some())?;
+        self.done.remove(i).output
+    }
+
+    fn status(&self, id: SessionId) -> Option<SessionStatus> {
+        if self.queue.iter().any(|s| s.id == id) {
+            return Some(SessionStatus::Queued);
+        }
+        if self.live.iter().any(|s| s.base.id == id) {
+            return Some(SessionStatus::Running);
+        }
+        self.done.iter().find(|s| s.id == id).map(|s| s.status)
+    }
+
+    fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.live.is_empty()
+    }
+}
+
+impl Engine for PipeDecDbEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::PipeDecDb
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// One-shot conformance surface: a decode is one session stepped to
+    /// completion, streaming each verified token as its step reports it.
+    fn decode(&mut self, req: &DecodeRequest, sink: &mut dyn TokenSink) -> Result<DecodeOutput> {
+        let (max_new, _, _) = req.resolve(&self.cfg);
+        let id = ScheduledEngine::submit(self, req.clone(), Box::new(NullSink))?;
+        let groups = (self.cfg.stages / self.cfg.group_size) as u64;
+        let max_steps = (max_new as u64 + 8) * (groups + 2) * 4 + 64;
+        let mut steps = 0u64;
+        loop {
+            let rep = self.step_impl()?;
+            for &(sid, tok) in &rep.emitted {
+                if sid == id {
+                    sink.on_token(tok);
+                }
+            }
+            if rep.finished.contains(&id) {
+                return ScheduledEngine::poll(self, id)
+                    .context("finished session lost its output");
+            }
+            steps += 1;
+            anyhow::ensure!(
+                steps <= max_steps,
+                "timestep budget exceeded — engine stalled"
+            );
+        }
+    }
+}

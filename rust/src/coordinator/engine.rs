@@ -37,27 +37,19 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::sampling::{select_token, top_candidates, Sampling};
+use super::pipeline::{self, DataFlow};
+use super::sampling::{select_token, Sampling};
 use crate::config::EngineConfig;
 use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, SpecStats, TokenSink};
 use crate::kvcache::TwoLevelCache;
 use crate::metrics::Metrics;
-use crate::model::{bias, ModelHandles};
+use crate::model::ModelHandles;
 use crate::runtime::Runtime;
 use crate::schedule::CentralScheduler;
 use crate::tokenizer;
 use crate::transport::{LinkModel, LinkStats};
 use crate::tree::{PredictionTree, PruneOutcome};
 use crate::util::XorShiftRng;
-
-/// A data flow between pipeline nodes: the node ids of one tree layer plus
-/// the hidden states produced by the previous stage (absent for the
-/// draft -> L_1 edge, which carries token ids resolved through the tree).
-#[derive(Debug, Clone)]
-struct DataFlow {
-    ids: Vec<u64>,
-    hidden: Option<Vec<f32>>, // [W, d] padded; rows 0..ids.len() valid
-}
 
 /// The PipeDec engine over AOT artifacts.
 pub struct PipeDecEngine {
@@ -193,125 +185,36 @@ impl PipeDecEngine {
 
     /// Draft phase: process the unprocessed BFS suffix (the frontier layer),
     /// expand the tree by one layer, and return the new layer's data flow.
+    /// Thin wrapper over [`pipeline::draft_expand`], which SpecPipe-DB
+    /// shares.
     fn draft_phase(&mut self, tree: &mut PredictionTree) -> Result<(Option<DataFlow>, f64)> {
-        let dc = self.draft.cfg.clone();
-        let start = self.draft_cache.tree_len();
-        if start >= tree.len() || tree.len() >= self.draft_cache.tree_cap() {
-            return Ok((None, 0.0)); // frontier already processed or budget full
-        }
-        let indices: Vec<usize> = (start..tree.len()).collect();
-        anyhow::ensure!(
-            indices.len() <= dc.width_cap,
-            "frontier wider than width cap"
-        );
-        let t0 = Instant::now();
-        let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
-        let mut pos = vec![0i32; dc.width_cap];
-        for (r, &i) in indices.iter().enumerate() {
-            pos[r] = tree.position_of(i) as i32;
-        }
-        let rows = tree.bias_rows(&indices, dc.tree_cap, bias::NEG);
-        let tree_bias =
-            bias::pad_tree_bias_rows(rows, indices.len(), start, dc.width_cap, dc.tree_cap);
-        let logits = self.draft.full_forward_tree_block(
+        pipeline::draft_expand(
+            &mut self.draft,
             &self.rt,
             &mut self.draft_cache,
-            &tokens,
-            &pos,
-            &tree_bias,
-        )?;
-        let v = dc.vocab_size;
-        let c = self.cfg.tree.max_children;
-        let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
-            .map(|r| top_candidates(&logits[r * v..(r + 1) * v], c))
-            .collect();
-        let new_nodes = tree.expand_layer(&cands);
-        let elapsed = t0.elapsed().as_secs_f64();
-        if new_nodes.is_empty() {
-            return Ok((None, elapsed));
-        }
-        let ids = new_nodes.iter().map(|&i| tree.id(i)).collect();
-        Ok((Some(DataFlow { ids, hidden: None }), elapsed))
+            tree,
+            self.cfg.tree.max_children,
+        )
     }
 
     /// Stage phase for one stage: filter stale rows, run the layer span,
     /// return the outgoing data flow (None if everything was pruned away).
-    /// The past bias comes from the model's incremental bias cache keyed
-    /// off the stage cache's `past_len` (all stages agree on it because
-    /// promotions are synchronized).
+    /// Thin wrapper over [`pipeline::run_stage`], which SpecPipe-DB shares.
     fn stage_phase(
         &mut self,
         stage: usize,
         df: DataFlow,
         tree: &PredictionTree,
     ) -> Result<(Option<DataFlow>, f64)> {
-        let tc = self.target.cfg.clone();
-        let w = tc.width_cap;
-        let d = tc.dim;
-
-        // translate ids -> current indices; collect surviving rows
-        let mut indices = Vec::with_capacity(df.ids.len());
-        let mut kept_rows = Vec::with_capacity(df.ids.len());
-        for (r, &id) in df.ids.iter().enumerate() {
-            if let Some(i) = tree.index_of_id(id) {
-                indices.push(i);
-                kept_rows.push(r);
-            }
-        }
-        if indices.is_empty() {
-            return Ok((None, 0.0));
-        }
-        let t0 = Instant::now();
-        let count = indices.len();
-
-        let hidden = match &df.hidden {
-            None => {
-                let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
-                self.target.embed(&self.rt, &tokens)?
-            }
-            Some(h) => {
-                // compact surviving rows into a fresh padded block
-                let mut out = vec![0f32; w * d];
-                for (nr, &or) in kept_rows.iter().enumerate() {
-                    out[nr * d..(nr + 1) * d].copy_from_slice(&h[or * d..(or + 1) * d]);
-                }
-                out
-            }
-        };
-
-        let cache = &self.stage_caches[stage];
-        anyhow::ensure!(
-            cache.tree_len() == indices[0],
-            "stage {stage}: BFS prefix broken (cache {} vs first index {})",
-            cache.tree_len(),
-            indices[0]
-        );
-        let mut pos = vec![0i32; w];
-        for (r, &i) in indices.iter().enumerate() {
-            pos[r] = tree.position_of(i) as i32;
-        }
-        let rows = tree.bias_rows(&indices, tc.tree_cap, bias::NEG);
-        let tree_bias =
-            bias::pad_tree_bias_rows(rows, count, cache.tree_len(), w, tc.tree_cap);
-
         let range = self.layer_range(stage);
-        let h_out = self.target.stage_forward(
+        pipeline::run_stage(
+            &mut self.target,
             &self.rt,
             range,
             &mut self.stage_caches[stage],
-            hidden,
-            count,
-            &pos,
-            &tree_bias,
-        )?;
-        let ids = indices.iter().map(|&i| tree.id(i)).collect();
-        Ok((
-            Some(DataFlow {
-                ids,
-                hidden: Some(h_out),
-            }),
-            t0.elapsed().as_secs_f64(),
-        ))
+            df,
+            tree,
+        )
     }
 
     /// Account one inter-node transfer through the central scheduler and the
@@ -522,6 +425,7 @@ impl Engine for PipeDecEngine {
             modeled_s,
             spec: Some(SpecStats {
                 timesteps,
+                rounds: 0,
                 hits,
                 misses,
                 accepted_per_round: 0.0,

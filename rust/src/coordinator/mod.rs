@@ -1,4 +1,4 @@
-//! L3 coordinator: the PipeDec engine (paper §3) and its token-selection
+//! L3 coordinator: the PipeDec engines (paper §3) and their token-selection
 //! policies.
 //!
 //! * [`engine::PipeDecEngine`] — the paper's system contribution: a
@@ -7,11 +7,21 @@
 //!   KV caches, scheduled transfers, and hit/miss synchronization. It is
 //!   served through the crate-wide [`crate::engine::Engine`] trait and
 //!   returns the unified [`crate::engine::DecodeOutput`].
+//! * [`db::PipeDecDbEngine`] — SpecPipe-DB, the multi-request variant:
+//!   continuous batching of concurrent sessions into pipeline slots behind
+//!   the step-driven [`crate::engine::ScheduledEngine`] surface (and the
+//!   one-shot `Engine` trait for conformance).
+//! * [`pipeline`] — the per-request mechanics ([`pipeline::DataFlow`],
+//!   draft expansion, stage execution) both engines share, so their
+//!   per-session outputs are identical by construction.
 //! * [`sampling`] — greedy and stochastic (temperature/top-p/top-k) token
 //!   selection shared with the baselines.
 
+pub mod db;
 pub mod engine;
+pub mod pipeline;
 pub mod sampling;
 
+pub use db::PipeDecDbEngine;
 pub use engine::PipeDecEngine;
 pub use sampling::{select_token, top_candidates, Sampling};

@@ -1,0 +1,163 @@
+//! Per-request pipeline mechanics shared by the single-task PipeDec engine
+//! and the multi-request SpecPipe-DB scheduler: the [`DataFlow`] unit that
+//! travels between pipeline nodes, the draft phase (expand one tree layer),
+//! and the stage phase (run one stage's layer span over a flow).
+//!
+//! Both engines own *which* flows run *when* (one request's successive tree
+//! layers vs. a dynamic batch of flows from different sessions); the
+//! per-flow math here is identical, so extracting it guarantees the DB
+//! scheduler's per-session outputs match solo PipeDec token-for-token.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::sampling::top_candidates;
+use crate::kvcache::TwoLevelCache;
+use crate::model::{bias, ModelHandles};
+use crate::runtime::Runtime;
+use crate::tree::PredictionTree;
+
+/// A data flow between pipeline nodes: the node ids of one tree layer plus
+/// the hidden states produced by the previous stage (absent for the
+/// draft -> L_1 edge, which carries token ids resolved through the tree).
+#[derive(Debug, Clone)]
+pub struct DataFlow {
+    pub ids: Vec<u64>,
+    /// `[W, d]` padded; rows `0..ids.len()` valid.
+    pub hidden: Option<Vec<f32>>,
+}
+
+impl DataFlow {
+    /// The entry flow carrying a (re)initialized tree's root.
+    pub fn root(tree: &PredictionTree) -> Self {
+        Self {
+            ids: vec![tree.id(0)],
+            hidden: None,
+        }
+    }
+
+    /// Modeled wire bytes of this flow on the draft -> L_1 edge (token ids
+    /// only).
+    pub fn entry_bytes(&self) -> usize {
+        self.ids.len() * 8
+    }
+}
+
+/// Draft phase: process the unprocessed BFS suffix (the frontier layer) of
+/// `tree` through the draft model, expand the tree by one width-capped
+/// layer of top-`max_children` candidates, and return the new layer's data
+/// flow plus the measured draft seconds.
+pub fn draft_expand(
+    draft: &mut ModelHandles,
+    rt: &Runtime,
+    cache: &mut TwoLevelCache,
+    tree: &mut PredictionTree,
+    max_children: usize,
+) -> Result<(Option<DataFlow>, f64)> {
+    let dc = draft.cfg.clone();
+    let start = cache.tree_len();
+    if start >= tree.len() || tree.len() >= cache.tree_cap() {
+        return Ok((None, 0.0)); // frontier already processed or budget full
+    }
+    let indices: Vec<usize> = (start..tree.len()).collect();
+    anyhow::ensure!(
+        indices.len() <= dc.width_cap,
+        "frontier wider than width cap"
+    );
+    let t0 = Instant::now();
+    let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
+    let mut pos = vec![0i32; dc.width_cap];
+    for (r, &i) in indices.iter().enumerate() {
+        pos[r] = tree.position_of(i) as i32;
+    }
+    let rows = tree.bias_rows(&indices, dc.tree_cap, bias::NEG);
+    let tree_bias =
+        bias::pad_tree_bias_rows(rows, indices.len(), start, dc.width_cap, dc.tree_cap);
+    let logits = draft.full_forward_tree_block(rt, cache, &tokens, &pos, &tree_bias)?;
+    let v = dc.vocab_size;
+    let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
+        .map(|r| top_candidates(&logits[r * v..(r + 1) * v], max_children))
+        .collect();
+    let new_nodes = tree.expand_layer(&cands);
+    let elapsed = t0.elapsed().as_secs_f64();
+    if new_nodes.is_empty() {
+        return Ok((None, elapsed));
+    }
+    let ids = new_nodes.iter().map(|&i| tree.id(i)).collect();
+    Ok((Some(DataFlow { ids, hidden: None }), elapsed))
+}
+
+/// Stage phase for one stage: filter rows whose nodes were pruned while in
+/// flight, run the stage's layer span over the survivors with the stage's
+/// (per-request) cache, and return the outgoing data flow (`None` if
+/// everything was pruned away) plus the measured stage seconds. The past
+/// bias comes from the model's incremental bias cache keyed off the cache's
+/// `past_len` (all of one request's stages agree on it because promotions
+/// are synchronized at that request's sync points).
+pub fn run_stage(
+    target: &mut ModelHandles,
+    rt: &Runtime,
+    layer_range: std::ops::Range<usize>,
+    cache: &mut TwoLevelCache,
+    df: DataFlow,
+    tree: &PredictionTree,
+) -> Result<(Option<DataFlow>, f64)> {
+    let tc = target.cfg.clone();
+    let w = tc.width_cap;
+    let d = tc.dim;
+
+    // translate ids -> current indices; collect surviving rows
+    let mut indices = Vec::with_capacity(df.ids.len());
+    let mut kept_rows = Vec::with_capacity(df.ids.len());
+    for (r, &id) in df.ids.iter().enumerate() {
+        if let Some(i) = tree.index_of_id(id) {
+            indices.push(i);
+            kept_rows.push(r);
+        }
+    }
+    if indices.is_empty() {
+        return Ok((None, 0.0));
+    }
+    let t0 = Instant::now();
+    let count = indices.len();
+
+    let hidden = match &df.hidden {
+        None => {
+            let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
+            target.embed(rt, &tokens)?
+        }
+        Some(h) => {
+            // compact surviving rows into a fresh padded block
+            let mut out = vec![0f32; w * d];
+            for (nr, &or) in kept_rows.iter().enumerate() {
+                out[nr * d..(nr + 1) * d].copy_from_slice(&h[or * d..(or + 1) * d]);
+            }
+            out
+        }
+    };
+
+    anyhow::ensure!(
+        cache.tree_len() == indices[0],
+        "layers {:?}: BFS prefix broken (cache {} vs first index {})",
+        layer_range,
+        cache.tree_len(),
+        indices[0]
+    );
+    let mut pos = vec![0i32; w];
+    for (r, &i) in indices.iter().enumerate() {
+        pos[r] = tree.position_of(i) as i32;
+    }
+    let rows = tree.bias_rows(&indices, tc.tree_cap, bias::NEG);
+    let tree_bias = bias::pad_tree_bias_rows(rows, count, cache.tree_len(), w, tc.tree_cap);
+
+    let h_out = target.stage_forward(rt, layer_range, cache, hidden, count, &pos, &tree_bias)?;
+    let ids = indices.iter().map(|&i| tree.id(i)).collect();
+    Ok((
+        Some(DataFlow {
+            ids,
+            hidden: Some(h_out),
+        }),
+        t0.elapsed().as_secs_f64(),
+    ))
+}

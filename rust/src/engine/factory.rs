@@ -1,7 +1,10 @@
 //! The engine registry: [`EngineKind`] names every decoding strategy in
-//! the crate and [`build_engine`] constructs one behind `Box<dyn Engine>`.
-//! This is the only place in the repo that maps engine names to concrete
-//! types — CLI, server, examples, and benches all go through it.
+//! the crate; [`build_engine`] constructs one behind `Box<dyn Engine>` and
+//! [`build_scheduled_engine`] behind `Box<dyn ScheduledEngine>` (native
+//! multi-session scheduling for SpecPipe-DB, the [`OneShotScheduler`]
+//! adapter for everything else). This is the only place in the repo that
+//! maps engine names to concrete types — CLI, server, examples, and
+//! benches all go through it.
 
 use std::fmt;
 use std::path::Path;
@@ -9,10 +12,11 @@ use std::str::FromStr;
 
 use anyhow::Result;
 
+use super::session::{OneShotScheduler, ScheduledEngine};
 use super::Engine;
 use crate::baselines::{PpEngine, SlmEngine, StppEngine};
 use crate::config::EngineConfig;
-use crate::coordinator::PipeDecEngine;
+use crate::coordinator::{PipeDecDbEngine, PipeDecEngine};
 
 /// Every decoding strategy the crate can serve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -20,6 +24,10 @@ pub enum EngineKind {
     /// The paper's system: pipeline parallelism with the draft in the
     /// pipeline and a dynamic prediction tree (§3).
     PipeDec,
+    /// SpecPipe-DB: PipeDec with dynamic batching — pipeline slots carry
+    /// speculative tokens from *different* requests (multi-request
+    /// variant).
+    PipeDecDb,
     /// Standard pipeline parallelism, one token per traversal (§4.2).
     Pp,
     /// Static-tree pipeline speculative decoding (SpecInfer-style, §4.2).
@@ -30,8 +38,9 @@ pub enum EngineKind {
 
 impl EngineKind {
     /// Registry order used by every "compare all engines" surface.
-    pub const ALL: [EngineKind; 4] = [
+    pub const ALL: [EngineKind; 5] = [
         EngineKind::PipeDec,
+        EngineKind::PipeDecDb,
         EngineKind::Pp,
         EngineKind::Stpp,
         EngineKind::Slm,
@@ -41,6 +50,7 @@ impl EngineKind {
     pub fn name(self) -> &'static str {
         match self {
             EngineKind::PipeDec => "pipedec",
+            EngineKind::PipeDecDb => "pipedec-db",
             EngineKind::Pp => "pp",
             EngineKind::Stpp => "stpp",
             EngineKind::Slm => "slm",
@@ -51,6 +61,9 @@ impl EngineKind {
     pub fn describe(self) -> &'static str {
         match self {
             EngineKind::PipeDec => "pipeline + draft-in-pipeline dynamic-tree speculation",
+            EngineKind::PipeDecDb => {
+                "SpecPipe-DB: continuous batching of concurrent requests into pipeline slots"
+            }
             EngineKind::Pp => "plain pipeline parallelism, one token per traversal",
             EngineKind::Stpp => "static-tree pipeline speculative decoding",
             EngineKind::Slm => "draft-size model standalone on one device",
@@ -60,7 +73,10 @@ impl EngineKind {
     /// Engines whose output must match PP's greedy prefix (losslessness).
     /// SLM runs a different (smaller) model, so it is excluded.
     pub fn is_speculative(self) -> bool {
-        matches!(self, EngineKind::PipeDec | EngineKind::Stpp)
+        matches!(
+            self,
+            EngineKind::PipeDec | EngineKind::PipeDecDb | EngineKind::Stpp
+        )
     }
 }
 
@@ -95,9 +111,26 @@ pub fn build_engine(
 ) -> Result<Box<dyn Engine>> {
     Ok(match kind {
         EngineKind::PipeDec => Box::new(PipeDecEngine::new(artifact_dir, cfg)?),
+        EngineKind::PipeDecDb => Box::new(PipeDecDbEngine::new(artifact_dir, cfg)?),
         EngineKind::Pp => Box::new(PpEngine::new(artifact_dir, cfg)?),
         EngineKind::Stpp => Box::new(StppEngine::new(artifact_dir, cfg)?),
         EngineKind::Slm => Box::new(SlmEngine::new(artifact_dir, cfg)?),
+    })
+}
+
+/// Construct the step-driven scheduling surface for a kind: SpecPipe-DB
+/// schedules many sessions natively; every other kind is wrapped in the
+/// [`OneShotScheduler`] adapter (a degenerate one-session scheduler), so
+/// the continuous-batching server serves the whole registry through one
+/// code path.
+pub fn build_scheduled_engine(
+    kind: EngineKind,
+    artifact_dir: &Path,
+    cfg: EngineConfig,
+) -> Result<Box<dyn ScheduledEngine>> {
+    Ok(match kind {
+        EngineKind::PipeDecDb => Box::new(PipeDecDbEngine::new(artifact_dir, cfg)?),
+        _ => Box::new(OneShotScheduler::new(build_engine(kind, artifact_dir, cfg)?)),
     })
 }
 
@@ -116,6 +149,7 @@ mod tests {
     fn unknown_name_is_rejected_with_candidates() {
         let err = "warp-drive".parse::<EngineKind>().unwrap_err().to_string();
         assert!(err.contains("pipedec"), "error should list candidates: {err}");
+        assert!(err.contains("pipedec-db"), "db variant must be listed: {err}");
     }
 
     #[test]
@@ -124,6 +158,9 @@ mod tests {
             .into_iter()
             .filter(|k| k.is_speculative())
             .collect();
-        assert_eq!(spec, vec![EngineKind::PipeDec, EngineKind::Stpp]);
+        assert_eq!(
+            spec,
+            vec![EngineKind::PipeDec, EngineKind::PipeDecDb, EngineKind::Stpp]
+        );
     }
 }

@@ -23,15 +23,26 @@
 //!   [`EngineKind::ALL`] or parse a kind from a CLI string and get a
 //!   `Box<dyn Engine>`; nothing outside this module matches on engine
 //!   names by hand.
+//! * [`session`] — the step-driven scheduling surface on top:
+//!   [`ScheduledEngine`] (`submit`/`step`/`cancel`/`poll` over
+//!   [`Session`]s) with [`build_scheduled_engine`] serving every one-shot
+//!   kind through the [`OneShotScheduler`] adapter and SpecPipe-DB
+//!   ([`EngineKind::PipeDecDb`]) natively. The continuous-batching server
+//!   loop is written against it.
 //!
-//! Future scaling work (SpecPipe-DB dynamic batching, async stage
-//! execution, alternative backends) lands as new [`Engine`] implementations
-//! behind the same API — see ROADMAP.md.
+//! Future scaling work (async stage execution, alternative backends) lands
+//! as new [`Engine`] / [`ScheduledEngine`] implementations behind the same
+//! API — see ROADMAP.md.
 
 pub mod factory;
+pub mod session;
 pub mod sink;
 
-pub use factory::{build_engine, EngineKind};
+pub use factory::{build_engine, build_scheduled_engine, EngineKind};
+pub use session::{
+    OneShotScheduler, ScheduledEngine, Session, SessionId, SessionRecord, SessionStatus,
+    StepReport,
+};
 pub use sink::{FnSink, NullSink, TokenSink, VecSink};
 
 use anyhow::Result;
@@ -89,17 +100,22 @@ impl DecodeRequest {
 }
 
 /// Speculation statistics, present on [`DecodeOutput`] only for engines
-/// that speculate (PipeDec, STPP).
+/// that speculate (PipeDec, PipeDec-DB, STPP).
 ///
-/// Field semantics differ slightly by strategy and are documented per
-/// field; consumers should read the ones their engine kind defines.
+/// Counters an engine's strategy has no notion of are zero — `timesteps`
+/// and `rounds` are deliberately separate fields (they used to share one
+/// slot, which made "timesteps" mean *pipeline timesteps* for PipeDec but
+/// *verification rounds* for STPP and broke cross-engine comparisons).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SpecStats {
-    /// PipeDec: pipeline timesteps executed. STPP: verification rounds.
+    /// Pipeline timesteps executed (PipeDec / PipeDec-DB; 0 for STPP).
     pub timesteps: u64,
-    /// PipeDec only: sync points where the verified token was in the tree.
+    /// Serial draft-then-verify rounds (STPP; 0 for timestep-driven
+    /// engines).
+    pub rounds: u64,
+    /// PipeDec family: sync points where the verified token was in the tree.
     pub hits: u64,
-    /// PipeDec only: sync points that reinitialized the tree.
+    /// PipeDec family: sync points that reinitialized the tree.
     pub misses: u64,
     /// STPP only: mean tokens accepted per verification round.
     pub accepted_per_round: f64,
@@ -151,9 +167,14 @@ impl DecodeOutput {
         self.spec.map(|s| s.accepted_per_round).unwrap_or(0.0)
     }
 
-    /// Timesteps (PipeDec) / rounds (STPP); 0 for non-speculative engines.
+    /// Pipeline timesteps (PipeDec family); 0 elsewhere.
     pub fn timesteps(&self) -> u64 {
         self.spec.map(|s| s.timesteps).unwrap_or(0)
+    }
+
+    /// Draft-then-verify rounds (STPP); 0 elsewhere.
+    pub fn rounds(&self) -> u64 {
+        self.spec.map(|s| s.rounds).unwrap_or(0)
     }
 
     pub fn hits(&self) -> u64 {
@@ -243,6 +264,26 @@ mod tests {
         };
         assert_eq!(out.accept_rate(), 0.0);
         assert_eq!(out.timesteps(), 0);
+        assert_eq!(out.rounds(), 0);
         assert!((out.modeled_s_per_token() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timesteps_and_rounds_are_independent_fields() {
+        let spec = SpecStats {
+            timesteps: 7,
+            rounds: 3,
+            ..SpecStats::default()
+        };
+        let out = DecodeOutput {
+            tokens: vec![1],
+            text: String::new(),
+            wall_s: 0.0,
+            modeled_s: 0.0,
+            spec: Some(spec),
+            metrics: Metrics::new(),
+        };
+        assert_eq!(out.timesteps(), 7);
+        assert_eq!(out.rounds(), 3);
     }
 }

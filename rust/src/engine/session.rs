@@ -1,0 +1,425 @@
+//! Step-driven scheduling: the multi-request successor of the one-shot
+//! [`Engine::decode`] call.
+//!
+//! `Engine::decode(&mut self, req, sink)` commits the engine to one request
+//! from admission to completion, so a server built on it can only serve
+//! FIFO one-at-a-time. The paper's multi-request variant (SpecPipe-DB)
+//! instead fills pipeline slots with speculative tokens from *different*
+//! requests — which needs an API where the caller owns the clock:
+//!
+//! * [`Session`] — per-request decode state: id, prompt tokens, the
+//!   session's own KV caches, its streaming sink, and a
+//!   [`SessionStatus`] lifecycle (`Queued → Running → Finished` or
+//!   `Cancelled`).
+//! * [`ScheduledEngine`] — `submit` / `step` / `cancel` / `poll`: submit
+//!   enqueues a request and returns a [`SessionId`]; every `step` advances
+//!   the pipeline one timestep across all live sessions and reports what
+//!   happened as a [`StepReport`]; `poll` retrieves a finished session's
+//!   [`DecodeOutput`].
+//! * [`OneShotScheduler`] — the blanket adapter: wraps any existing
+//!   `Box<dyn Engine>` (PipeDec, PP, STPP, SLM) as a *degenerate
+//!   one-session scheduler* whose `step` serves exactly one queued session
+//!   to completion. Every registry entry is therefore servable through the
+//!   scheduled surface via [`crate::engine::build_scheduled_engine`]; the
+//!   native multi-session implementation is
+//!   [`crate::coordinator::PipeDecDbEngine`].
+//!
+//! The continuous-batching server loop ([`crate::server::serve_until_idle`])
+//! is written against `dyn ScheduledEngine` only.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use anyhow::Result;
+
+use super::{DecodeOutput, DecodeRequest, Engine, EngineKind, TokenSink};
+use crate::config::EngineConfig;
+use crate::kvcache::TwoLevelCache;
+use crate::tokenizer;
+
+/// Identifier of one submitted request within a scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+impl fmt::Display for SessionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Lifecycle of a session: `Queued → Running → Finished`, or `Cancelled`
+/// from either pre-terminal state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Submitted, not yet admitted into the pipeline.
+    Queued,
+    /// Admitted; owns pipeline slots and KV caches.
+    Running,
+    /// Decode complete; output retrievable via `poll` exactly once.
+    Finished,
+    /// Cancelled via `cancel`; never emits another token and never yields
+    /// an output.
+    Cancelled,
+}
+
+/// Per-request decode state owned by a scheduler.
+///
+/// The KV caches live *in the session* (not the engine) so a scheduler can
+/// interleave many requests over one set of model weights; engines that
+/// keep engine-owned caches (the one-shot adapters) leave `caches` empty.
+/// Schedulers that mint per-session caches must release the matching
+/// device mirrors at teardown ([`crate::model::ModelHandles::release_cache`]).
+pub struct Session {
+    pub id: SessionId,
+    pub req: DecodeRequest,
+    /// Tokenized (and context-truncated) prompt.
+    pub prompt_ids: Vec<u32>,
+    /// Per-session KV caches (pipeline stage caches plus, for speculative
+    /// schedulers, the draft cache last). Empty for one-shot adapters.
+    pub caches: Vec<TwoLevelCache>,
+    /// Streaming observer; receives every verified token exactly once, in
+    /// order, as soon as it is produced.
+    pub sink: Box<dyn TokenSink>,
+    pub status: SessionStatus,
+    /// Tokens emitted so far (always equals what the sink has seen).
+    pub tokens: Vec<u32>,
+}
+
+impl Session {
+    pub fn new(id: SessionId, req: DecodeRequest, sink: Box<dyn TokenSink>) -> Self {
+        let prompt_ids = tokenizer::encode(&req.prompt);
+        Self {
+            id,
+            req,
+            prompt_ids,
+            caches: Vec::new(),
+            sink,
+            status: SessionStatus::Queued,
+            tokens: Vec::new(),
+        }
+    }
+
+    /// Stream one verified token to the session's sink and record it.
+    pub fn emit(&mut self, token: u32) {
+        self.sink.on_token(token);
+        self.tokens.push(token);
+    }
+
+    /// Collapse into the terminal record a scheduler retains after the
+    /// session leaves the queue/pipeline — the heavy state (sink, caches,
+    /// prompt, token buffer) is dropped here, so a long-running scheduler
+    /// accumulates only small records for cancelled / unpolled sessions.
+    pub fn into_record(self, status: SessionStatus, output: Option<DecodeOutput>) -> SessionRecord {
+        SessionRecord {
+            id: self.id,
+            status,
+            output,
+        }
+    }
+}
+
+/// Terminal record of a retired session: id, final status, and (for
+/// finished sessions) the output until it is polled.
+#[derive(Debug)]
+pub struct SessionRecord {
+    pub id: SessionId,
+    pub status: SessionStatus,
+    pub output: Option<DecodeOutput>,
+}
+
+/// What one [`ScheduledEngine::step`] did.
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    /// Sessions admitted from the queue into the pipeline this step, in
+    /// admission (FIFO) order.
+    pub admitted: Vec<SessionId>,
+    /// Verified tokens emitted this step, in emission order.
+    pub emitted: Vec<(SessionId, u32)>,
+    /// Sessions that finished this step.
+    pub finished: Vec<SessionId>,
+    /// Live (admitted, unfinished) sessions after the step.
+    pub live: usize,
+    /// Still-queued sessions after the step.
+    pub queued: usize,
+    /// Modeled parallel-schedule seconds this step cost (the paper's
+    /// timestep latency model; a full decode for one-shot adapters).
+    pub modeled_step_s: f64,
+}
+
+impl StepReport {
+    /// True when the step admitted, emitted, or finished anything.
+    pub fn made_progress(&self) -> bool {
+        !self.admitted.is_empty() || !self.emitted.is_empty() || !self.finished.is_empty()
+    }
+
+    /// True when the scheduler holds no queued or live sessions.
+    pub fn is_idle(&self) -> bool {
+        self.live == 0 && self.queued == 0
+    }
+}
+
+/// A decoding strategy driven one pipeline timestep at a time across many
+/// concurrent sessions.
+///
+/// Contract (asserted by `rust/tests/scheduler.rs`):
+/// * admission is FIFO in submission order;
+/// * every non-cancelled session eventually finishes if `step` is called
+///   repeatedly (no starvation);
+/// * a cancelled session never emits another token and never yields an
+///   output;
+/// * under greedy sampling a session's output is independent of what else
+///   is co-scheduled (equal to its solo decode).
+pub trait ScheduledEngine {
+    /// Which registry entry this scheduler serves.
+    fn kind(&self) -> EngineKind;
+
+    /// The engine's effective configuration (after artifact clamping).
+    fn config(&self) -> &EngineConfig;
+
+    /// Enqueue a request; tokens stream into `sink` as they are verified.
+    fn submit(&mut self, req: DecodeRequest, sink: Box<dyn TokenSink>) -> Result<SessionId>;
+
+    /// Advance the pipeline one timestep across all live sessions,
+    /// admitting queued sessions into free pipeline slots first.
+    fn step(&mut self) -> Result<StepReport>;
+
+    /// Cancel a queued or running session. Returns true when the session
+    /// was found in a pre-terminal state; it will never emit again.
+    fn cancel(&mut self, id: SessionId) -> bool;
+
+    /// Take a finished session's output. Returns `None` while the session
+    /// is still queued/running, after cancellation, or on repeat polls;
+    /// a successful poll forgets the session.
+    fn poll(&mut self, id: SessionId) -> Option<DecodeOutput>;
+
+    /// Current lifecycle state, `None` for unknown (or polled) sessions.
+    fn status(&self, id: SessionId) -> Option<SessionStatus>;
+
+    /// True while any session is queued or live.
+    fn has_work(&self) -> bool;
+
+    /// Stable CLI/registry name.
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+}
+
+/// Forwards to the session's own sink while recording what was emitted so
+/// the adapter can report it.
+struct ForwardSink<'a> {
+    sink: &'a mut dyn TokenSink,
+    seen: &'a mut Vec<u32>,
+}
+
+impl TokenSink for ForwardSink<'_> {
+    fn on_token(&mut self, token: u32) {
+        self.sink.on_token(token);
+        self.seen.push(token);
+    }
+}
+
+/// Blanket adapter: any one-shot [`Engine`] served as a degenerate
+/// one-session scheduler. `step` pops the FIFO queue and decodes that one
+/// session to completion — single-task engines like PipeDec commit the
+/// whole pipeline to a request, so one session per step *is* their honest
+/// scheduling granularity (the paper's one-at-a-time baseline in Fig. 8).
+pub struct OneShotScheduler {
+    inner: Box<dyn Engine>,
+    queue: VecDeque<Session>,
+    done: Vec<SessionRecord>,
+    next_id: u64,
+}
+
+impl OneShotScheduler {
+    pub fn new(inner: Box<dyn Engine>) -> Self {
+        Self {
+            inner,
+            queue: VecDeque::new(),
+            done: Vec::new(),
+            next_id: 0,
+        }
+    }
+}
+
+impl ScheduledEngine for OneShotScheduler {
+    fn kind(&self) -> EngineKind {
+        self.inner.kind()
+    }
+
+    fn config(&self) -> &EngineConfig {
+        self.inner.config()
+    }
+
+    fn submit(&mut self, req: DecodeRequest, sink: Box<dyn TokenSink>) -> Result<SessionId> {
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        self.queue.push_back(Session::new(id, req, sink));
+        Ok(id)
+    }
+
+    fn step(&mut self) -> Result<StepReport> {
+        let mut report = StepReport::default();
+        let Some(mut sess) = self.queue.pop_front() else {
+            return Ok(report);
+        };
+        sess.status = SessionStatus::Running;
+        report.admitted.push(sess.id);
+        let mut fresh = Vec::new();
+        let out = {
+            let mut fwd = ForwardSink {
+                sink: sess.sink.as_mut(),
+                seen: &mut fresh,
+            };
+            self.inner.decode(&sess.req, &mut fwd)?
+        };
+        sess.tokens.extend_from_slice(&fresh);
+        report.emitted.extend(fresh.into_iter().map(|t| (sess.id, t)));
+        report.modeled_step_s = out.modeled_s;
+        report.finished.push(sess.id);
+        self.done
+            .push(sess.into_record(SessionStatus::Finished, Some(out)));
+        report.queued = self.queue.len();
+        Ok(report)
+    }
+
+    fn cancel(&mut self, id: SessionId) -> bool {
+        let Some(qi) = self.queue.iter().position(|s| s.id == id) else {
+            return false;
+        };
+        let sess = self.queue.remove(qi).expect("position is in bounds");
+        self.done
+            .push(sess.into_record(SessionStatus::Cancelled, None));
+        true
+    }
+
+    fn poll(&mut self, id: SessionId) -> Option<DecodeOutput> {
+        let i = self
+            .done
+            .iter()
+            .position(|s| s.id == id && s.output.is_some())?;
+        self.done.remove(i).output
+    }
+
+    fn status(&self, id: SessionId) -> Option<SessionStatus> {
+        if self.queue.iter().any(|s| s.id == id) {
+            return Some(SessionStatus::Queued);
+        }
+        self.done.iter().find(|s| s.id == id).map(|s| s.status)
+    }
+
+    fn has_work(&self) -> bool {
+        !self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{NullSink, VecSink};
+    use crate::metrics::Metrics;
+
+    /// Test double: "decodes" by echoing the prompt's token ids.
+    struct EchoEngine {
+        cfg: EngineConfig,
+    }
+
+    impl EchoEngine {
+        fn new() -> Self {
+            Self {
+                cfg: EngineConfig::default(),
+            }
+        }
+    }
+
+    impl Engine for EchoEngine {
+        fn kind(&self) -> EngineKind {
+            EngineKind::Pp
+        }
+
+        fn config(&self) -> &EngineConfig {
+            &self.cfg
+        }
+
+        fn decode(
+            &mut self,
+            req: &DecodeRequest,
+            sink: &mut dyn TokenSink,
+        ) -> Result<DecodeOutput> {
+            let (max_new, _, _) = req.resolve(&self.cfg);
+            let mut tokens = tokenizer::encode(&req.prompt);
+            tokens.truncate(max_new);
+            for &t in &tokens {
+                sink.on_token(t);
+            }
+            Ok(DecodeOutput {
+                text: tokenizer::decode(&tokens),
+                tokens,
+                wall_s: 0.0,
+                modeled_s: 0.1,
+                spec: None,
+                metrics: Metrics::new(),
+            })
+        }
+    }
+
+    #[test]
+    fn adapter_serves_fifo_one_session_per_step() {
+        let mut s = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let a = s.submit(DecodeRequest::new("aa"), Box::new(NullSink)).unwrap();
+        let b = s.submit(DecodeRequest::new("bb"), Box::new(NullSink)).unwrap();
+        assert!(a < b);
+        assert_eq!(s.status(a), Some(SessionStatus::Queued));
+        let r1 = s.step().unwrap();
+        assert_eq!(r1.admitted, vec![a]);
+        assert_eq!(r1.finished, vec![a]);
+        assert_eq!(r1.queued, 1);
+        assert!(r1.made_progress());
+        let r2 = s.step().unwrap();
+        assert_eq!(r2.finished, vec![b]);
+        assert!(r2.is_idle());
+        assert!(!s.has_work());
+        // idle steps are no-ops
+        assert!(!s.step().unwrap().made_progress());
+    }
+
+    #[test]
+    fn poll_takes_output_once_and_streams_through_session_sink() {
+        let mut s = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let sink = VecSink::new();
+        let id = s.submit(DecodeRequest::new("hi"), Box::new(sink)).unwrap();
+        let rep = s.step().unwrap();
+        let emitted: Vec<u32> = rep.emitted.iter().map(|&(_, t)| t).collect();
+        assert_eq!(emitted, tokenizer::encode("hi"));
+        assert_eq!(s.status(id), Some(SessionStatus::Finished));
+        let out = s.poll(id).expect("finished session must be pollable");
+        assert_eq!(out.tokens, tokenizer::encode("hi"));
+        assert!(s.poll(id).is_none(), "poll takes the output exactly once");
+    }
+
+    #[test]
+    fn cancel_only_hits_queued_sessions() {
+        let mut s = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let a = s.submit(DecodeRequest::new("aa"), Box::new(NullSink)).unwrap();
+        let b = s.submit(DecodeRequest::new("bb"), Box::new(NullSink)).unwrap();
+        assert!(s.cancel(b), "queued session must be cancellable");
+        assert_eq!(s.status(b), Some(SessionStatus::Cancelled));
+        let rep = s.step().unwrap();
+        assert_eq!(rep.finished, vec![a]);
+        assert!(!s.cancel(a), "finished session is not cancellable");
+        assert!(s.poll(b).is_none(), "cancelled session never yields output");
+        assert!(!s.cancel(SessionId(99)), "unknown id");
+    }
+
+    #[test]
+    fn per_request_overrides_apply_through_submit() {
+        let mut s = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let id = s
+            .submit(
+                DecodeRequest::new("hello world").with_max_new_tokens(3),
+                Box::new(NullSink),
+            )
+            .unwrap();
+        s.step().unwrap();
+        assert_eq!(s.poll(id).unwrap().tokens.len(), 3);
+    }
+}

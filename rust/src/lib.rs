@@ -20,14 +20,22 @@
 //!   trait, unified [`engine::DecodeRequest`] / [`engine::DecodeOutput`]
 //!   shapes, the [`engine::TokenSink`] streaming observer, and the
 //!   [`engine::EngineKind`] registry + [`engine::build_engine`] factory.
-//!   New decoding strategies (SpecPipe-DB dynamic batching, async stages)
-//!   plug in here.
+//!   On top of it, [`engine::session`] is the step-driven scheduling
+//!   surface: [`engine::ScheduledEngine`]
+//!   (`submit`/`step`/`cancel`/`poll` over per-request
+//!   [`engine::Session`]s) built by [`engine::build_scheduled_engine`] —
+//!   SpecPipe-DB schedules natively, every one-shot kind rides the
+//!   [`engine::OneShotScheduler`] adapter. New decoding strategies (async
+//!   stages, alternative backends) plug in here.
 //!
 //! The strategies served behind it:
 //!
-//! * [`coordinator`] — the PipeDec engine itself: timestep groups, draft in
-//!   the pipeline, dynamic prediction tree, hit/miss synchronization; plus
-//!   shared token sampling.
+//! * [`coordinator`] — the PipeDec engines: the single-task engine
+//!   (timestep groups, draft in the pipeline, dynamic prediction tree,
+//!   hit/miss synchronization), the SpecPipe-DB continuous-batching
+//!   scheduler ([`coordinator::PipeDecDbEngine`], per-session caches and
+//!   trees interleaved over the pipeline slots), the per-request
+//!   mechanics they share ([`coordinator::pipeline`]), and token sampling.
 //! * [`baselines`] — PP / STPP / SLM comparison engines (paper §4.2).
 //!
 //! The substrate they share:
@@ -53,8 +61,11 @@
 //!
 //! Serving, evaluation, and paper-scale extrapolation:
 //!
-//! * [`server`] — router + FIFO queue draining into any `dyn Engine` with
-//!   per-request overrides and time-to-first-token capture.
+//! * [`server`] — router (bounded FIFO admission) + the continuous-batching
+//!   event loop [`server::serve_until_idle`] over any `dyn ScheduledEngine`,
+//!   with per-request overrides and per-request TTFT / time-between-tokens
+//!   capture (the Fig. 8 serving metrics); [`server::drain`] remains the
+//!   closed-batch convenience over a plain `dyn Engine`.
 //! * [`sim`] — calibrated cluster simulator for paper-scale figures.
 //! * [`workload`], [`bench_support`] — the six evaluation domains and the
 //!   bench harness used by `rust/benches/fig*.rs`.

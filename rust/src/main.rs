@@ -14,8 +14,10 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use pipedec::config::EngineConfig;
-use pipedec::engine::{build_engine, DecodeRequest, EngineKind, NullSink, TokenSink};
-use pipedec::server::{drain, summarize, Router};
+use pipedec::engine::{
+    build_engine, build_scheduled_engine, DecodeRequest, EngineKind, NullSink, TokenSink,
+};
+use pipedec::server::{serve_until_idle, summarize, Router};
 use pipedec::sim::{simulate_pipedec, simulate_pp, simulate_stpp, ClusterSpec, HitModel};
 use pipedec::tokenizer;
 use pipedec::util::XorShiftRng;
@@ -31,17 +33,20 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
                   (--no-stream prints only the final completion)
   pipedec serve   [--engine KIND] [--requests N] [--queue-cap N]
                   [engine flags as for decode]
-                  submit N mixed-domain requests through the router and one
-                  engine worker (the Fig. 8 process-pool experiment)
+                  submit N mixed-domain requests through the router and the
+                  continuous-batching scheduler (the Fig. 8 experiment);
+                  pipedec-db interleaves requests in the pipeline, every
+                  other engine serves FIFO one-at-a-time
   pipedec sim     [--stages N] [--width W] [--children C] [--tokens N]
                   [--domain D]
                   paper-scale cluster simulation (70B / RTX3090)
   pipedec info    artifact + config summary
 
-  KIND (--engine): pipedec  pipeline + draft-in-pipeline dynamic-tree speculation
-                   pp       plain pipeline parallelism, one token per traversal
-                   stpp     static-tree pipeline speculative decoding
-                   slm      draft-size model standalone on one device";
+  KIND (--engine): pipedec     pipeline + draft-in-pipeline dynamic-tree speculation
+                   pipedec-db  SpecPipe-DB: continuous batching across requests
+                   pp          plain pipeline parallelism, one token per traversal
+                   stpp        static-tree pipeline speculative decoding
+                   slm         draft-size model standalone on one device";
 
 /// Flags that take no value; everything else expects one.
 const BOOL_FLAGS: &[&str] = &["no-stream"];
@@ -186,8 +191,9 @@ fn cmd_decode(flags: HashMap<String, String>) -> Result<()> {
     );
     if let Some(spec) = r.spec {
         println!(
-            "spec: timesteps={} hits={} misses={} accept={:.2} accepted/round={:.2}",
+            "spec: timesteps={} rounds={} hits={} misses={} accept={:.2} accepted/round={:.2}",
             spec.timesteps,
+            spec.rounds,
             spec.hits,
             spec.misses,
             spec.accept_rate(),
@@ -205,7 +211,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
     anyhow::ensure!(n >= 1, "--requests must be >= 1");
     let dir = pipedec::artifacts_dir();
 
-    let mut engine = build_engine(kind, &dir, cfg)?;
+    let mut sched = build_scheduled_engine(kind, &dir, cfg)?;
     let prompts = mixed_stream(&dir, (n + 5) / 6)?;
     let mut router = Router::new(cap);
     for p in prompts.iter().take(n) {
@@ -218,7 +224,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let completions = drain(&mut router, engine.as_mut())?;
+    let completions = serve_until_idle(&mut router, sched.as_mut())?;
     let wall = t0.elapsed().as_secs_f64();
 
     let (metrics, lat) = summarize(&completions, wall);
@@ -231,8 +237,16 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
         lat.percentile(99.0)
     );
     println!(
-        "first token: mean={:.2}s (service start -> first streamed token)",
+        "first token: mean={:.2}s (admission -> first streamed token)",
         metrics.summary("first_token_s").mean()
+    );
+    println!(
+        "inter-token: mean={:.3}s (mean time between streamed tokens)",
+        metrics.summary("tbt_s").mean()
+    );
+    println!(
+        "queue depth: mean={:.1} at admission",
+        metrics.summary("queue_depth").mean()
     );
     println!(
         "throughput:  {:.1} tokens/s over {:.2}s wall",

@@ -112,12 +112,12 @@ pub struct ModelHandles {
     past_bias: PastBiasCache,
     past_bias_buf: Option<(u64, DeviceBuffer)>,
     // Per-cache KV mirrors, keyed by `TwoLevelCache::id`. Lifetime
-    // contract: entries are never evicted, so callers must create their
-    // caches once per engine and `reset()` them between requests (as all
-    // four engines do) — minting or cloning a fresh cache per request
-    // against a long-lived ModelHandles would strand the dead cache's
-    // mirror here. Request-scoped cache churn (SpecPipe-DB batching)
-    // needs an eviction hook first — see ROADMAP.md.
+    // contract: an entry lives until `release_cache(id)` evicts it, so
+    // engines that keep long-lived caches create them once and `reset()`
+    // between requests (the one-shot engines), while schedulers that mint
+    // per-session caches (SpecPipe-DB) must release each cache's mirror
+    // at session teardown or the device buffers leak for the engine's
+    // lifetime.
     dev_kv: HashMap<u64, DeviceKvCache>,
 }
 
@@ -199,6 +199,21 @@ impl ModelHandles {
     /// Effective block width of the loaded artifact variant.
     pub fn width(&self) -> usize {
         self.cfg.width_cap
+    }
+
+    /// Evict the device KV mirror of cache `cache_id` (the value of
+    /// [`TwoLevelCache::id`]); returns whether a mirror existed. Dropping
+    /// the mirror frees its device buffers; the next forward pass over a
+    /// cache with that id would transparently rebuild it with one full
+    /// upload. Sessions that mint per-request caches (SpecPipe-DB) call
+    /// this at teardown.
+    pub fn release_cache(&mut self, cache_id: u64) -> bool {
+        self.dev_kv.remove(&cache_id).is_some()
+    }
+
+    /// Number of live device KV mirrors (leak accounting in tests).
+    pub fn mirror_count(&self) -> usize {
+        self.dev_kv.len()
     }
 
     /// Token ids -> hidden states `[W, d]`. Input is padded to `width_cap`.
@@ -508,6 +523,35 @@ mod tests {
         let top = top_k_indices(&logits, 1)[0];
         assert!(top >= 3, "greedy next token {top} should not be PAD/BOS");
         assert_eq!(cache.past_len(), prompt.len());
+    }
+
+    #[test]
+    fn release_cache_evicts_the_device_mirror_and_rebuilds_on_reuse() {
+        // Per-session cache churn (SpecPipe-DB) must not strand mirrors:
+        // release drops the entry, a second release is a no-op, and a new
+        // cache (fresh id) builds a fresh mirror transparently.
+        let Some((rt, mut m)) = setup() else { return };
+        let c = m.cfg.clone();
+        let prompt = crate::tokenizer::encode("<math>\nquestion: 1 + 1?");
+        let mut cache = TwoLevelCache::new(
+            c.n_layers, c.n_heads, c.head_dim, c.past_cap, c.tree_cap,
+        );
+        assert_eq!(m.mirror_count(), 0);
+        m.full_prefill(&rt, &mut cache, &prompt).unwrap();
+        assert_eq!(m.mirror_count(), 1, "prefill mints one mirror per cache");
+        assert!(m.release_cache(cache.id()));
+        assert_eq!(m.mirror_count(), 0, "release must evict the mirror");
+        assert!(
+            !m.release_cache(cache.id()),
+            "double release is a reported no-op"
+        );
+        // a fresh per-session cache rebuilds its own mirror on first use
+        let mut cache2 = TwoLevelCache::new(
+            c.n_layers, c.n_heads, c.head_dim, c.past_cap, c.tree_cap,
+        );
+        m.full_prefill(&rt, &mut cache2, &prompt).unwrap();
+        assert_eq!(m.mirror_count(), 1);
+        assert!(m.release_cache(cache2.id()));
     }
 
     #[test]

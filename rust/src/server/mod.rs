@@ -1,22 +1,35 @@
-//! Request server: router + FIFO batcher + engine worker.
+//! Request server: router + continuous-batching event loop.
 //!
-//! PipeDec is a *single-task* accelerator (it commits every pipeline stage
-//! to one request), so the server runs one engine worker and a bounded
-//! admission queue; the paper's Fig. 8 process-pool experiment maps to
-//! submitting `k` concurrent requests and measuring completion throughput.
 //! The router is engine-agnostic: it queues [`DecodeRequest`]s (prompt plus
-//! per-request overrides) and [`drain`] serves them through any
-//! `&mut dyn Engine` — all four [`crate::engine::EngineKind`]s go through
-//! the same front end via [`crate::engine::build_engine`]. Service is
-//! streaming-aware: the worker observes the engine's token stream and
-//! records time-to-first-token on every [`Completion`].
+//! per-request overrides) with a bounded FIFO admission queue
+//! (backpressure). Service happens through the step-driven scheduling
+//! surface ([`crate::engine::ScheduledEngine`]):
+//!
+//! * [`serve_until_idle`] — the continuous-batching event loop: it moves
+//!   queued requests from the router into the scheduler (recording the
+//!   queue depth each request saw at admission), then drives
+//!   `scheduler.step()` until everything finished, so admission overlaps
+//!   with decode. With `EngineKind::PipeDecDb` the pipeline carries
+//!   several requests at once; every other kind degrades gracefully to
+//!   FIFO one-at-a-time through the `OneShotScheduler` adapter.
+//! * [`drain`] — the closed-batch convenience over a plain
+//!   `&mut dyn Engine` (kept for single-engine callers and benches).
+//!
+//! Service is streaming-aware: every request decodes through a
+//! [`StreamProbe`] sink that timestamps each token, so each
+//! [`Completion`] reports time-to-first-token *and* mean time-between-
+//! tokens — the paper's Fig. 8 serving metrics — alongside full latency.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::engine::{DecodeRequest, Engine, TokenSink};
+use crate::engine::{
+    DecodeRequest, Engine, ScheduledEngine, SessionId, TokenSink,
+};
 use crate::metrics::Metrics;
 use crate::util::Summary;
 
@@ -37,9 +50,17 @@ pub struct Completion {
     pub tokens: usize,
     /// queueing delay + service, seconds
     pub latency_s: f64,
+    /// Admission into the engine until completion, seconds.
     pub service_s: f64,
-    /// Service start until the first streamed token, seconds.
+    /// Admission into the engine until the first streamed token, seconds
+    /// (TTFT).
     pub first_token_s: f64,
+    /// Mean time between consecutive streamed tokens, seconds (TBT);
+    /// 0 when the request produced fewer than two tokens.
+    pub tbt_s: f64,
+    /// Router queue depth this request saw at admission into the engine
+    /// (itself included) — the Fig. 8 concurrency axis as observed.
+    pub queue_depth: usize,
     /// Modeled parallel-schedule decode seconds reported by the engine.
     pub modeled_s: f64,
 }
@@ -95,58 +116,184 @@ impl Router {
     }
 }
 
-/// Records the instant of the first streamed token relative to service
-/// start — the server's time-to-first-token probe.
-struct FirstTokenProbe {
+/// Per-token record of one request's stream: the tokens and a timestamp
+/// per token, relative to admission. The server's TTFT / TBT probe; also
+/// usable directly as a [`TokenSink`] for synchronous (closed-batch)
+/// service, and by benches that need the stream *and* its timing (the
+/// fig8 SpecPipe-DB head-to-head).
+#[derive(Debug)]
+pub struct ProbeState {
     start: Instant,
-    first_s: Option<f64>,
-    tokens: usize,
+    stamps: Vec<f64>,
+    stream: Vec<u32>,
 }
 
-impl FirstTokenProbe {
-    fn new() -> Self {
+impl ProbeState {
+    pub fn new() -> Self {
         Self {
             start: Instant::now(),
-            first_s: None,
-            tokens: 0,
+            stamps: Vec::new(),
+            stream: Vec::new(),
         }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// The streamed tokens, in emission order.
+    pub fn stream(&self) -> &[u32] {
+        &self.stream
+    }
+
+    /// Seconds from admission to the first token, or `None` before it.
+    pub fn first_token_s(&self) -> Option<f64> {
+        self.stamps.first().copied()
+    }
+
+    /// Mean gap between consecutive tokens (0 with fewer than 2 tokens).
+    pub fn tbt_s(&self) -> f64 {
+        if self.stamps.len() < 2 {
+            return 0.0;
+        }
+        let span = self.stamps[self.stamps.len() - 1] - self.stamps[0];
+        span / (self.stamps.len() - 1) as f64
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
     }
 }
 
-impl TokenSink for FirstTokenProbe {
-    fn on_token(&mut self, _token: u32) {
-        if self.first_s.is_none() {
-            self.first_s = Some(self.start.elapsed().as_secs_f64());
-        }
-        self.tokens += 1;
+impl Default for ProbeState {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
-/// Serve everything currently queued through an engine, FIFO. Returns
-/// per-request completions with full-latency and first-token timings.
+impl TokenSink for ProbeState {
+    fn on_token(&mut self, token: u32) {
+        self.stamps.push(self.start.elapsed().as_secs_f64());
+        self.stream.push(token);
+    }
+}
+
+/// Shared-handle wrapper so the server can hand a probe to the scheduler
+/// as the session's sink while keeping a reader for completion time.
+/// (The server is single-threaded; `Rc<RefCell>` is the honest cost.)
+pub struct StreamProbe(pub Rc<RefCell<ProbeState>>);
+
+impl StreamProbe {
+    pub fn new() -> (Self, Rc<RefCell<ProbeState>>) {
+        let state = Rc::new(RefCell::new(ProbeState::new()));
+        (Self(state.clone()), state)
+    }
+}
+
+impl TokenSink for StreamProbe {
+    fn on_token(&mut self, token: u32) {
+        self.0.borrow_mut().on_token(token);
+    }
+}
+
+/// Bookkeeping for one request in flight inside the scheduler.
+struct Ticket {
+    router_id: u64,
+    sid: SessionId,
+    arrived_at: f64,
+    queue_depth: usize,
+    probe: Rc<RefCell<ProbeState>>,
+}
+
+/// Continuous-batching event loop: admit everything the router holds into
+/// the scheduler, then step the scheduler until idle, collecting
+/// per-request completions as sessions finish. Admission overlaps with
+/// decode — the scheduler admits sessions into pipeline slots per step —
+/// and requests submitted to the router *between* calls are picked up by
+/// the next call.
+pub fn serve_until_idle(
+    router: &mut Router,
+    sched: &mut dyn ScheduledEngine,
+) -> Result<Vec<Completion>> {
+    let mut tickets: Vec<Ticket> = Vec::new();
+    let mut out = Vec::new();
+    loop {
+        // admission: hand queued requests to the scheduler, tagging each
+        // with the queue depth it observed (itself included)
+        while router.depth() > 0 {
+            let depth = router.depth();
+            let req = router.pop().expect("depth > 0");
+            let (probe_sink, probe) = StreamProbe::new();
+            let sid = sched.submit(req.req, Box::new(probe_sink))?;
+            tickets.push(Ticket {
+                router_id: req.id,
+                sid,
+                arrived_at: req.arrived_at,
+                queue_depth: depth,
+                probe,
+            });
+        }
+        if !sched.has_work() {
+            break;
+        }
+        let rep = sched.step()?;
+        for fid in &rep.finished {
+            let Some(ti) = tickets.iter().position(|t| t.sid == *fid) else {
+                continue; // not ours (caller submitted directly)
+            };
+            let ticket = tickets.remove(ti);
+            let output = sched
+                .poll(ticket.sid)
+                .context("finished session must be pollable")?;
+            let probe = ticket.probe.borrow();
+            let service = probe.elapsed_s();
+            debug_assert_eq!(probe.tokens(), output.tokens.len());
+            out.push(Completion {
+                id: ticket.router_id,
+                engine: sched.name(),
+                tokens: output.tokens.len(),
+                latency_s: router.now() - ticket.arrived_at,
+                service_s: service,
+                first_token_s: probe.first_token_s().unwrap_or(service),
+                tbt_s: probe.tbt_s(),
+                queue_depth: ticket.queue_depth,
+                modeled_s: output.modeled_s,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Closed-batch convenience: serve everything currently queued through a
+/// one-shot engine, FIFO, one request at a time. Same [`Completion`]
+/// shape (TTFT, TBT, queue depth) as the continuous loop.
 pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Completion>> {
     let mut out = Vec::new();
     while let Some(req) = router.pop() {
-        let mut probe = FirstTokenProbe::new();
+        let depth = router.depth() + 1; // this request + those behind it
+        let mut probe = ProbeState::new();
         let result = engine.decode(&req.req, &mut probe)?;
-        let service = probe.start.elapsed().as_secs_f64();
-        debug_assert_eq!(probe.tokens, result.tokens.len());
+        let service = probe.elapsed_s();
+        debug_assert_eq!(probe.tokens(), result.tokens.len());
         out.push(Completion {
             id: req.id,
             engine: engine.name(),
             tokens: result.tokens.len(),
             latency_s: router.now() - req.arrived_at,
             service_s: service,
-            first_token_s: probe.first_s.unwrap_or(service),
+            first_token_s: probe.first_token_s().unwrap_or(service),
+            tbt_s: probe.tbt_s(),
+            queue_depth: depth,
             modeled_s: result.modeled_s,
         });
     }
     Ok(out)
 }
 
-/// Aggregate a batch of completions into the numbers Fig. 8 reports.
-/// Returns counters/series (including `first_token_s`) and the full-latency
-/// sample summary.
+/// Aggregate a batch of completions into the numbers Fig. 8 reports:
+/// counters plus `latency_s`, `first_token_s`, `tbt_s`, and `queue_depth`
+/// series, and the full-latency sample summary. `tbt_s` samples only
+/// requests that streamed at least two tokens.
 pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) {
     let mut m = Metrics::new();
     let mut lat = Vec::new();
@@ -156,6 +303,10 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
         m.incr("tokens", c.tokens as u64);
         m.record("latency_s", c.latency_s);
         m.record("first_token_s", c.first_token_s);
+        if c.tokens >= 2 {
+            m.record("tbt_s", c.tbt_s);
+        }
+        m.record("queue_depth", c.queue_depth as f64);
         lat.push(c.latency_s);
         total_tokens += c.tokens;
     }
@@ -169,11 +320,11 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
 mod tests {
     use super::*;
     use crate::config::EngineConfig;
-    use crate::engine::{DecodeOutput, EngineKind};
+    use crate::engine::{DecodeOutput, EngineKind, OneShotScheduler};
     use crate::tokenizer;
 
     /// Test double: "decodes" by echoing the prompt's token ids, streaming
-    /// each one — exercises the trait-object service path without artifacts.
+    /// each one — exercises the service paths without artifacts.
     struct EchoEngine {
         cfg: EngineConfig,
     }
@@ -247,11 +398,48 @@ mod tests {
         assert_eq!(done.len(), 3);
         assert!(done.iter().all(|c| c.latency_s >= 0.0));
         assert!(done.iter().all(|c| c.first_token_s <= c.service_s));
+        assert!(done.iter().all(|c| c.tbt_s >= 0.0));
         assert!(done.iter().all(|c| c.engine == "pp"));
+        // first in line saw the full queue; last saw only itself
+        assert_eq!(done[0].queue_depth, 3);
+        assert_eq!(done[2].queue_depth, 1);
         let (m, lat) = summarize(&done, 1.0);
         assert_eq!(m.counter("requests"), 3);
         assert_eq!(m.samples("first_token_s").len(), 3);
+        assert_eq!(m.samples("tbt_s").len(), 3);
+        assert_eq!(m.samples("queue_depth").len(), 3);
         assert_eq!(lat.len(), 3);
+    }
+
+    #[test]
+    fn serve_until_idle_matches_drain_for_one_shot_engines() {
+        let mut r = Router::new(8);
+        for i in 0..3 {
+            r.submit_prompt(&format!("prompt number {i}")).unwrap();
+        }
+        let mut sched = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let done = serve_until_idle(&mut r, &mut sched).unwrap();
+        assert_eq!(done.len(), 3);
+        // FIFO service through the adapter; ids preserved from the router
+        assert_eq!(
+            done.iter().map(|c| c.id).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert!(done.iter().all(|c| c.tokens > 0));
+        assert!(done.iter().all(|c| c.first_token_s <= c.service_s));
+        // all three entered the scheduler while the router held all three
+        assert_eq!(done[0].queue_depth, 3);
+        assert_eq!(done[1].queue_depth, 2);
+        assert_eq!(done[2].queue_depth, 1);
+        assert_eq!(r.depth(), 0);
+    }
+
+    #[test]
+    fn serve_until_idle_on_empty_router_is_a_noop() {
+        let mut r = Router::new(2);
+        let mut sched = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let done = serve_until_idle(&mut r, &mut sched).unwrap();
+        assert!(done.is_empty());
     }
 
     #[test]
@@ -259,8 +447,24 @@ mod tests {
         let mut r = Router::new(4);
         r.submit(DecodeRequest::new("hello world").with_max_new_tokens(3))
             .unwrap();
-        let mut engine = EchoEngine::new();
-        let done = drain(&mut r, &mut engine).unwrap();
+        let mut sched = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let done = serve_until_idle(&mut r, &mut sched).unwrap();
         assert_eq!(done[0].tokens, 3);
+    }
+
+    #[test]
+    fn probe_reports_ttft_and_tbt() {
+        let mut p = ProbeState::new();
+        assert_eq!(p.tbt_s(), 0.0);
+        assert!(p.first_token_s().is_none());
+        p.on_token(1);
+        assert!(p.first_token_s().is_some());
+        assert_eq!(p.tbt_s(), 0.0, "one token has no inter-token gap");
+        p.on_token(2);
+        p.on_token(3);
+        assert_eq!(p.tokens(), 3);
+        let span = p.stamps[2] - p.stamps[0];
+        assert!((p.tbt_s() - span / 2.0).abs() < 1e-12);
+        assert!(p.tbt_s() >= 0.0);
     }
 }

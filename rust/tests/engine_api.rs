@@ -1,11 +1,17 @@
 //! Trait-conformance suite for the unified engine API: every
-//! `EngineKind` must (a) stream exactly its final token sequence through
-//! the `TokenSink`, (b) if speculative, match PP's greedy prefix
-//! (losslessness), and (c) honor per-request `max_new_tokens` overrides
-//! without mutating the engine's configuration.
+//! `EngineKind` (including `PipeDecDb`) must (a) stream exactly its final
+//! token sequence through the `TokenSink`, (b) if speculative, match PP's
+//! greedy prefix (losslessness), (c) honor per-request `max_new_tokens`
+//! overrides without mutating the engine's configuration, and (d) serve
+//! identically through the scheduled (`submit`/`step`/`poll`) surface.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::engine::{build_engine, DecodeRequest, Engine, EngineKind, VecSink};
+use pipedec::engine::{
+    build_engine, build_scheduled_engine, DecodeRequest, Engine, EngineKind, TokenSink, VecSink,
+};
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = pipedec::artifacts_dir();
@@ -72,6 +78,71 @@ fn spec_stats_presence_matches_registry_split() {
         let out = e.decode_prompt(PROMPT).unwrap();
         assert_eq!(out.spec.is_some(), kind.is_speculative(),
             "{kind}: SpecStats presence disagrees with is_speculative()");
+    }
+}
+
+/// Stream buffer shared between a session's sink and the test.
+type SharedBuf = Rc<RefCell<Vec<u32>>>;
+
+/// Sink whose contents outlive the scheduler's `Box<dyn TokenSink>`.
+#[derive(Clone, Default)]
+struct SharedSink(SharedBuf);
+
+impl TokenSink for SharedSink {
+    fn on_token(&mut self, token: u32) {
+        self.0.borrow_mut().push(token);
+    }
+}
+
+#[test]
+fn scheduled_surface_matches_one_shot_decode_for_every_kind() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    for kind in EngineKind::ALL {
+        let expected = build_engine(kind, &dir, cfg()).unwrap()
+            .decode_prompt(PROMPT).unwrap();
+
+        let mut sched = build_scheduled_engine(kind, &dir, cfg()).unwrap();
+        assert_eq!(sched.kind(), kind);
+        assert_eq!(sched.name(), kind.name());
+        let buf = SharedBuf::default();
+        let id = sched
+            .submit(DecodeRequest::new(PROMPT), Box::new(SharedSink(buf.clone())))
+            .unwrap();
+        // per-request override rides along as a second session
+        let id_short = sched
+            .submit(DecodeRequest::new(PROMPT).with_max_new_tokens(6),
+                Box::new(pipedec::engine::NullSink))
+            .unwrap();
+        for _ in 0..100_000 {
+            if !sched.has_work() { break }
+            sched.step().unwrap();
+        }
+        assert!(!sched.has_work(), "{kind}: scheduler must go idle");
+        let out = sched.poll(id).expect("finished session is pollable");
+        assert_eq!(out.tokens, expected.tokens,
+            "{kind}: scheduled decode diverged from one-shot decode");
+        assert_eq!(*buf.borrow(), out.tokens,
+            "{kind}: scheduled stream diverged from final output");
+        let short = sched.poll(id_short).expect("override session finishes");
+        assert!(short.tokens.len() <= 6,
+            "{kind}: scheduled override ignored ({} tokens)", short.tokens.len());
+    }
+}
+
+#[test]
+fn timesteps_and_rounds_split_by_strategy() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    for (kind, wants_timesteps, wants_rounds) in [
+        (EngineKind::PipeDec, true, false),
+        (EngineKind::PipeDecDb, true, false),
+        (EngineKind::Stpp, false, true),
+    ] {
+        let out = build_engine(kind, &dir, cfg()).unwrap()
+            .decode_prompt(PROMPT).unwrap();
+        assert_eq!(out.timesteps() > 0, wants_timesteps,
+            "{kind}: timesteps must count pipeline timesteps only");
+        assert_eq!(out.rounds() > 0, wants_rounds,
+            "{kind}: rounds must count draft-verify rounds only");
     }
 }
 

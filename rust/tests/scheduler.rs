@@ -1,0 +1,307 @@
+//! Property tests for the step-driven scheduling surface
+//! (`engine::session`): random submit/step/cancel interleavings must
+//! preserve FIFO admission order, starve no session, never emit from a
+//! cancelled session, and — for the real SpecPipe-DB engine — produce
+//! per-session outputs identical to a solo decode under greedy sampling,
+//! regardless of what is co-scheduled.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::engine::{
+    build_engine, build_scheduled_engine, DecodeOutput, DecodeRequest, Engine, EngineKind,
+    OneShotScheduler, ScheduledEngine, SessionId, SessionStatus, TokenSink,
+};
+use pipedec::metrics::Metrics;
+use pipedec::tokenizer;
+use pipedec::util::XorShiftRng;
+
+/// Stream buffer shared between a session's sink and the test.
+type SharedBuf = Rc<RefCell<Vec<u32>>>;
+
+/// Sink whose contents outlive the scheduler's `Box<dyn TokenSink>`.
+#[derive(Clone, Default)]
+struct SharedSink(SharedBuf);
+
+impl SharedSink {
+    fn new() -> (Self, SharedBuf) {
+        let buf = SharedBuf::default();
+        (Self(buf.clone()), buf)
+    }
+}
+
+impl TokenSink for SharedSink {
+    fn on_token(&mut self, token: u32) {
+        self.0.borrow_mut().push(token);
+    }
+}
+
+/// Deterministic artifact-free engine: echoes the prompt's token ids.
+struct EchoEngine {
+    cfg: EngineConfig,
+}
+
+impl EchoEngine {
+    fn new() -> Self {
+        Self {
+            cfg: EngineConfig::default(),
+        }
+    }
+}
+
+impl Engine for EchoEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Pp
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    fn decode(
+        &mut self,
+        req: &DecodeRequest,
+        sink: &mut dyn TokenSink,
+    ) -> anyhow::Result<DecodeOutput> {
+        let (max_new, _, _) = req.resolve(&self.cfg);
+        let mut tokens = tokenizer::encode(&req.prompt);
+        tokens.truncate(max_new);
+        for &t in &tokens {
+            sink.on_token(t);
+        }
+        Ok(DecodeOutput {
+            text: tokenizer::decode(&tokens),
+            tokens,
+            wall_s: 0.0,
+            modeled_s: 0.05,
+            spec: None,
+            metrics: Metrics::new(),
+        })
+    }
+}
+
+#[test]
+fn random_interleavings_fifo_no_starvation_cancelled_silent() {
+    for trial in 0..25u64 {
+        let mut rng = XorShiftRng::new(trial + 1);
+        let mut sched = OneShotScheduler::new(Box::new(EchoEngine::new()));
+        let mut submitted: Vec<(SessionId, String, SharedBuf)> = Vec::new();
+        let mut cancelled: Vec<SessionId> = Vec::new();
+        let mut finished_order: Vec<SessionId> = Vec::new();
+
+        let drive = |sched: &mut OneShotScheduler,
+                     finished_order: &mut Vec<SessionId>,
+                     cancelled: &[SessionId]| {
+            let rep = sched.step().unwrap();
+            for (sid, _) in &rep.emitted {
+                assert!(
+                    !cancelled.contains(sid),
+                    "trial {trial}: cancelled session {sid} emitted a token"
+                );
+            }
+            finished_order.extend(rep.finished.iter().copied());
+        };
+
+        for op in 0..40 {
+            match rng.below(3) {
+                0 => {
+                    let prompt = format!("request {op} of trial {trial}");
+                    let (sink, buf) = SharedSink::new();
+                    let id = sched
+                        .submit(DecodeRequest::new(&prompt), Box::new(sink))
+                        .unwrap();
+                    submitted.push((id, prompt, buf));
+                }
+                1 => drive(&mut sched, &mut finished_order, &cancelled),
+                _ => {
+                    if submitted.is_empty() {
+                        continue;
+                    }
+                    let id = submitted[rng.below(submitted.len())].0;
+                    if sched.cancel(id) {
+                        assert_eq!(sched.status(id), Some(SessionStatus::Cancelled));
+                        cancelled.push(id);
+                    }
+                }
+            }
+        }
+        // no starvation: draining the scheduler finishes everything left
+        while sched.has_work() {
+            drive(&mut sched, &mut finished_order, &cancelled);
+        }
+
+        // FIFO: completion order == submission order minus cancellations
+        let expected: Vec<SessionId> = submitted
+            .iter()
+            .map(|(id, _, _)| *id)
+            .filter(|id| !cancelled.contains(id))
+            .collect();
+        assert_eq!(finished_order, expected, "trial {trial}: FIFO violated");
+
+        let mut solo = EchoEngine::new();
+        for (id, prompt, buf) in &submitted {
+            if cancelled.contains(id) {
+                assert!(
+                    buf.borrow().is_empty(),
+                    "trial {trial}: cancelled session {id} streamed tokens"
+                );
+                assert!(sched.poll(*id).is_none());
+                continue;
+            }
+            // outputs match a solo decode; streams match outputs
+            let out = sched.poll(*id).expect("non-cancelled session finishes");
+            let solo_out = solo.decode_prompt(prompt).unwrap();
+            assert_eq!(out.tokens, solo_out.tokens, "trial {trial}: {id}");
+            assert_eq!(*buf.borrow(), out.tokens, "trial {trial}: {id} stream");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SpecPipe-DB: real-engine scheduler properties (artifact-gated)
+// ---------------------------------------------------------------------
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        stages: 2,
+        tree: TreeConfig {
+            max_width: 4,
+            max_children: 4,
+            max_depth: 8,
+        },
+        max_new_tokens: 10,
+        ..EngineConfig::default()
+    }
+}
+
+const PROMPTS: [&str; 3] = [
+    "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n",
+    "<math>\nquestion: bob has 3 coins and finds 2 more. how many coins now?\n",
+    "<math>\nquestion: carol packs 5 boxes with 6 coins each. total coins?\n",
+];
+
+fn drive_to_idle(sched: &mut dyn ScheduledEngine) -> Vec<SessionId> {
+    let mut finished = Vec::new();
+    for _ in 0..100_000 {
+        if !sched.has_work() {
+            return finished;
+        }
+        let rep = sched.step().unwrap();
+        finished.extend(rep.finished.iter().copied());
+    }
+    panic!("scheduler did not go idle");
+}
+
+#[test]
+fn db_coscheduled_outputs_match_solo_decode() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // solo greedy decodes through the one-shot PipeDec engine
+    let mut solo = build_engine(EngineKind::PipeDec, &dir, cfg()).unwrap();
+    let expected: Vec<Vec<u32>> = PROMPTS
+        .iter()
+        .map(|p| solo.decode_prompt(p).unwrap().tokens)
+        .collect();
+
+    // the same three requests co-scheduled through SpecPipe-DB
+    let mut sched = build_scheduled_engine(EngineKind::PipeDecDb, &dir, cfg()).unwrap();
+    let mut handles = Vec::new();
+    for p in PROMPTS {
+        let (sink, buf) = SharedSink::new();
+        let id = sched
+            .submit(DecodeRequest::new(p), Box::new(sink))
+            .unwrap();
+        handles.push((id, buf));
+    }
+    let finished = drive_to_idle(sched.as_mut());
+    assert_eq!(finished.len(), PROMPTS.len(), "every session finishes");
+
+    for ((id, buf), want) in handles.iter().zip(&expected) {
+        let out = sched.poll(*id).expect("finished session is pollable");
+        assert_eq!(
+            &out.tokens, want,
+            "{id}: co-scheduled greedy output diverged from solo decode"
+        );
+        assert_eq!(
+            *buf.borrow(),
+            out.tokens,
+            "{id}: session stream diverged from final tokens"
+        );
+        let spec = out.spec.expect("db engine reports SpecStats");
+        assert!(spec.timesteps > 0, "{id}: db sessions live on timesteps");
+        assert_eq!(spec.rounds, 0, "{id}: db engine has no STPP rounds");
+    }
+}
+
+#[test]
+fn db_admission_is_fifo_and_overlaps_decode() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut sched = build_scheduled_engine(EngineKind::PipeDecDb, &dir, cfg()).unwrap();
+    let mut ids = Vec::new();
+    for p in PROMPTS {
+        ids.push(
+            sched
+                .submit(DecodeRequest::new(p), Box::new(pipedec::engine::NullSink))
+                .unwrap(),
+        );
+    }
+    let mut admitted = Vec::new();
+    for _ in 0..100_000 {
+        if !sched.has_work() {
+            break;
+        }
+        let rep = sched.step().unwrap();
+        admitted.extend(rep.admitted.iter().copied());
+    }
+    assert_eq!(admitted, ids, "admission must be FIFO in submission order");
+}
+
+#[test]
+fn db_cancelled_sessions_never_emit_again() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut sched = build_scheduled_engine(EngineKind::PipeDecDb, &dir, cfg()).unwrap();
+    let (sink_a, buf_a) = SharedSink::new();
+    let a = sched
+        .submit(DecodeRequest::new(PROMPTS[0]), Box::new(sink_a))
+        .unwrap();
+    let (sink_b, buf_b) = SharedSink::new();
+    let b = sched
+        .submit(DecodeRequest::new(PROMPTS[1]), Box::new(sink_b))
+        .unwrap();
+
+    // cancel b while it is still queued (before any step): silent forever
+    assert!(sched.cancel(b));
+    assert_eq!(sched.status(b), Some(SessionStatus::Cancelled));
+
+    // cancel a mid-decode: tokens stop at the cancellation point
+    sched.step().unwrap();
+    sched.step().unwrap();
+    assert_eq!(sched.status(a), Some(SessionStatus::Running));
+    let before = buf_a.borrow().len();
+    assert!(sched.cancel(a));
+    let finished = drive_to_idle(sched.as_mut());
+    assert!(finished.is_empty(), "cancelled sessions never finish");
+    assert_eq!(
+        buf_a.borrow().len(),
+        before,
+        "cancelled session emitted after cancel"
+    );
+    assert!(buf_b.borrow().is_empty(), "queued-cancelled session emitted");
+    assert!(sched.poll(a).is_none());
+    assert!(sched.poll(b).is_none());
+    assert!(!sched.cancel(SessionId(999)), "unknown ids are not cancellable");
+}
