@@ -1,0 +1,149 @@
+//! Async-stage perf smoke (ISSUE 4): fixed-seed PipeDec decode at worker
+//! thread counts {1, 2, groups+1}, writing `BENCH_async.json` with
+//! wall-clock vs modeled parallel latency per thread count so the
+//! wall/modeled convergence is tracked from this PR onward (CI uploads the
+//! file as a non-gating workflow artifact).
+//!
+//! `threads = 1` is the sequential reference path; `threads = groups + 1`
+//! gives every task of a timestep its own worker. Outputs must be
+//! token-identical across all thread counts (asserted — that part *is*
+//! load-bearing); the wall/modeled ratios are reported, not gated, since
+//! small CI hosts may not have the cores to realize the modeled schedule.
+//!
+//! Without built artifacts the bench still writes a `skipped` marker so
+//! the CI artifact step always has a file to collect.
+
+use pipedec::bench_support::banner;
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::engine::{build_engine, DecodeRequest, EngineKind, NullSink};
+
+const OUT: &str = "BENCH_async.json";
+const PROMPT: &str =
+    "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n";
+const SEED: u64 = 7;
+const MAX_NEW: usize = 16;
+const STAGES: usize = 2; // group_size 1 -> groups = 2, full pool = 3
+
+fn write_out(json: String) {
+    println!("{json}");
+    if let Err(e) = std::fs::write(OUT, json) {
+        eprintln!("warning: could not write {OUT}: {e}");
+    } else {
+        println!("[json] {OUT}");
+    }
+}
+
+fn main() {
+    banner(
+        "bench_async",
+        "threaded pipeline workers: wall vs modeled latency per thread count",
+    );
+
+    let dir = pipedec::artifacts_dir();
+    if !dir.join("target_config.txt").exists() {
+        write_out(
+            "{\n  \"bench\": \"async\",\n  \"skipped\": true,\n  \
+             \"reason\": \"no artifacts\"\n}\n"
+                .to_string(),
+        );
+        return;
+    }
+
+    let groups = STAGES; // group_size = 1
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let thread_counts = [1usize, 2, groups + 1];
+
+    let mut runs = Vec::new();
+    let mut reference_tokens: Option<Vec<u32>> = None;
+    let mut seq_wall = 0.0f64;
+    for &threads in &thread_counts {
+        let cfg = EngineConfig {
+            stages: STAGES,
+            tree: TreeConfig {
+                max_width: 4,
+                max_children: 4,
+                max_depth: 8,
+            },
+            max_new_tokens: MAX_NEW,
+            seed: SEED,
+            threads,
+            ..EngineConfig::default()
+        };
+        let mut engine = build_engine(EngineKind::PipeDec, &dir, cfg).unwrap();
+        let req = DecodeRequest::new(PROMPT).with_seed(SEED);
+        // one warmup decode (compilation caches, allocator, pool spin-up),
+        // then best-of-3 measured
+        engine.decode(&req, &mut NullSink).unwrap();
+        let mut best = None::<pipedec::engine::DecodeOutput>;
+        for _ in 0..3 {
+            let out = engine.decode(&req, &mut NullSink).unwrap();
+            if best.as_ref().map(|b| out.wall_s < b.wall_s).unwrap_or(true) {
+                best = Some(out);
+            }
+        }
+        let out = best.expect("three measured decodes");
+
+        match &reference_tokens {
+            None => reference_tokens = Some(out.tokens.clone()),
+            Some(reference) => assert_eq!(
+                reference, &out.tokens,
+                "threads={threads} diverged from the sequential reference output"
+            ),
+        }
+        if threads == 1 {
+            seq_wall = out.wall_s;
+        }
+
+        let timesteps = out.timesteps().max(1);
+        let wall_over_modeled = if out.modeled_s > 0.0 {
+            out.wall_s / out.modeled_s
+        } else {
+            0.0
+        };
+        println!(
+            "threads={threads}: wall={:.4}s modeled={:.4}s wall/modeled={:.2} \
+             speedup_vs_seq={:.2}",
+            out.wall_s,
+            out.modeled_s,
+            wall_over_modeled,
+            if out.wall_s > 0.0 { seq_wall / out.wall_s } else { 0.0 },
+        );
+        runs.push(format!(
+            "    {{\n      \"threads\": {threads},\n      \
+             \"tokens\": {tokens},\n      \"timesteps\": {timesteps},\n      \
+             \"wall_s\": {wall:.6},\n      \
+             \"per_timestep_wall_us\": {ts_us:.1},\n      \
+             \"modeled_s\": {modeled:.6},\n      \
+             \"wall_over_modeled\": {ratio:.3},\n      \
+             \"speedup_vs_sequential\": {speedup:.3}\n    }}",
+            tokens = out.tokens.len(),
+            wall = out.wall_s,
+            ts_us = out.wall_s / timesteps as f64 * 1e6,
+            modeled = out.modeled_s,
+            ratio = wall_over_modeled,
+            speedup = if out.wall_s > 0.0 { seq_wall / out.wall_s } else { 0.0 },
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"async\",\n  \"skipped\": false,\n  \
+         \"engine\": \"pipedec\",\n  \"seed\": {SEED},\n  \
+         \"max_new_tokens\": {MAX_NEW},\n  \"stages\": {STAGES},\n  \
+         \"groups\": {groups},\n  \"host_cores\": {cores},\n  \
+         \"outputs_identical\": true,\n  \"runs\": [\n{}\n  ]\n}}\n",
+        runs.join(",\n"),
+    );
+    write_out(json);
+
+    if cores >= groups + 1 {
+        println!(
+            "note: host has {cores} cores — expect wall/modeled to approach 1 \
+             at threads={}",
+            groups + 1
+        );
+    } else {
+        println!("note: only {cores} cores — threaded numbers are best-effort");
+    }
+}

@@ -58,6 +58,12 @@ pub struct EngineConfig {
     /// is unchanged (losslessness is independent of reuse); only latency
     /// suffers. Quantifies the dynamic tree's contribution (DESIGN.md).
     pub ablate_tree_reuse: bool,
+    /// Pipeline worker threads for the PipeDec engines (ISSUE 4): `0` =
+    /// auto (one per available core), `1` = the sequential reference path
+    /// (no pool), `>= 2` = a persistent pool of
+    /// `min(threads, groups + 1)` workers executing each timestep's task
+    /// set concurrently. Outputs are token-identical at every setting.
+    pub threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -72,6 +78,7 @@ impl Default for EngineConfig {
             top_k: 80,
             seed: 0,
             ablate_tree_reuse: false,
+            threads: 0,
         }
     }
 }
@@ -99,6 +106,9 @@ impl EngineConfig {
         }
         if let Some(v) = doc.get("engine", "seed") {
             cfg.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.get("engine", "threads") {
+            cfg.threads = v.as_usize()?;
         }
         if let Some(v) = doc.get("tree", "max_width") {
             cfg.tree.max_width = v.as_usize()?;
@@ -140,6 +150,18 @@ impl EngineConfig {
         );
         anyhow::ensure!((0.0..=1.0).contains(&self.top_p), "top_p out of range");
         Ok(())
+    }
+
+    /// Resolve the `threads` knob: `0` means one worker per available core
+    /// (falling back to the sequential path when parallelism is unknown).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -198,5 +220,20 @@ mod tests {
     #[test]
     fn invalid_rejected() {
         assert!(EngineConfig::from_toml_str("[engine]\nstages = 0\n").is_err());
+    }
+
+    #[test]
+    fn threads_parse_and_resolve() {
+        let cfg = EngineConfig::from_toml_str("[engine]\nthreads = 3\n").unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.effective_threads(), 3);
+        let auto = EngineConfig::default();
+        assert_eq!(auto.threads, 0, "default is auto");
+        assert!(auto.effective_threads() >= 1);
+        let seq = EngineConfig {
+            threads: 1,
+            ..EngineConfig::default()
+        };
+        assert_eq!(seq.effective_threads(), 1);
     }
 }

@@ -11,7 +11,7 @@
 //! * every live [`Session`] owns its prediction tree plus a full set of
 //!   per-request [`TwoLevelCache`]s (one per stage + the draft cache), so
 //!   requests never share KV state — device mirrors are released at
-//!   session teardown via [`ModelHandles::release_cache`];
+//!   session teardown via [`StageContext::release_cache`];
 //! * the pipeline itself is a ring of `groups` slots, each holding one
 //!   in-flight [`DataFlow`] tagged with its owning session; per timestep
 //!   every occupied slot advances one group (possibly a different session
@@ -29,6 +29,14 @@
 //!   to a solo decode (asserted by `rust/tests/scheduler.rs` and the
 //!   `fig8_throughput` bench).
 //!
+//! Since ISSUE 4 each `step()` executes its task set — the draft/entry
+//! grant plus one task per occupied pipeline slot — on the persistent
+//! worker pool ([`super::workers`]) when `threads >= 2`, exactly like the
+//! solo engine: per-session caches and the per-group [`StageContext`]s
+//! move into the jobs and back, stage tasks read tree snapshots, and all
+//! verification stays in the coordinator's sync phase, so scheduling
+//! (and outputs) are identical to the sequential reference path.
+//!
 //! Served both ways: natively as a [`ScheduledEngine`] (the continuous
 //! server loop) and as a one-shot [`Engine`] (a decode = one session
 //! stepped to completion), so `EngineKind::PipeDecDb` passes the same
@@ -36,20 +44,24 @@
 
 use std::collections::VecDeque;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::pipeline::{self, DataFlow};
+use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
+use super::workers::{
+    self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
+};
 use crate::config::EngineConfig;
 use crate::engine::{
     DecodeOutput, DecodeRequest, Engine, EngineKind, NullSink, ScheduledEngine, Session,
     SessionId, SessionRecord, SessionStatus, SpecStats, StepReport, TokenSink,
 };
 use crate::kvcache::TwoLevelCache;
-use crate::metrics::Metrics;
-use crate::model::ModelHandles;
+use crate::metrics::{Metrics, SharedMetrics};
+use crate::model::{ModelCore, StageContext};
 use crate::runtime::Runtime;
 use crate::schedule::CentralScheduler;
 use crate::tokenizer;
@@ -87,11 +99,16 @@ struct DbSession {
 
 /// The SpecPipe-DB engine over AOT artifacts.
 pub struct PipeDecDbEngine {
-    rt: Runtime,
-    target: ModelHandles,
-    draft: ModelHandles,
+    rt: Arc<Runtime>,
+    target: Arc<ModelCore>,
+    draft: Arc<ModelCore>,
     pub cfg: EngineConfig,
     layers_per_stage: usize,
+    /// Per-group execution contexts (device KV mirrors of the member
+    /// stages' session caches, incremental bias); `None` while lent to a
+    /// worker.
+    group_ctxs: Vec<Option<StageContext>>,
+    draft_ctx: Option<StageContext>,
     link: LinkModel,
     pub link_stats: LinkStats,
     scheduler: CentralScheduler,
@@ -107,16 +124,26 @@ pub struct PipeDecDbEngine {
     max_live: usize,
     steps: u64,
     stalled_for: u64,
+    pool: Option<WorkerPool>,
+    worker_metrics: Arc<SharedMetrics>,
 }
 
 impl PipeDecDbEngine {
     pub fn new(artifact_dir: &Path, mut cfg: EngineConfig) -> Result<Self> {
         cfg.validate()?;
-        let rt = Runtime::cpu()?;
-        let target =
-            ModelHandles::load_with_width(&rt, artifact_dir, "target", cfg.tree.max_width)?;
-        let draft =
-            ModelHandles::load_with_width(&rt, artifact_dir, "draft", cfg.tree.max_width)?;
+        let rt = Arc::new(Runtime::cpu()?);
+        let target = Arc::new(ModelCore::load_with_width(
+            &rt,
+            artifact_dir,
+            "target",
+            cfg.tree.max_width,
+        )?);
+        let draft = Arc::new(ModelCore::load_with_width(
+            &rt,
+            artifact_dir,
+            "draft",
+            cfg.tree.max_width,
+        )?);
         anyhow::ensure!(
             target.cfg.n_layers % cfg.stages == 0,
             "stages {} must divide target layers {}",
@@ -131,12 +158,22 @@ impl PipeDecDbEngine {
             .min(draft.cfg.width_cap);
         cfg.tree.max_children = cfg.tree.max_children.min(target.cfg.vocab_size);
         let groups = cfg.stages / cfg.group_size;
+        let group_ctxs = (0..groups).map(|_| Some(target.context())).collect();
+        let draft_ctx = Some(draft.context());
+        let threads = cfg.effective_threads();
+        let pool = if threads >= 2 {
+            Some(WorkerPool::new(threads.min(groups + 1), Arc::clone(&rt))?)
+        } else {
+            None
+        };
         Ok(Self {
             rt,
             target,
             draft,
             cfg,
             layers_per_stage,
+            group_ctxs,
+            draft_ctx,
             link: LinkModel::pcie_p2p(),
             link_stats: LinkStats::default(),
             scheduler: CentralScheduler::new(),
@@ -149,11 +186,18 @@ impl PipeDecDbEngine {
             max_live: groups,
             steps: 0,
             stalled_for: 0,
+            pool,
+            worker_metrics: Arc::new(SharedMetrics::new()),
         })
     }
 
     fn groups(&self) -> usize {
         self.cfg.stages / self.cfg.group_size
+    }
+
+    /// Worker threads actually running (1 = sequential reference path).
+    pub fn worker_threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
     }
 
     fn live_index(&self, id: SessionId) -> Option<usize> {
@@ -179,6 +223,7 @@ impl PipeDecDbEngine {
         let tc = self.target.cfg.clone();
         let dc = self.draft.cfg.clone();
         let lps = self.layers_per_stage;
+        let gs = self.cfg.group_size;
         let stages = self.cfg.stages;
         let mut rng = XorShiftRng::new(seed);
 
@@ -196,7 +241,9 @@ impl PipeDecDbEngine {
         shell.caches = caches;
 
         // pipeline prefill through all target stages (plain sequential
-        // pre-filling, §3.4.1), as in the solo engine's prefill
+        // pre-filling, §3.4.1), as in the solo engine's prefill; each
+        // stage runs with its group's context so the device mirrors live
+        // where the stage tasks will look for them
         let w = tc.width_cap;
         let t0 = Instant::now();
         let prompt = shell.prompt_ids.clone();
@@ -207,8 +254,12 @@ impl PipeDecDbEngine {
             let mut h = self.target.embed(&self.rt, chunk)?;
             for s in 0..stages {
                 let range = s * lps..(s + 1) * lps;
+                let ctx = self.group_ctxs[s / gs]
+                    .as_mut()
+                    .expect("group ctx in residence");
                 h = self.target.prefill_chunk(
                     &self.rt,
+                    ctx,
                     range,
                     &mut shell.caches[s],
                     h,
@@ -225,8 +276,12 @@ impl PipeDecDbEngine {
         let row = &logits[(last_count - 1) * v..last_count * v];
         let first = select_token(row, &sampling, &mut rng);
         // draft prefill (parallel with the target on the real testbed)
-        self.draft
-            .full_prefill(&self.rt, &mut shell.caches[stages], &prompt)?;
+        self.draft.full_prefill(
+            &self.rt,
+            self.draft_ctx.as_mut().expect("draft ctx in residence"),
+            &mut shell.caches[stages],
+            &prompt,
+        )?;
         let prefill_s = t0.elapsed().as_secs_f64();
 
         let budget = tc.tree_cap.min(dc.tree_cap);
@@ -270,13 +325,22 @@ impl PipeDecDbEngine {
             }
         }
         // per-request cache churn would leak device mirrors without this
-        // (the ROADMAP eviction-hook note from PR 2)
+        // (the ROADMAP eviction-hook note from PR 2); each stage cache's
+        // mirror lives in its group's context, the draft cache's in the
+        // draft context
         let stages = self.cfg.stages;
+        let gs = self.cfg.group_size;
         for (i, c) in sess.base.caches.iter().enumerate() {
             if i < stages {
-                self.target.release_cache(c.id());
+                self.group_ctxs[i / gs]
+                    .as_mut()
+                    .expect("group ctx in residence")
+                    .release_cache(c.id());
             } else {
-                self.draft.release_cache(c.id());
+                self.draft_ctx
+                    .as_mut()
+                    .expect("draft ctx in residence")
+                    .release_cache(c.id());
             }
         }
         let record = if finished {
@@ -286,6 +350,9 @@ impl PipeDecDbEngine {
             metrics.incr("hits", sess.hits);
             metrics.incr("misses", sess.misses);
             metrics.record("prefill_s", sess.prefill_s);
+            // engine-level worker timings accumulated since the last
+            // finished session (attribution is batch-wide, not per-session)
+            metrics.merge(&self.worker_metrics.drain());
             let output = DecodeOutput {
                 text: tokenizer::decode(&sess.base.tokens),
                 tokens: sess.base.tokens.clone(),
@@ -308,16 +375,152 @@ impl PipeDecDbEngine {
         id
     }
 
+    /// Build, execute, and reabsorb one step's task set: one task per
+    /// occupied pipeline slot plus the draft/entry task over all live
+    /// sessions in round-robin order. Returns the draft outcome, the
+    /// per-group outcomes, and each dispatched group's owning session.
+    #[allow(clippy::type_complexity)]
+    fn run_step_tasks(
+        &mut self,
+    ) -> Result<(DraftOutcome, Vec<Option<GroupOutcome>>, Vec<Option<SessionId>>)> {
+        let groups = self.groups();
+        let gs = self.cfg.group_size;
+        let lps = self.layers_per_stage;
+        let di = self.cfg.stages; // draft cache index in session caches
+
+        let mut slot_owner: Vec<Option<SessionId>> = vec![None; groups];
+        let mut stage_jobs = Vec::new();
+        // one immutable snapshot per session, shared by all of that
+        // session's occupied slots this step
+        let mut snapshots: Vec<Option<Arc<PredictionTree>>> = vec![None; self.live.len()];
+        for g in 0..groups {
+            let Some(flow) = self.slots[g].take() else { continue };
+            let owner = flow.session;
+            let Some(si) = self.live_index(owner) else {
+                continue; // owner retired while the flow was in flight
+            };
+            let ctx = self.group_ctxs[g].take().expect("group ctx in residence");
+            let snap = match &snapshots[si] {
+                Some(s) => Arc::clone(s),
+                None => {
+                    let s = Arc::new(self.live[si].tree.clone());
+                    snapshots[si] = Some(Arc::clone(&s));
+                    s
+                }
+            };
+            let sess = &mut self.live[si];
+            let stage_ids: Vec<usize> = (g * gs..(g + 1) * gs).collect();
+            let caches: Vec<TwoLevelCache> = stage_ids
+                .iter()
+                .map(|&s| {
+                    std::mem::replace(&mut sess.base.caches[s], TwoLevelCache::placeholder())
+                })
+                .collect();
+            let layer_ranges = stage_ids
+                .iter()
+                .map(|&s| s * lps..(s + 1) * lps)
+                .collect();
+            stage_jobs.push(StageJob {
+                group: g,
+                core: Arc::clone(&self.target),
+                ctx,
+                caches,
+                layer_ranges,
+                stage_ids,
+                df: flow.df,
+                tree: snap,
+                metrics: Arc::clone(&self.worker_metrics),
+            });
+            slot_owner[g] = Some(owner);
+        }
+
+        // draft/entry candidates, visited from the round-robin cursor (the
+        // draft device — pipeline rank 0 — serves one session per
+        // timestep; pending root flows take priority over tree expansion).
+        // A pending entry flow is granted as soon as it is visited, so
+        // sessions *after* the first entry-carrying one can never be
+        // reached this step — the candidate list stops there.
+        let n = self.live.len();
+        let mut candidates = Vec::with_capacity(n);
+        for k in 0..n {
+            let si = (self.entry_cursor + k) % n;
+            let sess = &mut self.live[si];
+            let has_entry = sess.entry.is_some();
+            candidates.push(DraftCandidate {
+                tag: si,
+                entry: sess.entry.take(),
+                // moved, not cloned: stage jobs hold their Arc snapshots
+                // already, and the reabsorb loop adopts every tree back
+                tree: std::mem::replace(&mut sess.tree, PredictionTree::placeholder()),
+                cache: std::mem::replace(
+                    &mut sess.base.caches[di],
+                    TwoLevelCache::placeholder(),
+                ),
+            });
+            if has_entry {
+                break;
+            }
+        }
+        let draft_job = DraftJob {
+            core: Arc::clone(&self.draft),
+            ctx: self.draft_ctx.take().expect("draft ctx in residence"),
+            candidates,
+            max_children: self.cfg.tree.max_children,
+            metrics: Arc::clone(&self.worker_metrics),
+        };
+
+        let (draft_done, stage_dones) =
+            workers::run_tasks(self.pool.as_ref(), &self.rt, draft_job, stage_jobs);
+
+        // Reabsorb every lent piece before surfacing any task error.
+        self.draft_ctx = Some(draft_done.ctx);
+        for cand in draft_done.candidates {
+            let sess = &mut self.live[cand.tag];
+            sess.base.caches[di] = cand.cache;
+            sess.tree = cand.tree; // adopt the (possibly expanded) tree
+            sess.entry = cand.entry; // unconsumed entry flows come back
+        }
+        let group_ctxs = &mut self.group_ctxs;
+        let live = &mut self.live;
+        let (outcomes, first_err) =
+            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches| {
+                group_ctxs[g] = Some(ctx);
+                if let Some(owner) = slot_owner[g] {
+                    if let Some(si) = live.iter().position(|s| s.base.id == owner) {
+                        for (k, c) in caches.into_iter().enumerate() {
+                            live[si].base.caches[g * gs + k] = c;
+                        }
+                    }
+                }
+            });
+        if let Some(e) = first_err {
+            // A stage task failed. The draft grant — possibly a consumed
+            // entry flow — must go back to its owner as the pending entry
+            // before the error surfaces, or that session would lose its
+            // slot-0 (re)start forever. (In-flight flows of the errored
+            // step's *stage* jobs are dropped: after a model-execution
+            // failure the engine is degraded and callers should drain —
+            // the stall guard reports any session this leaves stuck.)
+            if let Ok(oc) = draft_done.res {
+                if let Some((si, df)) = oc.granted {
+                    self.live[si].entry = Some(df);
+                }
+            }
+            return Err(e);
+        }
+        let draft_oc = draft_done.res?;
+        Ok((draft_oc, outcomes, slot_owner))
+    }
+
     /// One pipeline timestep across all live sessions (Fig. 2, batched):
-    /// admission → stage phase per occupied slot → draft/entry grant of
-    /// slot 0 → per-session sync of exiting flows.
+    /// admission → concurrent task set (stage phase per occupied slot +
+    /// draft/entry grant of slot 0) → per-session sync of exiting flows.
     fn step_impl(&mut self) -> Result<StepReport> {
         let mut report = StepReport::default();
         self.steps += 1;
         let seq = self.steps;
         let groups = self.groups();
         let gs = self.cfg.group_size;
-        let lps = self.layers_per_stage;
         let d_bytes = self.target.cfg.dim * self.target.cfg.width_cap * 4;
         let mut next_slots: Vec<Option<SlotFlow>> = (0..groups).map(|_| None).collect();
 
@@ -337,40 +540,38 @@ impl PipeDecDbEngine {
             }
         }
 
-        // ---- stage phase: every occupied slot advances one group ----
+        // ---- stage + draft/entry phases: the step's task set, executed
+        // concurrently on the worker pool (inline when threads = 1) ----
+        let (draft_oc, outcomes, slot_owner) = if self.live.is_empty() {
+            (
+                DraftOutcome {
+                    granted: None,
+                    draft_s: 0.0,
+                },
+                (0..groups).map(|_| None).collect(),
+                vec![None; groups],
+            )
+        } else {
+            self.run_step_tasks()?
+        };
+
+        // ---- deterministic post-order: transfer accounting and flow
+        // routing in group index order, then the draft grant ----
         let mut exits: Vec<(SessionId, DataFlow)> = Vec::new();
         let mut group_times = vec![0.0f64; groups];
         let mut transfer_times: Vec<f64> = Vec::new();
-        for g in 0..groups {
-            let Some(flow) = self.slots[g].take() else { continue };
-            let owner = flow.session;
-            let Some(si) = self.live_index(owner) else {
-                continue; // owner retired while the flow was in flight
-            };
-            let span = g * gs..(g + 1) * gs;
-            let mut df = Some(flow.df);
-            for stage in span.clone() {
-                let Some(cur) = df.take() else { break };
-                let range = stage * lps..(stage + 1) * lps;
-                let sess = &mut self.live[si];
-                let (out, secs) = pipeline::run_stage(
-                    &mut self.target,
-                    &self.rt,
-                    range,
-                    &mut sess.base.caches[stage],
-                    cur,
-                    &sess.tree,
-                )?;
-                group_times[g] += secs;
-                if out.is_some() && stage + 1 < span.end {
-                    // intra-group hop: same timestep, scheduled transfer
-                    group_times[g] += self.account_transfer(stage + 1, stage + 2, d_bytes, seq);
-                }
-                df = out;
+        for (g, oc) in outcomes.into_iter().enumerate() {
+            let Some(oc) = oc else { continue };
+            group_times[g] = oc.compute_s;
+            for (src, dst) in oc.hops {
+                // intra-group hop: same timestep, scheduled transfer
+                group_times[g] += self.account_transfer(src, dst, d_bytes, seq);
             }
-            let Some(out) = df else { continue };
+            let Some(out) = oc.flow else { continue };
+            let owner = slot_owner[g].expect("an outcome implies a dispatched owner");
             if g + 1 < groups {
-                transfer_times.push(self.account_transfer(span.end, span.end + 1, d_bytes, seq));
+                let span_end = (g + 1) * gs;
+                transfer_times.push(self.account_transfer(span_end, span_end + 1, d_bytes, seq));
                 next_slots[g + 1] = Some(SlotFlow {
                     session: owner,
                     df: out,
@@ -379,38 +580,13 @@ impl PipeDecDbEngine {
                 exits.push((owner, out));
             }
         }
-
-        // ---- draft/entry phase: grant slot 0 to one live session ----
-        // (the draft device — pipeline rank 0 — serves one session per
-        // timestep; pending root flows take priority over tree expansion)
-        let mut draft_s = 0.0f64;
-        if next_slots[0].is_none() {
-            let n = self.live.len();
-            let mc = self.cfg.tree.max_children;
-            let di = self.cfg.stages; // draft cache index in session caches
-            for k in 0..n {
-                let si = (self.entry_cursor + k) % n;
-                let (id, df) = if let Some(df) = self.live[si].entry.take() {
-                    (self.live[si].base.id, df)
-                } else {
-                    let sess = &mut self.live[si];
-                    let (flow, secs) = pipeline::draft_expand(
-                        &mut self.draft,
-                        &self.rt,
-                        &mut sess.base.caches[di],
-                        &mut sess.tree,
-                        mc,
-                    )?;
-                    draft_s += secs;
-                    let Some(df) = flow else { continue };
-                    (self.live[si].base.id, df)
-                };
-                // draft (rank 0) -> L_1: token ids only
-                transfer_times.push(self.account_transfer(0, 1, df.entry_bytes(), seq));
-                next_slots[0] = Some(SlotFlow { session: id, df });
-                self.entry_cursor = (si + 1) % n;
-                break;
-            }
+        let draft_s = draft_oc.draft_s;
+        if let Some((si, df)) = draft_oc.granted {
+            let id = self.live[si].base.id;
+            // draft (rank 0) -> L_1: token ids only
+            transfer_times.push(self.account_transfer(0, 1, df.entry_bytes(), seq));
+            next_slots[0] = Some(SlotFlow { session: id, df });
+            self.entry_cursor = (si + 1) % self.live.len();
         }
 
         // paper latency model: max(T_draft, C·max(T_group_i) + max(T_t,i))
@@ -507,11 +683,18 @@ impl PipeDecDbEngine {
         } else {
             self.stalled_for += 1;
             let limit = ((self.max_live + groups) as u64) * 4 + 64;
+            let live_tokens: usize = self.live.iter().map(|s| s.base.tokens.len()).sum();
+            let tree_nodes: usize = self.live.iter().map(|s| s.tree.len()).sum();
             anyhow::ensure!(
                 self.stalled_for <= limit,
-                "scheduler stalled: {} steps without progress ({} live sessions)",
+                "scheduler stalled at step {}: {} steps without progress \
+                 ({} live sessions holding {live_tokens} decoded tokens and \
+                 {tree_nodes} tree nodes, {} queued, {} occupied pipeline slots)",
+                self.steps,
                 self.stalled_for,
-                self.live.len()
+                self.live.len(),
+                self.queue.len(),
+                self.slots.iter().flatten().count(),
             );
         }
         Ok(report)
@@ -547,7 +730,13 @@ impl ScheduledEngine for PipeDecDbEngine {
     }
 
     fn step(&mut self) -> Result<StepReport> {
-        self.step_impl()
+        let r = self.step_impl();
+        if r.is_err() {
+            // a failed step's partial worker timings must not leak into
+            // the next finished session's metrics
+            let _ = self.worker_metrics.drain();
+        }
+        r
     }
 
     fn cancel(&mut self, id: SessionId) -> bool {
@@ -604,11 +793,13 @@ impl Engine for PipeDecDbEngine {
         let groups = (self.cfg.stages / self.cfg.group_size) as u64;
         let max_steps = (max_new as u64 + 8) * (groups + 2) * 4 + 64;
         let mut steps = 0u64;
+        let mut emitted = 0usize;
         loop {
-            let rep = self.step_impl()?;
+            let rep = ScheduledEngine::step(self)?;
             for &(sid, tok) in &rep.emitted {
                 if sid == id {
                     sink.on_token(tok);
+                    emitted += 1;
                 }
             }
             if rep.finished.contains(&id) {
@@ -618,7 +809,11 @@ impl Engine for PipeDecDbEngine {
             steps += 1;
             anyhow::ensure!(
                 steps <= max_steps,
-                "timestep budget exceeded — engine stalled"
+                "step budget ({max_steps}) exceeded — engine stalled with \
+                 {emitted}/{max_new} tokens emitted for session {id} \
+                 ({} live, {} queued after the last step)",
+                rep.live,
+                rep.queued,
             );
         }
     }

@@ -3,22 +3,26 @@
 //! pipeline and a dynamic prediction tree coordinating speculative state.
 //! Served through the crate-wide [`Engine`] trait.
 //!
-//! Execution model: the engine executes the per-timestep task set
-//! *sequentially but in dependency order* (the order the workflow DAG of
-//! Appendix B admits), measuring each node's compute time. Because this host
-//! has a single core, running stage threads would not change wall-clock;
-//! instead the engine reconstructs the *parallel-schedule latency* of every
-//! timestep from the measured per-node times exactly as the paper's latency
-//! model prescribes (§2.4):
+//! Execution model (ISSUE 4): the per-timestep task set — one draft task
+//! plus one task per timestep group — dispatches onto the persistent
+//! pipeline worker pool ([`super::workers`]), so with `threads >= groups + 1`
+//! every task of a timestep runs concurrently on its own thread and
+//! wall-clock approaches the paper's latency model (§2.4):
 //!
 //! ```text
 //!   T_timestep = max(T_draft, max_i(T_group_i) + max_i(T_transfer_i))
 //! ```
 //!
-//! and reports both raw wall time and the modeled parallel latency. The
-//! distributed control plane itself (transmission scheduling, endpoint
-//! conflicts) is exercised through [`crate::schedule::CentralScheduler`] on
-//! every transfer.
+//! With `threads = 1` the identical jobs run inline on the caller thread
+//! (the sequential reference path). Either way the engine still *reports*
+//! the modeled parallel latency computed from the measured per-task times
+//! — on a loaded or small host the pool can't reach the model's bound, so
+//! both numbers stay honest. Outputs are token-identical at every thread
+//! count: stage tasks read tree snapshots, verification and pruning happen
+//! only at the coordinator's sync phase, and reply processing is
+//! normalized to group order. The distributed control plane (transmission
+//! scheduling, endpoint conflicts) is exercised through
+//! [`crate::schedule::CentralScheduler`] on every transfer.
 //!
 //! Per timestep (Fig. 2):
 //! 1. **draft phase** — the draft node processes the newest tree layer it
@@ -33,17 +37,21 @@
 //!    caller's [`TokenSink`] at this point.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::pipeline::{self, DataFlow};
+use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
+use super::workers::{
+    self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
+};
 use crate::config::EngineConfig;
 use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, SpecStats, TokenSink};
 use crate::kvcache::TwoLevelCache;
-use crate::metrics::Metrics;
-use crate::model::ModelHandles;
+use crate::metrics::{Metrics, SharedMetrics};
+use crate::model::{ModelCore, StageContext};
 use crate::runtime::Runtime;
 use crate::schedule::CentralScheduler;
 use crate::tokenizer;
@@ -51,30 +59,53 @@ use crate::transport::{LinkModel, LinkStats};
 use crate::tree::{PredictionTree, PruneOutcome};
 use crate::util::XorShiftRng;
 
+/// One timestep group's resident state: the member stages' KV caches (in
+/// span order) plus the group's [`StageContext`]. Owned by the engine
+/// between timesteps and lent to a pipeline worker — by move, through the
+/// job channel — while the group's task executes; `None` marks state
+/// currently on loan.
+struct GroupState {
+    ctx: StageContext,
+    caches: Vec<TwoLevelCache>,
+}
+
 /// The PipeDec engine over AOT artifacts.
 pub struct PipeDecEngine {
-    rt: Runtime,
-    target: ModelHandles,
-    draft: ModelHandles,
+    rt: Arc<Runtime>,
+    target: Arc<ModelCore>,
+    draft: Arc<ModelCore>,
     pub cfg: EngineConfig,
     layers_per_stage: usize,
-    stage_caches: Vec<TwoLevelCache>,
-    draft_cache: TwoLevelCache,
+    groups_state: Vec<Option<GroupState>>,
+    draft_cache: Option<TwoLevelCache>,
+    draft_ctx: Option<StageContext>,
     link: LinkModel,
     pub link_stats: LinkStats,
     scheduler: CentralScheduler,
     rng: XorShiftRng,
+    /// `Some` when `cfg.effective_threads() >= 2`; `None` runs the same
+    /// jobs inline (the sequential reference path).
+    pool: Option<WorkerPool>,
+    worker_metrics: Arc<SharedMetrics>,
 }
 
 impl PipeDecEngine {
     pub fn new(artifact_dir: &Path, mut cfg: EngineConfig) -> Result<Self> {
         cfg.validate()?;
-        let rt = Runtime::cpu()?;
+        let rt = Arc::new(Runtime::cpu()?);
         // pick the narrowest artifact width bucket that fits the tree layer
-        let target =
-            ModelHandles::load_with_width(&rt, artifact_dir, "target", cfg.tree.max_width)?;
-        let draft =
-            ModelHandles::load_with_width(&rt, artifact_dir, "draft", cfg.tree.max_width)?;
+        let target = Arc::new(ModelCore::load_with_width(
+            &rt,
+            artifact_dir,
+            "target",
+            cfg.tree.max_width,
+        )?);
+        let draft = Arc::new(ModelCore::load_with_width(
+            &rt,
+            artifact_dir,
+            "draft",
+            cfg.tree.max_width,
+        )?);
         anyhow::ensure!(
             target.cfg.n_layers % cfg.stages == 0,
             "stages {} must divide target layers {}",
@@ -90,34 +121,53 @@ impl PipeDecEngine {
             .min(target.cfg.width_cap)
             .min(draft.cfg.width_cap);
         cfg.tree.max_children = cfg.tree.max_children.min(target.cfg.vocab_size);
+        let groups = cfg.stages / cfg.group_size;
         let tc = &target.cfg;
-        let stage_caches = (0..cfg.stages)
+        let groups_state = (0..groups)
             .map(|_| {
-                TwoLevelCache::new(
-                    layers_per_stage,
-                    tc.n_heads,
-                    tc.head_dim,
-                    tc.past_cap,
-                    tc.tree_cap,
-                )
+                let caches = (0..cfg.group_size)
+                    .map(|_| {
+                        TwoLevelCache::new(
+                            layers_per_stage,
+                            tc.n_heads,
+                            tc.head_dim,
+                            tc.past_cap,
+                            tc.tree_cap,
+                        )
+                    })
+                    .collect();
+                Some(GroupState {
+                    ctx: target.context(),
+                    caches,
+                })
             })
             .collect();
         let dc = &draft.cfg;
         let draft_cache =
             TwoLevelCache::new(dc.n_layers, dc.n_heads, dc.head_dim, dc.past_cap, dc.tree_cap);
+        let draft_ctx = draft.context();
         let rng = XorShiftRng::new(cfg.seed);
+        let threads = cfg.effective_threads();
+        let pool = if threads >= 2 {
+            Some(WorkerPool::new(threads.min(groups + 1), Arc::clone(&rt))?)
+        } else {
+            None
+        };
         Ok(Self {
             rt,
             target,
             draft,
             cfg,
             layers_per_stage,
-            stage_caches,
-            draft_cache,
+            groups_state,
+            draft_cache: Some(draft_cache),
+            draft_ctx: Some(draft_ctx),
             link: LinkModel::pcie_p2p(),
             link_stats: LinkStats::default(),
             scheduler: CentralScheduler::new(),
             rng,
+            pool,
+            worker_metrics: Arc::new(SharedMetrics::new()),
         })
     }
 
@@ -130,20 +180,26 @@ impl PipeDecEngine {
         self.cfg.stages / self.cfg.group_size
     }
 
-    fn group_stages(&self, g: usize) -> std::ops::Range<usize> {
-        g * self.cfg.group_size..(g + 1) * self.cfg.group_size
-    }
-
-    fn layer_range(&self, stage: usize) -> std::ops::Range<usize> {
-        stage * self.layers_per_stage..(stage + 1) * self.layers_per_stage
+    /// Worker threads actually running (1 = sequential reference path).
+    pub fn worker_threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
     }
 
     fn reset(&mut self, seed: u64) {
-        for c in &mut self.stage_caches {
-            c.reset();
+        for st in self.groups_state.iter_mut() {
+            let st = st.as_mut().expect("group state in residence");
+            for c in &mut st.caches {
+                c.reset();
+            }
         }
-        self.draft_cache.reset();
+        self.draft_cache
+            .as_mut()
+            .expect("draft cache in residence")
+            .reset();
         self.rng = XorShiftRng::new(seed);
+        // a previously *failed* decode never reached the drain at its end;
+        // discard its leftover worker timings so they can't pollute this one
+        let _ = self.worker_metrics.drain();
     }
 
     /// Pipeline prefill of the prompt through all target stages (the paper
@@ -151,18 +207,28 @@ impl PipeDecEngine {
     /// Returns the first decoded token and the modeled prefill seconds.
     fn prefill(&mut self, prompt_ids: &[u32], sampling: &Sampling) -> Result<(u32, f64)> {
         let w = self.target.cfg.width_cap;
+        let gs = self.cfg.group_size;
+        let lps = self.layers_per_stage;
         let t0 = Instant::now();
         let mut last_h = None;
         let mut last_count = 0;
         for chunk in prompt_ids.chunks(w) {
-            let start = self.stage_caches[0].past_len();
+            let start = self.groups_state[0]
+                .as_ref()
+                .expect("group state in residence")
+                .caches[0]
+                .past_len();
             let mut h = self.target.embed(&self.rt, chunk)?;
             for s in 0..self.cfg.stages {
-                let range = self.layer_range(s);
+                let range = s * lps..(s + 1) * lps;
+                let st = self.groups_state[s / gs]
+                    .as_mut()
+                    .expect("group state in residence");
                 h = self.target.prefill_chunk(
                     &self.rt,
+                    &mut st.ctx,
                     range,
-                    &mut self.stage_caches[s],
+                    &mut st.caches[s % gs],
                     h,
                     chunk.len(),
                     start,
@@ -179,42 +245,13 @@ impl PipeDecEngine {
 
         // draft prefill (runs in parallel with the target on the real
         // testbed; sequential here, and excluded from decode latency)
-        self.draft.full_prefill(&self.rt, &mut self.draft_cache, prompt_ids)?;
+        self.draft.full_prefill(
+            &self.rt,
+            self.draft_ctx.as_mut().expect("draft ctx in residence"),
+            self.draft_cache.as_mut().expect("draft cache in residence"),
+            prompt_ids,
+        )?;
         Ok((first, t0.elapsed().as_secs_f64()))
-    }
-
-    /// Draft phase: process the unprocessed BFS suffix (the frontier layer),
-    /// expand the tree by one layer, and return the new layer's data flow.
-    /// Thin wrapper over [`pipeline::draft_expand`], which SpecPipe-DB
-    /// shares.
-    fn draft_phase(&mut self, tree: &mut PredictionTree) -> Result<(Option<DataFlow>, f64)> {
-        pipeline::draft_expand(
-            &mut self.draft,
-            &self.rt,
-            &mut self.draft_cache,
-            tree,
-            self.cfg.tree.max_children,
-        )
-    }
-
-    /// Stage phase for one stage: filter stale rows, run the layer span,
-    /// return the outgoing data flow (None if everything was pruned away).
-    /// Thin wrapper over [`pipeline::run_stage`], which SpecPipe-DB shares.
-    fn stage_phase(
-        &mut self,
-        stage: usize,
-        df: DataFlow,
-        tree: &PredictionTree,
-    ) -> Result<(Option<DataFlow>, f64)> {
-        let range = self.layer_range(stage);
-        pipeline::run_stage(
-            &mut self.target,
-            &self.rt,
-            range,
-            &mut self.stage_caches[stage],
-            df,
-            tree,
-        )
     }
 
     /// Account one inter-node transfer through the central scheduler and the
@@ -227,6 +264,82 @@ impl PipeDecEngine {
         self.scheduler.tick();
         self.link_stats.record(bytes, &self.link);
         self.link.transfer_time(bytes)
+    }
+
+    /// Build this timestep's task set (one draft task + one task per group
+    /// with an input flow), execute it — on the pool when present, inline
+    /// otherwise — and hand every piece of lent state back. Returns the
+    /// draft outcome and the per-group outcomes in group order.
+    fn run_timestep_tasks(
+        &mut self,
+        tree: &mut PredictionTree,
+        inputs: &mut [Option<DataFlow>],
+    ) -> Result<(DraftOutcome, Vec<Option<GroupOutcome>>)> {
+        let groups = self.groups();
+        let gs = self.cfg.group_size;
+        let lps = self.layers_per_stage;
+
+        let mut stage_jobs = Vec::new();
+        // one immutable snapshot shared by every occupied slot (built only
+        // when some slot is occupied)
+        let mut snapshot: Option<Arc<PredictionTree>> = None;
+        for (g, slot) in inputs.iter_mut().enumerate() {
+            let Some(df) = slot.take() else { continue };
+            let st = self.groups_state[g]
+                .take()
+                .expect("group state in residence");
+            let stage_ids: Vec<usize> = (0..gs).map(|k| g * gs + k).collect();
+            let layer_ranges = stage_ids
+                .iter()
+                .map(|&s| s * lps..(s + 1) * lps)
+                .collect();
+            let snap = snapshot
+                .get_or_insert_with(|| Arc::new(tree.clone()))
+                .clone();
+            stage_jobs.push(StageJob {
+                group: g,
+                core: Arc::clone(&self.target),
+                ctx: st.ctx,
+                caches: st.caches,
+                layer_ranges,
+                stage_ids,
+                df,
+                tree: snap,
+                metrics: Arc::clone(&self.worker_metrics),
+            });
+        }
+        let draft_job = DraftJob {
+            core: Arc::clone(&self.draft),
+            ctx: self.draft_ctx.take().expect("draft ctx in residence"),
+            candidates: vec![DraftCandidate {
+                tag: 0,
+                entry: None,
+                // moved, not cloned: the stage jobs already hold their Arc
+                // snapshot, and the coordinator adopts the tree back below
+                tree: std::mem::replace(tree, PredictionTree::placeholder()),
+                cache: self.draft_cache.take().expect("draft cache in residence"),
+            }],
+            max_children: self.cfg.tree.max_children,
+            metrics: Arc::clone(&self.worker_metrics),
+        };
+
+        let (draft_done, stage_dones) =
+            workers::run_tasks(self.pool.as_ref(), &self.rt, draft_job, stage_jobs);
+
+        // Bring every lent piece home before surfacing any task error, so
+        // a failed decode leaves the engine structurally intact.
+        self.draft_ctx = Some(draft_done.ctx);
+        let mut cands = draft_done.candidates;
+        let cand = cands.pop().expect("solo draft job has one candidate");
+        self.draft_cache = Some(cand.cache);
+        *tree = cand.tree; // adopt the (possibly expanded) tree
+        let groups_state = &mut self.groups_state;
+        let (outcomes, first_err) =
+            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches| {
+                groups_state[g] = Some(GroupState { ctx, caches });
+            });
+        let draft_oc = workers::finish_absorb(draft_done.res, first_err)?;
+        Ok((draft_oc, outcomes))
     }
 }
 
@@ -274,12 +387,10 @@ impl Engine for PipeDecEngine {
         sink.on_token(first);
 
         let groups = self.groups();
+        let gs = self.cfg.group_size;
         let d_bytes = self.target.cfg.dim * self.target.cfg.width_cap * 4;
         let mut inputs: Vec<Option<DataFlow>> = vec![None; groups];
-        inputs[0] = Some(DataFlow {
-            ids: vec![tree.id(0)],
-            hidden: None,
-        });
+        inputs[0] = Some(DataFlow::root(&tree));
 
         let wall0 = Instant::now();
         let mut modeled_s = 0.0;
@@ -290,40 +401,42 @@ impl Engine for PipeDecEngine {
         'outer: while decoded.len() < max_new {
             timesteps += 1;
             if timesteps > max_timesteps {
-                anyhow::bail!("timestep budget exceeded — engine stalled");
+                anyhow::bail!(
+                    "timestep budget ({max_timesteps}) exceeded — engine stalled with \
+                     {decoded_n}/{max_new} tokens decoded, {tree_n} tree nodes, \
+                     {in_flight} in-flight flows, {hits} hits / {misses} misses",
+                    decoded_n = decoded.len(),
+                    tree_n = tree.len(),
+                    in_flight = inputs.iter().flatten().count(),
+                );
             }
             let seq = timesteps;
 
-            // ---- draft phase ----
-            let (draft_df, draft_s) = self.draft_phase(&mut tree)?;
+            // ---- draft + stage phases: the timestep's task set, executed
+            // concurrently on the worker pool (sequentially inline when
+            // threads = 1); each group G_g runs its member stages
+            // sequentially within its task (paper §3.1) ----
+            let (draft_oc, group_ocs) = self.run_timestep_tasks(&mut tree, &mut inputs)?;
 
-            // ---- stage phase: each group G_g runs its member stages
-            // sequentially within the timestep (paper §3.1); the group's
-            // modeled time is the sum of its members' ----
+            // ---- deterministic post-order: transfer accounting and flow
+            // routing in group index order, then the draft grant ----
             let mut next_inputs: Vec<Option<DataFlow>> = vec![None; groups];
             let mut exit_df: Option<DataFlow> = None;
             let mut group_times = vec![0.0f64; groups];
             let mut transfer_times: Vec<f64> = Vec::new();
-            for g in 0..groups {
-                let Some(df0) = inputs[g].take() else { continue };
-                let span = self.group_stages(g);
-                let mut df = Some(df0);
-                for stage in span.clone() {
-                    let Some(cur) = df.take() else { break };
-                    let (out, secs) = self.stage_phase(stage, cur, &tree)?;
-                    group_times[g] += secs;
-                    if out.is_some() && stage + 1 < span.end {
-                        // intra-group hop: same timestep, scheduled transfer
-                        group_times[g] +=
-                            self.account_transfer(stage + 1, stage + 2, d_bytes, seq);
-                    }
-                    df = out;
+            for (g, oc) in group_ocs.into_iter().enumerate() {
+                let Some(oc) = oc else { continue };
+                group_times[g] = oc.compute_s;
+                for (src, dst) in oc.hops {
+                    // intra-group hop: same timestep, scheduled transfer
+                    group_times[g] += self.account_transfer(src, dst, d_bytes, seq);
                 }
-                let Some(out) = df else { continue };
+                let Some(out) = oc.flow else { continue };
                 if g + 1 < groups {
+                    let span_end = (g + 1) * gs;
                     transfer_times.push(self.account_transfer(
-                        span.end,
-                        span.end + 1,
+                        span_end,
+                        span_end + 1,
                         d_bytes,
                         seq,
                     ));
@@ -332,9 +445,10 @@ impl Engine for PipeDecEngine {
                     exit_df = Some(out);
                 }
             }
-            if let Some(df) = draft_df {
+            let draft_s = draft_oc.draft_s;
+            if let Some((_, df)) = draft_oc.granted {
                 // draft (rank 0) -> L_1: token ids only
-                transfer_times.push(self.account_transfer(0, 1, df.ids.len() * 8, seq));
+                transfer_times.push(self.account_transfer(0, 1, df.entry_bytes(), seq));
                 next_inputs[0] = Some(df);
             }
 
@@ -371,29 +485,44 @@ impl Engine for PipeDecEngine {
                     match outcome {
                         PruneOutcome::Hit { kept_old, .. } => {
                             hits += 1;
-                            for c in &mut self.stage_caches {
-                                c.promote_root_to_past()?;
-                                c.compact_tree(&kept_old);
+                            for st in self.groups_state.iter_mut() {
+                                let st = st.as_mut().expect("group state in residence");
+                                for c in &mut st.caches {
+                                    c.promote_root_to_past()?;
+                                    c.compact_tree(&kept_old);
+                                }
                             }
-                            self.draft_cache.promote_root_to_past()?;
-                            self.draft_cache.compact_tree(&kept_old);
+                            let dc = self
+                                .draft_cache
+                                .as_mut()
+                                .expect("draft cache in residence");
+                            dc.promote_root_to_past()?;
+                            dc.compact_tree(&kept_old);
                         }
                         PruneOutcome::Miss => {
                             misses += 1;
-                            for c in &mut self.stage_caches {
-                                c.promote_root_to_past()?;
-                                c.clear_tree();
+                            for st in self.groups_state.iter_mut() {
+                                let st = st.as_mut().expect("group state in residence");
+                                for c in &mut st.caches {
+                                    c.promote_root_to_past()?;
+                                    c.clear_tree();
+                                }
                             }
-                            self.draft_cache.promote_root_to_past()?;
-                            self.draft_cache.clear_tree();
-                            let root_pos = self.stage_caches[0].past_len();
+                            let dc = self
+                                .draft_cache
+                                .as_mut()
+                                .expect("draft cache in residence");
+                            dc.promote_root_to_past()?;
+                            dc.clear_tree();
+                            let root_pos = self.groups_state[0]
+                                .as_ref()
+                                .expect("group state in residence")
+                                .caches[0]
+                                .past_len();
                             tree = PredictionTree::new(self.cfg.tree, budget, x, root_pos);
                             // in-flight data flows are stale: restart pipeline
                             next_inputs = vec![None; groups];
-                            next_inputs[0] = Some(DataFlow {
-                                ids: vec![tree.id(0)],
-                                hidden: None,
-                            });
+                            next_inputs[0] = Some(DataFlow::root(&tree));
                         }
                     }
                     if x == tokenizer::EOS_ID {
@@ -410,6 +539,9 @@ impl Engine for PipeDecEngine {
         metrics.incr("timesteps", timesteps);
         metrics.incr("hits", hits);
         metrics.incr("misses", misses);
+        metrics.incr("worker_threads", self.worker_threads() as u64);
+        // per-task timings the workers recorded concurrently
+        metrics.merge(&self.worker_metrics.drain());
         // decode-loop host↔device traffic (excluding prefill): what the
         // device-resident path moved vs what argument-per-call marshalling
         // would have moved (BENCH_hotpath.json reads these)

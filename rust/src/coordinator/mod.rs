@@ -14,6 +14,11 @@
 //! * [`pipeline`] — the per-request mechanics ([`pipeline::DataFlow`],
 //!   draft expansion, stage execution) both engines share, so their
 //!   per-session outputs are identical by construction.
+//! * [`workers`] — the persistent pipeline worker pool (ISSUE 4): a
+//!   timestep's task set (draft + one task per timestep group) executes on
+//!   real threads, state moving in and out of jobs by ownership, with
+//!   `threads = 1` running the identical jobs inline as the sequential
+//!   reference path. Both engines dispatch through it.
 //! * [`sampling`] — greedy and stochastic (temperature/top-p/top-k) token
 //!   selection shared with the baselines.
 
@@ -21,7 +26,9 @@ pub mod db;
 pub mod engine;
 pub mod pipeline;
 pub mod sampling;
+pub mod workers;
 
 pub use db::PipeDecDbEngine;
 pub use engine::PipeDecEngine;
 pub use sampling::{select_token, top_candidates, Sampling};
+pub use workers::WorkerPool;

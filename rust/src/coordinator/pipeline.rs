@@ -7,6 +7,11 @@
 //! layers vs. a dynamic batch of flows from different sessions); the
 //! per-flow math here is identical, so extracting it guarantees the DB
 //! scheduler's per-session outputs match solo PipeDec token-for-token.
+//!
+//! Since ISSUE 4 both entry points take the split model state — a shared
+//! read-only [`ModelCore`] plus the caller's mutable [`StageContext`] — so
+//! a timestep's task set dispatches onto the pipeline worker pool
+//! ([`super::workers`]) as well as running inline on one thread.
 
 use std::time::Instant;
 
@@ -14,7 +19,7 @@ use anyhow::Result;
 
 use super::sampling::top_candidates;
 use crate::kvcache::TwoLevelCache;
-use crate::model::{bias, ModelHandles};
+use crate::model::{bias, ModelCore, StageContext};
 use crate::runtime::Runtime;
 use crate::tree::PredictionTree;
 
@@ -49,13 +54,14 @@ impl DataFlow {
 /// layer of top-`max_children` candidates, and return the new layer's data
 /// flow plus the measured draft seconds.
 pub fn draft_expand(
-    draft: &mut ModelHandles,
+    draft: &ModelCore,
     rt: &Runtime,
+    ctx: &mut StageContext,
     cache: &mut TwoLevelCache,
     tree: &mut PredictionTree,
     max_children: usize,
 ) -> Result<(Option<DataFlow>, f64)> {
-    let dc = draft.cfg.clone();
+    let dc = &draft.cfg;
     let start = cache.tree_len();
     if start >= tree.len() || tree.len() >= cache.tree_cap() {
         return Ok((None, 0.0)); // frontier already processed or budget full
@@ -74,7 +80,7 @@ pub fn draft_expand(
     let rows = tree.bias_rows(&indices, dc.tree_cap, bias::NEG);
     let tree_bias =
         bias::pad_tree_bias_rows(rows, indices.len(), start, dc.width_cap, dc.tree_cap);
-    let logits = draft.full_forward_tree_block(rt, cache, &tokens, &pos, &tree_bias)?;
+    let logits = draft.full_forward_tree_block(rt, ctx, cache, &tokens, &pos, &tree_bias)?;
     let v = dc.vocab_size;
     let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
         .map(|r| top_candidates(&logits[r * v..(r + 1) * v], max_children))
@@ -92,18 +98,19 @@ pub fn draft_expand(
 /// flight, run the stage's layer span over the survivors with the stage's
 /// (per-request) cache, and return the outgoing data flow (`None` if
 /// everything was pruned away) plus the measured stage seconds. The past
-/// bias comes from the model's incremental bias cache keyed off the cache's
-/// `past_len` (all of one request's stages agree on it because promotions
-/// are synchronized at that request's sync points).
+/// bias comes from the context's incremental bias cache keyed off the
+/// cache's `past_len` (all of one request's stages agree on it because
+/// promotions are synchronized at that request's sync points).
 pub fn run_stage(
-    target: &mut ModelHandles,
+    target: &ModelCore,
     rt: &Runtime,
+    ctx: &mut StageContext,
     layer_range: std::ops::Range<usize>,
     cache: &mut TwoLevelCache,
     df: DataFlow,
     tree: &PredictionTree,
 ) -> Result<(Option<DataFlow>, f64)> {
-    let tc = target.cfg.clone();
+    let tc = &target.cfg;
     let w = tc.width_cap;
     let d = tc.dim;
 
@@ -151,7 +158,8 @@ pub fn run_stage(
     let rows = tree.bias_rows(&indices, tc.tree_cap, bias::NEG);
     let tree_bias = bias::pad_tree_bias_rows(rows, count, cache.tree_len(), w, tc.tree_cap);
 
-    let h_out = target.stage_forward(rt, layer_range, cache, hidden, count, &pos, &tree_bias)?;
+    let h_out =
+        target.stage_forward(rt, ctx, layer_range, cache, hidden, count, &pos, &tree_bias)?;
     let ids = indices.iter().map(|&i| tree.id(i)).collect();
     Ok((
         Some(DataFlow {

@@ -1,0 +1,438 @@
+//! Persistent pipeline worker pool (ISSUE 4 tentpole): real threads for
+//! the per-timestep task set, so wall-clock approaches the paper's modeled
+//! parallel-schedule latency `max(T_draft, max_i(T_group_i) + max_i(T_t,i))`
+//! instead of the sequential sum the single-threaded engines pay.
+//!
+//! # Execution model
+//!
+//! A timestep's task set is one [`DraftJob`] (the draft node: entry grant
+//! or one tree expansion) plus one [`StageJob`] per occupied timestep group
+//! (the group's member stages run sequentially inside the job, exactly as
+//! in the paper's §3.1 grouping). Tasks of one timestep are mutually
+//! independent by construction:
+//!
+//! * stage jobs *read* an immutable `Arc` snapshot of the owning
+//!   request's prediction tree (one snapshot per request per timestep);
+//!   the draft job takes the canonical tree by move, mutates it, and the
+//!   coordinator adopts it back. Appending a BFS layer never changes
+//!   the indices, ancestor masks, or positions of existing nodes, so a
+//!   stage pass over the pre-expansion snapshot is bit-identical to the
+//!   sequential engine's pass over the post-expansion tree;
+//! * every job *owns* its mutable state while it runs: the member stages'
+//!   KV caches and the group's [`StageContext`] (device KV mirrors +
+//!   incremental bias) move into the job through the channel and move
+//!   back in the [`StageDone`] / [`DraftDone`] reply — no locks, no
+//!   sharing;
+//! * the shared model ([`ModelCore`]) and the PJRT [`Runtime`] are
+//!   read-only and `Send + Sync` (see the audit in `crate::runtime`).
+//!
+//! The coordinator blocks on the full reply set each timestep (the sync
+//! phase needs every cache back), then does transfer accounting, the
+//! latency model, and verification alone — those are host-math
+//! microseconds. Because all model math is in the jobs and the reply
+//! order is normalized by group index, **threaded decode is
+//! token-identical to sequential decode by construction**; with
+//! `threads = 1` the engines skip the pool and run the same jobs inline
+//! ([`run_inline`]), which is the reference path.
+//!
+//! Model-level failures travel back as `Result`s inside the replies. A
+//! *panic* inside a task is caught on the worker, reported as a
+//! [`Done`]-level reply, and re-raised as a panic on the coordinator once
+//! the rest of the timestep's replies have drained — matching the inline
+//! path's panic semantics instead of deadlocking the reply loop (the
+//! panicked task's lent state is lost, so the engine is poisoned, exactly
+//! as it would be mid-panic single-threaded).
+//!
+//! Worker-side timings land in a thread-safe
+//! [`crate::metrics::SharedMetrics`] carried by each job, so workers
+//! record without funneling through the coordinator.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::pipeline::{self, DataFlow};
+use crate::kvcache::TwoLevelCache;
+use crate::metrics::SharedMetrics;
+use crate::model::{ModelCore, StageContext};
+use crate::runtime::Runtime;
+use crate::tree::PredictionTree;
+
+/// One timestep group's task: run the incoming flow through the group's
+/// member stages (span order). State fields move in and move back out via
+/// [`StageDone`].
+pub struct StageJob {
+    /// Timestep group index (reply routing + deterministic post-order).
+    pub group: usize,
+    pub core: Arc<ModelCore>,
+    pub ctx: StageContext,
+    /// Member stages' KV caches, in span order.
+    pub caches: Vec<TwoLevelCache>,
+    /// Member stages' layer spans, in span order (same length as `caches`).
+    pub layer_ranges: Vec<std::ops::Range<usize>>,
+    /// Global stage index of each member (intra-group hop endpoints).
+    pub stage_ids: Vec<usize>,
+    pub df: DataFlow,
+    /// Read snapshot of the owning request's tree — `Arc`, because every
+    /// occupied slot of one request shares the same immutable snapshot
+    /// (the draft task gets its own owned tree to mutate).
+    pub tree: Arc<PredictionTree>,
+    pub metrics: Arc<SharedMetrics>,
+}
+
+/// What a [`StageJob`] computed (state first — it must come home even when
+/// the forward pass failed).
+pub struct StageDone {
+    pub group: usize,
+    pub ctx: StageContext,
+    pub caches: Vec<TwoLevelCache>,
+    pub res: Result<GroupOutcome>,
+}
+
+/// Successful result of one group task.
+pub struct GroupOutcome {
+    /// Outgoing flow (`None` when every row was pruned away in flight).
+    pub flow: Option<DataFlow>,
+    /// Sum of the member stages' measured compute seconds.
+    pub compute_s: f64,
+    /// Intra-group hop endpoints `(src, dst)` the coordinator must account
+    /// through the central scheduler (same timestep, same group).
+    pub hops: Vec<(usize, usize)>,
+}
+
+/// One session's claim on the draft node this timestep, visited in the
+/// engine's round-robin order.
+pub struct DraftCandidate {
+    /// Caller-defined tag identifying the owner (live index for
+    /// SpecPipe-DB, 0 for the solo engine).
+    pub tag: usize,
+    /// Pending root flow (fresh admission / miss restart) — granted as-is,
+    /// without draft compute.
+    pub entry: Option<DataFlow>,
+    /// The owner's canonical tree, taken by move (a placeholder stands in
+    /// at the owner); the visited candidate's tree is expanded in place
+    /// and every tree is adopted back from [`DraftDone`].
+    pub tree: PredictionTree,
+    /// The owner's draft KV cache.
+    pub cache: TwoLevelCache,
+}
+
+/// The draft node's task: grant pipeline slot 0 to the first candidate
+/// with a pending entry flow or a successful tree expansion.
+pub struct DraftJob {
+    pub core: Arc<ModelCore>,
+    pub ctx: StageContext,
+    pub candidates: Vec<DraftCandidate>,
+    pub max_children: usize,
+    pub metrics: Arc<SharedMetrics>,
+}
+
+/// Reply to a [`DraftJob`]; candidates come back in submission order with
+/// their (possibly expanded) trees and mutated caches.
+pub struct DraftDone {
+    pub ctx: StageContext,
+    pub candidates: Vec<DraftCandidate>,
+    pub res: Result<DraftOutcome>,
+}
+
+/// Successful result of the draft task.
+pub struct DraftOutcome {
+    /// `(candidate tag, flow)` granted pipeline slot 0, if any.
+    pub granted: Option<(usize, DataFlow)>,
+    /// Total measured draft compute seconds across visited candidates.
+    pub draft_s: f64,
+}
+
+/// Execute one group task (worker thread or inline reference path).
+pub fn exec_stage_job(rt: &Runtime, mut job: StageJob) -> StageDone {
+    debug_assert_eq!(job.caches.len(), job.layer_ranges.len());
+    let n = job.caches.len();
+    let mut df = Some(job.df);
+    let mut compute_s = 0.0f64;
+    let mut hops = Vec::new();
+    let mut err = None;
+    for k in 0..n {
+        let Some(cur) = df.take() else { break };
+        match pipeline::run_stage(
+            &job.core,
+            rt,
+            &mut job.ctx,
+            job.layer_ranges[k].clone(),
+            &mut job.caches[k],
+            cur,
+            &job.tree,
+        ) {
+            Ok((out, secs)) => {
+                compute_s += secs;
+                if out.is_some() && k + 1 < n {
+                    // intra-group hop: same timestep, scheduled transfer
+                    hops.push((job.stage_ids[k] + 1, job.stage_ids[k] + 2));
+                }
+                df = out;
+            }
+            Err(e) => {
+                err = Some(e);
+                df = None;
+                break;
+            }
+        }
+    }
+    job.metrics.incr("worker_stage_tasks", 1);
+    job.metrics.record("worker_group_s", compute_s);
+    StageDone {
+        group: job.group,
+        ctx: job.ctx,
+        caches: job.caches,
+        res: match err {
+            None => Ok(GroupOutcome {
+                flow: df,
+                compute_s,
+                hops,
+            }),
+            Some(e) => Err(e),
+        },
+    }
+}
+
+/// Execute the draft task (worker thread or inline reference path):
+/// visit candidates in order, grant slot 0 to the first pending entry
+/// flow or successful expansion — the same loop both engines ran
+/// sequentially.
+pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
+    let mut draft_s = 0.0f64;
+    let mut granted = None;
+    let mut err = None;
+    for cand in job.candidates.iter_mut() {
+        if let Some(df) = cand.entry.take() {
+            granted = Some((cand.tag, df));
+            break;
+        }
+        match pipeline::draft_expand(
+            &job.core,
+            rt,
+            &mut job.ctx,
+            &mut cand.cache,
+            &mut cand.tree,
+            job.max_children,
+        ) {
+            Ok((flow, secs)) => {
+                draft_s += secs;
+                if let Some(df) = flow {
+                    granted = Some((cand.tag, df));
+                    break;
+                }
+            }
+            Err(e) => {
+                err = Some(e);
+                break;
+            }
+        }
+    }
+    job.metrics.incr("worker_draft_tasks", 1);
+    job.metrics.record("worker_draft_s", draft_s);
+    DraftDone {
+        ctx: job.ctx,
+        candidates: job.candidates,
+        res: match err {
+            None => Ok(DraftOutcome { granted, draft_s }),
+            Some(e) => Err(e),
+        },
+    }
+}
+
+/// Reference path (`threads = 1`): execute the timestep's task set on the
+/// caller thread, draft first — byte-identical results to the pool, same
+/// job plumbing, zero concurrency.
+pub fn run_inline(
+    rt: &Runtime,
+    draft: DraftJob,
+    stages: Vec<StageJob>,
+) -> (DraftDone, Vec<StageDone>) {
+    let d = exec_draft_job(rt, draft);
+    let s = stages.into_iter().map(|j| exec_stage_job(rt, j)).collect();
+    (d, s)
+}
+
+/// Execute a timestep's task set on the pool when one exists, inline
+/// otherwise — the single dispatch seam both engines go through.
+pub fn run_tasks(
+    pool: Option<&WorkerPool>,
+    rt: &Runtime,
+    draft: DraftJob,
+    stages: Vec<StageJob>,
+) -> (DraftDone, Vec<StageDone>) {
+    match pool {
+        Some(pool) => pool.run_timestep(draft, stages),
+        None => run_inline(rt, draft, stages),
+    }
+}
+
+/// Reabsorb stage replies: hand each reply's lent state to `restore`
+/// *before* looking at its result — the invariant that keeps a failed
+/// decode from stranding caches/contexts — and collect the outcomes in
+/// group order plus the first task error, if any.
+pub fn absorb_stage_dones(
+    groups: usize,
+    dones: Vec<StageDone>,
+    mut restore: impl FnMut(usize, StageContext, Vec<TwoLevelCache>),
+) -> (Vec<Option<GroupOutcome>>, Option<anyhow::Error>) {
+    let mut outcomes: Vec<Option<GroupOutcome>> = (0..groups).map(|_| None).collect();
+    let mut first_err = None;
+    for done in dones {
+        restore(done.group, done.ctx, done.caches);
+        match done.res {
+            Ok(oc) => outcomes[done.group] = Some(oc),
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    (outcomes, first_err)
+}
+
+/// Final step of reabsorbing a timestep: combine the draft reply's result
+/// with any stage-side error (stage errors win — they were dispatched
+/// first), yielding the draft outcome only when every task succeeded.
+/// Callers restore all lent state *before* calling this.
+pub fn finish_absorb(
+    draft_res: Result<DraftOutcome>,
+    stage_err: Option<anyhow::Error>,
+) -> Result<DraftOutcome> {
+    match stage_err {
+        Some(e) => Err(e),
+        None => draft_res,
+    }
+}
+
+enum Job {
+    Stage(StageJob),
+    Draft(DraftJob),
+}
+
+enum Done {
+    Stage(StageDone),
+    Draft(DraftDone),
+    /// A task panicked on the worker; carries the panic payload text. The
+    /// coordinator re-raises it after draining the timestep's replies.
+    Panicked(String),
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The persistent pool: one thread per pipeline worker, fed over
+/// per-worker channels, replying on one shared channel. The draft task is
+/// pinned to the last worker; stage tasks round-robin over the rest in
+/// dispatch order, so with `workers >= groups + 1` every task of a
+/// timestep runs on its own thread (the paper's one-device-per-node
+/// deployment) and no stage worker queues two tasks while another idles.
+pub struct WorkerPool {
+    txs: Vec<Sender<Job>>,
+    rx: Receiver<Done>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize, rt: Arc<Runtime>) -> Result<Self> {
+        anyhow::ensure!(workers >= 1, "worker pool needs >= 1 worker");
+        let (done_tx, done_rx) = channel::<Done>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let done_tx = done_tx.clone();
+            let rt = Arc::clone(&rt);
+            let handle = std::thread::Builder::new()
+                .name(format!("pipedec-worker-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // Contain task panics: the coordinator counts on one
+                        // reply per job, so a panicking task must still
+                        // answer or the reply loop would block forever.
+                        let done = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| match job {
+                                Job::Stage(j) => Done::Stage(exec_stage_job(&rt, j)),
+                                Job::Draft(j) => Done::Draft(exec_draft_job(&rt, j)),
+                            }),
+                        )
+                        .unwrap_or_else(|p| Done::Panicked(panic_message(p.as_ref())));
+                        if done_tx.send(done).is_err() {
+                            break; // pool dropped
+                        }
+                    }
+                })?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(Self {
+            txs,
+            rx: done_rx,
+            handles,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Dispatch one timestep's task set and block until every task
+    /// replied. Panics only if a worker thread died (a worker never
+    /// panics on model errors — those come back in `res`).
+    pub fn run_timestep(
+        &self,
+        draft: DraftJob,
+        stages: Vec<StageJob>,
+    ) -> (DraftDone, Vec<StageDone>) {
+        let n = self.txs.len();
+        let mut sent = 1usize;
+        self.txs[n - 1]
+            .send(Job::Draft(draft))
+            .expect("pipeline worker exited");
+        // round-robin over *dispatched* tasks (not group ids): with sparse
+        // occupancy, assigning by group id would pile same-residue groups
+        // onto one worker while others idle
+        let stage_workers = (n - 1).max(1);
+        for (i, job) in stages.into_iter().enumerate() {
+            let w = if n == 1 { 0 } else { i % stage_workers };
+            self.txs[w]
+                .send(Job::Stage(job))
+                .expect("pipeline worker exited");
+            sent += 1;
+        }
+        let mut draft_done = None;
+        let mut stage_dones = Vec::with_capacity(sent - 1);
+        let mut panicked: Option<String> = None;
+        for _ in 0..sent {
+            match self.rx.recv().expect("pipeline worker exited") {
+                Done::Draft(d) => draft_done = Some(d),
+                Done::Stage(s) => stage_dones.push(s),
+                Done::Panicked(msg) => panicked = Some(msg),
+            }
+        }
+        if let Some(msg) = panicked {
+            // mirror the inline path: a panicking task panics the decode
+            // (after draining every reply, so no worker is left mid-send)
+            panic!("pipeline worker task panicked: {msg}");
+        }
+        (
+            draft_done.expect("draft task is always dispatched"),
+            stage_dones,
+        )
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.txs.clear(); // close the job channels; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

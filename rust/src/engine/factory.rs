@@ -104,6 +104,13 @@ impl FromStr for EngineKind {
 
 /// Construct an engine of the given kind over the AOT artifacts in
 /// `artifact_dir`.
+///
+/// The PipeDec engines (`PipeDec`, `PipeDecDb`) honor
+/// `EngineConfig::threads`: `>= 2` (or `0` = auto on a multi-core host)
+/// spins up the persistent pipeline worker pool
+/// ([`crate::coordinator::workers`]), `1` keeps the sequential reference
+/// path. Outputs are token-identical either way; the baselines are
+/// single-device strategies and ignore the knob.
 pub fn build_engine(
     kind: EngineKind,
     artifact_dir: &Path,

@@ -138,6 +138,14 @@ impl TwoLevelCache {
         }
     }
 
+    /// A zero-capacity stand-in left behind while a real cache is lent to
+    /// a pipeline worker (moved through the job channel); allocates
+    /// nothing. Any forward pass over a placeholder fails shape checks
+    /// immediately, so accidental use is loud.
+    pub fn placeholder() -> Self {
+        Self::new(0, 0, 0, 0, 0)
+    }
+
     /// Process-unique identity of this cache (stable across mutations,
     /// fresh on clone) — the key for per-cache device mirrors.
     pub fn id(&self) -> u64 {

@@ -36,12 +36,26 @@
 //!   scheduler ([`coordinator::PipeDecDbEngine`], per-session caches and
 //!   trees interleaved over the pipeline slots), the per-request
 //!   mechanics they share ([`coordinator::pipeline`]), and token sampling.
+//!   Both engines execute each timestep's task set on the persistent
+//!   pipeline worker pool ([`coordinator::workers::WorkerPool`], one
+//!   thread per stage group plus the draft node, `EngineConfig::threads`):
+//!   state moves into jobs and back by ownership, verification stays at
+//!   the coordinator's sync phase, and `threads = 1` runs the identical
+//!   jobs inline as the sequential reference path — token outputs are
+//!   identical at every thread count.
 //! * [`baselines`] — PP / STPP / SLM comparison engines (paper §4.2).
 //!
 //! The substrate they share:
 //!
 //! * [`runtime`], [`model`], [`weights`] — PJRT execution of the AOT
-//!   artifacts (Python never runs on the request path). The hot path is
+//!   artifacts (Python never runs on the request path). The model state is
+//!   split for threaded execution: [`model::ModelCore`] is the shared
+//!   read-only core (config, resolved executables, resident weight
+//!   buffers; `Send + Sync` via the audited PJRT wrappers in [`runtime`])
+//!   behind an `Arc`, [`model::StageContext`] is the per-stage-group
+//!   mutable state (device KV mirrors, incremental bias) each worker task
+//!   owns while it runs, and [`model::ModelHandles`] is the sequential
+//!   pairing of the two kept for baselines/benches. The hot path is
 //!   **device-resident**: [`runtime::Executable::run_bufs`] executes with
 //!   [`runtime::DeviceBuffer`] arguments, weights upload once at load,
 //!   per-cache [`kvcache::device::DeviceKvCache`] mirrors re-upload KV
@@ -51,13 +65,17 @@
 //!   output tuple still crosses to the host once per layer — see the
 //!   [`model`] docs for the exact boundary).
 //!   [`runtime::TransferStats`] accounts the host↔device traffic
-//!   (`rust/benches/bench_hotpath.rs` → `BENCH_hotpath.json`).
+//!   (`rust/benches/bench_hotpath.rs` → `BENCH_hotpath.json`;
+//!   `rust/benches/bench_async.rs` → `BENCH_async.json` for wall vs
+//!   modeled latency per worker-thread count).
 //! * [`tree`], [`kvcache`], [`schedule`], [`transport`], [`workflow`] — the
 //!   dynamic prediction tree, two-level KV cache (with per-layer dirty
 //!   epochs feeding the device mirror), transmission scheduler, link
 //!   model, and the workflow DAG controller.
 //! * [`config`], [`tokenizer`], [`metrics`], [`util`] — configuration
-//!   (TOML subset), byte-level tokenizer, metrics/tables, numeric helpers.
+//!   (TOML subset), byte-level tokenizer, metrics/tables (including the
+//!   thread-safe [`metrics::SharedMetrics`] sink the pipeline workers
+//!   record into), numeric helpers.
 //!
 //! Serving, evaluation, and paper-scale extrapolation:
 //!

@@ -28,7 +28,7 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
   pipedec decode  [--engine KIND] [--stages N] [--group-size G] [--width W]
                   [--children C] [--max-new N] [--prompt TEXT | --domain D]
                   [--temperature T] [--top-p P] [--top-k K] [--seed S]
-                  [--config FILE] [--no-stream]
+                  [--threads T] [--config FILE] [--no-stream]
                   decode one prompt, streaming tokens as they are verified
                   (--no-stream prints only the final completion)
   pipedec serve   [--engine KIND] [--requests N] [--queue-cap N]
@@ -41,6 +41,9 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
                   [--domain D]
                   paper-scale cluster simulation (70B / RTX3090)
   pipedec info    artifact + config summary
+
+  --threads: pipeline worker threads for the pipedec engines
+             (0 = auto: one per core; 1 = sequential reference path)
 
   KIND (--engine): pipedec     pipeline + draft-in-pipeline dynamic-tree speculation
                    pipedec-db  SpecPipe-DB: continuous batching across requests
@@ -88,7 +91,7 @@ fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, Stri
 
 const ENGINE_CFG_FLAGS: &[&str] = &[
     "engine", "stages", "group-size", "width", "children", "max-new",
-    "temperature", "top-p", "top-k", "seed", "config",
+    "temperature", "top-p", "top-k", "seed", "threads", "config",
 ];
 
 fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
@@ -122,6 +125,9 @@ fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     }
     if let Some(v) = flags.get("seed") {
         cfg.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("threads") {
+        cfg.threads = v.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -163,9 +169,12 @@ fn cmd_decode(flags: HashMap<String, String>) -> Result<()> {
         .is_some_and(|v| !matches!(v.as_str(), "false" | "0" | "no"));
     let stream = !no_stream;
     let dir = pipedec::artifacts_dir();
+    // the engines clamp the pool to groups + 1 workers; report what will
+    // actually run, not the raw knob
+    let workers = cfg.effective_threads().min(cfg.stages / cfg.group_size + 1);
     println!(
-        "engine={kind} stages={} tree=(w={},c={})",
-        cfg.stages, cfg.tree.max_width, cfg.tree.max_children
+        "engine={kind} stages={} tree=(w={},c={}) threads={workers}",
+        cfg.stages, cfg.tree.max_width, cfg.tree.max_children,
     );
     println!("--- prompt ---\n{prompt}\n--- completion ---");
 
@@ -211,6 +220,8 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
     anyhow::ensure!(n >= 1, "--requests must be >= 1");
     let dir = pipedec::artifacts_dir();
 
+    // worker count as the engines clamp it (groups + 1 pool ceiling)
+    let threads = cfg.effective_threads().min(cfg.stages / cfg.group_size + 1);
     let mut sched = build_scheduled_engine(kind, &dir, cfg)?;
     let prompts = mixed_stream(&dir, (n + 5) / 6)?;
     let mut router = Router::new(cap);
@@ -218,7 +229,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
         router.submit_prompt(p)?;
     }
     println!(
-        "serving {} queued requests through engine={kind} ({})...",
+        "serving {} queued requests through engine={kind} ({}), {threads} worker thread(s)...",
         router.depth(),
         kind.describe()
     );

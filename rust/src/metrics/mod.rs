@@ -1,7 +1,12 @@
 //! Metrics: counters, latency recorders, and table/CSV output for the
-//! benches and examples.
+//! benches and examples. [`Metrics`] is the single-threaded per-decode
+//! accumulator; [`SharedMetrics`] is the thread-safe sink the pipeline
+//! workers record into directly (ISSUE 4), drained into a [`Metrics`] at
+//! the coordinator's sync points.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 use crate::util::Summary;
@@ -54,6 +59,82 @@ impl Metrics {
         }
         for k in self.samples.keys() {
             out.push_str(&format!("{k}: {}\n", self.summary(k)));
+        }
+        out
+    }
+}
+
+/// Thread-safe metrics sink: counters are atomics behind an `RwLock`ed
+/// name table (lock-free on the hot path once a name exists), sample
+/// series sit behind a `Mutex`. Pipeline workers record into a shared
+/// `Arc<SharedMetrics>` without funneling through the coordinator thread;
+/// the coordinator folds [`SharedMetrics::drain`] into the per-decode
+/// [`Metrics`] when it assembles a `DecodeOutput`.
+///
+/// Sample *order* across workers is nondeterministic; consumers read
+/// order-independent aggregates ([`Metrics::summary`], counters).
+#[derive(Debug, Default)]
+pub struct SharedMetrics {
+    counters: RwLock<BTreeMap<String, AtomicU64>>,
+    samples: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl SharedMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        {
+            let map = self.counters.read().unwrap_or_else(|e| e.into_inner());
+            if let Some(c) = map.get(name) {
+                c.fetch_add(by, Ordering::Relaxed);
+                return;
+            }
+        }
+        let mut map = self.counters.write().unwrap_or_else(|e| e.into_inner());
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn record(&self, name: &str, value: f64) {
+        self.samples
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(name.to_string())
+            .or_default()
+            .push(value);
+    }
+
+    /// Move everything recorded so far into a plain [`Metrics`], leaving
+    /// this sink empty (so successive decodes see only their own deltas).
+    pub fn drain(&self) -> Metrics {
+        let mut out = Metrics::new();
+        let counters = std::mem::take(
+            &mut *self.counters.write().unwrap_or_else(|e| e.into_inner()),
+        );
+        for (k, v) in counters {
+            let n = v.into_inner();
+            if n > 0 {
+                out.incr(&k, n);
+            }
+        }
+        let samples =
+            std::mem::take(&mut *self.samples.lock().unwrap_or_else(|e| e.into_inner()));
+        for (k, vs) in samples {
+            for v in vs {
+                out.record(&k, v);
+            }
         }
         out
     }
@@ -190,6 +271,33 @@ mod tests {
             let _t = ScopedTimer::new(&mut m, "dur");
         }
         assert_eq!(m.samples("dur").len(), 1);
+    }
+
+    #[test]
+    fn shared_metrics_accumulate_across_threads() {
+        use std::sync::Arc;
+        let m = Arc::new(SharedMetrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.incr("jobs", 1);
+                        m.record("lat", 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("jobs"), 400);
+        let drained = m.drain();
+        assert_eq!(drained.counter("jobs"), 400);
+        assert_eq!(drained.samples("lat").len(), 400);
+        // drain leaves the sink empty for the next decode
+        assert_eq!(m.counter("jobs"), 0);
+        assert_eq!(m.drain().samples("lat").len(), 0);
     }
 
     #[test]

@@ -11,6 +11,25 @@
 //! -> (h'[W,d], k_new[H,W,hd], v_new[H,W,hd])
 //! ```
 //!
+//! # Core / context split (ISSUE 4)
+//!
+//! Threaded stage execution needs the model state partitioned by mutability:
+//!
+//! * [`ModelCore`] — the shared, **read-only** model: config, the three
+//!   pre-resolved entry-point executables, and the device-resident weight
+//!   buffers. Built once at load, then shared behind an `Arc` by every
+//!   pipeline worker (`Send + Sync` via the audited PJRT wrappers in
+//!   [`crate::runtime`]). All forward methods take `&self`.
+//! * [`StageContext`] — the per-stage(-group) **mutable** execution state:
+//!   the per-cache [`DeviceKvCache`] mirrors, the incremental
+//!   [`bias::PastBiasCache`] with its cached device buffer. Each pipeline
+//!   worker task owns exactly one context for the duration of a timestep,
+//!   so `run_stage` / `draft_expand` dispatch across threads without
+//!   locks.
+//! * [`ModelHandles`] — the original single-threaded surface, now a thin
+//!   `Arc<ModelCore>` + one `StageContext` pair, kept so the baselines,
+//!   benches, and tests that execute sequentially are untouched.
+//!
 //! # Device-resident hot path (EXPERIMENTS.md §Perf iteration 4)
 //!
 //! Every artifact call runs through [`crate::runtime::Executable::run_bufs`]
@@ -19,8 +38,9 @@
 //! * **weights** — the nine per-layer tensors plus `emb` / `final_norm`
 //!   are uploaded once at load and never marshalled again;
 //! * **KV cache** — each [`TwoLevelCache`] gets a [`DeviceKvCache`] mirror
-//!   (keyed by [`TwoLevelCache::id`]) whose per-layer tensors re-upload
-//!   only when the host cache's mutation epoch moved;
+//!   (keyed by [`TwoLevelCache::id`], owned by the [`StageContext`] that
+//!   executes the cache's stage) whose per-layer tensors re-upload only
+//!   when the host cache's mutation epoch moved;
 //! * **past bias** — a grow-only [`bias::PastBiasCache`] row block with a
 //!   cached device buffer, re-uploaded only when `past_len` changed;
 //! * **hidden states** — inside a stage span the running hidden block is
@@ -42,6 +62,7 @@ pub mod bias;
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -69,9 +90,7 @@ pub struct LayerOut {
 /// Execute one `*_layer` call with device-resident arguments. The single
 /// place that knows the artifact argument order (9 weights + 9 dynamics,
 /// see the module header) and the per-call transfer accounting — both the
-/// span runner and [`ModelHandles::layer_forward`] go through here. A free
-/// function (not a method) so callers can hold disjoint `&mut` borrows of
-/// other `ModelHandles` fields.
+/// span runner and [`ModelCore::layer_forward`] go through here.
 #[allow(clippy::too_many_arguments)]
 fn exec_layer(
     layer_exe: &Executable,
@@ -90,9 +109,74 @@ fn exec_layer(
     Ok(out)
 }
 
-/// One loaded model (target or draft): pre-resolved entry-point
-/// executables + device-resident weight buffers built once at load time.
-pub struct ModelHandles {
+/// Per-stage(-group) mutable execution state: the device KV mirrors of the
+/// caches this stage executes, plus the incremental past bias and its
+/// cached device buffer. One context is owned by exactly one pipeline
+/// worker task at a time (lent by move through the job channel), which is
+/// what makes concurrent stage execution safe without locking.
+pub struct StageContext {
+    /// Block width / past capacity of the owning model (bias row shape).
+    w: usize,
+    p: usize,
+    past_bias: PastBiasCache,
+    past_bias_buf: Option<(u64, DeviceBuffer)>,
+    /// Per-cache KV mirrors, keyed by [`TwoLevelCache::id`]. Lifetime
+    /// contract: an entry lives until [`StageContext::release_cache`]
+    /// evicts it, so engines with long-lived caches create them once and
+    /// `reset()` between requests, while schedulers that mint per-session
+    /// caches (SpecPipe-DB) must release each cache's mirror at session
+    /// teardown or the device buffers leak for the engine's lifetime.
+    dev_kv: HashMap<u64, DeviceKvCache>,
+}
+
+impl StageContext {
+    pub fn new(width_cap: usize, past_cap: usize) -> Self {
+        Self {
+            w: width_cap,
+            p: past_cap,
+            past_bias: PastBiasCache::new(width_cap, past_cap),
+            past_bias_buf: None,
+            dev_kv: HashMap::new(),
+        }
+    }
+
+    /// Evict the device KV mirror of cache `cache_id` (the value of
+    /// [`TwoLevelCache::id`]); returns whether a mirror existed. Dropping
+    /// the mirror frees its device buffers; the next forward pass over a
+    /// cache with that id would transparently rebuild it with one full
+    /// upload. Sessions that mint per-request caches (SpecPipe-DB) call
+    /// this at teardown.
+    pub fn release_cache(&mut self, cache_id: u64) -> bool {
+        self.dev_kv.remove(&cache_id).is_some()
+    }
+
+    /// Number of live device KV mirrors (leak accounting in tests).
+    pub fn mirror_count(&self) -> usize {
+        self.dev_kv.len()
+    }
+
+    /// Bring the cached `[W, P]` past-bias device buffer up to date with
+    /// `past_len` (incremental host update + upload only on change).
+    fn ensure_past_bias(&mut self, rt: &Runtime, past_len: usize) -> Result<()> {
+        let _ = self.past_bias.rows(past_len);
+        let epoch = self.past_bias.epoch();
+        match &self.past_bias_buf {
+            Some((e, _)) if *e == epoch => rt.stats().add_saved(self.w * self.p * 4),
+            _ => {
+                let buf = rt.upload_f32(self.past_bias.rows(past_len), &[self.w, self.p])?;
+                self.past_bias_buf = Some((epoch, buf));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The shared, read-only core of one loaded model (target or draft):
+/// effective config, pre-resolved entry-point executables, and the
+/// device-resident weight buffers — everything built once at load and only
+/// ever *read* afterwards, so pipeline workers share it behind an `Arc`.
+/// All mutable execution state lives in [`StageContext`].
+pub struct ModelCore {
     /// Effective artifact config: `width_cap` reflects the selected width
     /// bucket, so every shape computation below sizes to the loaded variant.
     pub cfg: ArtifactConfig,
@@ -108,20 +192,9 @@ pub struct ModelHandles {
     final_norm_bytes: usize,
     layer_bufs: Vec<Vec<DeviceBuffer>>,
     layer_bytes: Vec<usize>,
-    // Incrementally maintained past bias + its device copy.
-    past_bias: PastBiasCache,
-    past_bias_buf: Option<(u64, DeviceBuffer)>,
-    // Per-cache KV mirrors, keyed by `TwoLevelCache::id`. Lifetime
-    // contract: an entry lives until `release_cache(id)` evicts it, so
-    // engines that keep long-lived caches create them once and `reset()`
-    // between requests (the one-shot engines), while schedulers that mint
-    // per-session caches (SpecPipe-DB) must release each cache's mirror
-    // at session teardown or the device buffers leak for the engine's
-    // lifetime.
-    dev_kv: HashMap<u64, DeviceKvCache>,
 }
 
-impl ModelHandles {
+impl ModelCore {
     /// Load with the full width cap.
     pub fn load(rt: &Runtime, dir: &Path, name: &str) -> Result<Self> {
         Self::load_with_width(rt, dir, name, usize::MAX)
@@ -178,7 +251,6 @@ impl ModelHandles {
             emb_bytes + final_norm_bytes + layer_bytes.iter().sum::<usize>(),
         );
 
-        let past_bias = PastBiasCache::new(cfg.width_cap, cfg.past_cap);
         Ok(Self {
             cfg,
             embed_exe,
@@ -190,9 +262,6 @@ impl ModelHandles {
             final_norm_bytes,
             layer_bufs,
             layer_bytes,
-            past_bias,
-            past_bias_buf: None,
-            dev_kv: HashMap::new(),
         })
     }
 
@@ -201,23 +270,13 @@ impl ModelHandles {
         self.cfg.width_cap
     }
 
-    /// Evict the device KV mirror of cache `cache_id` (the value of
-    /// [`TwoLevelCache::id`]); returns whether a mirror existed. Dropping
-    /// the mirror frees its device buffers; the next forward pass over a
-    /// cache with that id would transparently rebuild it with one full
-    /// upload. Sessions that mint per-request caches (SpecPipe-DB) call
-    /// this at teardown.
-    pub fn release_cache(&mut self, cache_id: u64) -> bool {
-        self.dev_kv.remove(&cache_id).is_some()
-    }
-
-    /// Number of live device KV mirrors (leak accounting in tests).
-    pub fn mirror_count(&self) -> usize {
-        self.dev_kv.len()
+    /// A fresh mutable execution context shaped for this model.
+    pub fn context(&self) -> StageContext {
+        StageContext::new(self.cfg.width_cap, self.cfg.past_cap)
     }
 
     /// Token ids -> hidden states `[W, d]`. Input is padded to `width_cap`.
-    pub fn embed(&mut self, rt: &Runtime, tokens: &[u32]) -> Result<Vec<f32>> {
+    pub fn embed(&self, rt: &Runtime, tokens: &[u32]) -> Result<Vec<f32>> {
         let w = self.cfg.width_cap;
         anyhow::ensure!(tokens.len() <= w, "block wider than width_cap");
         let mut padded = vec![0i32; w];
@@ -231,31 +290,16 @@ impl ModelHandles {
         to_vec_f32(&out[0])
     }
 
-    /// Bring the cached `[W, P]` past-bias device buffer up to date with
-    /// `past_len` (incremental host update + upload only on change).
-    fn ensure_past_bias(&mut self, rt: &Runtime, past_len: usize) -> Result<()> {
-        let (w, p) = (self.cfg.width_cap, self.cfg.past_cap);
-        let _ = self.past_bias.rows(past_len);
-        let epoch = self.past_bias.epoch();
-        match &self.past_bias_buf {
-            Some((e, _)) if *e == epoch => rt.stats().add_saved(w * p * 4),
-            _ => {
-                let buf = rt.upload_f32(self.past_bias.rows(past_len), &[w, p])?;
-                self.past_bias_buf = Some((epoch, buf));
-            }
-        }
-        Ok(())
-    }
-
     /// One transformer layer over a node block with the two-level cache of
     /// the owning stage. `layer` is the model-wide layer index;
     /// `layer_in_stage` indexes into `cache`. Explicit bias rows are
     /// uploaded per call — stage spans should prefer
-    /// [`ModelHandles::stage_forward`], which reuses cached device state.
+    /// [`ModelCore::stage_forward`], which reuses cached device state.
     #[allow(clippy::too_many_arguments)]
     pub fn layer_forward(
-        &mut self,
+        &self,
         rt: &Runtime,
+        ctx: &mut StageContext,
         layer: usize,
         layer_in_stage: usize,
         cache: &TwoLevelCache,
@@ -278,7 +322,7 @@ impl ModelHandles {
         let pb_buf = rt.upload_f32(past_bias, &[w, p])?;
         let tb_buf = rt.upload_f32(tree_bias, &[w, t])?;
 
-        let dev = self
+        let dev = ctx
             .dev_kv
             .entry(cache.id())
             .or_insert_with(|| DeviceKvCache::new(cache.layers()));
@@ -310,8 +354,9 @@ impl ModelHandles {
     /// `Vec` once at the span boundary. The caller commits the cache.
     #[allow(clippy::too_many_arguments)]
     fn run_span(
-        &mut self,
+        &self,
         rt: &Runtime,
+        ctx: &mut StageContext,
         layer_range: std::ops::Range<usize>,
         cache: &mut TwoLevelCache,
         hidden: Vec<f32>,
@@ -334,7 +379,7 @@ impl ModelHandles {
         let span = layer_range.len();
         anyhow::ensure!(span >= 1, "empty layer range");
 
-        self.ensure_past_bias(rt, cache.past_len())?;
+        ctx.ensure_past_bias(rt, cache.past_len())?;
 
         // per-span dynamic operands: uploaded once, not once per layer
         let mut h_buf = rt.upload_f32(&hidden, &[w, dim])?;
@@ -342,7 +387,7 @@ impl ModelHandles {
         let pos_buf = rt.upload_i32(pos, &[w])?;
         let tb_buf = rt.upload_f32(tree_bias, &[w, t])?;
 
-        let dev = self
+        let dev = ctx
             .dev_kv
             .entry(cache.id())
             .or_insert_with(|| DeviceKvCache::new(cache.layers()));
@@ -353,7 +398,7 @@ impl ModelHandles {
             dev.ensure_tree(rt, cache, lis)?;
             let (pk, pv) = dev.past(lis).expect("ensured above");
             let (tk, tv) = dev.tree(lis).expect("ensured above");
-            let pb_buf = &self.past_bias_buf.as_ref().expect("ensured above").1;
+            let pb_buf = &ctx.past_bias_buf.as_ref().expect("ensured above").1;
 
             let out = exec_layer(
                 &self.layer_exe,
@@ -386,7 +431,7 @@ impl ModelHandles {
     }
 
     /// Final norm + tied head: hidden `[W, d]` -> logits `[W, V]`.
-    pub fn head(&mut self, rt: &Runtime, hidden: &[f32]) -> Result<Vec<f32>> {
+    pub fn head(&self, rt: &Runtime, hidden: &[f32]) -> Result<Vec<f32>> {
         let c = &self.cfg;
         anyhow::ensure!(hidden.len() == c.width_cap * c.dim, "hidden shape");
         let h = rt.upload_f32(hidden, &[c.width_cap, c.dim])?;
@@ -399,12 +444,13 @@ impl ModelHandles {
     /// Run a block through a contiguous span of layers (a pipeline stage),
     /// appending the new tree-level KV of each layer to `cache` and
     /// committing `count` slots. The past bias is derived internally from
-    /// `cache.past_len()` via the incremental bias cache. Returns the
-    /// final hidden states.
+    /// `cache.past_len()` via the context's incremental bias cache.
+    /// Returns the final hidden states.
     #[allow(clippy::too_many_arguments)]
     pub fn stage_forward(
-        &mut self,
+        &self,
         rt: &Runtime,
+        ctx: &mut StageContext,
         layer_range: std::ops::Range<usize>,
         cache: &mut TwoLevelCache,
         hidden: Vec<f32>,
@@ -412,7 +458,8 @@ impl ModelHandles {
         pos: &[i32],
         tree_bias: &[f32],
     ) -> Result<Vec<f32>> {
-        let h = self.run_span(rt, layer_range, cache, hidden, count, pos, tree_bias, true)?;
+        let h =
+            self.run_span(rt, ctx, layer_range, cache, hidden, count, pos, tree_bias, true)?;
         cache.commit_tree(count);
         Ok(h)
     }
@@ -421,9 +468,11 @@ impl ModelHandles {
     /// "predicted" segment with a causal in-block bias (see
     /// `python/compile/model.py` docstring), and the resulting KV is
     /// appended to the **model level** of the cache.
+    #[allow(clippy::too_many_arguments)]
     pub fn prefill_chunk(
-        &mut self,
+        &self,
         rt: &Runtime,
+        ctx: &mut StageContext,
         layer_range: std::ops::Range<usize>,
         cache: &mut TwoLevelCache,
         hidden: Vec<f32>,
@@ -435,7 +484,8 @@ impl ModelHandles {
         // in-block causal bias over the tree segment appended at slot 0
         let tree_bias = bias::causal_block_bias(count, 0, w, t);
         anyhow::ensure!(cache.tree_len() == 0, "prefill requires empty tree level");
-        let h = self.run_span(rt, layer_range, cache, hidden, count, &pos, &tree_bias, false)?;
+        let h =
+            self.run_span(rt, ctx, layer_range, cache, hidden, count, &pos, &tree_bias, false)?;
         cache.commit_past(count);
         Ok(h)
     }
@@ -443,8 +493,9 @@ impl ModelHandles {
     /// Full-model pass over a tree block (used by the draft node and the
     /// SLM baseline): embed + all layers + head. Appends tree-level KV.
     pub fn full_forward_tree_block(
-        &mut self,
+        &self,
         rt: &Runtime,
+        ctx: &mut StageContext,
         cache: &mut TwoLevelCache,
         tokens: &[u32],
         pos: &[i32],
@@ -452,15 +503,17 @@ impl ModelHandles {
     ) -> Result<Vec<f32>> {
         let hidden = self.embed(rt, tokens)?;
         let n = self.cfg.n_layers;
-        let h = self.stage_forward(rt, 0..n, cache, hidden, tokens.len(), pos, tree_bias)?;
+        let h =
+            self.stage_forward(rt, ctx, 0..n, cache, hidden, tokens.len(), pos, tree_bias)?;
         self.head(rt, &h)
     }
 
     /// Full-model prefill of a whole prompt (draft node / SLM baseline).
     /// Returns the logits row of the last prompt token.
     pub fn full_prefill(
-        &mut self,
+        &self,
         rt: &Runtime,
+        ctx: &mut StageContext,
         cache: &mut TwoLevelCache,
         prompt: &[u32],
     ) -> Result<Vec<f32>> {
@@ -471,7 +524,7 @@ impl ModelHandles {
         for chunk in prompt.chunks(w) {
             let start = cache.past_len();
             let hidden = self.embed(rt, chunk)?;
-            let h = self.prefill_chunk(rt, 0..n, cache, hidden, chunk.len(), start)?;
+            let h = self.prefill_chunk(rt, ctx, 0..n, cache, hidden, chunk.len(), start)?;
             last_count = chunk.len();
             last_h = Some(h);
         }
@@ -479,6 +532,166 @@ impl ModelHandles {
         let logits = self.head(rt, &h)?;
         let v = self.cfg.vocab_size;
         Ok(logits[(last_count - 1) * v..last_count * v].to_vec())
+    }
+}
+
+/// One loaded model behind the original single-threaded surface: an
+/// `Arc<ModelCore>` plus one [`StageContext`]. The baselines (PP / STPP /
+/// SLM), benches, and tests run sequentially and keep using this; the
+/// threaded PipeDec engines hold the `Arc<ModelCore>` directly and one
+/// context per stage group (see `coordinator::workers`).
+pub struct ModelHandles {
+    /// Copy of [`ModelCore::cfg`] kept as a public field for the
+    /// pre-split callers that read `handles.cfg` directly.
+    pub cfg: ArtifactConfig,
+    core: Arc<ModelCore>,
+    ctx: StageContext,
+}
+
+impl ModelHandles {
+    /// Load with the full width cap.
+    pub fn load(rt: &Runtime, dir: &Path, name: &str) -> Result<Self> {
+        Self::load_with_width(rt, dir, name, usize::MAX)
+    }
+
+    /// See [`ModelCore::load_with_width`].
+    pub fn load_with_width(
+        rt: &Runtime,
+        dir: &Path,
+        name: &str,
+        want_width: usize,
+    ) -> Result<Self> {
+        let core = Arc::new(ModelCore::load_with_width(rt, dir, name, want_width)?);
+        let ctx = core.context();
+        Ok(Self {
+            cfg: core.cfg.clone(),
+            core,
+            ctx,
+        })
+    }
+
+    /// The shared read-only core (for callers that go threaded).
+    pub fn core(&self) -> &Arc<ModelCore> {
+        &self.core
+    }
+
+    /// Effective block width of the loaded artifact variant.
+    pub fn width(&self) -> usize {
+        self.cfg.width_cap
+    }
+
+    /// See [`StageContext::release_cache`].
+    pub fn release_cache(&mut self, cache_id: u64) -> bool {
+        self.ctx.release_cache(cache_id)
+    }
+
+    /// See [`StageContext::mirror_count`].
+    pub fn mirror_count(&self) -> usize {
+        self.ctx.mirror_count()
+    }
+
+    /// See [`ModelCore::embed`].
+    pub fn embed(&mut self, rt: &Runtime, tokens: &[u32]) -> Result<Vec<f32>> {
+        self.core.embed(rt, tokens)
+    }
+
+    /// See [`ModelCore::head`].
+    pub fn head(&mut self, rt: &Runtime, hidden: &[f32]) -> Result<Vec<f32>> {
+        self.core.head(rt, hidden)
+    }
+
+    /// See [`ModelCore::layer_forward`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn layer_forward(
+        &mut self,
+        rt: &Runtime,
+        layer: usize,
+        layer_in_stage: usize,
+        cache: &TwoLevelCache,
+        hidden: &[f32],
+        pos: &[i32],
+        past_bias: &[f32],
+        tree_bias: &[f32],
+    ) -> Result<LayerOut> {
+        self.core.layer_forward(
+            rt,
+            &mut self.ctx,
+            layer,
+            layer_in_stage,
+            cache,
+            hidden,
+            pos,
+            past_bias,
+            tree_bias,
+        )
+    }
+
+    /// See [`ModelCore::stage_forward`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage_forward(
+        &mut self,
+        rt: &Runtime,
+        layer_range: std::ops::Range<usize>,
+        cache: &mut TwoLevelCache,
+        hidden: Vec<f32>,
+        count: usize,
+        pos: &[i32],
+        tree_bias: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.core.stage_forward(
+            rt,
+            &mut self.ctx,
+            layer_range,
+            cache,
+            hidden,
+            count,
+            pos,
+            tree_bias,
+        )
+    }
+
+    /// See [`ModelCore::prefill_chunk`].
+    pub fn prefill_chunk(
+        &mut self,
+        rt: &Runtime,
+        layer_range: std::ops::Range<usize>,
+        cache: &mut TwoLevelCache,
+        hidden: Vec<f32>,
+        count: usize,
+        start_pos: usize,
+    ) -> Result<Vec<f32>> {
+        self.core.prefill_chunk(
+            rt,
+            &mut self.ctx,
+            layer_range,
+            cache,
+            hidden,
+            count,
+            start_pos,
+        )
+    }
+
+    /// See [`ModelCore::full_forward_tree_block`].
+    pub fn full_forward_tree_block(
+        &mut self,
+        rt: &Runtime,
+        cache: &mut TwoLevelCache,
+        tokens: &[u32],
+        pos: &[i32],
+        tree_bias: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.core
+            .full_forward_tree_block(rt, &mut self.ctx, cache, tokens, pos, tree_bias)
+    }
+
+    /// See [`ModelCore::full_prefill`].
+    pub fn full_prefill(
+        &mut self,
+        rt: &Runtime,
+        cache: &mut TwoLevelCache,
+        prompt: &[u32],
+    ) -> Result<Vec<f32>> {
+        self.core.full_prefill(rt, &mut self.ctx, cache, prompt)
     }
 }
 
@@ -574,5 +787,22 @@ mod tests {
             "prefill should serve some operands from device residency"
         );
         assert!(d.reduction_factor() > 1.0);
+    }
+
+    #[test]
+    fn core_is_shareable_across_threads() {
+        // The Send + Sync audit in `runtime` must actually let a core be
+        // used from a spawned thread (compile-time property exercised at
+        // runtime when artifacts exist).
+        let Some((rt, m)) = setup() else { return };
+        let core = Arc::clone(m.core());
+        let rt = Arc::new(rt);
+        let rt2 = Arc::clone(&rt);
+        let h = std::thread::spawn(move || {
+            let toks = crate::tokenizer::encode("hi");
+            core.embed(&rt2, &toks).unwrap().len()
+        });
+        let len = h.join().unwrap();
+        assert_eq!(len, m.cfg.width_cap * m.cfg.dim);
     }
 }

@@ -39,7 +39,60 @@ use anyhow::{Context, Result};
 
 /// A device-resident PJRT value. Buffers are immutable once created;
 /// "updating" one means uploading a replacement.
-pub type DeviceBuffer = xla::PjRtBuffer;
+///
+/// Newtype (not an alias) over the `xla` crate's buffer so this crate can
+/// assert the thread-safety contract the pipeline workers rely on — see
+/// the `unsafe impl Send/Sync` audit note below.
+pub struct DeviceBuffer(xla::PjRtBuffer);
+
+impl DeviceBuffer {
+    /// Fetch the buffer back to a host literal (synchronous).
+    pub fn to_literal_sync(&self) -> Result<xla::Literal> {
+        self.0
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch buffer: {e:?}"))
+    }
+}
+
+// SAFETY (ISSUE 4 Send/Sync audit). Two layers must be thread-safe for
+// these impls to be sound, and both are part of the asserted contract:
+//
+// 1. **The PJRT C API** (what the handles ultimately point at) — this
+//    layer is specified thread-safe:
+//    * `PJRT_Buffer`s are immutable once created; concurrent reads
+//      (`Execute`, `ToLiteralSync`) from any thread are allowed, and
+//      xla_extension owns the underlying client state behind C++
+//      `shared_ptr` (atomic refcounts);
+//    * `PJRT_LoadedExecutable::Execute` is safe to call concurrently
+//      from multiple threads (the CPU client dispatches onto its own
+//      Eigen thread pool and serializes what it must internally);
+//    * `PJRT_Client` itself is thread-safe for buffer creation and
+//      compilation.
+//
+// 2. **The Rust `xla` wrapper's own handle plumbing** — the wrapper's
+//    structs are FFI handles over layer 1 and must not smuggle shared
+//    *non-atomic* host state (e.g. an `Rc`-held client clone inside
+//    every buffer) across these impls; a wrapper that did so would make
+//    concurrent buffer creation/drop race on the refcount regardless of
+//    layer 1's guarantees. The vendored wrapper binds the C API
+//    1:1 with raw handles (see /opt/xla-example and DESIGN.md), so its
+//    per-object state is confined to the pointer itself. Note the `xla`
+//    dependency is provided by the offline build environment rather
+//    than pinned in Cargo.toml (seed-repo convention — see the module
+//    header on HLO-text interchange), so this clause of the audit is a
+//    contract on that environment. **If the wrapper is ever swapped for
+//    one with `Rc`-based ownership, these impls must be revisited** —
+//    `EngineConfig { threads: 1 }` is the escape hatch that keeps every
+//    xla call on one thread, and the determinism suite
+//    (`tests/async_stages.rs`) exercises cross-thread execution as a
+//    smoke test.
+//
+// This crate only ever *reads* buffers/executables after construction
+// (uploads create fresh buffers; "mutation" of cached state is modeled as
+// replacement), so sharing them across the pipeline worker pool is sound
+// under the contract above.
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
 
 /// Monotonic host↔device transfer accounting for one [`Runtime`].
 ///
@@ -156,6 +209,13 @@ pub struct Runtime {
     stats: TransferStats,
 }
 
+// SAFETY: see the audit note on [`DeviceBuffer`] — the PJRT client is
+// thread-safe for compilation, buffer creation, and execution, and
+// [`TransferStats`] is all atomics. The pipeline worker pool shares one
+// `Arc<Runtime>` across workers.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
@@ -179,6 +239,7 @@ impl Runtime {
     pub fn upload_literal(&self, lit: &xla::Literal) -> Result<DeviceBuffer> {
         self.client
             .buffer_from_host_literal(None, lit)
+            .map(DeviceBuffer)
             .map_err(|e| anyhow::anyhow!("upload literal: {e:?}"))
     }
 
@@ -224,6 +285,12 @@ pub struct Executable {
     name: String,
 }
 
+// SAFETY: see the audit note on [`DeviceBuffer`] — PJRT loaded
+// executables support concurrent `Execute` calls; this crate never
+// mutates an `Executable` after `Runtime::load_hlo_text` builds it.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
 impl Executable {
     pub fn name(&self) -> &str {
         &self.name
@@ -249,14 +316,15 @@ impl Executable {
     /// all; only the output tuple crosses back to the host
     /// (EXPERIMENTS.md §Perf iteration 4).
     pub fn run_bufs(&self, args: &[&DeviceBuffer]) -> Result<Vec<xla::Literal>> {
+        let raw: Vec<&xla::PjRtBuffer> = args.iter().map(|b| &b.0).collect();
         let out = self
             .exe
-            .execute_b::<&DeviceBuffer>(args)
+            .execute_b::<&xla::PjRtBuffer>(&raw)
             .map_err(|e| anyhow::anyhow!("execute(buffers) {}: {e:?}", self.name))?;
         Self::decompose(&self.name, &out[0][0])
     }
 
-    fn decompose(name: &str, buf: &DeviceBuffer) -> Result<Vec<xla::Literal>> {
+    fn decompose(name: &str, buf: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {
         let lit = buf
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;

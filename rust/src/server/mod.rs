@@ -19,6 +19,11 @@
 //! [`StreamProbe`] sink that timestamps each token, so each
 //! [`Completion`] reports time-to-first-token *and* mean time-between-
 //! tokens — the paper's Fig. 8 serving metrics — alongside full latency.
+//!
+//! The loop itself stays single-threaded: engine-level parallelism (the
+//! ISSUE 4 pipeline worker pool, `EngineConfig::threads`) lives *inside*
+//! `scheduler.step()`, so the server gets threaded stage execution for
+//! free without touching admission or streaming order.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;

@@ -99,6 +99,13 @@ impl PredictionTree {
         t
     }
 
+    /// A minimal stand-in (one root node, unit budget) left behind while a
+    /// real tree is lent to the draft task (moved through the worker job
+    /// channel, like [`crate::kvcache::TwoLevelCache::placeholder`]).
+    pub fn placeholder() -> Self {
+        Self::new(TreeConfig::default(), 1, 0, 0)
+    }
+
     fn push_node(&mut self, token: u32, prob: f32, parent: i32, depth: u32, cum: f32) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
