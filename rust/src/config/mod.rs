@@ -64,6 +64,13 @@ pub struct EngineConfig {
     /// `min(threads, groups + 1)` workers executing each timestep's task
     /// set concurrently. Outputs are token-identical at every setting.
     pub threads: usize,
+    /// Overlapped sync phase (ISSUE 5, default on): the coordinator keeps
+    /// only the sync decision (verify/sample/prune) and defers the cache
+    /// maintenance (KV promotion + tree compaction) into each cache
+    /// owner's next pipeline job, overlapping it with the next timestep's
+    /// compute. `false` applies commits at the sync point — the PR 4
+    /// serial reference path. Outputs are bit-identical either way.
+    pub overlap_sync: bool,
 }
 
 impl Default for EngineConfig {
@@ -79,6 +86,7 @@ impl Default for EngineConfig {
             seed: 0,
             ablate_tree_reuse: false,
             threads: 0,
+            overlap_sync: true,
         }
     }
 }
@@ -109,6 +117,9 @@ impl EngineConfig {
         }
         if let Some(v) = doc.get("engine", "threads") {
             cfg.threads = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("engine", "overlap_sync") {
+            cfg.overlap_sync = v.as_bool()?;
         }
         if let Some(v) = doc.get("tree", "max_width") {
             cfg.tree.max_width = v.as_usize()?;
@@ -220,6 +231,19 @@ mod tests {
     #[test]
     fn invalid_rejected() {
         assert!(EngineConfig::from_toml_str("[engine]\nstages = 0\n").is_err());
+    }
+
+    #[test]
+    fn overlap_sync_parses_and_defaults_on() {
+        assert!(
+            EngineConfig::default().overlap_sync,
+            "overlapped sync is the default"
+        );
+        let off =
+            EngineConfig::from_toml_str("[engine]\noverlap_sync = false\n").unwrap();
+        assert!(!off.overlap_sync);
+        let on = EngineConfig::from_toml_str("[engine]\noverlap_sync = true\n").unwrap();
+        assert!(on.overlap_sync);
     }
 
     #[test]

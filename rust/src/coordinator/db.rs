@@ -37,6 +37,14 @@
 //! verification stays in the coordinator's sync phase, so scheduling
 //! (and outputs) are identical to the sequential reference path.
 //!
+//! Since ISSUE 5 the per-session sync is split decide/commit: the
+//! coordinator verifies, samples, and prunes, then issues the cache
+//! maintenance as a per-session [`CacheCommit`]; with
+//! `EngineConfig::overlap_sync` (default) each cache owner applies its
+//! pending commits at the start of its next job, so one session's cache
+//! maintenance overlaps every other session's (and its own next) compute
+//! instead of serializing the whole batch at the coordinator.
+//!
 //! Served both ways: natively as a [`ScheduledEngine`] (the continuous
 //! server loop) and as a one-shot [`Engine`] (a decode = one session
 //! stepped to completion), so `EngineKind::PipeDecDb` passes the same
@@ -49,7 +57,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::pipeline::DataFlow;
+use super::pipeline::{self, DataFlow};
 use super::sampling::{select_token, Sampling};
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
@@ -59,7 +67,7 @@ use crate::engine::{
     DecodeOutput, DecodeRequest, Engine, EngineKind, NullSink, ScheduledEngine, Session,
     SessionId, SessionRecord, SessionStatus, SpecStats, StepReport, TokenSink,
 };
-use crate::kvcache::TwoLevelCache;
+use crate::kvcache::{CacheCommit, CommitOp, TwoLevelCache};
 use crate::metrics::{Metrics, SharedMetrics};
 use crate::model::{ModelCore, StageContext};
 use crate::runtime::Runtime;
@@ -89,12 +97,62 @@ struct DbSession {
     /// Flow waiting to enter pipeline slot 0 (root after admission or a
     /// miss restart).
     entry: Option<DataFlow>,
+    /// Deferred sync commits not yet applied by every one of this
+    /// session's cache owners (ISSUE 5, `overlap_sync`), oldest first.
+    commit_log: VecDeque<CacheCommit>,
+    /// Commits issued for this session — its epoch sequence.
+    commit_seq: u64,
     timesteps: u64,
     hits: u64,
     misses: u64,
     modeled_s: f64,
     prefill_s: f64,
+    /// Coordinator decide seconds (verify + sample + prune) for this
+    /// session's sync points.
+    t_decide_s: f64,
+    /// Eager commit seconds for this session (serial-sync path only).
+    t_commit_eager_s: f64,
+    /// Deferred commit seconds this session's jobs reported (overlap
+    /// path) — attributed per session from the job replies.
+    t_commit_worker_s: f64,
+    /// Cache-commit applications counted on the eager path (overlap-path
+    /// ops are counted by the workers into the shared metrics).
+    commit_ops_eager: u64,
     wall0: Instant,
+}
+
+impl DbSession {
+    /// Clone the commit-log suffix a cache at `epoch` still has to apply.
+    fn pending_commits(&self, epoch: u64) -> Vec<CacheCommit> {
+        self.commit_log
+            .iter()
+            .filter(|c| c.epoch > epoch)
+            .cloned()
+            .collect()
+    }
+
+    /// Undrained commit depth for a cache at `epoch` (stall diagnostics).
+    fn pending_depth(&self, epoch: u64) -> usize {
+        self.commit_log.iter().filter(|c| c.epoch > epoch).count()
+    }
+
+    /// Drop commit-log entries every one of this session's cache owners
+    /// (all stage caches + the draft cache) has applied.
+    fn trim_commit_log(&mut self) {
+        if self.commit_log.is_empty() {
+            return;
+        }
+        let min_ep = self
+            .base
+            .caches
+            .iter()
+            .map(|c| c.commit_epoch())
+            .min()
+            .unwrap_or(0);
+        while self.commit_log.front().is_some_and(|c| c.epoch <= min_ep) {
+            self.commit_log.pop_front();
+        }
+    }
 }
 
 /// The SpecPipe-DB engine over AOT artifacts.
@@ -295,11 +353,17 @@ impl PipeDecDbEngine {
             sampling,
             max_new,
             budget,
+            commit_log: VecDeque::new(),
+            commit_seq: 0,
             timesteps: 0,
             hits: 0,
             misses: 0,
             modeled_s: 0.0,
             prefill_s,
+            t_decide_s: 0.0,
+            t_commit_eager_s: 0.0,
+            t_commit_worker_s: 0.0,
+            commit_ops_eager: 0,
             wall0: Instant::now(),
             base: shell,
         })
@@ -350,8 +414,29 @@ impl PipeDecDbEngine {
             metrics.incr("hits", sess.hits);
             metrics.incr("misses", sess.misses);
             metrics.record("prefill_s", sess.prefill_s);
+            // per-session sync breakdown: decide at the coordinator, the
+            // commit wherever it ran — eager at the sync point (serial
+            // path) or inside this session's jobs (overlap path, seconds
+            // attributed precisely from the job replies)
+            metrics.record("t_decide_s", sess.t_decide_s);
+            let commit_total = sess.t_commit_eager_s + sess.t_commit_worker_s;
+            if commit_total > 0.0 {
+                metrics.record("t_commit_s", commit_total);
+            }
+            if sess.commit_ops_eager > 0 {
+                metrics.incr("commit_ops", sess.commit_ops_eager);
+            }
+            let sync_s = sess.t_decide_s + commit_total;
+            metrics.record(
+                "sync_overlap_ratio",
+                if self.pool.is_some() && self.cfg.overlap_sync && sync_s > 0.0 {
+                    sess.t_commit_worker_s / sync_s
+                } else {
+                    0.0
+                },
+            );
             // engine-level worker timings accumulated since the last
-            // finished session (attribution is batch-wide, not per-session)
+            // finished session (generic task timings stay batch-wide)
             metrics.merge(&self.worker_metrics.drain());
             let output = DecodeOutput {
                 text: tokenizer::decode(&sess.base.tokens),
@@ -392,7 +477,8 @@ impl PipeDecDbEngine {
         let mut stage_jobs = Vec::new();
         // one immutable snapshot per session, shared by all of that
         // session's occupied slots this step
-        let mut snapshots: Vec<Option<Arc<PredictionTree>>> = vec![None; self.live.len()];
+        let mut snapshots: Vec<Option<Arc<crate::tree::TreeSnapshot>>> =
+            vec![None; self.live.len()];
         for g in 0..groups {
             let Some(flow) = self.slots[g].take() else { continue };
             let owner = flow.session;
@@ -403,7 +489,7 @@ impl PipeDecDbEngine {
             let snap = match &snapshots[si] {
                 Some(s) => Arc::clone(s),
                 None => {
-                    let s = Arc::new(self.live[si].tree.clone());
+                    let s = Arc::new(self.live[si].tree.snapshot());
                     snapshots[si] = Some(Arc::clone(&s));
                     s
                 }
@@ -420,6 +506,9 @@ impl PipeDecDbEngine {
                 .iter()
                 .map(|&s| s * lps..(s + 1) * lps)
                 .collect();
+            // this session's sync commits the group's caches still owe
+            // (member caches commit in lockstep, any one's epoch stands in)
+            let commits = sess.pending_commits(caches[0].commit_epoch());
             stage_jobs.push(StageJob {
                 group: g,
                 core: Arc::clone(&self.target),
@@ -427,6 +516,8 @@ impl PipeDecDbEngine {
                 caches,
                 layer_ranges,
                 stage_ids,
+                commits,
+                commit_target: sess.commit_seq,
                 df: flow.df,
                 tree: snap,
                 metrics: Arc::clone(&self.worker_metrics),
@@ -446,16 +537,21 @@ impl PipeDecDbEngine {
             let si = (self.entry_cursor + k) % n;
             let sess = &mut self.live[si];
             let has_entry = sess.entry.is_some();
+            let cache = std::mem::replace(
+                &mut sess.base.caches[di],
+                TwoLevelCache::placeholder(),
+            );
+            let commits = sess.pending_commits(cache.commit_epoch());
             candidates.push(DraftCandidate {
                 tag: si,
                 entry: sess.entry.take(),
                 // moved, not cloned: stage jobs hold their Arc snapshots
                 // already, and the reabsorb loop adopts every tree back
                 tree: std::mem::replace(&mut sess.tree, PredictionTree::placeholder()),
-                cache: std::mem::replace(
-                    &mut sess.base.caches[di],
-                    TwoLevelCache::placeholder(),
-                ),
+                cache,
+                commits,
+                commit_target: sess.commit_seq,
+                commit_s: 0.0,
             });
             if has_entry {
                 break;
@@ -479,20 +575,26 @@ impl PipeDecDbEngine {
             sess.base.caches[di] = cand.cache;
             sess.tree = cand.tree; // adopt the (possibly expanded) tree
             sess.entry = cand.entry; // unconsumed entry flows come back
+            sess.t_commit_worker_s += cand.commit_s;
         }
         let group_ctxs = &mut self.group_ctxs;
         let live = &mut self.live;
         let (outcomes, first_err) =
-            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches| {
+            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches, commit_s| {
                 group_ctxs[g] = Some(ctx);
                 if let Some(owner) = slot_owner[g] {
                     if let Some(si) = live.iter().position(|s| s.base.id == owner) {
                         for (k, c) in caches.into_iter().enumerate() {
                             live[si].base.caches[g * gs + k] = c;
                         }
+                        live[si].t_commit_worker_s += commit_s;
                     }
                 }
             });
+        // retire commit-log entries every owner of a session has applied
+        for sess in self.live.iter_mut() {
+            sess.trim_commit_log();
+        }
         if let Some(e) = first_err {
             // A stage task failed. The draft grant — possibly a consumed
             // entry flow — must go back to its owner as the pending entry
@@ -594,11 +696,16 @@ impl PipeDecDbEngine {
         let max_tx = transfer_times.iter().cloned().fold(0.0, f64::max);
         let mut step_modeled = draft_s.max(max_group + max_tx);
 
-        // ---- sync phase: each exiting flow verifies one token for its
-        // session; pruning propagation is scoped to that session ----
+        // ---- sync phase, split decide/commit (ISSUE 5): each exiting
+        // flow verifies one token for its session at the coordinator; the
+        // session-scoped cache maintenance becomes a CacheCommit that the
+        // owning workers apply before their next forward (overlap_sync
+        // on) or that applies right here (the serial reference path) ----
         let mut to_finish: Vec<SessionId> = Vec::new();
+        let overlap = self.cfg.overlap_sync;
         for (id, df) in exits {
             let Some(si) = self.live_index(id) else { continue };
+            let decide0 = Instant::now();
             let head_t = Instant::now();
             let hidden = df.hidden.as_ref().context("exit flow carries hidden states")?;
             let logits = self.target.head(&self.rt, hidden)?;
@@ -622,32 +729,51 @@ impl PipeDecDbEngine {
             } else {
                 sess.tree.prune(x)
             };
-            match outcome {
+            let (op, missed) = match outcome {
                 PruneOutcome::Hit { kept_old, .. } => {
                     sess.hits += 1;
-                    // all stage caches and the draft cache promote/compact
-                    for c in &mut sess.base.caches {
-                        c.promote_root_to_past()?;
-                        c.compact_tree(&kept_old);
-                    }
+                    (
+                        CommitOp::Hit {
+                            kept_old: Arc::new(kept_old),
+                        },
+                        false,
+                    )
                 }
                 PruneOutcome::Miss => {
                     sess.misses += 1;
-                    for c in &mut sess.base.caches {
-                        c.promote_root_to_past()?;
-                        c.clear_tree();
-                    }
-                    let root_pos = sess.base.caches[0].past_len();
-                    sess.tree = PredictionTree::new(self.cfg.tree, sess.budget, x, root_pos);
-                    // in-flight flows of this session are stale: restart
-                    for slot in next_slots.iter_mut() {
-                        if slot.as_ref().is_some_and(|f| f.session == id) {
-                            *slot = None;
-                        }
-                    }
-                    sess.entry = Some(DataFlow::root(&sess.tree));
+                    (CommitOp::Miss, true)
                 }
+            };
+            sess.commit_seq += 1;
+            let commit = CacheCommit {
+                epoch: sess.commit_seq,
+                op,
+            };
+            let mut commit_s = 0.0;
+            if overlap {
+                sess.commit_log.push_back(commit);
+            } else {
+                let t0 = Instant::now();
+                let ops = pipeline::apply_commit_all(sess.base.caches.iter_mut(), &commit)?;
+                commit_s = t0.elapsed().as_secs_f64();
+                sess.t_commit_eager_s += commit_s;
+                sess.commit_ops_eager += ops as u64;
             }
+            if missed {
+                // authoritative past length without reading a cache that
+                // may still owe deferred commits: every emitted token
+                // after the prefill's first promoted exactly one root
+                let root_pos = sess.base.prompt_ids.len() + sess.base.tokens.len() - 1;
+                sess.tree = PredictionTree::new(self.cfg.tree, sess.budget, x, root_pos);
+                // in-flight flows of this session are stale: restart
+                for slot in next_slots.iter_mut() {
+                    if slot.as_ref().is_some_and(|f| f.session == id) {
+                        *slot = None;
+                    }
+                }
+                sess.entry = Some(DataFlow::root(&sess.tree));
+            }
+            sess.t_decide_s += decide0.elapsed().as_secs_f64() - commit_s;
             if sess.base.tokens.len() >= sess.max_new || x == tokenizer::EOS_ID {
                 to_finish.push(id);
             }
@@ -685,17 +811,38 @@ impl PipeDecDbEngine {
             let limit = ((self.max_live + groups) as u64) * 4 + 64;
             let live_tokens: usize = self.live.iter().map(|s| s.base.tokens.len()).sum();
             let tree_nodes: usize = self.live.iter().map(|s| s.tree.len()).sum();
-            anyhow::ensure!(
-                self.stalled_for <= limit,
-                "scheduler stalled at step {}: {} steps without progress \
-                 ({} live sessions holding {live_tokens} decoded tokens and \
-                 {tree_nodes} tree nodes, {} queued, {} occupied pipeline slots)",
-                self.steps,
-                self.stalled_for,
-                self.live.len(),
-                self.queue.len(),
-                self.slots.iter().flatten().count(),
-            );
+            if self.stalled_for > limit {
+                // undrained commit depth per cache owner (summed over
+                // sessions; the draft column last) — a deadlock in the
+                // decide/commit protocol shows up here as a group whose
+                // depth never drains
+                let di = self.cfg.stages;
+                let pending: Vec<usize> = (0..groups)
+                    .map(|g| {
+                        self.live
+                            .iter()
+                            .map(|s| s.pending_depth(s.base.caches[g * gs].commit_epoch()))
+                            .sum()
+                    })
+                    .collect();
+                let pending_draft: usize = self
+                    .live
+                    .iter()
+                    .map(|s| s.pending_depth(s.base.caches[di].commit_epoch()))
+                    .sum();
+                anyhow::bail!(
+                    "scheduler stalled at step {}: {} steps without progress \
+                     ({} live sessions holding {live_tokens} decoded tokens and \
+                     {tree_nodes} tree nodes, {} queued, {} occupied pipeline \
+                     slots, undrained commits per group {pending:?} + draft \
+                     {pending_draft})",
+                    self.steps,
+                    self.stalled_for,
+                    self.live.len(),
+                    self.queue.len(),
+                    self.slots.iter().flatten().count(),
+                );
+            }
         }
         Ok(report)
     }

@@ -31,25 +31,36 @@
 //! 2. **stage phase** — every pipeline stage processes the data flow it
 //!    received last timestep (dropping rows pruned while in flight);
 //! 3. **sync phase** — when a data flow exits the last stage, the verified
-//!    token is decoded from the current root's logits row, the tree is
-//!    pruned (hit) or reinitialized (miss), KV caches promote the accepted
-//!    root and compact (§3.4.3). Each verified token is streamed to the
-//!    caller's [`TokenSink`] at this point.
+//!    token is decoded from the current root's logits row and the tree is
+//!    pruned (hit) or reinitialized (miss). Since ISSUE 5 the phase is
+//!    split decide/commit: the coordinator keeps only that cheap decision
+//!    and issues the cache maintenance (root promotion + tree compaction,
+//!    §3.4.3) as a replayable [`CacheCommit`]; with
+//!    `EngineConfig::overlap_sync` (default) the commit defers into each
+//!    cache owner's next job — applied on the worker right before its
+//!    forward — so timestep t+1's draft expansion and early-stage compute
+//!    overlap timestep t's cache maintenance, mirroring the paper's
+//!    pruning-propagation stage instead of a global barrier. With the
+//!    knob off, the commit applies at the sync point (the PR 4 reference
+//!    path). Either way each verified token is streamed to the caller's
+//!    [`TokenSink`] at the decision, and outputs are bit-identical: all
+//!    verification and RNG stay here, only cache bookkeeping moves.
 
+use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::pipeline::DataFlow;
+use super::pipeline::{self, DataFlow};
 use super::sampling::{select_token, Sampling};
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
 };
 use crate::config::EngineConfig;
 use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, SpecStats, TokenSink};
-use crate::kvcache::TwoLevelCache;
+use crate::kvcache::{CacheCommit, CommitOp, TwoLevelCache};
 use crate::metrics::{Metrics, SharedMetrics};
 use crate::model::{ModelCore, StageContext};
 use crate::runtime::Runtime;
@@ -87,6 +98,13 @@ pub struct PipeDecEngine {
     /// jobs inline (the sequential reference path).
     pool: Option<WorkerPool>,
     worker_metrics: Arc<SharedMetrics>,
+    /// Deferred sync commits (ISSUE 5, `cfg.overlap_sync`): issued by the
+    /// sync phase, drained into each cache owner's next job, retired once
+    /// every owner applied them. Always empty on the serial-sync path.
+    commit_log: VecDeque<CacheCommit>,
+    /// Commits issued this decode — the epoch sequence and every job's
+    /// `commit_target`.
+    commit_seq: u64,
 }
 
 impl PipeDecEngine {
@@ -168,6 +186,8 @@ impl PipeDecEngine {
             rng,
             pool,
             worker_metrics: Arc::new(SharedMetrics::new()),
+            commit_log: VecDeque::new(),
+            commit_seq: 0,
         })
     }
 
@@ -197,6 +217,10 @@ impl PipeDecEngine {
             .expect("draft cache in residence")
             .reset();
         self.rng = XorShiftRng::new(seed);
+        // commits belong to one request's epoch sequence: a previous
+        // decode's undrained tail is irrelevant once every cache reset
+        self.commit_log.clear();
+        self.commit_seq = 0;
         // a previously *failed* decode never reached the drain at its end;
         // discard its leftover worker timings so they can't pollute this one
         let _ = self.worker_metrics.drain();
@@ -269,12 +293,13 @@ impl PipeDecEngine {
     /// Build this timestep's task set (one draft task + one task per group
     /// with an input flow), execute it — on the pool when present, inline
     /// otherwise — and hand every piece of lent state back. Returns the
-    /// draft outcome and the per-group outcomes in group order.
+    /// draft outcome, the per-group outcomes in group order, and the
+    /// seconds the jobs spent applying deferred sync commits.
     fn run_timestep_tasks(
         &mut self,
         tree: &mut PredictionTree,
         inputs: &mut [Option<DataFlow>],
-    ) -> Result<(DraftOutcome, Vec<Option<GroupOutcome>>)> {
+    ) -> Result<(DraftOutcome, Vec<Option<GroupOutcome>>, f64)> {
         let groups = self.groups();
         let gs = self.cfg.group_size;
         let lps = self.layers_per_stage;
@@ -282,7 +307,7 @@ impl PipeDecEngine {
         let mut stage_jobs = Vec::new();
         // one immutable snapshot shared by every occupied slot (built only
         // when some slot is occupied)
-        let mut snapshot: Option<Arc<PredictionTree>> = None;
+        let mut snapshot: Option<Arc<crate::tree::TreeSnapshot>> = None;
         for (g, slot) in inputs.iter_mut().enumerate() {
             let Some(df) = slot.take() else { continue };
             let st = self.groups_state[g]
@@ -294,8 +319,11 @@ impl PipeDecEngine {
                 .map(|&s| s * lps..(s + 1) * lps)
                 .collect();
             let snap = snapshot
-                .get_or_insert_with(|| Arc::new(tree.clone()))
+                .get_or_insert_with(|| Arc::new(tree.snapshot()))
                 .clone();
+            // sync commits this group's caches still owe (all member
+            // caches commit in lockstep, so any one's epoch stands in)
+            let commits = self.pending_commits(st.caches[0].commit_epoch());
             stage_jobs.push(StageJob {
                 group: g,
                 core: Arc::clone(&self.target),
@@ -303,11 +331,15 @@ impl PipeDecEngine {
                 caches: st.caches,
                 layer_ranges,
                 stage_ids,
+                commits,
+                commit_target: self.commit_seq,
                 df,
                 tree: snap,
                 metrics: Arc::clone(&self.worker_metrics),
             });
         }
+        let draft_cache = self.draft_cache.take().expect("draft cache in residence");
+        let draft_commits = self.pending_commits(draft_cache.commit_epoch());
         let draft_job = DraftJob {
             core: Arc::clone(&self.draft),
             ctx: self.draft_ctx.take().expect("draft ctx in residence"),
@@ -317,7 +349,10 @@ impl PipeDecEngine {
                 // moved, not cloned: the stage jobs already hold their Arc
                 // snapshot, and the coordinator adopts the tree back below
                 tree: std::mem::replace(tree, PredictionTree::placeholder()),
-                cache: self.draft_cache.take().expect("draft cache in residence"),
+                cache: draft_cache,
+                commits: draft_commits,
+                commit_target: self.commit_seq,
+                commit_s: 0.0,
             }],
             max_children: self.cfg.tree.max_children,
             metrics: Arc::clone(&self.worker_metrics),
@@ -332,14 +367,108 @@ impl PipeDecEngine {
         let mut cands = draft_done.candidates;
         let cand = cands.pop().expect("solo draft job has one candidate");
         self.draft_cache = Some(cand.cache);
+        let mut commit_s = cand.commit_s;
         *tree = cand.tree; // adopt the (possibly expanded) tree
         let groups_state = &mut self.groups_state;
         let (outcomes, first_err) =
-            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches| {
+            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches, job_commit_s| {
                 groups_state[g] = Some(GroupState { ctx, caches });
+                commit_s += job_commit_s;
             });
+        // retire commits every cache owner has now applied
+        self.trim_commit_log();
         let draft_oc = workers::finish_absorb(draft_done.res, first_err)?;
-        Ok((draft_oc, outcomes))
+        Ok((draft_oc, outcomes, commit_s))
+    }
+
+    /// Clone the commit-log suffix a cache at `epoch` still has to apply.
+    fn pending_commits(&self, epoch: u64) -> Vec<CacheCommit> {
+        self.commit_log
+            .iter()
+            .filter(|c| c.epoch > epoch)
+            .cloned()
+            .collect()
+    }
+
+    /// Drop commit-log entries every owner (all group caches + the draft
+    /// cache) has applied. Cheap: the log holds at most the few commits
+    /// issued while a cache owner went undispatched.
+    fn trim_commit_log(&mut self) {
+        if self.commit_log.is_empty() {
+            return;
+        }
+        let mut min_ep = self
+            .draft_cache
+            .as_ref()
+            .expect("draft cache in residence")
+            .commit_epoch();
+        for st in &self.groups_state {
+            let st = st.as_ref().expect("group state in residence");
+            for c in &st.caches {
+                min_ep = min_ep.min(c.commit_epoch());
+            }
+        }
+        while self.commit_log.front().is_some_and(|c| c.epoch <= min_ep) {
+            self.commit_log.pop_front();
+        }
+    }
+
+    /// Undrained commit depth per cache owner: one entry per timestep
+    /// group plus the draft cache — the stall-guard diagnostic for the
+    /// decide/commit protocol.
+    fn pending_commit_depths(&self) -> (Vec<usize>, usize) {
+        let per_group = self
+            .groups_state
+            .iter()
+            .map(|st| match st {
+                Some(st) => self
+                    .commit_log
+                    .iter()
+                    .filter(|c| c.epoch > st.caches[0].commit_epoch())
+                    .count(),
+                None => 0, // on loan mid-timestep; not reachable from the guard
+            })
+            .collect();
+        let draft = match &self.draft_cache {
+            Some(c) => self
+                .commit_log
+                .iter()
+                .filter(|cm| cm.epoch > c.commit_epoch())
+                .count(),
+            None => 0,
+        };
+        (per_group, draft)
+    }
+
+    /// Mint the next [`CacheCommit`] of this decode and either queue it
+    /// for the owning workers (`overlap_sync`) or apply it to every cache
+    /// at the sync point (the serial reference path). Returns the eager
+    /// commit seconds (0 when deferred) so the caller can split
+    /// `t_decide` from `t_commit`.
+    fn issue_commit(&mut self, op: CommitOp, metrics: &mut Metrics) -> Result<f64> {
+        self.commit_seq += 1;
+        let commit = CacheCommit {
+            epoch: self.commit_seq,
+            op,
+        };
+        if self.cfg.overlap_sync {
+            self.commit_log.push_back(commit);
+            return Ok(0.0);
+        }
+        let t0 = Instant::now();
+        let mut ops = 0usize;
+        for st in self.groups_state.iter_mut() {
+            let st = st.as_mut().expect("group state in residence");
+            ops += pipeline::apply_commit_all(st.caches.iter_mut(), &commit)?;
+        }
+        ops += pipeline::apply_commit_all(
+            std::iter::once(self.draft_cache.as_mut().expect("draft cache in residence")),
+            &commit,
+        )?;
+        let secs = t0.elapsed().as_secs_f64();
+        metrics.record("t_commit_s", secs);
+        metrics.incr("commit_ops", ops as u64);
+        Ok(secs)
     }
 }
 
@@ -396,18 +525,25 @@ impl Engine for PipeDecEngine {
         let mut modeled_s = 0.0;
         let mut timesteps = 0u64;
         let (mut hits, mut misses) = (0u64, 0u64);
+        // commit seconds applied inside jobs (the overlapped share of the
+        // sync phase when a pool exists)
+        let mut job_commit_s = 0.0f64;
         let max_timesteps = (max_new as u64 + 8) * (groups as u64 + 2);
 
         'outer: while decoded.len() < max_new {
             timesteps += 1;
             if timesteps > max_timesteps {
+                let (pending, pending_draft) = self.pending_commit_depths();
                 anyhow::bail!(
                     "timestep budget ({max_timesteps}) exceeded — engine stalled with \
                      {decoded_n}/{max_new} tokens decoded, {tree_n} tree nodes, \
-                     {in_flight} in-flight flows, {hits} hits / {misses} misses",
+                     {in_flight} in-flight flows, {hits} hits / {misses} misses, \
+                     undrained commits per group {pending:?} + draft {pending_draft} \
+                     (of {issued} issued)",
                     decoded_n = decoded.len(),
                     tree_n = tree.len(),
                     in_flight = inputs.iter().flatten().count(),
+                    issued = self.commit_seq,
                 );
             }
             let seq = timesteps;
@@ -415,8 +551,14 @@ impl Engine for PipeDecEngine {
             // ---- draft + stage phases: the timestep's task set, executed
             // concurrently on the worker pool (sequentially inline when
             // threads = 1); each group G_g runs its member stages
-            // sequentially within its task (paper §3.1) ----
-            let (draft_oc, group_ocs) = self.run_timestep_tasks(&mut tree, &mut inputs)?;
+            // sequentially within its task (paper §3.1), draining its
+            // caches' deferred sync commits first ----
+            let (draft_oc, group_ocs, ts_commit_s) =
+                self.run_timestep_tasks(&mut tree, &mut inputs)?;
+            if ts_commit_s > 0.0 {
+                metrics.record("t_commit_s", ts_commit_s);
+                job_commit_s += ts_commit_s;
+            }
 
             // ---- deterministic post-order: transfer accounting and flow
             // routing in group index order, then the draft grant ----
@@ -464,8 +606,14 @@ impl Engine for PipeDecEngine {
             );
             metrics.incr("group_timeslots", groups as u64);
 
-            // ---- sync phase ----
+            // ---- sync phase, split decide/commit (ISSUE 5): the
+            // coordinator keeps only the cheap global decision —
+            // verification, sampling/RNG, the prune — and issues the
+            // per-cache maintenance as a CacheCommit that the owning
+            // workers apply before their next forward (overlap_sync on)
+            // or that applies right here (the serial reference path) ----
             if let Some(df) = exit_df {
+                let decide0 = Instant::now();
                 let head_t = Instant::now();
                 let logits = self
                     .target
@@ -482,49 +630,32 @@ impl Engine for PipeDecEngine {
                     } else {
                         tree.prune(x)
                     };
+                    let commit_s;
                     match outcome {
                         PruneOutcome::Hit { kept_old, .. } => {
                             hits += 1;
-                            for st in self.groups_state.iter_mut() {
-                                let st = st.as_mut().expect("group state in residence");
-                                for c in &mut st.caches {
-                                    c.promote_root_to_past()?;
-                                    c.compact_tree(&kept_old);
-                                }
-                            }
-                            let dc = self
-                                .draft_cache
-                                .as_mut()
-                                .expect("draft cache in residence");
-                            dc.promote_root_to_past()?;
-                            dc.compact_tree(&kept_old);
+                            commit_s = self.issue_commit(
+                                CommitOp::Hit {
+                                    kept_old: Arc::new(kept_old),
+                                },
+                                &mut metrics,
+                            )?;
                         }
                         PruneOutcome::Miss => {
                             misses += 1;
-                            for st in self.groups_state.iter_mut() {
-                                let st = st.as_mut().expect("group state in residence");
-                                for c in &mut st.caches {
-                                    c.promote_root_to_past()?;
-                                    c.clear_tree();
-                                }
-                            }
-                            let dc = self
-                                .draft_cache
-                                .as_mut()
-                                .expect("draft cache in residence");
-                            dc.promote_root_to_past()?;
-                            dc.clear_tree();
-                            let root_pos = self.groups_state[0]
-                                .as_ref()
-                                .expect("group state in residence")
-                                .caches[0]
-                                .past_len();
+                            commit_s = self.issue_commit(CommitOp::Miss, &mut metrics)?;
+                            // authoritative past length without reading a
+                            // cache that may still owe deferred commits:
+                            // every decoded token after the first promoted
+                            // exactly one root
+                            let root_pos = prompt_ids.len() + decoded.len() - 1;
                             tree = PredictionTree::new(self.cfg.tree, budget, x, root_pos);
                             // in-flight data flows are stale: restart pipeline
                             next_inputs = vec![None; groups];
                             next_inputs[0] = Some(DataFlow::root(&tree));
                         }
                     }
+                    metrics.record("t_decide_s", decide0.elapsed().as_secs_f64() - commit_s);
                     if x == tokenizer::EOS_ID {
                         break 'outer;
                     }
@@ -542,6 +673,18 @@ impl Engine for PipeDecEngine {
         metrics.incr("worker_threads", self.worker_threads() as u64);
         // per-task timings the workers recorded concurrently
         metrics.merge(&self.worker_metrics.drain());
+        // the commit seconds that ran inside jobs are the overlapped share
+        // of the sync phase — but only a real pool makes them concurrent
+        // with other tasks (inline jobs at threads=1 don't overlap)
+        let sync_s = metrics.sample_sum("t_decide_s") + metrics.sample_sum("t_commit_s");
+        metrics.record(
+            "sync_overlap_ratio",
+            if self.pool.is_some() && self.cfg.overlap_sync && sync_s > 0.0 {
+                job_commit_s / sync_s
+            } else {
+                0.0
+            },
+        );
         // decode-loop host↔device traffic (excluding prefill): what the
         // device-resident path moved vs what argument-per-call marshalling
         // would have moved (BENCH_hotpath.json reads these)

@@ -12,13 +12,17 @@
 //!   the step-driven [`crate::engine::ScheduledEngine`] surface (and the
 //!   one-shot `Engine` trait for conformance).
 //! * [`pipeline`] — the per-request mechanics ([`pipeline::DataFlow`],
-//!   draft expansion, stage execution) both engines share, so their
+//!   draft expansion, stage execution, the shared serial-sync commit
+//!   helper [`pipeline::apply_commit_all`]) both engines share, so their
 //!   per-session outputs are identical by construction.
 //! * [`workers`] — the persistent pipeline worker pool (ISSUE 4): a
 //!   timestep's task set (draft + one task per timestep group) executes on
 //!   real threads, state moving in and out of jobs by ownership, with
 //!   `threads = 1` running the identical jobs inline as the sequential
-//!   reference path. Both engines dispatch through it.
+//!   reference path. Both engines dispatch through it. Since ISSUE 5 each
+//!   job also drains its caches' deferred sync commits before running, so
+//!   cache maintenance (KV promotion + tree compaction) overlaps the next
+//!   timestep's compute (`EngineConfig::overlap_sync`).
 //! * [`sampling`] — greedy and stochastic (temperature/top-p/top-k) token
 //!   selection shared with the baselines.
 

@@ -11,17 +11,22 @@
 //! Since ISSUE 4 both entry points take the split model state — a shared
 //! read-only [`ModelCore`] plus the caller's mutable [`StageContext`] — so
 //! a timestep's task set dispatches onto the pipeline worker pool
-//! ([`super::workers`]) as well as running inline on one thread.
+//! ([`super::workers`]) as well as running inline on one thread. Since
+//! ISSUE 5 the stage phase reads a [`TreeSnapshot`] (never the canonical
+//! tree), and the sync phase's cache maintenance is a replayable
+//! [`CacheCommit`] — applied at the sync point by [`apply_commit_all`]
+//! (serial reference path) or deferred into the owning worker's next job
+//! (the overlapped path).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::sampling::top_candidates;
-use crate::kvcache::TwoLevelCache;
+use crate::kvcache::{CacheCommit, TwoLevelCache};
 use crate::model::{bias, ModelCore, StageContext};
 use crate::runtime::Runtime;
-use crate::tree::PredictionTree;
+use crate::tree::{PredictionTree, TreeSnapshot};
 
 /// A data flow between pipeline nodes: the node ids of one tree layer plus
 /// the hidden states produced by the previous stage (absent for the
@@ -95,12 +100,13 @@ pub fn draft_expand(
 }
 
 /// Stage phase for one stage: filter rows whose nodes were pruned while in
-/// flight, run the stage's layer span over the survivors with the stage's
+/// flight (ids resolved through the dispatch-time [`TreeSnapshot`]), run
+/// the stage's layer span over the survivors with the stage's
 /// (per-request) cache, and return the outgoing data flow (`None` if
 /// everything was pruned away) plus the measured stage seconds. The past
 /// bias comes from the context's incremental bias cache keyed off the
 /// cache's `past_len` (all of one request's stages agree on it because
-/// promotions are synchronized at that request's sync points).
+/// every pending [`CacheCommit`] is applied before the forward runs).
 pub fn run_stage(
     target: &ModelCore,
     rt: &Runtime,
@@ -108,7 +114,7 @@ pub fn run_stage(
     layer_range: std::ops::Range<usize>,
     cache: &mut TwoLevelCache,
     df: DataFlow,
-    tree: &PredictionTree,
+    tree: &TreeSnapshot,
 ) -> Result<(Option<DataFlow>, f64)> {
     let tc = &target.cfg;
     let w = tc.width_cap;
@@ -168,4 +174,21 @@ pub fn run_stage(
         }),
         t0.elapsed().as_secs_f64(),
     ))
+}
+
+/// Serial-sync reference path of the ISSUE 5 decide/commit protocol:
+/// apply one sync decision to every cache of a request at the sync point
+/// itself — the promote/compact walk the solo engine and SpecPipe-DB used
+/// to spell out independently. Returns the number of caches committed
+/// (for the `commit_ops` metric).
+pub fn apply_commit_all<'a>(
+    caches: impl IntoIterator<Item = &'a mut TwoLevelCache>,
+    commit: &CacheCommit,
+) -> Result<usize> {
+    let mut n = 0usize;
+    for c in caches {
+        c.apply_commit(commit)?;
+        n += 1;
+    }
+    Ok(n)
 }

@@ -11,13 +11,19 @@
 //! in the paper's §3.1 grouping). Tasks of one timestep are mutually
 //! independent by construction:
 //!
-//! * stage jobs *read* an immutable `Arc` snapshot of the owning
+//! * stage jobs *read* an immutable `Arc<TreeSnapshot>` of the owning
 //!   request's prediction tree (one snapshot per request per timestep);
 //!   the draft job takes the canonical tree by move, mutates it, and the
 //!   coordinator adopts it back. Appending a BFS layer never changes
 //!   the indices, ancestor masks, or positions of existing nodes, so a
 //!   stage pass over the pre-expansion snapshot is bit-identical to the
 //!   sequential engine's pass over the post-expansion tree;
+//! * jobs carry the deferred [`CacheCommit`]s their lent caches have not
+//!   applied yet (ISSUE 5) and drain them *before* any forward pass, so
+//!   the previous timestep's cache maintenance executes on the owning
+//!   worker concurrently with the rest of this timestep's compute instead
+//!   of serializing at the coordinator; `commit_target` asserts no task
+//!   ever runs a cache that lags the issued commit sequence;
 //! * every job *owns* its mutable state while it runs: the member stages'
 //!   KV caches and the group's [`StageContext`] (device KV mirrors +
 //!   incremental bias) move into the job through the channel and move
@@ -50,15 +56,16 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use super::pipeline::{self, DataFlow};
-use crate::kvcache::TwoLevelCache;
+use crate::kvcache::{CacheCommit, TwoLevelCache};
 use crate::metrics::SharedMetrics;
 use crate::model::{ModelCore, StageContext};
 use crate::runtime::Runtime;
-use crate::tree::PredictionTree;
+use crate::tree::{PredictionTree, TreeSnapshot};
 
 /// One timestep group's task: run the incoming flow through the group's
 /// member stages (span order). State fields move in and move back out via
@@ -74,11 +81,21 @@ pub struct StageJob {
     pub layer_ranges: Vec<std::ops::Range<usize>>,
     /// Global stage index of each member (intra-group hop endpoints).
     pub stage_ids: Vec<usize>,
+    /// Deferred sync commits the member caches have not applied yet
+    /// (oldest first, ISSUE 5); applied via
+    /// [`StageContext::apply_commit`] *before* the member stages run, so
+    /// this timestep's compute on other workers overlaps the previous
+    /// sync's cache maintenance. Empty on the serial-sync path.
+    pub commits: Vec<CacheCommit>,
+    /// Commit epoch every member cache must sit at after applying
+    /// `commits` — the staleness guard: a task never runs a cache that
+    /// lags the coordinator's issued commit sequence.
+    pub commit_target: u64,
     pub df: DataFlow,
     /// Read snapshot of the owning request's tree — `Arc`, because every
     /// occupied slot of one request shares the same immutable snapshot
-    /// (the draft task gets its own owned tree to mutate).
-    pub tree: Arc<PredictionTree>,
+    /// (the draft task gets the owned canonical tree to mutate).
+    pub tree: Arc<TreeSnapshot>,
     pub metrics: Arc<SharedMetrics>,
 }
 
@@ -88,6 +105,11 @@ pub struct StageDone {
     pub group: usize,
     pub ctx: StageContext,
     pub caches: Vec<TwoLevelCache>,
+    /// Seconds this job spent applying deferred sync commits before its
+    /// forward (0 when none were pending) — reply-side, so the
+    /// coordinator can attribute commit time to the owning request
+    /// precisely instead of batch-wide.
+    pub commit_s: f64,
     pub res: Result<GroupOutcome>,
 }
 
@@ -117,6 +139,14 @@ pub struct DraftCandidate {
     pub tree: PredictionTree,
     /// The owner's draft KV cache.
     pub cache: TwoLevelCache,
+    /// Deferred sync commits the draft cache has not applied yet (oldest
+    /// first); applied before any expansion of this candidate's tree.
+    pub commits: Vec<CacheCommit>,
+    /// Commit epoch the draft cache must sit at after applying `commits`.
+    pub commit_target: u64,
+    /// Reply-side: seconds spent applying this candidate's deferred
+    /// commits (dispatched as 0, filled in by [`exec_draft_job`]).
+    pub commit_s: f64,
 }
 
 /// The draft node's task: grant pipeline slot 0 to the first candidate
@@ -145,14 +175,61 @@ pub struct DraftOutcome {
     pub draft_s: f64,
 }
 
-/// Execute one group task (worker thread or inline reference path).
+/// Apply a job's pending sync commits to its lent caches (in issue
+/// order, every cache per commit), then assert every cache reached the
+/// coordinator's issued epoch — the "never run against a stale tree"
+/// guard. Returns the seconds spent applying (0 when nothing was
+/// pending); the caller ships them home in the reply so the coordinator
+/// attributes commit time to the owning request precisely.
+fn apply_job_commits(
+    ctx: &mut StageContext,
+    caches: &mut [TwoLevelCache],
+    commits: &[CacheCommit],
+    target: u64,
+    metrics: &SharedMetrics,
+) -> Result<f64> {
+    let mut secs = 0.0;
+    if !commits.is_empty() {
+        let t0 = Instant::now();
+        for commit in commits {
+            for cache in caches.iter_mut() {
+                ctx.apply_commit(cache, commit)?;
+            }
+        }
+        secs = t0.elapsed().as_secs_f64();
+        metrics.incr("commit_ops", (commits.len() * caches.len()) as u64);
+    }
+    for cache in caches.iter() {
+        anyhow::ensure!(
+            cache.commit_epoch() == target,
+            "cache at commit epoch {} but the coordinator issued {target} — \
+             the task would run against a stale tree",
+            cache.commit_epoch()
+        );
+    }
+    Ok(secs)
+}
+
+/// Execute one group task (worker thread or inline reference path):
+/// drain the group's deferred sync commits, then run the member stages.
 pub fn exec_stage_job(rt: &Runtime, mut job: StageJob) -> StageDone {
     debug_assert_eq!(job.caches.len(), job.layer_ranges.len());
     let n = job.caches.len();
-    let mut df = Some(job.df);
     let mut compute_s = 0.0f64;
     let mut hops = Vec::new();
+    let mut commit_s = 0.0f64;
     let mut err = None;
+    match apply_job_commits(
+        &mut job.ctx,
+        &mut job.caches,
+        &job.commits,
+        job.commit_target,
+        &job.metrics,
+    ) {
+        Ok(secs) => commit_s = secs,
+        Err(e) => err = Some(e),
+    }
+    let mut df = if err.is_none() { Some(job.df) } else { None };
     for k in 0..n {
         let Some(cur) = df.take() else { break };
         match pipeline::run_stage(
@@ -185,6 +262,7 @@ pub fn exec_stage_job(rt: &Runtime, mut job: StageJob) -> StageDone {
         group: job.group,
         ctx: job.ctx,
         caches: job.caches,
+        commit_s,
         res: match err {
             None => Ok(GroupOutcome {
                 flow: df,
@@ -204,7 +282,29 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
     let mut draft_s = 0.0f64;
     let mut granted = None;
     let mut err = None;
+    // Drain every candidate's deferred commits first — a visited
+    // candidate's expansion must see its post-sync draft cache, and
+    // applying the unvisited candidates' commits early is harmless (the
+    // commits touch only that session's draft cache).
     for cand in job.candidates.iter_mut() {
+        match apply_job_commits(
+            &mut job.ctx,
+            std::slice::from_mut(&mut cand.cache),
+            &cand.commits,
+            cand.commit_target,
+            &job.metrics,
+        ) {
+            Ok(secs) => cand.commit_s = secs,
+            Err(e) => {
+                err = Some(e);
+                break;
+            }
+        }
+    }
+    for cand in job.candidates.iter_mut() {
+        if err.is_some() {
+            break;
+        }
         if let Some(df) = cand.entry.take() {
             granted = Some((cand.tag, df));
             break;
@@ -269,19 +369,20 @@ pub fn run_tasks(
     }
 }
 
-/// Reabsorb stage replies: hand each reply's lent state to `restore`
-/// *before* looking at its result — the invariant that keeps a failed
-/// decode from stranding caches/contexts — and collect the outcomes in
-/// group order plus the first task error, if any.
+/// Reabsorb stage replies: hand each reply's lent state (plus its
+/// measured deferred-commit seconds) to `restore` *before* looking at its
+/// result — the invariant that keeps a failed decode from stranding
+/// caches/contexts — and collect the outcomes in group order plus the
+/// first task error, if any.
 pub fn absorb_stage_dones(
     groups: usize,
     dones: Vec<StageDone>,
-    mut restore: impl FnMut(usize, StageContext, Vec<TwoLevelCache>),
+    mut restore: impl FnMut(usize, StageContext, Vec<TwoLevelCache>, f64),
 ) -> (Vec<Option<GroupOutcome>>, Option<anyhow::Error>) {
     let mut outcomes: Vec<Option<GroupOutcome>> = (0..groups).map(|_| None).collect();
     let mut first_err = None;
     for done in dones {
-        restore(done.group, done.ctx, done.caches);
+        restore(done.group, done.ctx, done.caches, done.commit_s);
         match done.res {
             Ok(oc) => outcomes[done.group] = Some(oc),
             Err(e) => first_err = first_err.or(Some(e)),

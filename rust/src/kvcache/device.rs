@@ -14,6 +14,13 @@
 //! [`crate::model::ModelHandles`]), holds no reference to the host cache,
 //! and is safe to drop and rebuild at any time — worst case is one full
 //! re-upload.
+//!
+//! Deferred sync commits (ISSUE 5) need no special handling here: a
+//! [`super::CacheCommit`] applied late mutates the host tensors through
+//! the same `promote`/`compact` entry points, bumping the same per-layer
+//! epochs, so the mirror re-uploads exactly what an eager sync would have
+//! — only later, right before the next forward pass that reads it
+//! (asserted by the replay property test in `tests/kvcache_device.rs`).
 
 use anyhow::Result;
 
@@ -66,6 +73,20 @@ impl DeviceKvCache {
     /// Bring layer `l`'s tree-level device copy up to date with `cache`.
     pub fn ensure_tree(&mut self, rt: &Runtime, cache: &TwoLevelCache, l: usize) -> Result<()> {
         self.ensure_level(rt, cache, l, false)
+    }
+
+    /// Bring *every* layer's device copy (both levels) up to date with
+    /// `cache`. Convenience only — the engine hot path syncs lazily per
+    /// layer (`ensure_past`/`ensure_tree`) and does not call this; it
+    /// exists for warming a cache outside a latency-sensitive window and
+    /// as the sync entry point of the mirror conformance tests in
+    /// `tests/kvcache_device.rs`.
+    pub fn sync(&mut self, rt: &Runtime, cache: &TwoLevelCache) -> Result<()> {
+        for l in 0..self.slots.len() {
+            self.ensure_past(rt, cache, l)?;
+            self.ensure_tree(rt, cache, l)?;
+        }
+        Ok(())
     }
 
     /// Shared sync for one layer × level: clean ⇒ credit `saved_kv` and

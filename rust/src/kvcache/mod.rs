@@ -21,6 +21,22 @@
 //! (`compact_tree` with the `kept_old` list from
 //! [`crate::tree::PredictionTree::prune`]) or cleared on a miss.
 //!
+//! # Replayable sync commits (ISSUE 5)
+//!
+//! That promote+compact pair is reified as a [`CacheCommit`]: the
+//! coordinator *decides* once per verified token and every cache owner
+//! *applies* the same op later — eagerly at the sync point (the serial
+//! reference path) or deferred until just before the owner's next forward
+//! pass (the overlapped path, where timestep t+1's compute runs
+//! concurrently with timestep t's cache maintenance). Commits carry a
+//! 1-based `epoch` in the owning request's commit sequence and each cache
+//! tracks the epoch it has applied ([`TwoLevelCache::commit_epoch`]), so
+//! replay is strictly in-order and a stale cache is detectable before it
+//! is run against a newer tree. Deferral is sound because nothing reads a
+//! cache between its sync point and its next forward — the decision
+//! itself (verification, sampling, pruning) never depends on cache
+//! contents, only on the exiting flow's logits and the tree.
+//!
 //! # Dirty tracking for the device mirror
 //!
 //! Each cache carries per-layer **mutation epochs** for both levels
@@ -62,6 +78,30 @@ fn fresh_cache_id() -> u64 {
     NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed)
 }
 
+/// What a verified token does to a request's tree-level cache (after the
+/// mandatory root promotion). `kept_old` is shared behind an `Arc` because
+/// one decision fans out to every stage cache plus the draft cache.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommitOp {
+    /// Verified hit: compact the tree level to the surviving pre-prune
+    /// slots (ascending, from [`crate::tree::PruneOutcome::Hit`]).
+    Hit { kept_old: std::sync::Arc<Vec<usize>> },
+    /// Verified miss: drop the tree level (the tree is reinitialized).
+    Miss,
+}
+
+/// One sync-phase cache maintenance decision, replayable on any cache of
+/// the owning request: promote the old root to the model level, then
+/// apply [`CommitOp`] to the tree level. Issued by the coordinator with a
+/// dense 1-based `epoch`; applied strictly in order via
+/// [`TwoLevelCache::apply_commit`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheCommit {
+    /// Position in the owning request's commit sequence (1-based, dense).
+    pub epoch: u64,
+    pub op: CommitOp,
+}
+
 #[derive(Debug)]
 pub struct TwoLevelCache {
     id: u64,
@@ -83,6 +123,9 @@ pub struct TwoLevelCache {
     clock: u64,
     past_epoch: Vec<u64>,
     tree_epoch: Vec<u64>,
+
+    /// Epoch of the last [`CacheCommit`] applied (0 = none this request).
+    commit_epoch: u64,
 }
 
 impl Clone for TwoLevelCache {
@@ -105,6 +148,7 @@ impl Clone for TwoLevelCache {
             clock: self.clock,
             past_epoch: self.past_epoch.clone(),
             tree_epoch: self.tree_epoch.clone(),
+            commit_epoch: self.commit_epoch,
         }
     }
 }
@@ -135,6 +179,7 @@ impl TwoLevelCache {
             clock: 0,
             past_epoch: vec![0; layers],
             tree_epoch: vec![0; layers],
+            commit_epoch: 0,
         }
     }
 
@@ -178,6 +223,32 @@ impl TwoLevelCache {
 
     pub fn head_dim(&self) -> usize {
         self.head_dim
+    }
+
+    /// Epoch of the last sync commit this cache applied (0 before the
+    /// first); the in-order replay cursor for deferred [`CacheCommit`]s.
+    pub fn commit_epoch(&self) -> u64 {
+        self.commit_epoch
+    }
+
+    /// Apply one sync decision: promote the old root to the model level,
+    /// then compact (hit) or clear (miss) the tree level. Commits must
+    /// arrive in issue order — `c.epoch == commit_epoch() + 1` — so a
+    /// deferred replay can never skip or reorder cache maintenance.
+    pub fn apply_commit(&mut self, c: &CacheCommit) -> Result<()> {
+        ensure!(
+            c.epoch == self.commit_epoch + 1,
+            "commit epoch {} applied to a cache at epoch {} (in-order replay broken)",
+            c.epoch,
+            self.commit_epoch
+        );
+        self.promote_root_to_past()?;
+        match &c.op {
+            CommitOp::Hit { kept_old } => self.compact_tree(kept_old),
+            CommitOp::Miss => self.clear_tree(),
+        }
+        self.commit_epoch = c.epoch;
+        Ok(())
     }
 
     /// Mutation epoch of layer `l`'s model-level (past) tensors.
@@ -427,10 +498,12 @@ impl TwoLevelCache {
 
     /// Reset everything (new request). Length-only — see
     /// [`TwoLevelCache::clear_tree`]; subsequent appends overwrite slot 0
-    /// onward and bump epochs then.
+    /// onward and bump epochs then. The commit cursor restarts with the
+    /// new request's commit sequence.
     pub fn reset(&mut self) {
         self.past_len = 0;
         self.tree_len = 0;
+        self.commit_epoch = 0;
     }
 
     /// Read one (k, v) vector pair for tests.
@@ -601,6 +674,61 @@ mod tests {
         let d = c.clone();
         assert_ne!(c.id(), d.id(), "clones must not alias device mirrors");
         assert_eq!(c.past_len(), d.past_len());
+    }
+
+    #[test]
+    fn apply_commit_matches_manual_promote_compact_and_orders_epochs() {
+        use std::sync::Arc;
+        let mut a = TwoLevelCache::new(2, 1, 2, 8, 8);
+        let mut b = TwoLevelCache::new(2, 1, 2, 8, 8);
+        for slot in 0..3 {
+            let k = vec![slot as f32; 2];
+            for l in 0..2 {
+                a.append_tree_block(l, &k, &k, 1, 1).unwrap();
+                b.append_tree_block(l, &k, &k, 1, 1).unwrap();
+            }
+            a.commit_tree(1);
+            b.commit_tree(1);
+        }
+        // manual eager sequence on `a`...
+        a.promote_root_to_past().unwrap();
+        a.compact_tree(&[1, 2]);
+        // ...must equal the reified commit on `b`
+        let hit = CacheCommit {
+            epoch: 1,
+            op: CommitOp::Hit {
+                kept_old: Arc::new(vec![1, 2]),
+            },
+        };
+        // out-of-order / replayed epochs are rejected
+        assert!(b
+            .apply_commit(&CacheCommit {
+                epoch: 2,
+                op: CommitOp::Miss
+            })
+            .is_err());
+        b.apply_commit(&hit).unwrap();
+        assert!(b.apply_commit(&hit).is_err(), "same epoch twice rejected");
+        assert_eq!(b.commit_epoch(), 1);
+        assert_eq!((a.past_len(), a.tree_len()), (b.past_len(), b.tree_len()));
+        for l in 0..2 {
+            assert_eq!(a.read_past_slot(l, 0, 0), b.read_past_slot(l, 0, 0));
+            for s in 0..a.tree_len() {
+                assert_eq!(a.read_tree_slot(l, 0, s), b.read_tree_slot(l, 0, s));
+            }
+        }
+        // miss commit clears the tree level after promoting
+        b.apply_commit(&CacheCommit {
+            epoch: 2,
+            op: CommitOp::Miss,
+        })
+        .unwrap();
+        assert_eq!(b.tree_len(), 0);
+        assert_eq!(b.past_len(), 2);
+        assert_eq!(b.commit_epoch(), 2);
+        // reset restarts the commit cursor for the next request
+        b.reset();
+        assert_eq!(b.commit_epoch(), 0);
     }
 
     #[test]

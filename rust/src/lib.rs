@@ -42,7 +42,15 @@
 //!   state moves into jobs and back by ownership, verification stays at
 //!   the coordinator's sync phase, and `threads = 1` runs the identical
 //!   jobs inline as the sequential reference path — token outputs are
-//!   identical at every thread count.
+//!   identical at every thread count. The sync phase itself is split
+//!   decide/commit (ISSUE 5, `EngineConfig::overlap_sync`): the
+//!   coordinator keeps the decision (verify/sample/prune) and issues a
+//!   replayable [`kvcache::CacheCommit`] that each cache owner drains at
+//!   the start of its next job, overlapping cache maintenance (KV
+//!   promotion + tree compaction + mirror re-upload) with the next
+//!   timestep's compute; stage tasks read [`tree::TreeSnapshot`]s, never
+//!   the canonical tree. Outputs are bit-identical with the overlap on
+//!   or off.
 //! * [`baselines`] — PP / STPP / SLM comparison engines (paper §4.2).
 //!
 //! The substrate they share:
@@ -69,9 +77,12 @@
 //!   `rust/benches/bench_async.rs` → `BENCH_async.json` for wall vs
 //!   modeled latency per worker-thread count).
 //! * [`tree`], [`kvcache`], [`schedule`], [`transport`], [`workflow`] — the
-//!   dynamic prediction tree, two-level KV cache (with per-layer dirty
-//!   epochs feeding the device mirror), transmission scheduler, link
-//!   model, and the workflow DAG controller.
+//!   dynamic prediction tree (plus the [`tree::TreeSnapshot`] read view
+//!   stage tasks run against), two-level KV cache (with per-layer dirty
+//!   epochs feeding the device mirror, and the epoch-ordered
+//!   [`kvcache::CacheCommit`] replay protocol for the overlapped sync
+//!   phase), transmission scheduler, link model, and the workflow DAG
+//!   controller.
 //! * [`config`], [`tokenizer`], [`metrics`], [`util`] — configuration
 //!   (TOML subset), byte-level tokenizer, metrics/tables (including the
 //!   thread-safe [`metrics::SharedMetrics`] sink the pipeline workers
@@ -81,9 +92,11 @@
 //!
 //! * [`server`] — router (bounded FIFO admission) + the continuous-batching
 //!   event loop [`server::serve_until_idle`] over any `dyn ScheduledEngine`,
-//!   with per-request overrides and per-request TTFT / time-between-tokens
-//!   capture (the Fig. 8 serving metrics); [`server::drain`] remains the
-//!   closed-batch convenience over a plain `dyn Engine`.
+//!   with per-request overrides, per-request TTFT / time-between-tokens
+//!   capture (the Fig. 8 serving metrics), and the per-decode sync-phase
+//!   breakdown (`t_decide_s` / `t_commit_s` / overlap ratio);
+//!   [`server::drain`] remains the closed-batch convenience over a plain
+//!   `dyn Engine`.
 //! * [`sim`] — calibrated cluster simulator for paper-scale figures.
 //! * [`workload`], [`bench_support`] — the six evaluation domains and the
 //!   bench harness used by `rust/benches/fig*.rs`.

@@ -28,7 +28,8 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
   pipedec decode  [--engine KIND] [--stages N] [--group-size G] [--width W]
                   [--children C] [--max-new N] [--prompt TEXT | --domain D]
                   [--temperature T] [--top-p P] [--top-k K] [--seed S]
-                  [--threads T] [--config FILE] [--no-stream]
+                  [--threads T] [--overlap-sync BOOL] [--config FILE]
+                  [--no-stream]
                   decode one prompt, streaming tokens as they are verified
                   (--no-stream prints only the final completion)
   pipedec serve   [--engine KIND] [--requests N] [--queue-cap N]
@@ -44,6 +45,8 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
 
   --threads: pipeline worker threads for the pipedec engines
              (0 = auto: one per core; 1 = sequential reference path)
+  --overlap-sync: overlap the sync phase's cache maintenance with the next
+             timestep's compute (default true; false = serial sync)
 
   KIND (--engine): pipedec     pipeline + draft-in-pipeline dynamic-tree speculation
                    pipedec-db  SpecPipe-DB: continuous batching across requests
@@ -91,7 +94,7 @@ fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, Stri
 
 const ENGINE_CFG_FLAGS: &[&str] = &[
     "engine", "stages", "group-size", "width", "children", "max-new",
-    "temperature", "top-p", "top-k", "seed", "threads", "config",
+    "temperature", "top-p", "top-k", "seed", "threads", "overlap-sync", "config",
 ];
 
 fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
@@ -128,6 +131,9 @@ fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     }
     if let Some(v) = flags.get("threads") {
         cfg.threads = v.parse()?;
+    }
+    if let Some(v) = flags.get("overlap-sync") {
+        cfg.overlap_sync = v.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -254,6 +260,12 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
     println!(
         "inter-token: mean={:.3}s (mean time between streamed tokens)",
         metrics.summary("tbt_s").mean()
+    );
+    println!(
+        "sync phase:  decide={:.3}s commit={:.3}s overlap={:.0}% of sync on workers",
+        metrics.sample_sum("t_decide_s"),
+        metrics.sample_sum("t_commit_s"),
+        100.0 * metrics.summary("sync_overlap_ratio").mean()
     );
     println!(
         "queue depth: mean={:.1} at admission",

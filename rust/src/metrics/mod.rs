@@ -39,6 +39,14 @@ impl Metrics {
         self.samples.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
+    /// Sum of a sample series (0 when absent) — the natural reading for
+    /// per-event duration series like the sync-phase breakdown
+    /// (`t_decide_s` / `t_commit_s`), where total seconds matter more
+    /// than the per-event distribution.
+    pub fn sample_sum(&self, name: &str) -> f64 {
+        self.samples(name).iter().sum()
+    }
+
     pub fn summary(&self, name: &str) -> Summary {
         Summary::from_samples(self.samples(name).to_vec())
     }
@@ -114,6 +122,18 @@ impl SharedMetrics {
             .entry(name.to_string())
             .or_default()
             .push(value);
+    }
+
+    /// Sum of a sample series without draining (0 when absent): lets a
+    /// coordinator peek at worker-recorded duration totals mid-decode
+    /// without disturbing the per-decode drain cycle.
+    pub fn sample_sum(&self, name: &str) -> f64 {
+        self.samples
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .map(|v| v.iter().sum())
+            .unwrap_or(0.0)
     }
 
     /// Move everything recorded so far into a plain [`Metrics`], leaving
@@ -249,6 +269,19 @@ mod tests {
             m.record("lat", v);
         }
         assert!((m.summary("lat").mean() - 2.0).abs() < 1e-9);
+        assert!((m.sample_sum("lat") - 6.0).abs() < 1e-9);
+        assert_eq!(m.sample_sum("missing"), 0.0);
+    }
+
+    #[test]
+    fn shared_sample_sum_peeks_without_draining() {
+        let m = SharedMetrics::new();
+        m.record("t_commit_s", 0.25);
+        m.record("t_commit_s", 0.75);
+        assert!((m.sample_sum("t_commit_s") - 1.0).abs() < 1e-12);
+        assert_eq!(m.sample_sum("absent"), 0.0);
+        // peeking must not drain
+        assert_eq!(m.drain().samples("t_commit_s").len(), 2);
     }
 
     #[test]

@@ -140,6 +140,28 @@ impl StageContext {
         }
     }
 
+    /// Apply one deferred sync decision to `cache` — the worker-side
+    /// commit entry point of the ISSUE 5 decide/commit protocol, called
+    /// at job start *before* any forward pass over the cache. Today this
+    /// only mutates the host cache: the promotion/compaction bumps the
+    /// cache's per-layer epochs, so this context's [`DeviceKvCache`]
+    /// mirror re-uploads exactly the levels an eager sync would have
+    /// dirtied, and the incremental past bias catches the new `past_len`
+    /// on its next `ensure_past_bias` — no explicit invalidation needed.
+    /// It still lives on the context because the commit is an operation
+    /// of the cache's *executing owner*: once the device-side KV-append
+    /// entry point lands (ROADMAP), applying a commit will scatter into
+    /// this context's resident mirror buffers instead of re-uploading.
+    /// In-order replay (and therefore never running a context against a
+    /// stale tree) is enforced by [`TwoLevelCache::apply_commit`].
+    pub fn apply_commit(
+        &mut self,
+        cache: &mut TwoLevelCache,
+        commit: &crate::kvcache::CacheCommit,
+    ) -> Result<()> {
+        cache.apply_commit(commit)
+    }
+
     /// Evict the device KV mirror of cache `cache_id` (the value of
     /// [`TwoLevelCache::id`]); returns whether a mirror existed. Dropping
     /// the mirror frees its device buffers; the next forward pass over a

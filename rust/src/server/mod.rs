@@ -68,6 +68,16 @@ pub struct Completion {
     pub queue_depth: usize,
     /// Modeled parallel-schedule decode seconds reported by the engine.
     pub modeled_s: f64,
+    /// Sync-phase breakdown (ISSUE 5): coordinator decide seconds
+    /// (verify + sample + prune) over the whole decode.
+    pub t_decide_s: f64,
+    /// Cache-commit seconds (KV promotion + tree compaction) wherever
+    /// they ran — coordinator (serial sync) or pipeline workers
+    /// (overlapped).
+    pub t_commit_s: f64,
+    /// Fraction of sync-phase seconds that ran on pipeline workers,
+    /// overlapped with the next timestep's compute (0 = fully serial).
+    pub sync_overlap_ratio: f64,
 }
 
 /// FIFO admission queue with a capacity bound (backpressure).
@@ -201,6 +211,17 @@ impl TokenSink for StreamProbe {
     }
 }
 
+/// Pull the per-decode sync-phase breakdown out of an engine's metrics:
+/// (decide seconds, commit seconds, overlap ratio). The ratio is recorded
+/// once per decode; decodes without a sync point report (0, 0, 0).
+fn sync_breakdown(m: &Metrics) -> (f64, f64, f64) {
+    (
+        m.sample_sum("t_decide_s"),
+        m.sample_sum("t_commit_s"),
+        m.samples("sync_overlap_ratio").first().copied().unwrap_or(0.0),
+    )
+}
+
 /// Bookkeeping for one request in flight inside the scheduler.
 struct Ticket {
     router_id: u64,
@@ -253,6 +274,8 @@ pub fn serve_until_idle(
             let probe = ticket.probe.borrow();
             let service = probe.elapsed_s();
             debug_assert_eq!(probe.tokens(), output.tokens.len());
+            let (t_decide_s, t_commit_s, sync_overlap_ratio) =
+                sync_breakdown(&output.metrics);
             out.push(Completion {
                 id: ticket.router_id,
                 engine: sched.name(),
@@ -263,6 +286,9 @@ pub fn serve_until_idle(
                 tbt_s: probe.tbt_s(),
                 queue_depth: ticket.queue_depth,
                 modeled_s: output.modeled_s,
+                t_decide_s,
+                t_commit_s,
+                sync_overlap_ratio,
             });
         }
     }
@@ -280,6 +306,7 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
         let result = engine.decode(&req.req, &mut probe)?;
         let service = probe.elapsed_s();
         debug_assert_eq!(probe.tokens(), result.tokens.len());
+        let (t_decide_s, t_commit_s, sync_overlap_ratio) = sync_breakdown(&result.metrics);
         out.push(Completion {
             id: req.id,
             engine: engine.name(),
@@ -290,6 +317,9 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
             tbt_s: probe.tbt_s(),
             queue_depth: depth,
             modeled_s: result.modeled_s,
+            t_decide_s,
+            t_commit_s,
+            sync_overlap_ratio,
         });
     }
     Ok(out)
@@ -297,8 +327,11 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
 
 /// Aggregate a batch of completions into the numbers Fig. 8 reports:
 /// counters plus `latency_s`, `first_token_s`, `tbt_s`, and `queue_depth`
-/// series, and the full-latency sample summary. `tbt_s` samples only
-/// requests that streamed at least two tokens.
+/// series, the per-decode sync-phase breakdown (`t_decide_s`,
+/// `t_commit_s`, `sync_overlap_ratio` — ISSUE 5), and the full-latency
+/// sample summary. `tbt_s` samples only requests that streamed at least
+/// two tokens; the sync series sample only requests that hit a sync point
+/// (decodes of a single token have none).
 pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) {
     let mut m = Metrics::new();
     let mut lat = Vec::new();
@@ -312,6 +345,11 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
             m.record("tbt_s", c.tbt_s);
         }
         m.record("queue_depth", c.queue_depth as f64);
+        if c.t_decide_s + c.t_commit_s > 0.0 {
+            m.record("t_decide_s", c.t_decide_s);
+            m.record("t_commit_s", c.t_commit_s);
+            m.record("sync_overlap_ratio", c.sync_overlap_ratio);
+        }
         lat.push(c.latency_s);
         total_tokens += c.tokens;
     }

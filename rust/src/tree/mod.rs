@@ -22,6 +22,14 @@
 //! `id`. Data flows in the pipeline reference nodes by id; after a prune,
 //! stages translate ids through [`PredictionTree::index_of_id`], dropping
 //! rows whose node was pruned away.
+//!
+//! Stage tasks running on pipeline workers never see the canonical tree:
+//! they read a [`TreeSnapshot`] — exactly the arrays the stage pass needs
+//! (identity, tokens, depths, the ancestor mask) taken at dispatch time —
+//! while the coordinator keeps mutating its copy (draft expansion,
+//! pruning). Cheaper to build per timestep than cloning the full tree and
+//! a hard guarantee that in-flight compute is isolated from the
+//! coordinator's decide phase (ISSUE 5).
 
 pub mod bitmatrix;
 
@@ -386,14 +394,20 @@ impl PredictionTree {
     /// slots (slot == BFS index — stages hold the BFS prefix). Row-major
     /// `[nodes.len() x cap]`.
     pub fn bias_rows(&self, nodes: &[usize], cap: usize, neg: f32) -> Vec<f32> {
-        let mut out = vec![neg; nodes.len() * cap];
-        for (r, &i) in nodes.iter().enumerate() {
-            for j in self.mask.row_ones(i) {
-                debug_assert!(j < cap, "tree larger than cache cap");
-                out[r * cap + j] = 0.0;
-            }
+        mask_bias_rows(&self.mask, nodes, cap, neg)
+    }
+
+    /// Immutable view for stage tasks dispatched this timestep (see the
+    /// module docs): copies only what [`TreeSnapshot`] serves.
+    pub fn snapshot(&self) -> TreeSnapshot {
+        TreeSnapshot {
+            ids: self.ids.clone(),
+            tokens: self.tokens.clone(),
+            depth: self.depth.clone(),
+            mask: self.mask.clone(),
+            root_pos: self.root_pos,
+            version: self.version,
         }
-        out
     }
 
     /// Structural invariants; called by tests and debug assertions.
@@ -449,6 +463,72 @@ impl PredictionTree {
             }
         }
         Ok(())
+    }
+}
+
+/// Shared bias-row builder: additive ancestor bias over `cap` tree-cache
+/// slots from any ancestor-or-self [`BitMatrix`].
+fn mask_bias_rows(mask: &BitMatrix, nodes: &[usize], cap: usize, neg: f32) -> Vec<f32> {
+    let mut out = vec![neg; nodes.len() * cap];
+    for (r, &i) in nodes.iter().enumerate() {
+        for j in mask.row_ones(i) {
+            debug_assert!(j < cap, "tree larger than cache cap");
+            out[r * cap + j] = 0.0;
+        }
+    }
+    out
+}
+
+/// Read-only view of a [`PredictionTree`] for in-flight stage tasks
+/// (ISSUE 5): node identity, tokens, depths, and the ancestor mask — the
+/// exact surface `coordinator::pipeline::run_stage` reads. Built once per
+/// request per timestep and shared behind an `Arc` by every occupied
+/// pipeline slot, while the coordinator mutates the canonical tree.
+#[derive(Debug, Clone)]
+pub struct TreeSnapshot {
+    ids: Vec<u64>,
+    tokens: Vec<u32>,
+    depth: Vec<u32>,
+    mask: BitMatrix,
+    root_pos: usize,
+    version: u64,
+}
+
+impl TreeSnapshot {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Prune/reinit version of the tree this snapshot was taken from.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn id(&self, i: usize) -> u64 {
+        self.ids[i]
+    }
+
+    pub fn token(&self, i: usize) -> u32 {
+        self.tokens[i]
+    }
+
+    /// Absolute RoPE position of node i.
+    pub fn position_of(&self, i: usize) -> usize {
+        self.root_pos + self.depth[i] as usize
+    }
+
+    /// See [`PredictionTree::index_of_id`].
+    pub fn index_of_id(&self, id: u64) -> Option<usize> {
+        self.ids.binary_search(&id).ok()
+    }
+
+    /// See [`PredictionTree::bias_rows`].
+    pub fn bias_rows(&self, nodes: &[usize], cap: usize, neg: f32) -> Vec<f32> {
+        mask_bias_rows(&self.mask, nodes, cap, neg)
     }
 }
 
@@ -657,6 +737,36 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn snapshot_serves_the_stage_surface_and_outlives_mutation() {
+        let mut t = PredictionTree::new(cfg(4, 2), 64, 0, 5);
+        t.expand_layer(&[cands(&[(1, 0.7), (2, 0.3)])]);
+        t.expand_layer(&[
+            cands(&[(3, 0.5), (4, 0.5)]),
+            cands(&[(5, 0.9), (6, 0.1)]),
+        ]);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), t.len());
+        assert_eq!(snap.version(), t.version());
+        let nodes: Vec<usize> = (0..t.len()).collect();
+        assert_eq!(
+            snap.bias_rows(&nodes, 16, -1e9),
+            t.bias_rows(&nodes, 16, -1e9)
+        );
+        for i in 0..t.len() {
+            assert_eq!(snap.id(i), t.id(i));
+            assert_eq!(snap.token(i), t.token(i));
+            assert_eq!(snap.position_of(i), t.position_of(i));
+            assert_eq!(snap.index_of_id(t.id(i)), Some(i));
+        }
+        // coordinator mutates its copy; the snapshot keeps the old view
+        let id5 = t.id(5); // token 5, child of the hit node "2"
+        t.prune(2);
+        assert_eq!(snap.len(), 7, "snapshot isolated from the prune");
+        assert_eq!(snap.index_of_id(id5), Some(5));
+        assert_eq!(t.index_of_id(id5), Some(1), "re-rooted under the hit");
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! 2. **Wall-clock sanity** — on a multi-core host the threaded engine is
 //!    not materially slower than sequential (it should be faster once
 //!    per-task compute dominates; a generous slack keeps CI noise out).
+//!
+//! ISSUE 5 extends the determinism contract to the overlapped sync phase:
+//! `overlap_sync` on vs off must be bit-identical for both engines at
+//! every thread count (greedy and stochastic) — deferring the cache
+//! commits moves bookkeeping, never a decision — and the sync-phase
+//! breakdown (`t_decide_s` / `t_commit_s` / `sync_overlap_ratio`) must
+//! show the commits actually running on workers when a pool exists.
 
 use pipedec::config::{EngineConfig, TreeConfig};
 use pipedec::coordinator::Sampling;
@@ -24,7 +31,7 @@ fn artifacts() -> Option<std::path::PathBuf> {
     dir.join("target_config.txt").exists().then_some(dir)
 }
 
-fn cfg(threads: usize, seed: u64) -> EngineConfig {
+fn cfg_overlap(threads: usize, seed: u64, overlap_sync: bool) -> EngineConfig {
     EngineConfig {
         stages: 2,
         tree: TreeConfig {
@@ -35,8 +42,13 @@ fn cfg(threads: usize, seed: u64) -> EngineConfig {
         max_new_tokens: 12,
         seed,
         threads,
+        overlap_sync,
         ..EngineConfig::default()
     }
+}
+
+fn cfg(threads: usize, seed: u64) -> EngineConfig {
+    cfg_overlap(threads, seed, true)
 }
 
 #[test]
@@ -84,6 +96,93 @@ fn threaded_decode_is_identical_under_stochastic_sampling() {
     let mut par = build_engine(EngineKind::PipeDec, &dir, cfg(3, 42)).unwrap();
     let b = par.decode(&req, &mut NullSink).unwrap();
     assert_eq!(a.tokens, b.tokens, "stochastic replay diverged across threads");
+}
+
+#[test]
+fn overlap_sync_is_token_identical_to_serial_sync() {
+    // ISSUE 5 acceptance: overlap on vs off is bit-identical for both
+    // engines across threads ∈ {1, 2, auto} — the decide phase
+    // (verification, sampling, RNG) never moved, only cache bookkeeping.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for kind in [EngineKind::PipeDec, EngineKind::PipeDecDb] {
+        for threads in [1usize, 2, 0] {
+            let req = DecodeRequest::new(PROMPT).with_seed(11);
+            let mut serial =
+                build_engine(kind, &dir, cfg_overlap(threads, 11, false)).unwrap();
+            let a = serial.decode(&req, &mut NullSink).unwrap();
+            let mut overlapped =
+                build_engine(kind, &dir, cfg_overlap(threads, 11, true)).unwrap();
+            let b = overlapped.decode(&req, &mut NullSink).unwrap();
+            assert_eq!(
+                a.tokens, b.tokens,
+                "{kind} threads={threads}: overlap_sync changed the tokens"
+            );
+            assert_eq!(
+                a.timesteps(),
+                b.timesteps(),
+                "{kind} threads={threads}: overlap_sync changed the schedule"
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_sync_is_identical_under_stochastic_sampling() {
+    // RNG consumption order is a decide-phase property; deferring cache
+    // commits must not move a single draw for either engine.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for kind in [EngineKind::PipeDec, EngineKind::PipeDecDb] {
+        let req = DecodeRequest::new(PROMPT)
+            .with_seed(23)
+            .with_sampling(Sampling::llama_stochastic());
+        let mut serial = build_engine(kind, &dir, cfg_overlap(0, 23, false)).unwrap();
+        let a = serial.decode(&req, &mut NullSink).unwrap();
+        let mut overlapped = build_engine(kind, &dir, cfg_overlap(0, 23, true)).unwrap();
+        let b = overlapped.decode(&req, &mut NullSink).unwrap();
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{kind}: stochastic replay diverged between sync modes"
+        );
+    }
+}
+
+#[test]
+fn overlap_sync_reports_the_breakdown_and_moves_commits_to_workers() {
+    // The observability satellite: with a real pool and overlap on, the
+    // commit seconds must show up as worker-side overlap (ratio > 0) and
+    // the serial path must report ratio == 0; both report t_decide_s.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let req = DecodeRequest::new(PROMPT).with_seed(3);
+    let mut overlapped =
+        build_engine(EngineKind::PipeDec, &dir, cfg_overlap(3, 3, true)).unwrap();
+    let a = overlapped.decode(&req, &mut NullSink).unwrap();
+    assert!(a.metrics.sample_sum("t_decide_s") > 0.0, "decide timing missing");
+    assert!(
+        a.metrics.counter("commit_ops") > 0,
+        "no commits applied on workers"
+    );
+    let ratio = a.metrics.samples("sync_overlap_ratio")[0];
+    assert!(
+        ratio > 0.0 && ratio <= 1.0,
+        "overlap ratio {ratio} out of range for the pooled overlapped path"
+    );
+    let mut serial =
+        build_engine(EngineKind::PipeDec, &dir, cfg_overlap(3, 3, false)).unwrap();
+    let b = serial.decode(&req, &mut NullSink).unwrap();
+    assert_eq!(
+        b.metrics.samples("sync_overlap_ratio")[0], 0.0,
+        "serial sync must report zero overlap"
+    );
+    assert!(b.metrics.sample_sum("t_commit_s") > 0.0, "eager commit timing missing");
 }
 
 #[test]

@@ -5,11 +5,21 @@
 //! to exactly the host `Vec<f32>` tensors, and clean levels must be served
 //! without re-upload.
 //!
+//! ISSUE 5 adds the deferred-commit replay property: for any random
+//! accept/prune/miss sequence, a cache that applies its [`CacheCommit`]s
+//! late — batched at arbitrary points between forwards, as the overlapped
+//! sync phase does on pipeline workers — must end every "forward" with
+//! host state *and* device-mirror state identical to a cache that applied
+//! each commit eagerly at its sync point.
+//!
 //! Needs only a PJRT CPU client (no compiled artifacts); skipped when the
 //! client cannot boot.
 
+use std::collections::VecDeque;
+use std::sync::Arc;
+
 use pipedec::kvcache::device::DeviceKvCache;
-use pipedec::kvcache::TwoLevelCache;
+use pipedec::kvcache::{CacheCommit, CommitOp, TwoLevelCache};
 use pipedec::runtime::{to_vec_f32, Runtime};
 use pipedec::util::XorShiftRng;
 
@@ -24,12 +34,11 @@ fn fetch(buf: &pipedec::runtime::DeviceBuffer) -> Vec<f32> {
     to_vec_f32(&buf.to_literal_sync().unwrap()).unwrap()
 }
 
-/// Sync every layer of the mirror and compare all four tensors against the
-/// host cache.
+/// Sync the whole mirror (through [`DeviceKvCache::sync`]) and compare
+/// all four tensors of every layer against the host cache.
 fn assert_mirror_matches(rt: &Runtime, cache: &TwoLevelCache, dev: &mut DeviceKvCache) {
+    dev.sync(rt, cache).unwrap();
     for l in 0..cache.layers() {
-        dev.ensure_past(rt, cache, l).unwrap();
-        dev.ensure_tree(rt, cache, l).unwrap();
         let (pk, pv) = dev.past(l).unwrap();
         assert_eq!(fetch(pk), cache.past_k_layer(l), "past_k layer {l}");
         assert_eq!(fetch(pv), cache.past_v_layer(l), "past_v layer {l}");
@@ -120,6 +129,150 @@ fn mirror_matches_host_across_mutation_sequences() {
     for seed in [1u64, 7, 42] {
         drive(seed, 60);
     }
+}
+
+/// Field-wise host equality of two caches (lengths + every live slot of
+/// both levels + the commit cursor).
+fn assert_caches_equal(a: &TwoLevelCache, b: &TwoLevelCache, what: &str) {
+    assert_eq!(a.past_len(), b.past_len(), "{what}: past_len");
+    assert_eq!(a.tree_len(), b.tree_len(), "{what}: tree_len");
+    assert_eq!(a.commit_epoch(), b.commit_epoch(), "{what}: commit_epoch");
+    for l in 0..LAYERS {
+        for h in 0..HEADS {
+            for s in 0..a.past_len() {
+                assert_eq!(
+                    a.read_past_slot(l, h, s),
+                    b.read_past_slot(l, h, s),
+                    "{what}: past l{l} h{h} s{s}"
+                );
+            }
+            for s in 0..a.tree_len() {
+                assert_eq!(
+                    a.read_tree_slot(l, h, s),
+                    b.read_tree_slot(l, h, s),
+                    "{what}: tree l{l} h{h} s{s}"
+                );
+            }
+        }
+    }
+}
+
+/// ISSUE 5 replay property: drive an eager cache and a deferred cache
+/// through the same random accept/prune/miss sequence. The eager cache
+/// applies every commit at its sync point (the serial reference path);
+/// the deferred cache queues commits and drains them only at "forward"
+/// boundaries (and random batch points with nothing in between) — the
+/// worker-side protocol. Host state, commit cursor, and device mirror
+/// must be indistinguishable whenever both caches are drained.
+fn drive_commit_replay(seed: u64, steps: usize) {
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: no PJRT client");
+        return;
+    };
+    let mut rng = XorShiftRng::new(seed);
+    let mut eager = TwoLevelCache::new(LAYERS, HEADS, HD, PAST_CAP, TREE_CAP);
+    let mut lazy = TwoLevelCache::new(LAYERS, HEADS, HD, PAST_CAP, TREE_CAP);
+    let mut eager_dev = DeviceKvCache::new(LAYERS);
+    let mut lazy_dev = DeviceKvCache::new(LAYERS);
+    let mut queue: VecDeque<CacheCommit> = VecDeque::new();
+    let mut epoch = 0u64;
+
+    fn drain(lazy: &mut TwoLevelCache, queue: &mut VecDeque<CacheCommit>) {
+        while let Some(c) = queue.pop_front() {
+            lazy.apply_commit(&c).unwrap();
+        }
+    }
+
+    for _ in 0..steps {
+        match rng.below(4) {
+            // "forward pass": both caches append the same tree block —
+            // the deferred cache must drain its queue first, exactly as
+            // a worker job drains its commits before running
+            0 if eager.tree_len() < eager.tree_cap() => {
+                drain(&mut lazy, &mut queue);
+                assert_caches_equal(&eager, &lazy, "pre-forward");
+                let room = eager.tree_cap() - eager.tree_len();
+                let count = 1 + rng.below(room.min(W));
+                for l in 0..LAYERS {
+                    let (k, v) = (rand_block(&mut rng), rand_block(&mut rng));
+                    eager.append_tree_block(l, &k, &v, W, count).unwrap();
+                    lazy.append_tree_block(l, &k, &v, W, count).unwrap();
+                }
+                eager.commit_tree(count);
+                lazy.commit_tree(count);
+            }
+            // sync point, hit: random ascending survivor subset (kept[0]
+            // is the new root; indices past the processed prefix are
+            // legal and ignored by compact_tree)
+            1 if eager.tree_len() >= 2 && eager.past_len() + 1 < eager.past_cap() => {
+                let kept: Vec<usize> = (1..eager.tree_len() + 2)
+                    .filter(|_| rng.chance(0.6))
+                    .collect();
+                epoch += 1;
+                let c = CacheCommit {
+                    epoch,
+                    op: CommitOp::Hit {
+                        kept_old: Arc::new(kept),
+                    },
+                };
+                eager.apply_commit(&c).unwrap();
+                queue.push_back(c);
+            }
+            // sync point, miss
+            2 if eager.tree_len() >= 1 && eager.past_len() + 1 < eager.past_cap() => {
+                epoch += 1;
+                let c = CacheCommit {
+                    epoch,
+                    op: CommitOp::Miss,
+                };
+                eager.apply_commit(&c).unwrap();
+                queue.push_back(c);
+            }
+            // arbitrary batch boundary with no forward in between — the
+            // deferred side may also catch up here (a worker whose slot
+            // got a flow but whose rows were all pruned in flight)
+            3 if rng.chance(0.4) => {
+                drain(&mut lazy, &mut queue);
+                assert_caches_equal(&eager, &lazy, "batch-drain");
+            }
+            _ => continue,
+        }
+        // the mirrors track their own cache; the lazy mirror must stay
+        // valid even while host commits are still queued
+        assert_mirror_matches(&rt, &eager, &mut eager_dev);
+        assert_mirror_matches(&rt, &lazy, &mut lazy_dev);
+    }
+    drain(&mut lazy, &mut queue);
+    assert_caches_equal(&eager, &lazy, "final");
+    assert_mirror_matches(&rt, &eager, &mut eager_dev);
+    assert_mirror_matches(&rt, &lazy, &mut lazy_dev);
+    assert_eq!(eager.commit_epoch(), epoch);
+}
+
+#[test]
+fn deferred_commit_replay_matches_eager_sync() {
+    for seed in [2u64, 11, 77, 1234] {
+        drive_commit_replay(seed, 80);
+    }
+}
+
+#[test]
+fn commit_epochs_reject_out_of_order_replay() {
+    let mut c = TwoLevelCache::new(LAYERS, HEADS, HD, PAST_CAP, TREE_CAP);
+    let mut rng = XorShiftRng::new(5);
+    for l in 0..LAYERS {
+        let (k, v) = (rand_block(&mut rng), rand_block(&mut rng));
+        c.append_tree_block(l, &k, &v, W, 2).unwrap();
+    }
+    c.commit_tree(2);
+    let miss = |epoch| CacheCommit {
+        epoch,
+        op: CommitOp::Miss,
+    };
+    assert!(c.apply_commit(&miss(2)).is_err(), "skipping epoch 1 rejected");
+    c.apply_commit(&miss(1)).unwrap();
+    assert!(c.apply_commit(&miss(1)).is_err(), "replaying epoch 1 rejected");
+    assert_eq!(c.commit_epoch(), 1);
 }
 
 #[test]
