@@ -1,0 +1,39 @@
+//! Concurrency correctness toolkit (ISSUE 6): the extracted decide/commit
+//! protocol, an in-tree explicit-state model checker, and the crate's
+//! single switch point for synchronization primitives.
+//!
+//! * [`protocol`] — the commit-epoch rules as pure data structures
+//!   ([`CommitLog`](protocol::CommitLog),
+//!   [`CommitCursor`](protocol::CommitCursor),
+//!   [`verify_drained`](protocol::verify_drained)), shared by the
+//!   production engines and the model checker.
+//! * [`explore`] — exhaustive interleaving search over a
+//!   [`Model`](explore::Model) (the vendored dependency set has no `loom`
+//!   crate, so the checker is in-tree).
+//! * [`model`] — the protocol model driven by `tests/loom_protocol.rs`:
+//!   coordinator + worker threads, commit drains, staleness guards,
+//!   channel-close shutdown, plus seeded mutations that must fail.
+//! * [`sync`] / [`thread`] — re-export `std::sync` / `std::thread`
+//!   normally; under `RUSTFLAGS="--cfg loom"` they route to the
+//!   instrumented [`shim`] wrappers that perturb the OS schedule at every
+//!   blocking or racy operation.
+//!
+//! See `rust/CONCURRENCY.md` for the full audit: Send/Sync reasoning for
+//! the PJRT wrappers, the ownership-passing job protocol, the commit-epoch
+//! invariants, and how to run the loom/Miri/TSan lanes locally.
+
+pub mod explore;
+pub mod model;
+pub mod protocol;
+pub mod shim;
+pub mod sync;
+
+/// Thread spawning, switched like [`sync`]: std normally, instrumented
+/// under `--cfg loom`.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, Builder, JoinHandle};
+
+    #[cfg(loom)]
+    pub use super::shim::thread::{spawn, yield_now, Builder, JoinHandle};
+}

@@ -1,0 +1,493 @@
+//! Model of the engine's decide/commit + worker-handoff protocol, checked
+//! exhaustively by `tests/loom_protocol.rs` via [`super::explore`].
+//!
+//! The model mirrors `coordinator/workers.rs` + the commit plumbing shared
+//! by `PipeDecEngine` and `DbSession`, at the granularity where the races
+//! live:
+//!
+//! * **Thread 0, the coordinator**, runs rounds: dispatch one job per
+//!   occupied worker (each job carries the worker's pending commit suffix
+//!   and a `commit_target`), collect one reply per dispatched job, then run
+//!   the sync phase — mint the round's commit ([`CommitLog::issue_with`]),
+//!   queue it (overlap mode) or apply it eagerly to every owner (serial
+//!   mode) — and trim the log to the slowest owner. After the last round it
+//!   dispatches one final drain job to every worker, closes the job
+//!   channels one by one (`txs.clear()` in `WorkerPool::drop`), and joins.
+//! * **Threads 1..=W, the workers**, loop: receive a job, drain its commit
+//!   suffix through their cache's [`CommitCursor`] one commit at a time,
+//!   run the `commit_target` staleness guard ([`verify_drained`]), run the
+//!   forward, reply. A closed channel with an empty queue means exit.
+//!
+//! Crucially the model drives the *production* protocol types
+//! ([`CommitLog`], [`CommitCursor`], [`verify_drained`]) — the checked
+//! guards are the shipped ones, not re-implementations. The checked
+//! properties (ISSUE 6):
+//!
+//! 1. no commit is skipped or double-applied under any interleaving (the
+//!    cursor errors inside [`Model::step`]);
+//! 2. no forward runs with an undrained commit suffix (ground-truth check
+//!    against the job's `issued_seq`, independent of the production
+//!    guards, so deleting a guard is *detected* rather than silently
+//!    accepted);
+//! 3. overlap-on and overlap-off reach the same final cache epoch on every
+//!    owner (terminal check + [`ProtocolModel::terminal_epochs`]);
+//! 4. pool shutdown never drops an in-flight job (terminal check on queues,
+//!    forward counts and exit states).
+//!
+//! [`Mutations`] seeds protocol bugs — dropping the staleness guard,
+//! over-trimming the log, forgetting to queue a minted commit, applying a
+//! commit twice, exiting on channel close without draining the queue — and
+//! the tests assert the explorer *fails* on each, which is what makes the
+//! passing runs meaningful.
+
+use super::explore::Model;
+use super::protocol::{verify_drained, CommitCursor, CommitLog, Epoched};
+use std::cell::RefCell;
+use std::collections::{BTreeSet, VecDeque};
+
+/// Minimal commit carrying only its epoch — the protocol never inspects
+/// the payload (`CommitOp` in production), so the model elides it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelCommit(pub u64);
+
+impl Epoched for ModelCommit {
+    fn epoch(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Seeded protocol bugs. Each one makes some interleaving (or every
+/// interleaving) violate a checked property; the loom tests assert the
+/// explorer catches all of them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Mutations {
+    /// Worker skips the `commit_target` staleness guard before its forward
+    /// (deleting the `verify_drained` call in `apply_job_commits`).
+    pub drop_target_check: bool,
+    /// Coordinator trims the commit log one epoch past the slowest owner
+    /// (an off-by-one in `trim_commit_log`), losing entries a lagging
+    /// owner still needs.
+    pub trim_ahead: bool,
+    /// Coordinator mints a commit but forgets to queue it in overlap mode
+    /// (decide without commit) — the epoch counter advances, the replay
+    /// data is gone.
+    pub skip_queue: bool,
+    /// Worker applies each pending commit twice (lost idempotence
+    /// assumption in the drain loop).
+    pub apply_twice: bool,
+    /// Worker checks the disconnect flag before its queue and exits on
+    /// channel close even with jobs still queued (breaking the
+    /// `while let Ok(job) = rx.recv()` drain discipline).
+    pub shutdown_drops_queue: bool,
+}
+
+/// A dispatched job, as seen by the protocol: the pending commit suffix,
+/// the `commit_target` staleness guard value, and `issued_seq` — the
+/// ground-truth issuer epoch at dispatch, which the model checks at the
+/// forward *independently of the production guards* (mutations may disable
+/// guards, never the ground truth).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Job {
+    commits: Vec<ModelCommit>,
+    commit_target: u64,
+    issued_seq: u64,
+}
+
+/// What a worker thread is doing.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Task {
+    Idle,
+    /// Draining the job's commit suffix; `next` indexes `job.commits`.
+    Drain { job: Job, next: usize },
+    /// Commits drained and staleness guard passed; forward not yet run.
+    Forward { job: Job },
+    Exited,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct WorkerState {
+    /// The worker's job channel buffer (sender side lives with the
+    /// coordinator; `closed` models dropping the sender).
+    queue: VecDeque<Job>,
+    task: Task,
+    /// The commit cursor of the cache this worker owns while running — the
+    /// same [`CommitCursor`] type `TwoLevelCache` embeds.
+    cursor: CommitCursor,
+    forwards: u64,
+}
+
+/// Coordinator phase machine. One enabled transition per state keeps
+/// threads deterministic; all nondeterminism is schedule choice.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Coord {
+    /// Dispatching round `round`: next send goes to worker `next`.
+    /// `round == timesteps` is the final drain round (all workers, no sync
+    /// after, fire-and-forget before close).
+    Dispatch { round: usize, next: usize },
+    /// Waiting for `outstanding` replies of round `round`.
+    Collect { round: usize, outstanding: usize },
+    /// Sync decide: mint round `round`'s commit.
+    Mint { round: usize },
+    /// Serial mode only: apply the minted commit to owner `next`.
+    Apply { round: usize, next: usize },
+    /// Trim the commit log to the slowest owner.
+    Trim { round: usize },
+    /// Closing job channels one by one (`txs.clear()`).
+    Close { next: usize },
+    /// Joining worker threads (blocks until all exited).
+    Join,
+    Done,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProtoState {
+    coord: Coord,
+    log: CommitLog<ModelCommit>,
+    closed: Vec<bool>,
+    workers: Vec<WorkerState>,
+    /// The shared reply channel (worker index per reply, FIFO).
+    done_q: VecDeque<usize>,
+}
+
+/// The checkable system: W workers, `occupancy.len()` sync rounds, overlap
+/// on or off, plus seeded [`Mutations`].
+#[derive(Debug)]
+pub struct ProtocolModel {
+    pub workers: usize,
+    pub overlap: bool,
+    /// `occupancy[round][w]`: dispatch a job to worker `w` in that round.
+    /// Sparse rows create lagging owners, the interesting case for the
+    /// pending-suffix and trim logic.
+    pub occupancy: Vec<Vec<bool>>,
+    pub mutations: Mutations,
+    /// Distinct `[cursor epochs per owner]` observed at clean terminals —
+    /// read after exploration to compare overlap-on vs overlap-off.
+    pub terminal_epochs: RefCell<BTreeSet<Vec<u64>>>,
+}
+
+impl ProtocolModel {
+    pub fn new(workers: usize, overlap: bool, occupancy: Vec<Vec<bool>>) -> Self {
+        assert!(workers >= 1);
+        assert!(occupancy.iter().all(|row| row.len() == workers));
+        Self {
+            workers,
+            overlap,
+            occupancy,
+            mutations: Mutations::default(),
+            terminal_epochs: RefCell::new(BTreeSet::new()),
+        }
+    }
+
+    pub fn with_mutations(mut self, m: Mutations) -> Self {
+        self.mutations = m;
+        self
+    }
+
+    /// Number of sync rounds (the drain round comes after these).
+    fn rounds(&self) -> usize {
+        self.occupancy.len()
+    }
+
+    /// Occupancy lookup covering the drain round (everyone gets a drain
+    /// job, mirroring the engines' final `drain_pending_commits` pass).
+    fn occupied(&self, round: usize, w: usize) -> bool {
+        if round == self.rounds() {
+            true
+        } else {
+            self.occupancy[round][w]
+        }
+    }
+
+    fn dispatched_in(&self, round: usize) -> usize {
+        (0..self.workers)
+            .filter(|&w| self.occupied(round, w))
+            .count()
+    }
+
+    fn step_coord(&self, s: &mut ProtoState) -> Result<(), String> {
+        match s.coord.clone() {
+            Coord::Dispatch { round, next } => {
+                if next < self.workers {
+                    if self.occupied(round, next) {
+                        let cur = s.workers[next].cursor.epoch();
+                        let job = Job {
+                            commits: s.log.pending(cur),
+                            commit_target: s.log.seq(),
+                            issued_seq: s.log.seq(),
+                        };
+                        s.workers[next].queue.push_back(job);
+                    }
+                    s.coord = Coord::Dispatch {
+                        round,
+                        next: next + 1,
+                    };
+                } else if round < self.rounds() {
+                    s.coord = Coord::Collect {
+                        round,
+                        outstanding: self.dispatched_in(round),
+                    };
+                } else {
+                    // Drain round is fire-and-forget: replies are never
+                    // read (the pool is being dropped); go close channels.
+                    s.coord = Coord::Close { next: 0 };
+                }
+            }
+            Coord::Collect { round, outstanding } => {
+                if outstanding > 0 {
+                    let w = s
+                        .done_q
+                        .pop_front()
+                        .expect("Collect enabled only with a reply queued");
+                    debug_assert!(w < self.workers);
+                    s.coord = Coord::Collect {
+                        round,
+                        outstanding: outstanding - 1,
+                    };
+                } else {
+                    s.coord = Coord::Mint { round };
+                }
+            }
+            Coord::Mint { round } => {
+                let c = s.log.issue_with(ModelCommit);
+                if self.overlap {
+                    if !self.mutations.skip_queue {
+                        s.log.queue(c);
+                    }
+                    s.coord = Coord::Trim { round };
+                } else {
+                    s.coord = Coord::Apply { round, next: 0 };
+                }
+            }
+            Coord::Apply { round, next } => {
+                if next < self.workers {
+                    // Serial mode: the coordinator owns every cache between
+                    // timesteps and replays the fresh commit eagerly.
+                    let epoch = s.log.seq();
+                    s.workers[next]
+                        .cursor
+                        .admit(epoch)
+                        .map_err(|e| format!("serial apply to owner {next}: {e}"))?;
+                    s.coord = Coord::Apply {
+                        round,
+                        next: next + 1,
+                    };
+                } else {
+                    s.coord = Coord::Trim { round };
+                }
+            }
+            Coord::Trim { round } => {
+                let min = s
+                    .workers
+                    .iter()
+                    .map(|w| w.cursor.epoch())
+                    .min()
+                    .unwrap_or(0);
+                let min = if self.mutations.trim_ahead {
+                    min + 1
+                } else {
+                    min
+                };
+                s.log.trim(min);
+                s.coord = Coord::Dispatch {
+                    round: round + 1,
+                    next: 0,
+                };
+            }
+            Coord::Close { next } => {
+                if next < self.workers {
+                    s.closed[next] = true;
+                    s.coord = Coord::Close { next: next + 1 };
+                } else {
+                    s.coord = Coord::Join;
+                }
+            }
+            Coord::Join => {
+                debug_assert!(s.workers.iter().all(|w| w.task == Task::Exited));
+                s.coord = Coord::Done;
+            }
+            Coord::Done => unreachable!("Done has no enabled transition"),
+        }
+        Ok(())
+    }
+
+    fn step_worker(&self, s: &mut ProtoState, w: usize) -> Result<(), String> {
+        let ws = &mut s.workers[w];
+        match ws.task.clone() {
+            Task::Idle => {
+                if self.mutations.shutdown_drops_queue && s.closed[w] {
+                    // Seeded bug: disconnect checked before the queue.
+                    ws.task = Task::Exited;
+                } else if let Some(job) = ws.queue.pop_front() {
+                    ws.task = Task::Drain { job, next: 0 };
+                } else {
+                    debug_assert!(s.closed[w], "Idle enabled only with work or close");
+                    ws.task = Task::Exited;
+                }
+            }
+            Task::Drain { job, next } => {
+                if next < job.commits.len() {
+                    let epoch = job.commits[next].epoch();
+                    ws.cursor
+                        .admit(epoch)
+                        .map_err(|e| format!("worker {w} drain: {e}"))?;
+                    if self.mutations.apply_twice {
+                        ws.cursor
+                            .admit(epoch)
+                            .map_err(|e| format!("worker {w} drain (2nd apply): {e}"))?;
+                    }
+                    ws.task = Task::Drain {
+                        job,
+                        next: next + 1,
+                    };
+                } else {
+                    // Production staleness guard (mutable away — the
+                    // ground-truth check at the forward still stands).
+                    if !self.mutations.drop_target_check {
+                        verify_drained(ws.cursor.epoch(), job.commit_target)
+                            .map_err(|e| format!("worker {w}: {e}"))?;
+                    }
+                    ws.task = Task::Forward { job };
+                }
+            }
+            Task::Forward { job } => {
+                // Ground truth for property 2: every commit issued before
+                // this job was dispatched must be applied, or the forward
+                // reads a stale cache layout.
+                if ws.cursor.epoch() != job.issued_seq {
+                    return Err(format!(
+                        "worker {w} ran a forward with an undrained commit suffix \
+                         (cache epoch {}, commits issued {})",
+                        ws.cursor.epoch(),
+                        job.issued_seq
+                    ));
+                }
+                ws.forwards += 1;
+                ws.task = Task::Idle;
+                s.done_q.push_back(w);
+            }
+            Task::Exited => unreachable!("Exited has no enabled transition"),
+        }
+        Ok(())
+    }
+}
+
+impl Model for ProtocolModel {
+    type State = ProtoState;
+
+    fn initial(&self) -> ProtoState {
+        ProtoState {
+            coord: Coord::Dispatch { round: 0, next: 0 },
+            log: CommitLog::new(),
+            closed: vec![false; self.workers],
+            workers: (0..self.workers)
+                .map(|_| WorkerState {
+                    queue: VecDeque::new(),
+                    task: Task::Idle,
+                    cursor: CommitCursor::new(),
+                    forwards: 0,
+                })
+                .collect(),
+            done_q: VecDeque::new(),
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.workers + 1
+    }
+
+    fn enabled(&self, s: &ProtoState, tid: usize) -> bool {
+        if tid == 0 {
+            match &s.coord {
+                Coord::Done => false,
+                // recv on the reply channel blocks until a reply arrives
+                Coord::Collect { outstanding, .. } => {
+                    *outstanding == 0 || !s.done_q.is_empty()
+                }
+                // join blocks until every worker exited
+                Coord::Join => s.workers.iter().all(|w| w.task == Task::Exited),
+                _ => true,
+            }
+        } else {
+            let w = &s.workers[tid - 1];
+            match &w.task {
+                Task::Exited => false,
+                // recv on the job channel blocks until a job or a close
+                Task::Idle => !w.queue.is_empty() || s.closed[tid - 1],
+                _ => true,
+            }
+        }
+    }
+
+    fn step(&self, s: &mut ProtoState, tid: usize) -> Result<(), String> {
+        if tid == 0 {
+            self.step_coord(s)
+        } else {
+            self.step_worker(s, tid - 1)
+        }
+    }
+
+    fn check(&self, s: &ProtoState) -> Result<(), String> {
+        for (i, w) in s.workers.iter().enumerate() {
+            if w.cursor.epoch() > s.log.seq() {
+                return Err(format!(
+                    "owner {i} is ahead of the issuer: cursor {} > seq {}",
+                    w.cursor.epoch(),
+                    s.log.seq()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_terminal(&self, s: &ProtoState) -> Result<(), String> {
+        if s.coord != Coord::Done {
+            return Err(format!(
+                "deadlock: nothing can run but the coordinator is in {:?}",
+                s.coord
+            ));
+        }
+        let total = s.log.seq();
+        let mut expected_forwards = 0u64;
+        for (i, w) in s.workers.iter().enumerate() {
+            if w.task != Task::Exited {
+                return Err(format!("worker {i} never exited: {:?}", w.task));
+            }
+            if !w.queue.is_empty() {
+                return Err(format!(
+                    "pool shutdown dropped {} in-flight job(s) on worker {i}",
+                    w.queue.len()
+                ));
+            }
+            if w.cursor.epoch() != total {
+                return Err(format!(
+                    "owner {i} finished at commit epoch {} but {} commits were \
+                     issued (skipped commit)",
+                    w.cursor.epoch(),
+                    total
+                ));
+            }
+            expected_forwards += (0..=self.rounds())
+                .filter(|&r| self.occupied(r, i))
+                .count() as u64;
+        }
+        let forwards: u64 = s.workers.iter().map(|w| w.forwards).sum();
+        if forwards != expected_forwards {
+            return Err(format!(
+                "{forwards} forwards ran but {expected_forwards} jobs were dispatched"
+            ));
+        }
+        // Drain-round replies are fire-and-forget; exactly one per worker
+        // must still sit in the reply channel. Fewer means a job vanished.
+        if s.done_q.len() != self.workers {
+            return Err(format!(
+                "expected {} unread drain-round replies, found {}",
+                self.workers,
+                s.done_q.len()
+            ));
+        }
+        self.terminal_epochs
+            .borrow_mut()
+            .insert(s.workers.iter().map(|w| w.cursor.epoch()).collect());
+        Ok(())
+    }
+}

@@ -1,0 +1,357 @@
+//! The decide/commit protocol, extracted as pure data structures.
+//!
+//! PR 5 split the sync phase into *decide* (pick the accepted path, mint a
+//! [`CacheCommit`](crate::kvcache::CacheCommit)) and *commit* (replay that
+//! decision against every cache owner, possibly much later and on another
+//! thread). Three rules make the overlap mode bit-identical to the serial
+//! mode, and before this PR they lived as duplicated ad-hoc code in
+//! `coordinator/engine.rs`, `coordinator/db.rs`, `kvcache/mod.rs` and
+//! `coordinator/workers.rs`:
+//!
+//! 1. **Dense epochs** — commits are numbered 1, 2, 3, … by the issuing
+//!    coordinator ([`CommitLog::issue_with`]). There are no gaps.
+//! 2. **In-order replay** — a cache owner at commit epoch `e` may apply only
+//!    the commit with epoch `e + 1` ([`CommitCursor`]). Applying anything
+//!    else means a commit was skipped, double-applied or reordered, and the
+//!    replayed cache would diverge from the serial reference.
+//! 3. **Drain before forward** — a worker must have applied every commit
+//!    issued before its job was dispatched (`commit_target`) before running
+//!    the forward pass ([`verify_drained`]); otherwise the forward reads a
+//!    stale cache layout.
+//!
+//! This module is the single home for those rules. The production engines
+//! ([`PipeDecEngine`](crate::coordinator::PipeDecEngine), `DbSession`) hold a
+//! [`CommitLog`]; [`TwoLevelCache`](crate::kvcache::TwoLevelCache) holds a
+//! [`CommitCursor`]; `apply_job_commits` calls [`verify_drained`]. The model
+//! checked by `tests/loom_protocol.rs` (see [`super::model`]) drives the
+//! *same* types, so the exhaustive interleaving search exercises the code the
+//! engines run, not a transliteration of it.
+
+use std::collections::VecDeque;
+
+/// Anything stamped with a commit epoch. Implemented by
+/// [`CacheCommit`](crate::kvcache::CacheCommit) and by the model-checker's
+/// commit stand-in.
+pub trait Epoched {
+    fn epoch(&self) -> u64;
+}
+
+/// In-order replay was violated: a commit with epoch `offered` was applied
+/// to an owner whose cursor sits at `applied` (rule 2 above requires
+/// `offered == applied + 1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommitOrderError {
+    pub applied: u64,
+    pub offered: u64,
+}
+
+impl std::fmt::Display for CommitOrderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "commit epoch {} applied to a cache at epoch {} (in-order replay broken)",
+            self.offered, self.applied
+        )
+    }
+}
+
+impl std::error::Error for CommitOrderError {}
+
+/// A job reached its forward pass with an undrained commit suffix: the
+/// owning cache sits at `cache_epoch` but every commit up to `target` was
+/// issued before the job was dispatched (rule 3 above).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaleCacheError {
+    pub cache_epoch: u64,
+    pub target: u64,
+}
+
+impl std::fmt::Display for StaleCacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "stale cache after commit replay: cache at epoch {} but job was \
+             issued at commit epoch {} (undrained commit suffix)",
+            self.cache_epoch, self.target
+        )
+    }
+}
+
+impl std::error::Error for StaleCacheError {}
+
+/// The staleness guard carried by every dispatched job: before the forward
+/// runs, the owner's cache must have drained every commit issued up to
+/// `target` (the issuer's [`CommitLog::seq`] at dispatch time).
+pub fn verify_drained(cache_epoch: u64, target: u64) -> Result<(), StaleCacheError> {
+    if cache_epoch == target {
+        Ok(())
+    } else {
+        Err(StaleCacheError {
+            cache_epoch,
+            target,
+        })
+    }
+}
+
+/// Per-owner replay position: the epoch of the last commit this owner
+/// applied. Enforces rule 2 (dense, in-order, exactly-once replay).
+///
+/// The check and the advance are split so a caller can validate the epoch
+/// *before* mutating its own state and advance only after the mutation
+/// succeeded (`TwoLevelCache::apply_commit` promotes the root layer between
+/// the two, and a failed promotion must not advance the cursor).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct CommitCursor {
+    applied: u64,
+}
+
+impl CommitCursor {
+    pub const fn new() -> Self {
+        Self { applied: 0 }
+    }
+
+    /// Epoch of the last applied commit (0 = nothing applied yet).
+    pub fn epoch(&self) -> u64 {
+        self.applied
+    }
+
+    /// Validate that `offered` is the next epoch in sequence, without
+    /// advancing.
+    pub fn check_next(&self, offered: u64) -> Result<(), CommitOrderError> {
+        if offered == self.applied + 1 {
+            Ok(())
+        } else {
+            Err(CommitOrderError {
+                applied: self.applied,
+                offered,
+            })
+        }
+    }
+
+    /// Record that `offered` was applied. Callers must have called
+    /// [`check_next`](Self::check_next) first; this is debug-asserted.
+    pub fn advance(&mut self, offered: u64) {
+        debug_assert_eq!(
+            offered,
+            self.applied + 1,
+            "CommitCursor::advance without a passing check_next"
+        );
+        self.applied = offered;
+    }
+
+    /// [`check_next`](Self::check_next) + [`advance`](Self::advance) in one
+    /// step, for callers whose apply is atomic (the protocol model).
+    pub fn admit(&mut self, offered: u64) -> Result<(), CommitOrderError> {
+        self.check_next(offered)?;
+        self.advance(offered);
+        Ok(())
+    }
+
+    /// Forget all progress (cache reset between sequences).
+    pub fn reset(&mut self) {
+        self.applied = 0;
+    }
+}
+
+/// The issuing side of the protocol: a dense epoch counter plus the queue of
+/// commits not yet applied by every owner.
+///
+/// Owned by the coordinator (`PipeDecEngine` / `DbSession`). In overlap-sync
+/// mode minted commits are [`queue`](Self::queue)d and owners drain their
+/// pending suffix ([`pending`](Self::pending)) at the start of their next
+/// job; in serial mode commits are applied eagerly at issue time and the
+/// queue stays empty. Either way the epoch counter advances identically, so
+/// both modes produce the same commit sequence — the equivalence checked
+/// exhaustively in `tests/loom_protocol.rs`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CommitLog<C> {
+    entries: VecDeque<C>,
+    seq: u64,
+}
+
+impl<C> Default for CommitLog<C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<C> CommitLog<C> {
+    pub fn new() -> Self {
+        Self {
+            entries: VecDeque::new(),
+            seq: 0,
+        }
+    }
+
+    /// Epoch of the most recently issued commit (0 = none yet). Dispatched
+    /// jobs carry this as their `commit_target`.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Forget all queued commits and restart the epoch sequence (engine
+    /// reset between decode runs; caches reset their cursors in lockstep).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.seq = 0;
+    }
+}
+
+impl<C: Epoched + Clone> CommitLog<C> {
+    /// Mint the next commit: advances the dense epoch counter and builds the
+    /// commit via `make` (which receives the new epoch). The commit is *not*
+    /// queued — serial mode applies it eagerly instead; overlap mode must
+    /// follow up with [`queue`](Self::queue).
+    pub fn issue_with(&mut self, make: impl FnOnce(u64) -> C) -> C {
+        self.seq += 1;
+        let c = make(self.seq);
+        debug_assert_eq!(
+            c.epoch(),
+            self.seq,
+            "issued commit must carry the epoch it was minted with"
+        );
+        c
+    }
+
+    /// Queue a minted commit for deferred replay (overlap mode).
+    pub fn queue(&mut self, c: C) {
+        debug_assert!(
+            c.epoch() <= self.seq,
+            "queued commit epoch {} was never issued (seq {})",
+            c.epoch(),
+            self.seq
+        );
+        debug_assert!(
+            !self.entries.back().is_some_and(|b| b.epoch() >= c.epoch()),
+            "commit log must stay strictly epoch-ordered"
+        );
+        self.entries.push_back(c);
+    }
+
+    /// The suffix of queued commits an owner at epoch `applied` still has to
+    /// replay, oldest first.
+    pub fn pending(&self, applied: u64) -> Vec<C> {
+        self.entries
+            .iter()
+            .filter(|c| c.epoch() > applied)
+            .cloned()
+            .collect()
+    }
+
+    /// Number of queued commits an owner at epoch `applied` still has to
+    /// replay.
+    pub fn depth(&self, applied: u64) -> usize {
+        self.entries.iter().filter(|c| c.epoch() > applied).count()
+    }
+
+    /// Drop queued commits every owner has applied (`min_applied` = the
+    /// minimum cursor epoch across all owners). Trimming more than this
+    /// would lose entries a lagging owner still needs — exactly the
+    /// `TrimAhead` mutation the model checker demonstrates to be unsound.
+    pub fn trim(&mut self, min_applied: u64) {
+        while self
+            .entries
+            .front()
+            .is_some_and(|c| c.epoch() <= min_applied)
+        {
+            self.entries.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, PartialEq, Eq, Hash)]
+    struct C(u64);
+    impl Epoched for C {
+        fn epoch(&self) -> u64 {
+            self.0
+        }
+    }
+
+    #[test]
+    fn cursor_admits_only_dense_in_order_epochs() {
+        let mut cur = CommitCursor::new();
+        assert_eq!(cur.epoch(), 0);
+        assert!(cur.admit(1).is_ok());
+        assert!(cur.admit(3).is_err(), "skip must be rejected");
+        assert!(cur.admit(1).is_err(), "double-apply must be rejected");
+        assert!(cur.admit(2).is_ok());
+        assert_eq!(cur.epoch(), 2);
+        cur.reset();
+        assert_eq!(cur.epoch(), 0);
+        assert!(cur.admit(1).is_ok());
+    }
+
+    #[test]
+    fn check_next_does_not_advance() {
+        let cur = CommitCursor::new();
+        assert!(cur.check_next(1).is_ok());
+        assert!(cur.check_next(1).is_ok(), "check alone must not advance");
+        assert!(cur.check_next(2).is_err());
+    }
+
+    #[test]
+    fn log_issues_dense_epochs_and_tracks_pending_suffix() {
+        let mut log: CommitLog<C> = CommitLog::new();
+        assert_eq!(log.seq(), 0);
+        for want in 1..=3u64 {
+            let c = log.issue_with(C);
+            assert_eq!(c.epoch(), want);
+            log.queue(c);
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.pending(0).len(), 3);
+        assert_eq!(log.pending(2), vec![C(3)]);
+        assert_eq!(log.depth(1), 2);
+        assert!(log.pending(3).is_empty());
+    }
+
+    #[test]
+    fn trim_keeps_entries_for_the_slowest_owner() {
+        let mut log: CommitLog<C> = CommitLog::new();
+        for _ in 0..4 {
+            let c = log.issue_with(C);
+            log.queue(c);
+        }
+        log.trim(2);
+        assert_eq!(log.pending(2), vec![C(3), C(4)]);
+        // The suffix a lagging owner needs survives the trim.
+        assert_eq!(log.len(), 2);
+        log.trim(4);
+        assert!(log.is_empty());
+        assert_eq!(log.seq(), 4, "trim never rewinds the epoch counter");
+    }
+
+    #[test]
+    fn clear_restarts_the_epoch_sequence() {
+        let mut log: CommitLog<C> = CommitLog::new();
+        let c = log.issue_with(C);
+        log.queue(c);
+        log.clear();
+        assert_eq!(log.seq(), 0);
+        assert!(log.is_empty());
+        assert_eq!(log.issue_with(C).epoch(), 1);
+    }
+
+    #[test]
+    fn serial_mode_leaves_queue_empty_but_advances_seq() {
+        let mut log: CommitLog<C> = CommitLog::new();
+        let _ = log.issue_with(C); // applied eagerly, never queued
+        let _ = log.issue_with(C);
+        assert_eq!(log.seq(), 2);
+        assert!(log.is_empty());
+        assert!(verify_drained(2, log.seq()).is_ok());
+        assert!(verify_drained(1, log.seq()).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Instrumented drop-in replacements for the `std::sync` / `std::thread`
+//! types the engine uses, active under `--cfg loom`.
+//!
+//! The vendored dependency set has no `loom` crate, so the `#[cfg(loom)]`
+//! branch of [`super::sync`] routes here instead: thin wrappers around the
+//! std types that insert a seeded, per-thread pseudo-random
+//! [`sched::yield_point`] before every blocking or racy operation (lock
+//! acquisition, channel send/recv, atomic RMW, thread start). That is *not*
+//! an exhaustive schedule search over the real binary — exhaustiveness
+//! comes from the pure protocol model in [`super::model`], which the
+//! `loom_protocol` tests drive through the [`Explorer`](super::explore) in
+//! every build. What the shim adds in the `--cfg loom` lane is schedule
+//! perturbation on the *real* `std` primitives, so the threaded suites run
+//! under many more distinct interleavings than an idle machine would
+//! produce.
+//!
+//! The wrappers expose exactly the std surface the crate uses (see
+//! [`super::sync`]), so swapping in the real `loom` crate later is a
+//! one-line change in that module, not a code change here or in the
+//! engines. `Arc` is deliberately *not* wrapped: the pool's ownership-
+//! passing protocol moves state through channels and never relies on
+//! refcount ordering, so `std::sync::Arc` is used in both modes (see
+//! `CONCURRENCY.md`).
+//!
+//! The module is compiled (and unit-tested) in every build so the `--cfg
+//! loom` lane cannot rot; without the cfg the yield points are no-ops and
+//! the wrappers behave identically to std.
+
+/// Seeded per-thread schedule perturbation.
+pub mod sched {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Seeds handed to threads as they first hit a yield point; the base
+    /// can be pinned via `PIPEDEC_LOOM_SEED` for reproducing a schedule.
+    static NEXT_SEED: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        static RNG: Cell<u64> = const { Cell::new(0) };
+    }
+
+    fn base_seed() -> u64 {
+        std::env::var("PIPEDEC_LOOM_SEED")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(0x9E37_79B9_7F4A_7C15)
+    }
+
+    fn next(cell: &Cell<u64>) -> u64 {
+        let mut x = cell.get();
+        if x == 0 {
+            // First yield point on this thread: derive a per-thread stream
+            // from the (env-pinnable) base seed.
+            let n = NEXT_SEED.fetch_add(1, Ordering::Relaxed);
+            x = base_seed() ^ (n.wrapping_add(1)).wrapping_mul(0x9E37_79B9);
+        }
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        cell.set(x);
+        x
+    }
+
+    /// Under `--cfg loom`, yield the OS scheduler at a seeded pseudo-random
+    /// subset of call sites; otherwise a no-op (the RNG still advances so
+    /// both cfgs execute the same code paths).
+    pub fn yield_point() {
+        let r = RNG.with(next);
+        if cfg!(loom) && r & 0b11 == 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Instrumented `std::sync` subset.
+pub mod sync {
+    use super::sched::yield_point;
+    use std::sync::LockResult;
+
+    /// [`std::sync::Mutex`] with a yield point before each acquisition.
+    #[derive(Debug, Default)]
+    pub struct Mutex<T>(std::sync::Mutex<T>);
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Self(std::sync::Mutex::new(t))
+        }
+
+        pub fn lock(&self) -> LockResult<std::sync::MutexGuard<'_, T>> {
+            yield_point();
+            self.0.lock()
+        }
+    }
+
+    /// [`std::sync::RwLock`] with a yield point before each acquisition.
+    #[derive(Debug, Default)]
+    pub struct RwLock<T>(std::sync::RwLock<T>);
+
+    impl<T> RwLock<T> {
+        pub const fn new(t: T) -> Self {
+            Self(std::sync::RwLock::new(t))
+        }
+
+        pub fn read(&self) -> LockResult<std::sync::RwLockReadGuard<'_, T>> {
+            yield_point();
+            self.0.read()
+        }
+
+        pub fn write(&self) -> LockResult<std::sync::RwLockWriteGuard<'_, T>> {
+            yield_point();
+            self.0.write()
+        }
+    }
+
+    /// Instrumented `std::sync::atomic` subset.
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        /// [`std::sync::atomic::AtomicU64`] with a yield point before each
+        /// read-modify-write.
+        #[derive(Debug, Default)]
+        pub struct AtomicU64(std::sync::atomic::AtomicU64);
+
+        impl AtomicU64 {
+            pub const fn new(v: u64) -> Self {
+                Self(std::sync::atomic::AtomicU64::new(v))
+            }
+
+            pub fn load(&self, order: Ordering) -> u64 {
+                self.0.load(order)
+            }
+
+            pub fn store(&self, v: u64, order: Ordering) {
+                self.0.store(v, order)
+            }
+
+            pub fn fetch_add(&self, v: u64, order: Ordering) -> u64 {
+                super::super::sched::yield_point();
+                self.0.fetch_add(v, order)
+            }
+
+            pub fn into_inner(self) -> u64 {
+                self.0.into_inner()
+            }
+        }
+    }
+
+    /// Instrumented `std::sync::mpsc` subset.
+    pub mod mpsc {
+        use super::super::sched::yield_point;
+        pub use std::sync::mpsc::{RecvError, SendError, TryRecvError};
+
+        pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+            let (tx, rx) = std::sync::mpsc::channel();
+            (Sender(tx), Receiver(rx))
+        }
+
+        /// [`std::sync::mpsc::Sender`] with a yield point before each send.
+        #[derive(Debug)]
+        pub struct Sender<T>(std::sync::mpsc::Sender<T>);
+
+        // Manual impl: derived Clone would require `T: Clone`, but channel
+        // handles clone independently of the payload type.
+        impl<T> Clone for Sender<T> {
+            fn clone(&self) -> Self {
+                Self(self.0.clone())
+            }
+        }
+
+        impl<T> Sender<T> {
+            pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+                yield_point();
+                self.0.send(t)
+            }
+        }
+
+        /// [`std::sync::mpsc::Receiver`] with a yield point before each
+        /// receive.
+        #[derive(Debug)]
+        pub struct Receiver<T>(std::sync::mpsc::Receiver<T>);
+
+        impl<T> Receiver<T> {
+            pub fn recv(&self) -> Result<T, RecvError> {
+                yield_point();
+                self.0.recv()
+            }
+
+            pub fn try_recv(&self) -> Result<T, TryRecvError> {
+                yield_point();
+                self.0.try_recv()
+            }
+
+            pub fn iter(&self) -> std::sync::mpsc::Iter<'_, T> {
+                yield_point();
+                self.0.iter()
+            }
+        }
+    }
+}
+
+/// Instrumented `std::thread` subset.
+pub mod thread {
+    use super::sched::yield_point;
+    pub use std::thread::JoinHandle;
+
+    /// [`std::thread::Builder`] whose spawned threads hit a yield point
+    /// before running their closure (perturbs startup order).
+    #[derive(Debug)]
+    pub struct Builder(std::thread::Builder);
+
+    // Manual impl: `std::thread::Builder` does not implement `Default`.
+    impl Default for Builder {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Self(std::thread::Builder::new())
+        }
+
+        pub fn name(self, name: String) -> Self {
+            Self(self.0.name(name))
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            self.0.spawn(move || {
+                yield_point();
+                f()
+            })
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::spawn(move || {
+            yield_point();
+            f()
+        })
+    }
+
+    pub fn yield_now() {
+        std::thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_and_rwlock_delegate() {
+        let m = sync::Mutex::new(1u32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 2);
+        let rw = sync::RwLock::new(3u32);
+        assert_eq!(*rw.read().unwrap(), 3);
+        *rw.write().unwrap() = 4;
+        assert_eq!(*rw.read().unwrap(), 4);
+    }
+
+    #[test]
+    fn atomic_u64_delegates() {
+        use sync::atomic::{AtomicU64, Ordering};
+        static S: AtomicU64 = AtomicU64::new(5); // exercises const-ness
+        assert_eq!(S.fetch_add(2, Ordering::Relaxed), 5);
+        assert_eq!(S.load(Ordering::Relaxed), 7);
+        let a = AtomicU64::new(1);
+        a.store(9, Ordering::Relaxed);
+        assert_eq!(a.into_inner(), 9);
+    }
+
+    #[test]
+    fn channels_move_values_across_instrumented_threads() {
+        let (tx, rx) = sync::mpsc::channel::<u64>();
+        let tx2 = tx.clone();
+        let h = thread::Builder::new()
+            .name("shim-test".into())
+            .spawn(move || {
+                tx2.send(11).unwrap();
+            })
+            .unwrap();
+        tx.send(22).unwrap();
+        let mut got = vec![rx.recv().unwrap(), rx.recv().unwrap()];
+        got.sort_unstable();
+        assert_eq!(got, vec![11, 22]);
+        h.join().unwrap();
+        drop(tx);
+        assert!(rx.recv().is_err(), "closed channel reports disconnect");
+    }
+
+    #[test]
+    fn yield_points_are_cheap_and_deterministic_per_thread() {
+        // Just exercise the RNG path from several threads.
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                thread::spawn(|| {
+                    for _ in 0..100 {
+                        sched::yield_point();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let _ = Arc::new(0u8); // Arc intentionally unwrapped; see module docs
+    }
+}

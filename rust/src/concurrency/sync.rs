@@ -1,0 +1,26 @@
+//! The crate's single switch point for synchronization primitives.
+//!
+//! Code that synchronizes between threads (`coordinator/workers.rs`,
+//! `metrics`, `transport`, the kvcache id generator, runtime transfer
+//! counters) imports `Mutex`/`RwLock`/`atomic`/`mpsc` from here instead of
+//! `std::sync`. Normally these are plain re-exports of std — zero-cost. A
+//! `RUSTFLAGS="--cfg loom"` build routes them to the instrumented wrappers
+//! in [`super::shim`], which perturb the OS schedule at every blocking or
+//! racy operation (and this is the one line to change if the real `loom`
+//! crate is ever vendored: point the `cfg(loom)` branch at `loom::sync`).
+//!
+//! `Arc` is re-exported from std in both modes on purpose: the engine's
+//! ownership-passing protocol moves state through channels and never
+//! synchronizes via refcount ordering, so there is nothing for a shim to
+//! perturb (see `CONCURRENCY.md`).
+
+pub use std::sync::Arc;
+
+#[cfg(not(loom))]
+pub use std::sync::{mpsc, Mutex, RwLock};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+
+#[cfg(loom)]
+pub use super::shim::sync::{atomic, mpsc, Mutex, RwLock};

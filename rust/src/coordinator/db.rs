@@ -62,6 +62,7 @@ use super::sampling::{select_token, Sampling};
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
 };
+use crate::concurrency::protocol::CommitLog;
 use crate::config::EngineConfig;
 use crate::engine::{
     DecodeOutput, DecodeRequest, Engine, EngineKind, NullSink, ScheduledEngine, Session,
@@ -99,9 +100,10 @@ struct DbSession {
     entry: Option<DataFlow>,
     /// Deferred sync commits not yet applied by every one of this
     /// session's cache owners (ISSUE 5, `overlap_sync`), oldest first.
-    commit_log: VecDeque<CacheCommit>,
-    /// Commits issued for this session — its epoch sequence.
-    commit_seq: u64,
+    /// The epoch counter (`seq()` = every job's `commit_target`) and the
+    /// queue discipline live in [`CommitLog`], shared with
+    /// `PipeDecEngine` and the model checker.
+    commit_log: CommitLog<CacheCommit>,
     timesteps: u64,
     hits: u64,
     misses: u64,
@@ -124,16 +126,12 @@ struct DbSession {
 impl DbSession {
     /// Clone the commit-log suffix a cache at `epoch` still has to apply.
     fn pending_commits(&self, epoch: u64) -> Vec<CacheCommit> {
-        self.commit_log
-            .iter()
-            .filter(|c| c.epoch > epoch)
-            .cloned()
-            .collect()
+        self.commit_log.pending(epoch)
     }
 
     /// Undrained commit depth for a cache at `epoch` (stall diagnostics).
     fn pending_depth(&self, epoch: u64) -> usize {
-        self.commit_log.iter().filter(|c| c.epoch > epoch).count()
+        self.commit_log.depth(epoch)
     }
 
     /// Drop commit-log entries every one of this session's cache owners
@@ -149,9 +147,7 @@ impl DbSession {
             .map(|c| c.commit_epoch())
             .min()
             .unwrap_or(0);
-        while self.commit_log.front().is_some_and(|c| c.epoch <= min_ep) {
-            self.commit_log.pop_front();
-        }
+        self.commit_log.trim(min_ep);
     }
 }
 
@@ -353,8 +349,7 @@ impl PipeDecDbEngine {
             sampling,
             max_new,
             budget,
-            commit_log: VecDeque::new(),
-            commit_seq: 0,
+            commit_log: CommitLog::new(),
             timesteps: 0,
             hits: 0,
             misses: 0,
@@ -517,7 +512,7 @@ impl PipeDecDbEngine {
                 layer_ranges,
                 stage_ids,
                 commits,
-                commit_target: sess.commit_seq,
+                commit_target: sess.commit_log.seq(),
                 df: flow.df,
                 tree: snap,
                 metrics: Arc::clone(&self.worker_metrics),
@@ -550,7 +545,7 @@ impl PipeDecDbEngine {
                 tree: std::mem::replace(&mut sess.tree, PredictionTree::placeholder()),
                 cache,
                 commits,
-                commit_target: sess.commit_seq,
+                commit_target: sess.commit_log.seq(),
                 commit_s: 0.0,
             });
             if has_entry {
@@ -744,14 +739,12 @@ impl PipeDecDbEngine {
                     (CommitOp::Miss, true)
                 }
             };
-            sess.commit_seq += 1;
-            let commit = CacheCommit {
-                epoch: sess.commit_seq,
-                op,
-            };
+            let commit = sess
+                .commit_log
+                .issue_with(|epoch| CacheCommit { epoch, op });
             let mut commit_s = 0.0;
             if overlap {
-                sess.commit_log.push_back(commit);
+                sess.commit_log.queue(commit);
             } else {
                 let t0 = Instant::now();
                 let ops = pipeline::apply_commit_all(sess.base.caches.iter_mut(), &commit)?;

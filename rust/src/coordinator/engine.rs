@@ -46,7 +46,6 @@
 //!    [`TokenSink`] at the decision, and outputs are bit-identical: all
 //!    verification and RNG stay here, only cache bookkeeping moves.
 
-use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -58,6 +57,7 @@ use super::sampling::{select_token, Sampling};
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
 };
+use crate::concurrency::protocol::CommitLog;
 use crate::config::EngineConfig;
 use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, SpecStats, TokenSink};
 use crate::kvcache::{CacheCommit, CommitOp, TwoLevelCache};
@@ -101,10 +101,10 @@ pub struct PipeDecEngine {
     /// Deferred sync commits (ISSUE 5, `cfg.overlap_sync`): issued by the
     /// sync phase, drained into each cache owner's next job, retired once
     /// every owner applied them. Always empty on the serial-sync path.
-    commit_log: VecDeque<CacheCommit>,
-    /// Commits issued this decode — the epoch sequence and every job's
-    /// `commit_target`.
-    commit_seq: u64,
+    /// The epoch counter and queue discipline live in
+    /// [`CommitLog`] (shared with `DbSession` and the model checker);
+    /// `commit_log.seq()` is every job's `commit_target`.
+    commit_log: CommitLog<CacheCommit>,
 }
 
 impl PipeDecEngine {
@@ -186,8 +186,7 @@ impl PipeDecEngine {
             rng,
             pool,
             worker_metrics: Arc::new(SharedMetrics::new()),
-            commit_log: VecDeque::new(),
-            commit_seq: 0,
+            commit_log: CommitLog::new(),
         })
     }
 
@@ -220,7 +219,6 @@ impl PipeDecEngine {
         // commits belong to one request's epoch sequence: a previous
         // decode's undrained tail is irrelevant once every cache reset
         self.commit_log.clear();
-        self.commit_seq = 0;
         // a previously *failed* decode never reached the drain at its end;
         // discard its leftover worker timings so they can't pollute this one
         let _ = self.worker_metrics.drain();
@@ -323,7 +321,7 @@ impl PipeDecEngine {
                 .clone();
             // sync commits this group's caches still owe (all member
             // caches commit in lockstep, so any one's epoch stands in)
-            let commits = self.pending_commits(st.caches[0].commit_epoch());
+            let commits = self.commit_log.pending(st.caches[0].commit_epoch());
             stage_jobs.push(StageJob {
                 group: g,
                 core: Arc::clone(&self.target),
@@ -332,14 +330,14 @@ impl PipeDecEngine {
                 layer_ranges,
                 stage_ids,
                 commits,
-                commit_target: self.commit_seq,
+                commit_target: self.commit_log.seq(),
                 df,
                 tree: snap,
                 metrics: Arc::clone(&self.worker_metrics),
             });
         }
         let draft_cache = self.draft_cache.take().expect("draft cache in residence");
-        let draft_commits = self.pending_commits(draft_cache.commit_epoch());
+        let draft_commits = self.commit_log.pending(draft_cache.commit_epoch());
         let draft_job = DraftJob {
             core: Arc::clone(&self.draft),
             ctx: self.draft_ctx.take().expect("draft ctx in residence"),
@@ -351,7 +349,7 @@ impl PipeDecEngine {
                 tree: std::mem::replace(tree, PredictionTree::placeholder()),
                 cache: draft_cache,
                 commits: draft_commits,
-                commit_target: self.commit_seq,
+                commit_target: self.commit_log.seq(),
                 commit_s: 0.0,
             }],
             max_children: self.cfg.tree.max_children,
@@ -381,15 +379,6 @@ impl PipeDecEngine {
         Ok((draft_oc, outcomes, commit_s))
     }
 
-    /// Clone the commit-log suffix a cache at `epoch` still has to apply.
-    fn pending_commits(&self, epoch: u64) -> Vec<CacheCommit> {
-        self.commit_log
-            .iter()
-            .filter(|c| c.epoch > epoch)
-            .cloned()
-            .collect()
-    }
-
     /// Drop commit-log entries every owner (all group caches + the draft
     /// cache) has applied. Cheap: the log holds at most the few commits
     /// issued while a cache owner went undispatched.
@@ -408,9 +397,7 @@ impl PipeDecEngine {
                 min_ep = min_ep.min(c.commit_epoch());
             }
         }
-        while self.commit_log.front().is_some_and(|c| c.epoch <= min_ep) {
-            self.commit_log.pop_front();
-        }
+        self.commit_log.trim(min_ep);
     }
 
     /// Undrained commit depth per cache owner: one entry per timestep
@@ -421,20 +408,12 @@ impl PipeDecEngine {
             .groups_state
             .iter()
             .map(|st| match st {
-                Some(st) => self
-                    .commit_log
-                    .iter()
-                    .filter(|c| c.epoch > st.caches[0].commit_epoch())
-                    .count(),
+                Some(st) => self.commit_log.depth(st.caches[0].commit_epoch()),
                 None => 0, // on loan mid-timestep; not reachable from the guard
             })
             .collect();
         let draft = match &self.draft_cache {
-            Some(c) => self
-                .commit_log
-                .iter()
-                .filter(|cm| cm.epoch > c.commit_epoch())
-                .count(),
+            Some(c) => self.commit_log.depth(c.commit_epoch()),
             None => 0,
         };
         (per_group, draft)
@@ -446,13 +425,9 @@ impl PipeDecEngine {
     /// commit seconds (0 when deferred) so the caller can split
     /// `t_decide` from `t_commit`.
     fn issue_commit(&mut self, op: CommitOp, metrics: &mut Metrics) -> Result<f64> {
-        self.commit_seq += 1;
-        let commit = CacheCommit {
-            epoch: self.commit_seq,
-            op,
-        };
+        let commit = self.commit_log.issue_with(|epoch| CacheCommit { epoch, op });
         if self.cfg.overlap_sync {
-            self.commit_log.push_back(commit);
+            self.commit_log.queue(commit);
             return Ok(0.0);
         }
         let t0 = Instant::now();
@@ -543,7 +518,7 @@ impl Engine for PipeDecEngine {
                     decoded_n = decoded.len(),
                     tree_n = tree.len(),
                     in_flight = inputs.iter().flatten().count(),
-                    issued = self.commit_seq,
+                    issued = self.commit_log.seq(),
                 );
             }
             let seq = timesteps;

@@ -53,14 +53,15 @@
 //! [`crate::metrics::SharedMetrics`] carried by each job, so workers
 //! record without funneling through the coordinator.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::pipeline::{self, DataFlow};
+use crate::concurrency::protocol::verify_drained;
+use crate::concurrency::sync::mpsc::{channel, Receiver, Sender};
+use crate::concurrency::sync::Arc;
+use crate::concurrency::thread::{Builder, JoinHandle};
 use crate::kvcache::{CacheCommit, TwoLevelCache};
 use crate::metrics::SharedMetrics;
 use crate::model::{ModelCore, StageContext};
@@ -200,12 +201,9 @@ fn apply_job_commits(
         metrics.incr("commit_ops", (commits.len() * caches.len()) as u64);
     }
     for cache in caches.iter() {
-        anyhow::ensure!(
-            cache.commit_epoch() == target,
-            "cache at commit epoch {} but the coordinator issued {target} — \
-             the task would run against a stale tree",
-            cache.commit_epoch()
-        );
+        // The "never run against a stale tree" guard, shared with the
+        // model checker (see concurrency::protocol).
+        verify_drained(cache.commit_epoch(), target)?;
     }
     Ok(secs)
 }
@@ -450,7 +448,7 @@ impl WorkerPool {
             let (tx, rx) = channel::<Job>();
             let done_tx = done_tx.clone();
             let rt = Arc::clone(&rt);
-            let handle = std::thread::Builder::new()
+            let handle = Builder::new()
                 .name(format!("pipedec-worker-{i}"))
                 .spawn(move || {
                     while let Ok(job) = rx.recv() {

@@ -68,9 +68,10 @@
 
 pub mod device;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
 use anyhow::{ensure, Result};
+
+use crate::concurrency::protocol::{CommitCursor, Epoched};
+use crate::concurrency::sync::atomic::{AtomicU64, Ordering};
 
 static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(1);
 
@@ -102,6 +103,12 @@ pub struct CacheCommit {
     pub op: CommitOp,
 }
 
+impl Epoched for CacheCommit {
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
 #[derive(Debug)]
 pub struct TwoLevelCache {
     id: u64,
@@ -124,8 +131,10 @@ pub struct TwoLevelCache {
     past_epoch: Vec<u64>,
     tree_epoch: Vec<u64>,
 
-    /// Epoch of the last [`CacheCommit`] applied (0 = none this request).
-    commit_epoch: u64,
+    /// In-order replay cursor for [`CacheCommit`]s: epoch of the last one
+    /// applied (0 = none this request). The dense/in-order/exactly-once
+    /// rules live in [`CommitCursor`], shared with the model checker.
+    commit_cursor: CommitCursor,
 }
 
 impl Clone for TwoLevelCache {
@@ -148,7 +157,7 @@ impl Clone for TwoLevelCache {
             clock: self.clock,
             past_epoch: self.past_epoch.clone(),
             tree_epoch: self.tree_epoch.clone(),
-            commit_epoch: self.commit_epoch,
+            commit_cursor: self.commit_cursor,
         }
     }
 }
@@ -179,7 +188,7 @@ impl TwoLevelCache {
             clock: 0,
             past_epoch: vec![0; layers],
             tree_epoch: vec![0; layers],
-            commit_epoch: 0,
+            commit_cursor: CommitCursor::new(),
         }
     }
 
@@ -228,26 +237,25 @@ impl TwoLevelCache {
     /// Epoch of the last sync commit this cache applied (0 before the
     /// first); the in-order replay cursor for deferred [`CacheCommit`]s.
     pub fn commit_epoch(&self) -> u64 {
-        self.commit_epoch
+        self.commit_cursor.epoch()
     }
 
     /// Apply one sync decision: promote the old root to the model level,
     /// then compact (hit) or clear (miss) the tree level. Commits must
-    /// arrive in issue order — `c.epoch == commit_epoch() + 1` — so a
-    /// deferred replay can never skip or reorder cache maintenance.
+    /// arrive in issue order — `c.epoch == commit_epoch() + 1`, enforced by
+    /// the [`CommitCursor`] — so a deferred replay can never skip or
+    /// reorder cache maintenance. The cursor advances only after the
+    /// promotion succeeded: a failed promote (e.g. past level full) leaves
+    /// the cache at its old epoch so the commit can be retried or the
+    /// request aborted coherently.
     pub fn apply_commit(&mut self, c: &CacheCommit) -> Result<()> {
-        ensure!(
-            c.epoch == self.commit_epoch + 1,
-            "commit epoch {} applied to a cache at epoch {} (in-order replay broken)",
-            c.epoch,
-            self.commit_epoch
-        );
+        self.commit_cursor.check_next(c.epoch)?;
         self.promote_root_to_past()?;
         match &c.op {
             CommitOp::Hit { kept_old } => self.compact_tree(kept_old),
             CommitOp::Miss => self.clear_tree(),
         }
-        self.commit_epoch = c.epoch;
+        self.commit_cursor.advance(c.epoch);
         Ok(())
     }
 
@@ -503,7 +511,7 @@ impl TwoLevelCache {
     pub fn reset(&mut self) {
         self.past_len = 0;
         self.tree_len = 0;
-        self.commit_epoch = 0;
+        self.commit_cursor.reset();
     }
 
     /// Read one (k, v) vector pair for tests.

@@ -87,6 +87,21 @@
 //!   (TOML subset), byte-level tokenizer, metrics/tables (including the
 //!   thread-safe [`metrics::SharedMetrics`] sink the pipeline workers
 //!   record into), numeric helpers.
+//! * [`concurrency`] — the concurrency-correctness harness (ISSUE 6):
+//!   the [`concurrency::sync`] facade every threaded module imports its
+//!   primitives through (std normally, schedule-perturbing shim under
+//!   `--cfg loom`), the pure decide/commit protocol core
+//!   ([`concurrency::protocol::CommitLog`] /
+//!   [`concurrency::protocol::CommitCursor`] /
+//!   [`concurrency::protocol::verify_drained`]) shared by the engines and
+//!   cache owners, and the explicit-state model checker
+//!   ([`concurrency::explore`], driven by `tests/loom_protocol.rs`) that
+//!   exhaustively verifies the protocol's invariants. The crate-wide
+//!   unsafe-audit wall (`unsafe_op_in_unsafe_fn`,
+//!   `clippy::undocumented_unsafe_blocks`) is declared below; the
+//!   Send/Sync audit, job-ownership protocol, commit-epoch invariants,
+//!   and instructions for the loom/Miri/TSan lanes live in
+//!   `rust/CONCURRENCY.md`.
 //!
 //! Serving, evaluation, and paper-scale extrapolation:
 //!
@@ -101,8 +116,17 @@
 //! * [`workload`], [`bench_support`] — the six evaluation domains and the
 //!   bench harness used by `rust/benches/fig*.rs`.
 
+// Unsafe-audit wall (ISSUE 6): every `unsafe` block, fn, and impl in
+// this crate must carry a `// SAFETY:` comment, and unsafe operations
+// inside `unsafe fn` bodies need their own explicit `unsafe {}` scope.
+// CI runs clippy with `-D warnings -D clippy::undocumented_unsafe_blocks`
+// so an undocumented block is a build failure, not a review nit.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+
 pub mod baselines;
 pub mod bench_support;
+pub mod concurrency;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

@@ -5,10 +5,10 @@
 //! the coordinator's sync points.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
+use crate::concurrency::sync::atomic::{AtomicU64, Ordering};
+use crate::concurrency::sync::{Mutex, RwLock};
 use crate::util::Summary;
 
 /// Accumulates named counters and sample series.
@@ -81,6 +81,19 @@ impl Metrics {
 ///
 /// Sample *order* across workers is nondeterministic; consumers read
 /// order-independent aggregates ([`Metrics::summary`], counters).
+///
+/// # Memory-ordering audit (ISSUE 6)
+///
+/// Counter bumps use `Ordering::Relaxed`, which is sufficient because the
+/// counters are pure statistics: nothing *reads* a counter to make a
+/// control-flow decision concurrently with writers, so no cross-counter or
+/// counter-to-data ordering is required — only per-counter atomicity,
+/// which every RMW ordering provides (each `fetch_add` is observed exactly
+/// once). The reads that matter ([`counter`](Self::counter),
+/// [`drain`](Self::drain)) happen at coordinator sync points, after the
+/// workers' replies have already been received over an mpsc channel — the
+/// channel's synchronization makes every worker bump visible to the
+/// coordinator regardless of the counter's own ordering.
 #[derive(Debug, Default)]
 pub struct SharedMetrics {
     counters: RwLock<BTreeMap<String, AtomicU64>>,
@@ -92,6 +105,16 @@ impl SharedMetrics {
         Self::default()
     }
 
+    /// Bump a counter, creating it on first use.
+    ///
+    /// Concurrency note: the read-lock fast path and the write-lock upsert
+    /// cannot double-create or lose a counter. Two threads missing the
+    /// same name under the read lock both fall through to the write lock,
+    /// but `entry().or_insert_with()` runs under the *exclusive* write
+    /// lock, so the second thread finds the first thread's entry and bumps
+    /// it — creation is effectively once-only and every increment lands on
+    /// the single `AtomicU64` for that name (asserted by the
+    /// `concurrent_counter_creation_loses_no_increment` test).
     pub fn incr(&self, name: &str, by: u64) {
         {
             let map = self.counters.read().unwrap_or_else(|e| e.into_inner());
@@ -331,6 +354,47 @@ mod tests {
         // drain leaves the sink empty for the next decode
         assert_eq!(m.counter("jobs"), 0);
         assert_eq!(m.drain().samples("lat").len(), 0);
+    }
+
+    #[test]
+    fn concurrent_counter_creation_loses_no_increment() {
+        // Hammer the *creation* path: every thread races to be the first
+        // to insert each name (a Barrier lines them up per round), so the
+        // read-miss -> write-lock upsert in `incr` runs under maximal
+        // contention. If a counter could be created twice, one thread's
+        // increments would land on a shadowed atomic and the totals below
+        // would come up short.
+        use std::sync::{Arc, Barrier};
+        const THREADS: usize = 8;
+        const NAMES: usize = 16;
+        let m = Arc::new(SharedMetrics::new());
+        let barrier = Arc::new(Barrier::new(THREADS));
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    for i in 0..NAMES {
+                        let name = format!("ctr_{i}");
+                        barrier.wait(); // all threads hit the fresh name at once
+                        m.incr(&name, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for i in 0..NAMES {
+            assert_eq!(
+                m.counter(&format!("ctr_{i}")),
+                THREADS as u64,
+                "counter ctr_{i} lost increments under creation contention"
+            );
+        }
+        let drained = m.drain();
+        let total: u64 = (0..NAMES).map(|i| drained.counter(&format!("ctr_{i}"))).sum();
+        assert_eq!(total, (THREADS * NAMES) as u64);
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! Audited byte-view choke point for literal marshalling.
+//!
+//! The PJRT literal constructors take untyped `&[u8]` payloads, so the
+//! runtime needs to view `&[f32]` / `&[i32]` as bytes. Before ISSUE 6 each
+//! call site carried its own ad-hoc `std::slice::from_raw_parts` transmute;
+//! this module is now the single place in the crate where that cast is
+//! written, behind a sealed trait so it can only ever be instantiated at
+//! types whose every bit pattern is a valid `u8` source.
+//!
+//! The unit tests below run under Miri (`cargo +nightly miri test
+//! runtime::bytes`) — Strict Provenance and alignment are checked there,
+//! which is the point of funnelling every cast through here.
+
+/// Sealed marker for plain-old-data scalars that may be viewed as raw
+/// bytes: no padding, no niches, no drop glue, any bit pattern valid.
+///
+/// The trait is sealed (private supertrait) so downstream code cannot
+/// implement it for types that break the [`as_byte_slice`] safety
+/// argument (e.g. types with padding bytes, which would read
+/// uninitialized memory).
+pub trait Scalar: sealed::Pod {}
+
+impl Scalar for f32 {}
+impl Scalar for i32 {}
+impl Scalar for u32 {}
+impl Scalar for u64 {}
+
+mod sealed {
+    /// Private supertrait: only the impls in this module exist, and each
+    /// is a primitive numeric type with no padding or invalid values.
+    pub trait Pod: Copy + 'static {}
+    impl Pod for f32 {}
+    impl Pod for i32 {}
+    impl Pod for u32 {}
+    impl Pod for u64 {}
+}
+
+/// View a scalar slice as its underlying little-endian byte buffer.
+///
+/// This is the crate's only scalar→byte transmute; everything else
+/// (literal construction, checksums, serialization) goes through it.
+pub fn as_byte_slice<T: Scalar>(data: &[T]) -> &[u8] {
+    // SAFETY: `T: Scalar` is sealed to primitive numerics (f32/i32/u32/
+    // u64), which have no padding bytes and no invalid bit patterns, so
+    // every byte of the slice is initialized and valid at type `u8`.
+    // The pointer comes from a live `&[T]`, so it is non-null, aligned
+    // for `T` (u8 alignment is 1, always satisfied), and spans
+    // `size_of_val(data)` readable bytes inside one allocation. The
+    // returned slice borrows `data`, so the allocation outlives it, and
+    // `&[u8]` is a shared view — no aliasing `&mut` can exist while it
+    // lives. `size_of_val` computes `len * size_of::<T>()` without
+    // overflow because the slice already exists.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), std::mem::size_of_val(data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bytes_match_le_encoding() {
+        let data = [1.0f32, -2.5, 3.75];
+        let bytes = as_byte_slice(&data);
+        assert_eq!(bytes.len(), 12);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(&bytes[i * 4..(i + 1) * 4], v.to_le_bytes());
+        }
+    }
+
+    #[test]
+    fn i32_bytes_match_le_encoding() {
+        let data = [7i32, -8, i32::MAX, i32::MIN];
+        let bytes = as_byte_slice(&data);
+        assert_eq!(bytes.len(), 16);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(&bytes[i * 4..(i + 1) * 4], v.to_le_bytes());
+        }
+    }
+
+    #[test]
+    fn u64_width() {
+        let data = [u64::MAX, 0, 0x0102_0304_0506_0708];
+        let bytes = as_byte_slice(&data);
+        assert_eq!(bytes.len(), 24);
+        assert_eq!(&bytes[16..24], 0x0102_0304_0506_0708u64.to_le_bytes());
+    }
+
+    #[test]
+    fn empty_slice_is_empty() {
+        let data: [f32; 0] = [];
+        assert!(as_byte_slice(&data).is_empty());
+    }
+
+    #[test]
+    fn view_borrows_without_copying() {
+        let data = vec![42u32; 1024];
+        let bytes = as_byte_slice(&data);
+        assert_eq!(bytes.as_ptr(), data.as_ptr().cast::<u8>());
+        assert_eq!(bytes.len(), 4096);
+    }
+}

@@ -28,14 +28,16 @@
 //! a naive re-upload would have moved), so benches and engines can report
 //! the marshalling volume per decode.
 
+pub mod bytes;
 pub mod literal;
 
 pub use literal::{lit_f32, lit_i32, scalar_i32, to_vec_f32};
 
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
+
+use crate::concurrency::sync::atomic::{AtomicU64, Ordering};
 
 /// A device-resident PJRT value. Buffers are immutable once created;
 /// "updating" one means uploading a replacement.
@@ -54,8 +56,13 @@ impl DeviceBuffer {
     }
 }
 
-// SAFETY (ISSUE 4 Send/Sync audit). Two layers must be thread-safe for
-// these impls to be sound, and both are part of the asserted contract:
+// Send/Sync audit (ISSUE 4; choke-pointed per ISSUE 6 — the full
+// argument lives here and every `unsafe impl` below carries a one-line
+// `SAFETY:` pointer back to it, so `clippy::undocumented_unsafe_blocks`
+// enforces that no new impl appears without joining the audit).
+//
+// Two layers must be thread-safe for these impls to be sound, and both
+// are part of the asserted contract:
 //
 // 1. **The PJRT C API** (what the handles ultimately point at) — this
 //    layer is specified thread-safe:
@@ -91,7 +98,11 @@ impl DeviceBuffer {
 // (uploads create fresh buffers; "mutation" of cached state is modeled as
 // replacement), so sharing them across the pipeline worker pool is sound
 // under the contract above.
+// SAFETY: per the audit above — the PJRT buffer handle is immutable
+// after creation and the C API permits reads from any thread.
 unsafe impl Send for DeviceBuffer {}
+// SAFETY: per the audit above — concurrent `Execute`/`ToLiteralSync`
+// reads of an immutable buffer are specified thread-safe.
 unsafe impl Sync for DeviceBuffer {}
 
 /// Monotonic host↔device transfer accounting for one [`Runtime`].
@@ -214,6 +225,8 @@ pub struct Runtime {
 // [`TransferStats`] is all atomics. The pipeline worker pool shares one
 // `Arc<Runtime>` across workers.
 unsafe impl Send for Runtime {}
+// SAFETY: same contract as the `Send` impl above — all client entry
+// points this crate calls are safe to invoke concurrently.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
@@ -289,6 +302,8 @@ pub struct Executable {
 // executables support concurrent `Execute` calls; this crate never
 // mutates an `Executable` after `Runtime::load_hlo_text` builds it.
 unsafe impl Send for Executable {}
+// SAFETY: same contract as the `Send` impl above — `Execute` is
+// specified safe to call concurrently from multiple threads.
 unsafe impl Sync for Executable {}
 
 impl Executable {
@@ -349,6 +364,9 @@ mod tests {
         dir.join("target_config.txt").exists().then_some(dir)
     }
 
+    // Every test here except `transfer_snapshot_arithmetic` crosses the
+    // xla FFI boundary, which Miri cannot interpret.
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn cpu_client_boots() {
         let rt = Runtime::cpu().unwrap();
@@ -373,6 +391,7 @@ mod tests {
         assert!((d.reduction_factor() - 10.0).abs() < 1e-12);
     }
 
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn upload_roundtrips_through_device() {
         let Ok(rt) = Runtime::cpu() else {
@@ -386,6 +405,7 @@ mod tests {
         assert_eq!(rt.stats().snapshot().up, 16);
     }
 
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn embed_artifact_runs() {
         let Some(dir) = artifacts() else {
@@ -413,6 +433,7 @@ mod tests {
         }
     }
 
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn buffer_path_matches_literal_path() {
         let Some(dir) = artifacts() else {

@@ -11,7 +11,7 @@
 //! ([`crate::schedule::CentralScheduler`]) so the endpoint-conflict
 //! discipline of Appendix A governs the real engine too.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::concurrency::sync::mpsc::{channel, Receiver, Sender};
 
 /// Cost model of one directed link.
 #[derive(Debug, Clone, Copy)]

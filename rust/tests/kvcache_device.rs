@@ -124,6 +124,7 @@ fn drive(seed: u64, steps: usize) {
     );
 }
 
+#[cfg_attr(miri, ignore)] // PJRT FFI — covered by the host-only tests below under Miri
 #[test]
 fn mirror_matches_host_across_mutation_sequences() {
     for seed in [1u64, 7, 42] {
@@ -249,6 +250,7 @@ fn drive_commit_replay(seed: u64, steps: usize) {
     assert_eq!(eager.commit_epoch(), epoch);
 }
 
+#[cfg_attr(miri, ignore)] // PJRT FFI
 #[test]
 fn deferred_commit_replay_matches_eager_sync() {
     for seed in [2u64, 11, 77, 1234] {
@@ -275,6 +277,78 @@ fn commit_epochs_reject_out_of_order_replay() {
     assert_eq!(c.commit_epoch(), 1);
 }
 
+/// ISSUE 6 loom variant of the epoch-order property: two independent
+/// cache owners each work through a 3-step drain (append a tree block,
+/// commit it, apply that step's `Miss` commit) while a model-checker
+/// schedule from [`interleavings`] interleaves their steps every possible
+/// way — exactly the shape of two pipeline workers draining their commit
+/// suffixes concurrently. Every schedule must succeed, every schedule
+/// must produce the bit-identical final state on both owners (owner
+/// drains are independent, so interleaving cannot matter), and the
+/// duplicate/skip rejections must hold at the end of every schedule.
+/// Host-only — this test also runs under the Miri lane.
+#[test]
+fn interleaved_owner_drains_commute_under_all_schedules() {
+    use pipedec::concurrency::explore::interleavings;
+
+    const STEPS: usize = 3;
+    let schedules = interleavings(&[STEPS, STEPS]);
+    assert_eq!(schedules.len(), 20, "C(6,3) interleavings of two owners");
+
+    let run = |schedule: &[usize]| -> Vec<TwoLevelCache> {
+        let mut caches = vec![
+            TwoLevelCache::new(LAYERS, HEADS, HD, PAST_CAP, TREE_CAP),
+            TwoLevelCache::new(LAYERS, HEADS, HD, PAST_CAP, TREE_CAP),
+        ];
+        // per-owner deterministic data: the blocks an owner appends depend
+        // only on its own step count, never on the schedule
+        let mut rngs = [XorShiftRng::new(21), XorShiftRng::new(22)];
+        let mut next_epoch = [1u64, 1];
+        for &owner in schedule {
+            let cache = &mut caches[owner];
+            let rng = &mut rngs[owner];
+            for l in 0..LAYERS {
+                let (k, v) = (rand_block(rng), rand_block(rng));
+                cache.append_tree_block(l, &k, &v, W, 1).unwrap();
+            }
+            cache.commit_tree(1);
+            let c = CacheCommit {
+                epoch: next_epoch[owner],
+                op: CommitOp::Miss,
+            };
+            cache.apply_commit(&c).unwrap();
+            next_epoch[owner] += 1;
+        }
+        for cache in &mut caches {
+            assert_eq!(cache.commit_epoch(), STEPS as u64);
+            let miss = |epoch| CacheCommit {
+                epoch,
+                op: CommitOp::Miss,
+            };
+            assert!(
+                cache.apply_commit(&miss(STEPS as u64)).is_err(),
+                "duplicate replay rejected"
+            );
+            assert!(
+                cache.apply_commit(&miss(STEPS as u64 + 2)).is_err(),
+                "skipped epoch rejected"
+            );
+            // rejected commits must leave the cursor untouched
+            assert_eq!(cache.commit_epoch(), STEPS as u64);
+        }
+        caches
+    };
+
+    let reference = run(&schedules[0]);
+    for schedule in &schedules[1..] {
+        let got = run(schedule);
+        for (owner, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert_caches_equal(a, b, &format!("owner {owner} under {schedule:?}"));
+        }
+    }
+}
+
+#[cfg_attr(miri, ignore)] // PJRT FFI
 #[test]
 fn clean_resync_is_upload_free() {
     let Ok(rt) = Runtime::cpu() else {
