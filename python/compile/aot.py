@@ -12,6 +12,12 @@ Artifact set (per model m in {target, draft}):
                        tree_len i32, pos[W]i32, past_bias, tree_bias)
                       -> (h', k_new[H,W,hd], v_new[H,W,hd])
   {m}_head.hlo.txt    (final_norm[d], emb[V,d], h[W,d])          -> (logits,)
+plus the device-side KV update entry points (kvops.py; argument 0 is
+donated, single untupled output so the runtime can keep it resident):
+  {m}_kvapp_past.hlo.txt  (dst[H,P,hd], src[H,W,hd], start, count) -> dst'
+  {m}_kvapp_tree.hlo.txt  (dst[H,T,hd], src[H,W,hd], start, count) -> dst'
+  {m}_kvprom.hlo.txt      (dst[H,P,hd], src[H,T,hd], slot, pos)    -> dst'
+  {m}_kvcompact.hlo.txt   (dst[H,T,hd], idx[T]i32)                 -> dst'
 plus weights_{m}.pdw, {m}_config.txt, prompts_{domain}.txt, manifest.txt.
 
 Argument order is the lowering order below and is mirrored by
@@ -30,13 +36,20 @@ from . import corpus
 from .configs import (
     DRAFT, PAST_CAP, TARGET, TREE_CAP, WIDTH_CAP, ModelConfig, config_lines,
 )
+from .kvops import lower_kv_append, lower_kv_gather, lower_kv_promote
 from .model import embed_step, head_step, layer_step
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """The model entry points return tuples; the kv update entry points are
+    lowered untupled (``return_tuple=False``) so the single output buffer
+    can alias the donated argument — a tupled root would force the runtime
+    through a host-side tuple decompose, defeating residency. Donation
+    annotations (``input_output_alias``) survive this conversion in both
+    modes."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -87,8 +100,9 @@ def lower_layer(cfg: ModelConfig, w: int = WIDTH_CAP):
     )
 
 
-def emit(out_dir: str, name: str, lowered, manifest: list) -> None:
-    text = to_hlo_text(lowered)
+def emit(out_dir: str, name: str, lowered, manifest: list,
+         return_tuple: bool = True) -> None:
+    text = to_hlo_text(lowered, return_tuple=return_tuple)
     path = os.path.join(out_dir, f"{name}.hlo.txt")
     with open(path, "w") as f:
         f.write(text)
@@ -164,6 +178,17 @@ def main() -> None:
             emit(out, f"{cfg.name}_embed{sfx}", lower_embed(cfg, w), manifest)
             emit(out, f"{cfg.name}_layer{sfx}", lower_layer(cfg, w), manifest)
             emit(out, f"{cfg.name}_head{sfx}", lower_head(cfg, w), manifest)
+            # device-side KV append (donated arg 0, untupled output); the
+            # src block is width-bucketed like the layer output it carries
+            emit(out, f"{cfg.name}_kvapp_past{sfx}",
+                 lower_kv_append(cfg, PAST_CAP, w), manifest, return_tuple=False)
+            emit(out, f"{cfg.name}_kvapp_tree{sfx}",
+                 lower_kv_append(cfg, TREE_CAP, w), manifest, return_tuple=False)
+        # promotion / compaction are width-independent: one each per model
+        emit(out, f"{cfg.name}_kvprom", lower_kv_promote(cfg), manifest,
+             return_tuple=False)
+        emit(out, f"{cfg.name}_kvcompact", lower_kv_gather(cfg), manifest,
+             return_tuple=False)
         with open(os.path.join(out, f"{cfg.name}_config.txt"), "w") as f:
             f.write(config_lines(cfg))
     emit_prompts(out)

@@ -1,0 +1,92 @@
+"""Device-side KV cache update entry points (ROADMAP "device-side KV
+append").
+
+PJRT buffers are immutable, so until these ops existed every accepted
+token's promotion re-uploaded the full past tensors and every tree
+expansion re-uploaded the tree tensors (EXPERIMENTS.md §Perf iteration 4,
+"known limits"). Each op here is lowered with **argument 0 donated**
+(``donate_argnums=(0,)``), which emits an ``input_output_alias`` entry in
+the HLO module header: the runtime may reuse the donated input buffer for
+the output, so the Rust mirror updates a resident KV tensor in place for
+O(appended rows) upload bytes instead of O(capacity).
+
+All three ops are written as mask/gather formulations rather than
+``dynamic_update_slice`` because XLA *clamps* DUS start indices — a
+partially-valid block appended near capacity would silently shift instead
+of failing. The mask form writes exactly rows ``[start, start+count)`` and
+reproduces the host cache's semantics bit-for-bit, including leaving
+rows outside the written range untouched (stale rows are bias-masked, and
+the conformance tests in ``rust/tests/kvcache_device.rs`` compare full
+tensors against the host mirror).
+
+Shapes (per model config; see ``lower_*`` below):
+
+  kv_append   dst[H, CAP, hd], src[H, W, hd], start i32, count i32 -> dst'
+  kv_promote  dst[H, P, hd],   src[H, T, hd], slot i32, pos i32    -> dst'
+  kv_gather   dst[H, T, hd],   idx[T] i32                          -> dst'
+
+``kv_append`` serves both levels (CAP ∈ {PAST_CAP, TREE_CAP}) and is
+width-bucketed like the layer artifact; ``kv_promote`` (tree root ->
+past row) and ``kv_gather`` (tree compaction through a full-capacity
+index vector, identity beyond the keep prefix) are width-independent.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import PAST_CAP, TREE_CAP, ModelConfig
+
+
+def kv_append(dst, src, start, count):
+    """Write ``src`` rows ``[0, count)`` into ``dst`` rows
+    ``[start, start+count)``; all other rows pass through unchanged."""
+    cap, w = dst.shape[1], src.shape[1]
+    rows = jax.lax.iota(jnp.int32, cap)
+    mask = (rows >= start) & (rows < start + count)
+    idx = jnp.clip(rows - start, 0, w - 1)
+    cand = jnp.take(src, idx, axis=1)
+    return jnp.where(mask[None, :, None], cand, dst)
+
+
+def kv_promote(dst, src, slot, pos):
+    """Copy ``src`` row ``slot`` into ``dst`` row ``pos`` (the §3.4.3
+    tree-root -> model-level promotion, one row per layer per token)."""
+    p = dst.shape[1]
+    rows = jax.lax.iota(jnp.int32, p)
+    row = jax.lax.dynamic_slice_in_dim(src, slot, 1, axis=1)  # [H, 1, hd]
+    return jnp.where((rows == pos)[None, :, None], row, dst)
+
+
+def kv_gather(dst, idx):
+    """Compact ``dst`` through a full-capacity row index vector. The keep
+    prefix carries the surviving slots; padding the suffix with the
+    identity (``idx[i] = i``) leaves those rows bit-identical to the host
+    cache's in-place compaction, which never touches them."""
+    return jnp.take(dst, idx, axis=1)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_kv_append(cfg: ModelConfig, cap: int, w: int):
+    """Append a ``[H, w, hd]`` block into a capacity-``cap`` level tensor."""
+    nh, hd = cfg.n_heads, cfg.head_dim
+    return jax.jit(kv_append, donate_argnums=(0,)).lower(
+        _f32(nh, cap, hd), _f32(nh, w, hd), _i32(), _i32())
+
+
+def lower_kv_promote(cfg: ModelConfig):
+    nh, hd = cfg.n_heads, cfg.head_dim
+    return jax.jit(kv_promote, donate_argnums=(0,)).lower(
+        _f32(nh, PAST_CAP, hd), _f32(nh, TREE_CAP, hd), _i32(), _i32())
+
+
+def lower_kv_gather(cfg: ModelConfig):
+    nh, hd = cfg.n_heads, cfg.head_dim
+    return jax.jit(kv_gather, donate_argnums=(0,)).lower(
+        _f32(nh, TREE_CAP, hd), _i32(TREE_CAP))

@@ -8,8 +8,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from compile import corpus, tokenizer
-from compile.aot import lower_embed, lower_head, lower_layer, to_hlo_text
-from compile.configs import DRAFT, VOCAB_SIZE, config_lines
+from compile.aot import emit, lower_embed, lower_head, lower_layer, to_hlo_text
+from compile.configs import DRAFT, PAST_CAP, TREE_CAP, VOCAB_SIZE, config_lines
+from compile.kvops import (
+    kv_append, kv_gather, kv_promote,
+    lower_kv_append, lower_kv_gather, lower_kv_promote,
+)
 from compile.pdw import flatten_params, read_pdw, unflatten_params, write_pdw
 from compile.model import init_params
 
@@ -64,6 +68,81 @@ def test_domain_prompts_are_prefixes():
         ps = corpus.domain_prompts(d, 3)
         assert len(ps) == 3
         assert all(p.startswith(f"<{d}>") for p in ps)
+
+
+def test_kv_entry_points_emit_with_donation_and_manifest(tmp_path):
+    """The kv update lowerings must (a) land in the manifest under their
+    artifact names and (b) carry the input->output donation annotation in
+    the emitted HLO text — without it the runtime's in-place mirror update
+    would silently copy instead of aliasing."""
+    manifest = []
+    emit(str(tmp_path), "draft_kvapp_past_w8",
+         lower_kv_append(DRAFT, PAST_CAP, 8), manifest, return_tuple=False)
+    emit(str(tmp_path), "draft_kvapp_tree_w8",
+         lower_kv_append(DRAFT, TREE_CAP, 8), manifest, return_tuple=False)
+    emit(str(tmp_path), "draft_kvprom",
+         lower_kv_promote(DRAFT), manifest, return_tuple=False)
+    emit(str(tmp_path), "draft_kvcompact",
+         lower_kv_gather(DRAFT), manifest, return_tuple=False)
+    names = [m.split()[0] for m in manifest]
+    assert names == [
+        "draft_kvapp_past_w8.hlo.txt",
+        "draft_kvapp_tree_w8.hlo.txt",
+        "draft_kvprom.hlo.txt",
+        "draft_kvcompact.hlo.txt",
+    ]
+    for name in names:
+        text = (tmp_path / name).read_text()
+        assert "ENTRY" in text
+        assert "input_output_alias" in text, f"{name}: donation lost"
+
+
+def test_kv_lowering_untupled_single_output():
+    # an untupled root is what lets the output buffer alias the donated
+    # argument; a tuple root would need a host-side decompose
+    text = to_hlo_text(lower_kv_append(DRAFT, TREE_CAP, 8), return_tuple=False)
+    entry = text.split("ENTRY", 1)[1]
+    assert entry.count("parameter(") == 4
+    assert "input_output_alias={ {}: (0, {}, may-alias) }" in text
+
+
+def test_kv_append_matches_rebuild():
+    """Golden parity: appending a block in place must equal rebuilding the
+    level tensor from scratch (the host cache's copy_block semantics),
+    including interior starts, the capacity boundary, and count=0."""
+    rng = np.random.default_rng(0)
+    nh, hd, w = DRAFT.n_heads, DRAFT.head_dim, 8
+    dst = rng.standard_normal((nh, TREE_CAP, hd)).astype(np.float32)
+    src = rng.standard_normal((nh, w, hd)).astype(np.float32)
+    fn = jax.jit(kv_append)
+    for start, count in [(0, w), (5, 3), (TREE_CAP - 2, 2), (7, 0)]:
+        ref = dst.copy()
+        ref[:, start:start + count, :] = src[:, :count, :]
+        out = np.asarray(fn(dst, src, start, count))
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_kv_promote_and_gather_match_host_semantics():
+    rng = np.random.default_rng(1)
+    nh, hd = DRAFT.n_heads, DRAFT.head_dim
+    past = rng.standard_normal((nh, PAST_CAP, hd)).astype(np.float32)
+    tree = rng.standard_normal((nh, TREE_CAP, hd)).astype(np.float32)
+    # promote: tree slot 2 -> past row 7, everything else untouched
+    out = np.asarray(jax.jit(kv_promote)(past, tree, 2, 7))
+    ref = past.copy()
+    ref[:, 7, :] = tree[:, 2, :]
+    np.testing.assert_array_equal(out, ref)
+    # gather-compact: keep prefix moves, identity suffix leaves rows
+    # bit-identical to the host's in-place compaction (which never
+    # touches rows past the keep length)
+    keep = [1, 3, 4]
+    idx = np.arange(TREE_CAP, dtype=np.int32)
+    idx[: len(keep)] = keep
+    out = np.asarray(jax.jit(kv_gather)(tree, idx))
+    ref = tree.copy()
+    for new, old in enumerate(keep):
+        ref[:, new, :] = tree[:, old, :]
+    np.testing.assert_array_equal(out, ref)
 
 
 def test_config_lines_parse_back():

@@ -1,11 +1,17 @@
-//! Perf smoke benchmark for the device-resident hot path (ISSUE 2): runs a
-//! short fixed-seed PipeDec decode and writes `BENCH_hotpath.json` with
-//! per-timestep wall time, modeled parallel latency, and host↔device bytes
-//! moved, so the perf trajectory is tracked from this PR onward (CI uploads
-//! the file as a workflow artifact; the step is non-gating).
+//! Perf smoke benchmark for the device-resident hot path (ISSUE 2, 7):
+//! runs a short fixed-seed PipeDec decode and writes `BENCH_hotpath.json`
+//! with per-timestep wall time, modeled parallel latency, and host↔device
+//! bytes moved, so the perf trajectory is tracked from this PR onward.
+//!
+//! Since ISSUE 7 the bench is a CI gate for the KV mirror byte budget: it
+//! runs the same decode twice — once with the donated device-side append
+//! entry points and once with `PIPEDEC_NO_KV_APPEND=1` (full re-upload
+//! baseline) — asserts the token streams are bit-identical, and fails
+//! unless the in-place path moves >= 5x fewer KV bytes than the baseline.
 //!
 //! Without built artifacts the bench still writes a `skipped` marker so the
-//! CI artifact step always has a file to collect.
+//! CI artifact step always has a file to collect (and the gate passes
+//! trivially — there is nothing to measure).
 
 use pipedec::bench_support::banner;
 use pipedec::config::{EngineConfig, TreeConfig};
@@ -18,6 +24,10 @@ const PROMPT: &str =
 const SEED: u64 = 7;
 const MAX_NEW: usize = 16;
 
+/// The KV byte-budget gate: the donated in-place path must beat the full
+/// re-upload baseline by at least this factor on steady-state KV bytes.
+const KV_GATE: f64 = 5.0;
+
 fn write_out(json: String) {
     println!("{json}");
     if let Err(e) = std::fs::write(OUT, json) {
@@ -25,6 +35,23 @@ fn write_out(json: String) {
     } else {
         println!("[json] {OUT}");
     }
+}
+
+/// Warmup + measured decode of the fixed-seed request; returns the
+/// measured output.
+fn run_decode(dir: &std::path::Path) -> pipedec::engine::DecodeOutput {
+    let cfg = EngineConfig {
+        stages: 2,
+        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
+        max_new_tokens: MAX_NEW,
+        seed: SEED,
+        ..EngineConfig::default()
+    };
+    let mut engine = build_engine(EngineKind::PipeDec, dir, cfg).unwrap();
+    let req = DecodeRequest::new(PROMPT).with_seed(SEED);
+    // one warmup decode (compilation caches, allocator), one measured
+    engine.decode(&req, &mut NullSink).unwrap();
+    engine.decode(&req, &mut NullSink).unwrap()
 }
 
 fn main() {
@@ -40,19 +67,18 @@ fn main() {
         return;
     }
 
-    let cfg = EngineConfig {
-        stages: 2,
-        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
-        max_new_tokens: MAX_NEW,
-        seed: SEED,
-        ..EngineConfig::default()
-    };
-    let mut engine = build_engine(EngineKind::PipeDec, &dir, cfg).unwrap();
-    let req = DecodeRequest::new(PROMPT).with_seed(SEED);
+    // measured run: donated device-side KV append entry points active
+    let out = run_decode(&dir);
+    // baseline run: force the mirror onto the full re-upload fallback
+    std::env::set_var("PIPEDEC_NO_KV_APPEND", "1");
+    let base = run_decode(&dir);
+    std::env::remove_var("PIPEDEC_NO_KV_APPEND");
 
-    // one warmup decode (compilation caches, allocator), one measured
-    engine.decode(&req, &mut NullSink).unwrap();
-    let out = engine.decode(&req, &mut NullSink).unwrap();
+    // the optimization must be invisible in the output stream
+    assert_eq!(
+        out.tokens, base.tokens,
+        "in-place KV append changed the decoded token stream"
+    );
 
     let m = &out.metrics;
     let timesteps = m.counter("timesteps").max(1);
@@ -62,10 +88,33 @@ fn main() {
         down: m.counter("hd_down_bytes"),
         saved: m.counter("hd_saved_bytes"),
         saved_kv: m.counter("hd_saved_kv_bytes"),
+        kv_appended: m.counter("hd_kv_app_bytes"),
+        kv_reuploaded: m.counter("hd_kv_reup_bytes"),
     };
     let (up, down, saved, saved_kv) = (hd.up, hd.down, hd.saved, hd.saved_kv);
     let per_ts = |v: u64| v as f64 / timesteps as f64;
     let reduction = hd.reduction_factor();
+
+    // steady-state KV byte budget: bytes the mirror moved per measured
+    // decode, in-place path vs the re-upload baseline
+    let kv_opt = hd.kv_appended + hd.kv_reuploaded;
+    let kv_base = base.metrics.counter("hd_kv_app_bytes")
+        + base.metrics.counter("hd_kv_reup_bytes");
+    let kv_factor = kv_base as f64 / (kv_opt.max(1)) as f64;
+
+    println!("kv byte budget (per measured decode):");
+    println!("  path        appended      reuploaded         total");
+    println!(
+        "  in-place  {:>10}  {:>14}  {:>12}",
+        hd.kv_appended, hd.kv_reuploaded, kv_opt
+    );
+    println!(
+        "  baseline  {:>10}  {:>14}  {:>12}",
+        base.metrics.counter("hd_kv_app_bytes"),
+        base.metrics.counter("hd_kv_reup_bytes"),
+        kv_base
+    );
+    println!("  reduction {kv_factor:>10.1}x  (gate: >= {KV_GATE:.0}x)");
 
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"skipped\": false,\n  \
@@ -77,6 +126,9 @@ fn main() {
          \"modeled_s_per_token\": {modeled_tok:.6},\n  \
          \"hd_up_bytes\": {up},\n  \"hd_down_bytes\": {down},\n  \
          \"hd_saved_bytes\": {saved},\n  \"hd_saved_kv_bytes\": {saved_kv},\n  \
+         \"hd_kv_app_bytes\": {kv_app},\n  \"hd_kv_reup_bytes\": {kv_reup},\n  \
+         \"kv_bytes_baseline\": {kv_base},\n  \
+         \"kv_reduction_factor\": {kv_factor:.2},\n  \
          \"hd_moved_bytes_per_timestep\": {moved_ts:.0},\n  \
          \"hd_unoptimized_bytes_per_timestep\": {unopt_ts:.0},\n  \
          \"hd_reduction_factor\": {reduction:.2}\n}}\n",
@@ -85,6 +137,8 @@ fn main() {
         ts_us = out.wall_s / timesteps as f64 * 1e6,
         modeled = out.modeled_s,
         modeled_tok = out.modeled_s_per_token(),
+        kv_app = hd.kv_appended,
+        kv_reup = hd.kv_reuploaded,
         moved_ts = per_ts(hd.moved()),
         unopt_ts = per_ts(hd.unoptimized()),
     );
@@ -100,5 +154,13 @@ fn main() {
     assert!(
         saved_kv > 0,
         "KV device mirror never served a clean level during decode"
+    );
+    // ISSUE 7 gate: the donated in-place append path must beat the full
+    // re-upload baseline by >= KV_GATE on steady-state KV bytes; a
+    // silently-falling-back mirror lands at ~1x and fails here
+    assert!(
+        kv_factor >= KV_GATE,
+        "in-place KV append must move >= {KV_GATE:.0}x fewer KV bytes than \
+         the re-upload baseline (got {kv_factor:.2}x: {kv_opt} vs {kv_base})"
     );
 }

@@ -57,7 +57,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::pipeline::{self, DataFlow};
+use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
@@ -746,8 +746,26 @@ impl PipeDecDbEngine {
             if overlap {
                 sess.commit_log.queue(commit);
             } else {
+                // eager path goes through each cache's owning context (the
+                // stage's group ctx / the draft ctx) so the device mirrors
+                // replay the commit in place instead of re-uploading
                 let t0 = Instant::now();
-                let ops = pipeline::apply_commit_all(sess.base.caches.iter_mut(), &commit)?;
+                let stages = self.cfg.stages;
+                let mut ops = 0usize;
+                for (i, cache) in sess.base.caches.iter_mut().enumerate() {
+                    if i < stages {
+                        self.group_ctxs[i / gs]
+                            .as_mut()
+                            .expect("group ctx in residence")
+                            .apply_commit(&self.rt, &self.target, cache, &commit)?;
+                    } else {
+                        self.draft_ctx
+                            .as_mut()
+                            .expect("draft ctx in residence")
+                            .apply_commit(&self.rt, &self.draft, cache, &commit)?;
+                    }
+                    ops += 1;
+                }
                 commit_s = t0.elapsed().as_secs_f64();
                 sess.t_commit_eager_s += commit_s;
                 sess.commit_ops_eager += ops as u64;

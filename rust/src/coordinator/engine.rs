@@ -52,7 +52,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::pipeline::{self, DataFlow};
+use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
@@ -432,14 +432,21 @@ impl PipeDecEngine {
         }
         let t0 = Instant::now();
         let mut ops = 0usize;
+        // eager path goes through each owner's StageContext (not a bare
+        // cache walk) so the device mirrors replay the commit in place
         for st in self.groups_state.iter_mut() {
             let st = st.as_mut().expect("group state in residence");
-            ops += pipeline::apply_commit_all(st.caches.iter_mut(), &commit)?;
+            for cache in st.caches.iter_mut() {
+                st.ctx.apply_commit(&self.rt, &self.target, cache, &commit)?;
+                ops += 1;
+            }
         }
-        ops += pipeline::apply_commit_all(
-            std::iter::once(self.draft_cache.as_mut().expect("draft cache in residence")),
-            &commit,
-        )?;
+        {
+            let ctx = self.draft_ctx.as_mut().expect("draft ctx in residence");
+            let cache = self.draft_cache.as_mut().expect("draft cache in residence");
+            ctx.apply_commit(&self.rt, &self.draft, cache, &commit)?;
+            ops += 1;
+        }
         let secs = t0.elapsed().as_secs_f64();
         metrics.record("t_commit_s", secs);
         metrics.incr("commit_ops", ops as u64);

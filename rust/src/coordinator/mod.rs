@@ -12,9 +12,12 @@
 //!   the step-driven [`crate::engine::ScheduledEngine`] surface (and the
 //!   one-shot `Engine` trait for conformance).
 //! * [`pipeline`] — the per-request mechanics ([`pipeline::DataFlow`],
-//!   draft expansion, stage execution, the shared serial-sync commit
-//!   helper [`pipeline::apply_commit_all`]) both engines share, so their
-//!   per-session outputs are identical by construction.
+//!   draft expansion, stage execution) both engines share, so their
+//!   per-session outputs are identical by construction. Sync commits are
+//!   applied by each cache's owning [`crate::model::StageContext`]
+//!   (eagerly at the sync point or deferred into the owner's next job),
+//!   which also replays them onto the device KV mirror in place
+//!   (ISSUE 7).
 //! * [`workers`] — the persistent pipeline worker pool (ISSUE 4): a
 //!   timestep's task set (draft + one task per timestep group) executes on
 //!   real threads, state moving in and out of jobs by ownership, with

@@ -14,16 +14,18 @@
 //! ([`super::workers`]) as well as running inline on one thread. Since
 //! ISSUE 5 the stage phase reads a [`TreeSnapshot`] (never the canonical
 //! tree), and the sync phase's cache maintenance is a replayable
-//! [`CacheCommit`] — applied at the sync point by [`apply_commit_all`]
-//! (serial reference path) or deferred into the owning worker's next job
-//! (the overlapped path).
+//! [`crate::kvcache::CacheCommit`] — applied at the sync point by the
+//! owning [`StageContext::apply_commit`] (eager path) or deferred into
+//! the owning worker's next job (the overlapped path). Both routes go
+//! through the context so the device KV mirror replays each commit in
+//! place (ISSUE 7) instead of re-uploading.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::sampling::top_candidates;
-use crate::kvcache::{CacheCommit, TwoLevelCache};
+use crate::kvcache::TwoLevelCache;
 use crate::model::{bias, ModelCore, StageContext};
 use crate::runtime::Runtime;
 use crate::tree::{PredictionTree, TreeSnapshot};
@@ -174,21 +176,4 @@ pub fn run_stage(
         }),
         t0.elapsed().as_secs_f64(),
     ))
-}
-
-/// Serial-sync reference path of the ISSUE 5 decide/commit protocol:
-/// apply one sync decision to every cache of a request at the sync point
-/// itself — the promote/compact walk the solo engine and SpecPipe-DB used
-/// to spell out independently. Returns the number of caches committed
-/// (for the `commit_ops` metric).
-pub fn apply_commit_all<'a>(
-    caches: impl IntoIterator<Item = &'a mut TwoLevelCache>,
-    commit: &CacheCommit,
-) -> Result<usize> {
-    let mut n = 0usize;
-    for c in caches {
-        c.apply_commit(commit)?;
-        n += 1;
-    }
-    Ok(n)
 }

@@ -183,6 +183,8 @@ pub struct DraftOutcome {
 /// pending); the caller ships them home in the reply so the coordinator
 /// attributes commit time to the owning request precisely.
 fn apply_job_commits(
+    rt: &Runtime,
+    core: &ModelCore,
     ctx: &mut StageContext,
     caches: &mut [TwoLevelCache],
     commits: &[CacheCommit],
@@ -194,7 +196,7 @@ fn apply_job_commits(
         let t0 = Instant::now();
         for commit in commits {
             for cache in caches.iter_mut() {
-                ctx.apply_commit(cache, commit)?;
+                ctx.apply_commit(rt, core, cache, commit)?;
             }
         }
         secs = t0.elapsed().as_secs_f64();
@@ -218,6 +220,8 @@ pub fn exec_stage_job(rt: &Runtime, mut job: StageJob) -> StageDone {
     let mut commit_s = 0.0f64;
     let mut err = None;
     match apply_job_commits(
+        rt,
+        &job.core,
         &mut job.ctx,
         &mut job.caches,
         &job.commits,
@@ -286,6 +290,8 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
     // commits touch only that session's draft cache).
     for cand in job.candidates.iter_mut() {
         match apply_job_commits(
+            rt,
+            &job.core,
             &mut job.ctx,
             std::slice::from_mut(&mut cand.cache),
             &cand.commits,

@@ -1,33 +1,103 @@
-//! Device-resident mirror of one [`TwoLevelCache`] (ISSUE 2 tentpole).
+//! Device-resident mirror of one [`TwoLevelCache`] (ISSUE 2 tentpole;
+//! in-place updates since ISSUE 7).
 //!
-//! PJRT buffers are immutable, so the mirror is a *versioned* copy: each
-//! layer's four tensors (`past_k/past_v` `[H, P, hd]`, `tree_k/tree_v`
-//! `[H, T, hd]`) are uploaded tagged with the host cache's mutation epoch
-//! for that layer/level, and re-uploaded only when the host epoch has
-//! moved on. The seed path re-marshalled all four tensors for every layer
-//! on every `layer_forward` call; with the mirror, a clean level costs
-//! nothing and its would-be bytes are credited to
-//! [`crate::runtime::TransferStats::add_saved`] so benches can report the
-//! reduction.
+//! PJRT buffers are immutable, but the KV update entry points
+//! (`python/compile/kvops.py`) are lowered with argument 0 *donated*, so
+//! the runtime may reuse the donated input's storage for the output. The
+//! mirror exploits that to keep each layer's four tensors (`past_k/past_v`
+//! `[H, P, hd]`, `tree_k/tree_v` `[H, T, hd]`) device-resident and update
+//! them **in place**:
+//!
+//! * [`DeviceKvCache::append_block`] — a stage's freshly computed KV block
+//!   is scattered into the resident level tensor right after the host
+//!   append; only the `[H, W, hd]` block crosses the bus.
+//! * [`DeviceKvCache::apply_commit`] — replays a [`super::CacheCommit`]
+//!   on-device: the old tree root is promoted into the past tensors
+//!   (scalar operands only) and a `Hit`'s surviving slots are compacted
+//!   through a gather index vector. Zero level-tensor bytes move.
+//!
+//! Both fast paths require the resident copy to be *current* (its epoch
+//! equals the host epoch before the mutation being mirrored); otherwise
+//! they leave the slot for the **full re-upload fallback**
+//! ([`DeviceKvCache::ensure_past`] / [`DeviceKvCache::ensure_tree`]),
+//! which remains the conformance reference and the only path for
+//! miss/reset recovery or shape-mismatched caches (tests use tiny shapes
+//! that no lowered [`KvOps`] artifact matches). Every mutation is stamped
+//! with the host cache's post-mutation epoch, so `ensure_*` sees a clean
+//! level and serves it from residency.
 //!
 //! The mirror is keyed off-device by [`TwoLevelCache::id`] (see
 //! [`crate::model::ModelHandles`]), holds no reference to the host cache,
 //! and is safe to drop and rebuild at any time — worst case is one full
 //! re-upload.
 //!
-//! Deferred sync commits (ISSUE 5) need no special handling here: a
-//! [`super::CacheCommit`] applied late mutates the host tensors through
-//! the same `promote`/`compact` entry points, bumping the same per-layer
-//! epochs, so the mirror re-uploads exactly what an eager sync would have
-//! — only later, right before the next forward pass that reads it
-//! (asserted by the replay property test in `tests/kvcache_device.rs`).
+//! Deferred sync commits need no special handling: a late
+//! [`super::CacheCommit`] reaches [`DeviceKvCache::apply_commit`] through
+//! the same [`crate::model::StageContext::apply_commit`] choke point as an
+//! eager one, with the pre-mutation epochs captured immediately before
+//! the host replay — so the device replay is identical either way
+//! (asserted by the replay property tests in `tests/kvcache_device.rs`).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use super::TwoLevelCache;
-use crate::runtime::{DeviceBuffer, Runtime};
+use super::{CacheCommit, CommitOp, TwoLevelCache};
+use crate::runtime::{DeviceBuffer, Executable, Runtime};
 
-/// One level's device copy: the epoch it was uploaded at plus k/v buffers.
+/// The compiled device-side KV update entry points for one model, plus
+/// the shapes they were lowered for. Loaded by
+/// [`crate::model::ModelCore::load_with_width`] when all four artifacts
+/// exist; absent (and the mirror falls back to full re-uploads) otherwise
+/// or when `PIPEDEC_NO_KV_APPEND` is set (the bench baseline).
+pub struct KvOps {
+    pub app_past: Executable,
+    pub app_tree: Executable,
+    pub promote: Executable,
+    pub compact: Executable,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub past_cap: usize,
+    pub tree_cap: usize,
+    /// Width bucket of the `kv_append` src block (= the layer artifact's
+    /// width, since the block is the layer's `k_new`/`v_new` output).
+    pub width: usize,
+}
+
+impl KvOps {
+    /// Whether these entry points were lowered for `cache`'s shapes. A
+    /// mismatch (e.g. the tiny caches in unit tests) disables the device
+    /// fast paths for that cache; the re-upload fallback still works.
+    pub fn matches(&self, cache: &TwoLevelCache) -> bool {
+        cache.heads() == self.heads
+            && cache.head_dim() == self.head_dim
+            && cache.past_cap() == self.past_cap
+            && cache.tree_cap() == self.tree_cap
+    }
+}
+
+/// Host epochs/lengths captured immediately *before* a host-side
+/// [`TwoLevelCache::apply_commit`], so the device replay can check its
+/// resident copies were current and address rows by their pre-commit
+/// positions (the promote target row is the pre-commit `past_len`).
+pub struct PreState {
+    pub past_len: usize,
+    pub tree_len: usize,
+    pub past_epochs: Vec<u64>,
+    pub tree_epochs: Vec<u64>,
+}
+
+impl PreState {
+    pub fn capture(cache: &TwoLevelCache) -> Self {
+        Self {
+            past_len: cache.past_len(),
+            tree_len: cache.tree_len(),
+            past_epochs: (0..cache.layers()).map(|l| cache.past_epoch(l)).collect(),
+            tree_epochs: (0..cache.layers()).map(|l| cache.tree_epoch(l)).collect(),
+        }
+    }
+}
+
+/// One level's device copy: the epoch it was last synced at plus k/v
+/// buffers.
 struct LevelSlot {
     epoch: u64,
     k: DeviceBuffer,
@@ -40,19 +110,39 @@ struct LayerSlot {
     tree: Option<LevelSlot>,
 }
 
+/// Per-level mirror traffic counters (monotonic; see
+/// [`DeviceKvCache::counts`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MirrorCounts {
+    /// Full k/v re-uploads of a past level (fallback path).
+    pub past_uploads: u64,
+    /// Full k/v re-uploads of a tree level (fallback path).
+    pub tree_uploads: u64,
+    /// Clean past levels served from residency by `ensure_past`.
+    pub past_reuses: u64,
+    /// Clean tree levels served from residency by `ensure_tree`.
+    pub tree_reuses: u64,
+    /// In-place device updates of a past level (append or promote).
+    pub past_appends: u64,
+    /// In-place device updates of a tree level (append or compact).
+    pub tree_appends: u64,
+    /// Host→device bytes moved by the in-place paths (blocks + operands).
+    pub appended_bytes: u64,
+    /// Host→device bytes moved by full level re-uploads.
+    pub reuploaded_bytes: u64,
+}
+
 /// Per-cache device mirror; one slot pair (past/tree) per stage layer.
 pub struct DeviceKvCache {
     slots: Vec<LayerSlot>,
-    uploads: u64,
-    reuses: u64,
+    counts: MirrorCounts,
 }
 
 impl DeviceKvCache {
     pub fn new(layers: usize) -> Self {
         Self {
             slots: (0..layers).map(|_| LayerSlot::default()).collect(),
-            uploads: 0,
-            reuses: 0,
+            counts: MirrorCounts::default(),
         }
     }
 
@@ -60,9 +150,9 @@ impl DeviceKvCache {
         self.slots.len()
     }
 
-    /// (full uploads performed, clean reuses served) across both levels.
-    pub fn upload_counts(&self) -> (u64, u64) {
-        (self.uploads, self.reuses)
+    /// Per-level upload/reuse/append counters since construction.
+    pub fn counts(&self) -> MirrorCounts {
+        self.counts
     }
 
     /// Bring layer `l`'s past-level device copy up to date with `cache`.
@@ -76,11 +166,14 @@ impl DeviceKvCache {
     }
 
     /// Bring *every* layer's device copy (both levels) up to date with
-    /// `cache`. Convenience only — the engine hot path syncs lazily per
-    /// layer (`ensure_past`/`ensure_tree`) and does not call this; it
-    /// exists for warming a cache outside a latency-sensitive window and
-    /// as the sync entry point of the mirror conformance tests in
-    /// `tests/kvcache_device.rs`.
+    /// `cache` through the re-upload fallback. This is the mirror's
+    /// recovery and conformance entry point: whatever the in-place paths
+    /// did (or skipped), a `sync` afterwards must be a no-op on a clean
+    /// mirror and must restore bit-identical device state on a stale one —
+    /// the property `tests/kvcache_device.rs` checks the append/commit
+    /// fast paths against. Engines do not call it on the hot path (they
+    /// sync lazily per layer via `ensure_past`/`ensure_tree`); it is for
+    /// warming a cache outside a latency-sensitive window and for tests.
     pub fn sync(&mut self, rt: &Runtime, cache: &TwoLevelCache) -> Result<()> {
         for l in 0..self.slots.len() {
             self.ensure_past(rt, cache, l)?;
@@ -91,7 +184,7 @@ impl DeviceKvCache {
 
     /// Shared sync for one layer × level: clean ⇒ credit `saved_kv` and
     /// reuse the buffers; dirty ⇒ upload a fresh k/v pair tagged with the
-    /// host epoch.
+    /// host epoch (counted into the re-upload byte bucket).
     fn ensure_level(
         &mut self,
         rt: &Runtime,
@@ -103,7 +196,11 @@ impl DeviceKvCache {
         let slot = if past { &self.slots[l].past } else { &self.slots[l].tree };
         if let Some(s) = slot {
             if s.epoch == epoch {
-                self.reuses += 1;
+                if past {
+                    self.counts.past_reuses += 1;
+                } else {
+                    self.counts.tree_reuses += 1;
+                }
                 rt.stats().add_saved_kv(2 * level_bytes(cache, past));
                 return Ok(());
             }
@@ -117,9 +214,217 @@ impl DeviceKvCache {
         };
         let k = rt.upload_f32(ks, &dims)?;
         let v = rt.upload_f32(vs, &dims)?;
+        let bytes = 2 * level_bytes(cache, past);
+        rt.stats().add_kv_reuploaded(bytes);
+        self.counts.reuploaded_bytes += bytes as u64;
         let slot = if past { &mut self.slots[l].past } else { &mut self.slots[l].tree };
         *slot = Some(LevelSlot { epoch, k, v });
-        self.uploads += 1;
+        if past {
+            self.counts.past_uploads += 1;
+        } else {
+            self.counts.tree_uploads += 1;
+        }
+        Ok(())
+    }
+
+    /// In-place append fast path: mirror a host
+    /// [`TwoLevelCache::append_tree_block`] / `append_past_block` that
+    /// just ran, by scattering the same `[H, W, hd]` block into the
+    /// resident level tensor through the donated `kv_append` entry point.
+    ///
+    /// `pre_epoch` is the level's host epoch captured *before* the host
+    /// append; the fast path only fires when the resident copy was
+    /// current at that epoch (otherwise the slot is left as-is and the
+    /// next `ensure_*` re-uploads). `start` is the row the host wrote at
+    /// (the pre-append level length). On success the slot is restamped
+    /// with the post-append host epoch, so `ensure_*` treats it as clean.
+    /// Any device-op failure drops the slot — never poisons it — and the
+    /// fallback rebuilds from host truth.
+    #[allow(clippy::too_many_arguments)]
+    pub fn append_block(
+        &mut self,
+        rt: &Runtime,
+        ops: &KvOps,
+        cache: &TwoLevelCache,
+        l: usize,
+        to_tree: bool,
+        pre_epoch: u64,
+        start: usize,
+        k_block: &[f32],
+        v_block: &[f32],
+        block_w: usize,
+        count: usize,
+    ) -> Result<()> {
+        let post = if to_tree { cache.tree_epoch(l) } else { cache.past_epoch(l) };
+        let lvl = if to_tree { &mut self.slots[l].tree } else { &mut self.slots[l].past };
+        let Some(slot) = lvl.take() else {
+            return Ok(()); // nothing resident yet: lazy ensure will upload
+        };
+        if slot.epoch != pre_epoch || !ops.matches(cache) || block_w != ops.width
+            || count > block_w
+        {
+            // resident copy already stale (or shapes off): keep it; the
+            // epoch mismatch routes the next ensure through the fallback
+            *lvl = Some(slot);
+            return Ok(());
+        }
+        if count == 0 {
+            // host bumped the epoch but wrote nothing: contents still match
+            *lvl = Some(LevelSlot { epoch: post, ..slot });
+            return Ok(());
+        }
+        let exe = if to_tree { &ops.app_tree } else { &ops.app_past };
+        let LevelSlot { k, v, .. } = slot;
+        let run = (|| -> Result<(DeviceBuffer, DeviceBuffer)> {
+            let dims = [ops.heads, block_w, ops.head_dim];
+            let k_src = rt.upload_f32(k_block, &dims)?;
+            let v_src = rt.upload_f32(v_block, &dims)?;
+            let start_b = rt.upload_i32(&[start as i32], &[])?;
+            let count_b = rt.upload_i32(&[count as i32], &[])?;
+            let k2 = exe.run_bufs_to_bufs(k, &[&k_src, &start_b, &count_b])?;
+            let v2 = exe.run_bufs_to_bufs(v, &[&v_src, &start_b, &count_b])?;
+            Ok((k2, v2))
+        })();
+        match run {
+            Ok((k, v)) => {
+                let bytes = 2 * k_block.len() * 4 + 8;
+                rt.stats().add_kv_appended(bytes);
+                self.counts.appended_bytes += bytes as u64;
+                if to_tree {
+                    self.counts.tree_appends += 1;
+                } else {
+                    self.counts.past_appends += 1;
+                }
+                *lvl = Some(LevelSlot { epoch: post, k, v });
+                Ok(())
+            }
+            // slot dropped: fall back to a clean re-upload on next ensure
+            Err(_) => Ok(()),
+        }
+    }
+
+    /// In-place replay of one [`CacheCommit`] that the host cache has
+    /// *already* applied (`pre` holds the epochs/lengths from just before
+    /// that replay): promote the old tree root into the resident past
+    /// tensors, then compact a `Hit`'s surviving tree slots through a
+    /// gather index. Only scalar operands and one `[T]` i32 index vector
+    /// cross the bus — zero level-tensor bytes.
+    ///
+    /// Per layer, each step fires only when the resident copies it reads
+    /// and writes were current at their `pre` epochs; otherwise the slot
+    /// keeps its stale stamp and the next `ensure_*` re-uploads it. A
+    /// `Miss`'s `clear_tree` and identity compactions are length-only on
+    /// the host (no epoch bump), so they need no device work at all.
+    pub fn apply_commit(
+        &mut self,
+        rt: &Runtime,
+        ops: &KvOps,
+        cache: &TwoLevelCache,
+        commit: &CacheCommit,
+        pre: &PreState,
+    ) -> Result<()> {
+        if !ops.matches(cache) || pre.past_epochs.len() != self.slots.len() {
+            return Ok(());
+        }
+        ensure!(
+            cache.layers() == self.slots.len(),
+            "mirror layers {} != cache layers {}",
+            self.slots.len(),
+            cache.layers()
+        );
+        // operands shared by every layer's promote: tree slot 0 -> past
+        // row `pre.past_len`
+        let slot_b = rt.upload_i32(&[0], &[])?;
+        let pos_b = rt.upload_i32(&[pre.past_len as i32], &[])?;
+        rt.stats().add_kv_appended(8);
+        self.counts.appended_bytes += 8;
+
+        // Hit compaction: surviving pre-commit slots below this cache's
+        // processed prefix (same take_while as the host compact_tree)
+        let keep: Option<Vec<usize>> = match &commit.op {
+            CommitOp::Hit { kept_old } => Some(
+                kept_old
+                    .iter()
+                    .copied()
+                    .take_while(|&s| s < pre.tree_len)
+                    .collect(),
+            ),
+            CommitOp::Miss => None,
+        };
+        let moved = keep
+            .as_ref()
+            .is_some_and(|k| k.iter().enumerate().any(|(n, &o)| n != o));
+        let idx_b = if moved {
+            let keep = keep.as_ref().expect("moved implies hit");
+            let mut idx: Vec<i32> = (0..ops.tree_cap as i32).collect();
+            for (new, &old) in keep.iter().enumerate() {
+                idx[new] = old as i32;
+            }
+            let b = rt.upload_i32(&idx, &[ops.tree_cap])?;
+            rt.stats().add_kv_appended(idx.len() * 4);
+            self.counts.appended_bytes += (idx.len() * 4) as u64;
+            Some(b)
+        } else {
+            None
+        };
+
+        for l in 0..self.slots.len() {
+            let LayerSlot { past, tree } = &mut self.slots[l];
+            // promote: donates past k/v, reads tree k/v at their pre state
+            let tree_current = tree.as_ref().is_some_and(|t| t.epoch == pre.tree_epochs[l]);
+            if tree_current {
+                if let Some(p) = past.take() {
+                    if p.epoch == pre.past_epochs[l] {
+                        let t = tree.as_ref().expect("checked current");
+                        let LevelSlot { k, v, .. } = p;
+                        let run = (|| -> Result<(DeviceBuffer, DeviceBuffer)> {
+                            let k2 = ops
+                                .promote
+                                .run_bufs_to_bufs(k, &[&t.k, &slot_b, &pos_b])?;
+                            let v2 = ops
+                                .promote
+                                .run_bufs_to_bufs(v, &[&t.v, &slot_b, &pos_b])?;
+                            Ok((k2, v2))
+                        })();
+                        if let Ok((k, v)) = run {
+                            self.counts.past_appends += 1;
+                            *past = Some(LevelSlot {
+                                epoch: cache.past_epoch(l),
+                                k,
+                                v,
+                            });
+                        } // else: slot dropped, ensure_past re-uploads
+                    } else {
+                        *past = Some(p); // stale stamp routes to fallback
+                    }
+                }
+            }
+            // compact: donates tree k/v (only when the host really moved
+            // slots — identity compactions left the epoch alone)
+            if moved {
+                if let Some(t) = tree.take() {
+                    if t.epoch == pre.tree_epochs[l] {
+                        let idx = idx_b.as_ref().expect("moved implies idx");
+                        let LevelSlot { k, v, .. } = t;
+                        let run = (|| -> Result<(DeviceBuffer, DeviceBuffer)> {
+                            let k2 = ops.compact.run_bufs_to_bufs(k, &[idx])?;
+                            let v2 = ops.compact.run_bufs_to_bufs(v, &[idx])?;
+                            Ok((k2, v2))
+                        })();
+                        if let Ok((k, v)) = run {
+                            self.counts.tree_appends += 1;
+                            *tree = Some(LevelSlot {
+                                epoch: cache.tree_epoch(l),
+                                k,
+                                v,
+                            });
+                        }
+                    } else {
+                        *tree = Some(t);
+                    }
+                }
+            }
+        }
         Ok(())
     }
 

@@ -55,12 +55,15 @@
 //! [`device::DeviceKvCache`] compares these epochs against the epoch it
 //! last uploaded and re-uploads a layer's tensors only when they diverge.
 //!
-//! Known granularity limit: promotion writes a single row but dirties the
-//! whole past level (epochs are per layer × level, and PJRT buffers are
-//! immutable — there is no partial upload), so each accepted token still
-//! re-uploads the past tensors once. Removing that cost needs a
-//! device-side cache-append entry point (buffer donation / scatter in the
-//! artifact) — see ROADMAP.md.
+//! Epochs are per layer × level, so a single-row promotion still dirties
+//! the whole past level — but since ISSUE 7 that no longer implies a full
+//! re-upload: the device mirror replays the same mutation *in place*
+//! through donated `kv_append`/`kv_promote`/`kv_gather` entry points
+//! ([`device::DeviceKvCache::append_block`] /
+//! [`device::DeviceKvCache::apply_commit`]) and restamps its copy with
+//! the post-mutation epoch, so `ensure_*` sees a clean level. The
+//! epoch-diff re-upload survives as the fallback (stale mirror, shape
+//! mismatch, or missing kv artifacts) and the conformance reference.
 //! Caches also carry a process-unique [`TwoLevelCache::id`] so one model
 //! can keep independent device mirrors for many caches (per pipeline
 //! stage, draft vs target); cloning a cache assigns a fresh id so a clone

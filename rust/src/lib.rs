@@ -66,12 +66,18 @@
 //!   pairing of the two kept for baselines/benches. The hot path is
 //!   **device-resident**: [`runtime::Executable::run_bufs`] executes with
 //!   [`runtime::DeviceBuffer`] arguments, weights upload once at load,
-//!   per-cache [`kvcache::device::DeviceKvCache`] mirrors re-upload KV
-//!   tensors only when their mutation epoch moved, the past bias grows
-//!   incrementally ([`model::bias::PastBiasCache`]), and hidden states hand
-//!   off between a stage's layers without host `Vec` round-trips (the
-//!   output tuple still crosses to the host once per layer — see the
-//!   [`model`] docs for the exact boundary).
+//!   and per-cache [`kvcache::device::DeviceKvCache`] mirrors are updated
+//!   **in place** (ISSUE 7): donated single-output entry points —
+//!   executed through [`runtime::Executable::run_bufs_to_bufs`], which
+//!   consumes the donated buffer by move — scatter each freshly computed
+//!   KV block into the resident tensors and replay sync commits
+//!   (promote + compact) on-device, so steady-state decode moves only the
+//!   appended rows; a full level re-upload remains the fallback for
+//!   stale/shape-mismatched mirrors. The past bias grows incrementally
+//!   ([`model::bias::PastBiasCache`]), and hidden states hand off between
+//!   a stage's layers without host `Vec` round-trips (the output tuple
+//!   still crosses to the host once per layer — see the [`model`] docs
+//!   for the exact boundary).
 //!   [`runtime::TransferStats`] accounts the host↔device traffic
 //!   (`rust/benches/bench_hotpath.rs` → `BENCH_hotpath.json`;
 //!   `rust/benches/bench_async.rs` → `BENCH_async.json` for wall vs

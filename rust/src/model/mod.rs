@@ -39,8 +39,15 @@
 //!   are uploaded once at load and never marshalled again;
 //! * **KV cache** — each [`TwoLevelCache`] gets a [`DeviceKvCache`] mirror
 //!   (keyed by [`TwoLevelCache::id`], owned by the [`StageContext`] that
-//!   executes the cache's stage) whose per-layer tensors re-upload only
-//!   when the host cache's mutation epoch moved;
+//!   executes the cache's stage), updated **in place** through the donated
+//!   `kv_append`/`kv_promote`/`kv_gather` entry points
+//!   ([`crate::kvcache::device::KvOps`], loaded best-effort alongside the
+//!   model artifacts): the span runner scatters each layer's new KV block
+//!   into the resident tensors right after the host append, and
+//!   [`StageContext::apply_commit`] replays sync commits on-device. The
+//!   epoch-diff full re-upload survives as the fallback for stale or
+//!   shape-mismatched mirrors (and when the kv artifacts are absent or
+//!   `PIPEDEC_NO_KV_APPEND` is set);
 //! * **past bias** — a grow-only [`bias::PastBiasCache`] row block with a
 //!   cached device buffer, re-uploaded only when `past_len` changed;
 //! * **hidden states** — inside a stage span the running hidden block is
@@ -67,7 +74,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::config::ArtifactConfig;
-use crate::kvcache::device::DeviceKvCache;
+use crate::kvcache::device::{DeviceKvCache, KvOps, PreState};
 use crate::kvcache::TwoLevelCache;
 use crate::runtime::{to_vec_f32, DeviceBuffer, Executable, Runtime, TransferStats};
 use crate::weights::WeightMap;
@@ -140,26 +147,38 @@ impl StageContext {
         }
     }
 
-    /// Apply one deferred sync decision to `cache` — the worker-side
-    /// commit entry point of the ISSUE 5 decide/commit protocol, called
-    /// at job start *before* any forward pass over the cache. Today this
-    /// only mutates the host cache: the promotion/compaction bumps the
-    /// cache's per-layer epochs, so this context's [`DeviceKvCache`]
-    /// mirror re-uploads exactly the levels an eager sync would have
-    /// dirtied, and the incremental past bias catches the new `past_len`
-    /// on its next `ensure_past_bias` — no explicit invalidation needed.
-    /// It still lives on the context because the commit is an operation
-    /// of the cache's *executing owner*: once the device-side KV-append
-    /// entry point lands (ROADMAP), applying a commit will scatter into
-    /// this context's resident mirror buffers instead of re-uploading.
-    /// In-order replay (and therefore never running a context against a
-    /// stale tree) is enforced by [`TwoLevelCache::apply_commit`].
+    /// Apply one sync decision to `cache` — the worker-side commit entry
+    /// point of the ISSUE 5 decide/commit protocol, called at job start
+    /// *before* any forward pass over the cache (or eagerly at the sync
+    /// point on the serial path). The host cache is mutated first; then,
+    /// if this context holds a device mirror for the cache and `core`
+    /// loaded the donated KV entry points, the same promotion/compaction
+    /// is replayed **in place** on the resident mirror buffers
+    /// ([`DeviceKvCache::apply_commit`]) so the next forward pass serves
+    /// them from residency instead of re-uploading the dirtied levels.
+    /// Without ops or a mirror, the epoch bump alone routes the next
+    /// `ensure_*` through the full re-upload fallback, and the
+    /// incremental past bias catches the new `past_len` on its next
+    /// `ensure_past_bias` — no explicit invalidation needed. In-order
+    /// replay (and therefore never running a context against a stale
+    /// tree) is enforced by [`TwoLevelCache::apply_commit`].
     pub fn apply_commit(
         &mut self,
+        rt: &Runtime,
+        core: &ModelCore,
         cache: &mut TwoLevelCache,
         commit: &crate::kvcache::CacheCommit,
     ) -> Result<()> {
-        cache.apply_commit(commit)
+        let dev = self.dev_kv.get_mut(&cache.id());
+        let pre = match (&dev, core.kv_ops()) {
+            (Some(_), Some(_)) => Some(PreState::capture(cache)),
+            _ => None,
+        };
+        cache.apply_commit(commit)?;
+        if let (Some(dev), Some(ops), Some(pre)) = (dev, core.kv_ops(), pre) {
+            dev.apply_commit(rt, ops, cache, commit, &pre)?;
+        }
+        Ok(())
     }
 
     /// Evict the device KV mirror of cache `cache_id` (the value of
@@ -214,6 +233,11 @@ pub struct ModelCore {
     final_norm_bytes: usize,
     layer_bufs: Vec<Vec<DeviceBuffer>>,
     layer_bytes: Vec<usize>,
+    /// Donated device-side KV update entry points; `None` when the kv
+    /// artifacts are absent (older artifact sets) or `PIPEDEC_NO_KV_APPEND`
+    /// is set (the bench baseline) — the mirror then falls back to full
+    /// re-uploads everywhere.
+    kv_ops: Option<KvOps>,
 }
 
 impl ModelCore {
@@ -273,6 +297,32 @@ impl ModelCore {
             emb_bytes + final_norm_bytes + layer_bytes.iter().sum::<usize>(),
         );
 
+        // Donated KV update entry points (ISSUE 7): best-effort — all four
+        // artifacts present or the mirror keeps the re-upload fallback.
+        let kv_paths = [
+            dir.join(format!("{name}_kvapp_past{suffix}.hlo.txt")),
+            dir.join(format!("{name}_kvapp_tree{suffix}.hlo.txt")),
+            dir.join(format!("{name}_kvprom.hlo.txt")),
+            dir.join(format!("{name}_kvcompact.hlo.txt")),
+        ];
+        let kv_ops = if std::env::var_os("PIPEDEC_NO_KV_APPEND").is_some()
+            || !kv_paths.iter().all(|p| p.exists())
+        {
+            None
+        } else {
+            Some(KvOps {
+                app_past: rt.load_hlo_text(&kv_paths[0])?,
+                app_tree: rt.load_hlo_text(&kv_paths[1])?,
+                promote: rt.load_hlo_text(&kv_paths[2])?,
+                compact: rt.load_hlo_text(&kv_paths[3])?,
+                heads: cfg.n_heads,
+                head_dim: cfg.head_dim,
+                past_cap: cfg.past_cap,
+                tree_cap: cfg.tree_cap,
+                width: cfg.width_cap,
+            })
+        };
+
         Ok(Self {
             cfg,
             embed_exe,
@@ -284,12 +334,18 @@ impl ModelCore {
             final_norm_bytes,
             layer_bufs,
             layer_bytes,
+            kv_ops,
         })
     }
 
     /// Effective block width of the loaded artifact variant.
     pub fn width(&self) -> usize {
         self.cfg.width_cap
+    }
+
+    /// The donated device-side KV update entry points, when loaded.
+    pub fn kv_ops(&self) -> Option<&KvOps> {
+        self.kv_ops.as_ref()
     }
 
     /// A fresh mutable execution context shaped for this model.
@@ -433,10 +489,23 @@ impl ModelCore {
 
             let k_new = to_vec_f32(&out[1])?;
             let v_new = to_vec_f32(&out[2])?;
+            // host append (bumps the level epoch) + in-place device append
+            // of the same block; `start`/`pre_epoch` are pre-append state
+            let (pre_epoch, start) = if to_tree {
+                (cache.tree_epoch(lis), cache.tree_len())
+            } else {
+                (cache.past_epoch(lis), cache.past_len())
+            };
             if to_tree {
                 cache.append_tree_block(lis, &k_new, &v_new, w, count)?;
             } else {
                 cache.append_past_block(lis, &k_new, &v_new, w, count)?;
+            }
+            if let Some(ops) = self.kv_ops.as_ref() {
+                dev.append_block(
+                    rt, ops, cache, lis, to_tree, pre_epoch, start, &k_new, &v_new, w,
+                    count,
+                )?;
             }
 
             let h_lit = out.into_iter().next().expect("len checked");

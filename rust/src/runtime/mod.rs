@@ -6,8 +6,13 @@
 //! serialized protos from jax >= 0.5; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and DESIGN.md).
 //!
-//! All entry points are lowered with `return_tuple=True`, so every
-//! execution returns a tuple literal which [`Executable::run`] decomposes.
+//! Model entry points are lowered with `return_tuple=True`, so their
+//! executions return a tuple literal which [`Executable::run`] decomposes.
+//! The KV update entry points (`python/compile/kvops.py`) are the
+//! exception: they are lowered *untupled* with argument 0 donated, so
+//! [`Executable::run_bufs_to_bufs`] can consume the donated
+//! [`DeviceBuffer`] and hand back a device-resident output without any
+//! host round trip.
 //!
 //! # Execution paths
 //!
@@ -121,6 +126,8 @@ pub struct TransferStats {
     down: AtomicU64,
     saved: AtomicU64,
     saved_kv: AtomicU64,
+    kv_appended: AtomicU64,
+    kv_reuploaded: AtomicU64,
     resident: AtomicU64,
 }
 
@@ -145,6 +152,18 @@ impl TransferStats {
         self.saved_kv.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
+    /// Bytes uploaded by the device mirror's in-place *append* fast path
+    /// (only the new rows cross the bus). Subset of `up`.
+    pub fn add_kv_appended(&self, bytes: usize) {
+        self.kv_appended.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Bytes uploaded by the device mirror's full *re-upload* fallback
+    /// (whole level tensors crossed the bus). Subset of `up`.
+    pub fn add_kv_reuploaded(&self, bytes: usize) {
+        self.kv_reuploaded.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
     pub fn add_resident(&self, bytes: usize) {
         self.resident.fetch_add(bytes as u64, Ordering::Relaxed);
     }
@@ -159,6 +178,8 @@ impl TransferStats {
             down: self.down.load(Ordering::Relaxed),
             saved: self.saved.load(Ordering::Relaxed),
             saved_kv: self.saved_kv.load(Ordering::Relaxed),
+            kv_appended: self.kv_appended.load(Ordering::Relaxed),
+            kv_reuploaded: self.kv_reuploaded.load(Ordering::Relaxed),
         }
     }
 }
@@ -172,6 +193,10 @@ pub struct TransferSnapshot {
     pub saved: u64,
     /// Subset of `saved` credited by the KV device mirror.
     pub saved_kv: u64,
+    /// Subset of `up` moved by the mirror's in-place append fast path.
+    pub kv_appended: u64,
+    /// Subset of `up` moved by the mirror's full re-upload fallback.
+    pub kv_reuploaded: u64,
 }
 
 impl TransferSnapshot {
@@ -182,6 +207,8 @@ impl TransferSnapshot {
             down: self.down - earlier.down,
             saved: self.saved - earlier.saved,
             saved_kv: self.saved_kv - earlier.saved_kv,
+            kv_appended: self.kv_appended - earlier.kv_appended,
+            kv_reuploaded: self.kv_reuploaded - earlier.kv_reuploaded,
         }
     }
 
@@ -211,6 +238,8 @@ impl TransferSnapshot {
         metrics.incr("hd_down_bytes", self.down);
         metrics.incr("hd_saved_bytes", self.saved);
         metrics.incr("hd_saved_kv_bytes", self.saved_kv);
+        metrics.incr("hd_kv_app_bytes", self.kv_appended);
+        metrics.incr("hd_kv_reup_bytes", self.kv_reuploaded);
     }
 }
 
@@ -337,6 +366,39 @@ impl Executable {
             .execute_b::<&xla::PjRtBuffer>(&raw)
             .map_err(|e| anyhow::anyhow!("execute(buffers) {}: {e:?}", self.name))?;
         Self::decompose(&self.name, &out[0][0])
+    }
+
+    /// Execute a *donating* entry point (argument 0 lowered with
+    /// `donate_argnums=(0,)`, untupled single output) entirely on the
+    /// device: `donated` is moved in — PJRT may reuse its storage for the
+    /// output — and the result stays resident as a fresh [`DeviceBuffer`].
+    ///
+    /// Ownership is the safety story (rust/CONCURRENCY.md §3): because
+    /// `donated` is consumed by value, no other owner can observe the
+    /// buffer after PJRT invalidates it, so donation never aliases live
+    /// host state. `rest` arguments are borrowed read-only as usual.
+    pub fn run_bufs_to_bufs(
+        &self,
+        donated: DeviceBuffer,
+        rest: &[&DeviceBuffer],
+    ) -> Result<DeviceBuffer> {
+        let mut raw: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + rest.len());
+        raw.push(&donated.0);
+        raw.extend(rest.iter().map(|b| &b.0));
+        let out = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&raw)
+            .map_err(|e| anyhow::anyhow!("execute(donated) {}: {e:?}", self.name))?;
+        drop(donated); // donated storage now belongs to the output
+        let mut per_device = out.into_iter();
+        let replicas = per_device
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{}: no output device", self.name))?;
+        let mut bufs = replicas.into_iter();
+        let buf = bufs
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{}: empty output", self.name))?;
+        Ok(DeviceBuffer(buf))
     }
 
     fn decompose(name: &str, buf: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {

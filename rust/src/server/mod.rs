@@ -78,6 +78,14 @@ pub struct Completion {
     /// Fraction of sync-phase seconds that ran on pipeline workers,
     /// overlapped with the next timestep's compute (0 = fully serial).
     pub sync_overlap_ratio: f64,
+    /// Host->device bytes the KV mirror moved through the donated
+    /// in-place append/replay entry points (ISSUE 7) — the small
+    /// per-token residual.
+    pub kv_app_bytes: u64,
+    /// Host->device bytes the KV mirror moved through full-tensor
+    /// re-uploads (the ISSUE 7 fallback path; ~0 in steady state when
+    /// the device-side append entry points are loaded).
+    pub kv_reup_bytes: u64,
 }
 
 /// FIFO admission queue with a capacity bound (backpressure).
@@ -222,6 +230,14 @@ fn sync_breakdown(m: &Metrics) -> (f64, f64, f64) {
     )
 }
 
+/// Pull the KV-mirror upload split out of an engine's metrics:
+/// (bytes moved by the donated in-place append/replay paths, bytes moved
+/// by full-tensor re-uploads). Engines without a device mirror report
+/// (0, 0).
+fn kv_byte_split(m: &Metrics) -> (u64, u64) {
+    (m.counter("hd_kv_app_bytes"), m.counter("hd_kv_reup_bytes"))
+}
+
 /// Bookkeeping for one request in flight inside the scheduler.
 struct Ticket {
     router_id: u64,
@@ -276,6 +292,7 @@ pub fn serve_until_idle(
             debug_assert_eq!(probe.tokens(), output.tokens.len());
             let (t_decide_s, t_commit_s, sync_overlap_ratio) =
                 sync_breakdown(&output.metrics);
+            let (kv_app_bytes, kv_reup_bytes) = kv_byte_split(&output.metrics);
             out.push(Completion {
                 id: ticket.router_id,
                 engine: sched.name(),
@@ -289,6 +306,8 @@ pub fn serve_until_idle(
                 t_decide_s,
                 t_commit_s,
                 sync_overlap_ratio,
+                kv_app_bytes,
+                kv_reup_bytes,
             });
         }
     }
@@ -307,6 +326,7 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
         let service = probe.elapsed_s();
         debug_assert_eq!(probe.tokens(), result.tokens.len());
         let (t_decide_s, t_commit_s, sync_overlap_ratio) = sync_breakdown(&result.metrics);
+        let (kv_app_bytes, kv_reup_bytes) = kv_byte_split(&result.metrics);
         out.push(Completion {
             id: req.id,
             engine: engine.name(),
@@ -320,6 +340,8 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
             t_decide_s,
             t_commit_s,
             sync_overlap_ratio,
+            kv_app_bytes,
+            kv_reup_bytes,
         });
     }
     Ok(out)
@@ -328,10 +350,11 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
 /// Aggregate a batch of completions into the numbers Fig. 8 reports:
 /// counters plus `latency_s`, `first_token_s`, `tbt_s`, and `queue_depth`
 /// series, the per-decode sync-phase breakdown (`t_decide_s`,
-/// `t_commit_s`, `sync_overlap_ratio` — ISSUE 5), and the full-latency
-/// sample summary. `tbt_s` samples only requests that streamed at least
-/// two tokens; the sync series sample only requests that hit a sync point
-/// (decodes of a single token have none).
+/// `t_commit_s`, `sync_overlap_ratio` — ISSUE 5), the KV-mirror upload
+/// split (`kv_app_bytes` / `kv_reup_bytes` counters — ISSUE 7), and the
+/// full-latency sample summary. `tbt_s` samples only requests that
+/// streamed at least two tokens; the sync series sample only requests
+/// that hit a sync point (decodes of a single token have none).
 pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) {
     let mut m = Metrics::new();
     let mut lat = Vec::new();
@@ -350,6 +373,8 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
             m.record("t_commit_s", c.t_commit_s);
             m.record("sync_overlap_ratio", c.sync_overlap_ratio);
         }
+        m.incr("kv_app_bytes", c.kv_app_bytes);
+        m.incr("kv_reup_bytes", c.kv_reup_bytes);
         lat.push(c.latency_s);
         total_tokens += c.tokens;
     }
