@@ -1,0 +1,262 @@
+//! Template-workload benchmark for the cross-request prefix cache
+//! (ISSUE 8): one shared system prompt crossed with N distinct user
+//! suffixes, decoded three times — prefix cache off, on, and on with a
+//! tiny L1 budget that forces every block through an L2 demote/promote
+//! cycle. Writes `BENCH_prefix.json` and gates CI on:
+//!
+//! * bit-identical greedy token streams across all three runs,
+//! * the warm path computing >= 2x fewer prefill tokens than cold,
+//! * reported L1/L2 resident bytes never exceeding their budgets.
+//!
+//! Without built artifacts the bench writes a `skipped` marker so the
+//! CI artifact step always has a file to collect.
+
+use pipedec::bench_support::banner;
+use pipedec::config::{EngineConfig, PrefixCacheConfig, TreeConfig};
+use pipedec::coordinator::PipeDecDbEngine;
+use pipedec::engine::{DecodeOutput, DecodeRequest, Engine, NullSink};
+
+const OUT: &str = "BENCH_prefix.json";
+const SEED: u64 = 11;
+const MAX_NEW: usize = 8;
+
+/// Warm-path gate: requests sharing the template must compute at least
+/// this factor fewer prefill tokens than the cache-off baseline.
+const PREFIX_GATE: f64 = 2.0;
+
+/// The shared template: long relative to the per-request suffixes, so
+/// most of each prompt is cacheable prefix.
+const TEMPLATE: &str = "<sys>\nyou are a careful math tutor. show your \
+    working, keep answers short, and end with the final number on its \
+    own line. never apologise, never repeat the question.\n</sys>\n\
+    <math>\nquestion: ";
+
+const SUFFIXES: [&str; 5] = [
+    "2 + 3?\n",
+    "7 - 4?\n",
+    "3 * 3?\n",
+    "9 / 3?\n",
+    "8 - 6?\n",
+];
+
+/// Unrelated prompt decoded once per engine before measuring, so
+/// allocator/compilation warmup never lands in the cold TTFT sample.
+const WARMUP: &str = "<math>\nquestion: warmup, ignore this one?\n";
+
+fn write_out(json: String) {
+    println!("{json}");
+    if let Err(e) = std::fs::write(OUT, json) {
+        eprintln!("warning: could not write {OUT}: {e}");
+    } else {
+        println!("[json] {OUT}");
+    }
+}
+
+struct PhaseOut {
+    outs: Vec<DecodeOutput>,
+    l1_peak: usize,
+    l2_peak: usize,
+}
+
+/// Decode the full template workload on a fresh engine with the given
+/// prefix-cache config; asserts the tier budgets hold after every
+/// request and returns per-request outputs plus peak resident bytes.
+fn run_phase(dir: &std::path::Path, label: &str, pcfg: PrefixCacheConfig) -> PhaseOut {
+    let (l1_budget, l2_budget, enabled) = (pcfg.l1_bytes, pcfg.l2_bytes, pcfg.enabled);
+    let cfg = EngineConfig {
+        stages: 2,
+        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
+        max_new_tokens: MAX_NEW,
+        seed: SEED,
+        prefix_cache: pcfg,
+        ..EngineConfig::default()
+    };
+    let mut engine = PipeDecDbEngine::new(dir, cfg).unwrap();
+    assert_eq!(
+        engine.prefix_store().is_some(),
+        enabled,
+        "prefix store presence must follow the config"
+    );
+    engine
+        .decode(&DecodeRequest::new(WARMUP).with_seed(SEED), &mut NullSink)
+        .unwrap();
+    let (mut outs, mut l1_peak, mut l2_peak) = (Vec::new(), 0usize, 0usize);
+    for (i, sfx) in SUFFIXES.iter().enumerate() {
+        let prompt = format!("{TEMPLATE}{sfx}");
+        let out = engine
+            .decode(&DecodeRequest::new(&prompt).with_seed(SEED), &mut NullSink)
+            .unwrap();
+        if let Some(store) = engine.prefix_store() {
+            assert!(
+                store.l1_bytes() <= l1_budget,
+                "[{label}] req {i}: L1 resident {} bytes over budget {l1_budget}",
+                store.l1_bytes()
+            );
+            assert!(
+                store.l2_bytes() <= l2_budget,
+                "[{label}] req {i}: L2 resident {} bytes over budget {l2_budget}",
+                store.l2_bytes()
+            );
+            l1_peak = l1_peak.max(store.l1_bytes());
+            l2_peak = l2_peak.max(store.l2_bytes());
+        }
+        outs.push(out);
+    }
+    PhaseOut { outs, l1_peak, l2_peak }
+}
+
+fn l2_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipedec_bench_prefix_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir); // stale spills would fake warm hits
+    dir
+}
+
+fn main() {
+    banner("bench_prefix", "template workload: shared system prompt x N suffixes");
+
+    let dir = pipedec::artifacts_dir();
+    if !dir.join("target_config.txt").exists() {
+        write_out(
+            "{\n  \"bench\": \"prefix\",\n  \"skipped\": true,\n  \
+             \"reason\": \"no artifacts\"\n}\n"
+                .to_string(),
+        );
+        return;
+    }
+
+    let l1 = 64usize << 20;
+    let l2 = 256usize << 20;
+    let off = run_phase(
+        &dir,
+        "off",
+        PrefixCacheConfig { enabled: false, ..PrefixCacheConfig::default() },
+    );
+    let on_dir = l2_dir("on");
+    let on = run_phase(
+        &dir,
+        "on",
+        PrefixCacheConfig {
+            enabled: true,
+            l1_bytes: l1,
+            l2_bytes: l2,
+            l2_dir: Some(on_dir.to_string_lossy().into_owned()),
+            chunk_tokens: 0,
+        },
+    );
+    // tiny L1: every block demotes to disk after insert and every warm
+    // request promotes it back — the full L2 round trip, every time
+    let cyc_dir = l2_dir("cycle");
+    let cycle = run_phase(
+        &dir,
+        "cycle",
+        PrefixCacheConfig {
+            enabled: true,
+            l1_bytes: 1024,
+            l2_bytes: 1usize << 30,
+            l2_dir: Some(cyc_dir.to_string_lossy().into_owned()),
+            chunk_tokens: 0,
+        },
+    );
+
+    // the cache must be invisible in the output stream — enabled,
+    // disabled, and through the L2 demote/promote cycle
+    for i in 0..SUFFIXES.len() {
+        assert_eq!(
+            off.outs[i].tokens, on.outs[i].tokens,
+            "prefix cache changed the token stream for request {i}"
+        );
+        assert_eq!(
+            off.outs[i].tokens, cycle.outs[i].tokens,
+            "L2 demote/promote cycle changed the token stream for request {i}"
+        );
+    }
+
+    let sum = |p: &PhaseOut, name: &str, from: usize| -> u64 {
+        p.outs[from..].iter().map(|o| o.metrics.counter(name)).sum()
+    };
+    let cold_tokens = on.outs[0].metrics.counter("prefill_tokens");
+    let warm_on = sum(&on, "prefill_tokens", 1);
+    let warm_off = sum(&off, "prefill_tokens", 1);
+    let hit_total = sum(&on, "prefix_hit_tokens", 0);
+    let l2_hits_cycle = sum(&cycle, "prefix_l2_hits", 0);
+    let evictions_cycle = sum(&cycle, "prefix_evictions", 0);
+    let reduction = warm_off as f64 / warm_on.max(1) as f64;
+
+    let n_warm = (SUFFIXES.len() - 1) as f64;
+    let warm_mean = |p: &PhaseOut| -> f64 {
+        p.outs[1..].iter().map(|o| o.metrics.sample_sum("prefill_s")).sum::<f64>() / n_warm
+    };
+    let cold_ttft = on.outs[0].metrics.sample_sum("prefill_s");
+    let warm_ttft = warm_mean(&on);
+    let off_cold_ttft = off.outs[0].metrics.sample_sum("prefill_s");
+    let off_warm_ttft = warm_mean(&off);
+
+    println!("template workload ({} requests):", SUFFIXES.len());
+    println!("  phase   prefill_tokens(warm)   ttft_s(cold)   ttft_s(warm mean)");
+    println!("  off     {warm_off:>20}   {off_cold_ttft:>12.6}   {off_warm_ttft:>17.6}");
+    println!("  on      {warm_on:>20}   {cold_ttft:>12.6}   {warm_ttft:>17.6}");
+    println!("  reduction {reduction:>10.1}x  (gate: >= {PREFIX_GATE:.0}x)");
+    println!("  L2 cycle: {l2_hits_cycle} promoted hits, {evictions_cycle} evictions");
+
+    let json = format!(
+        "{{\n  \"bench\": \"prefix\",\n  \"skipped\": false,\n  \
+         \"engine\": \"pipedec-db\",\n  \"seed\": {SEED},\n  \
+         \"requests\": {req},\n  \"max_new_tokens\": {MAX_NEW},\n  \
+         \"cold_prefill_tokens\": {cold_tokens},\n  \
+         \"warm_prefill_tokens\": {warm_on},\n  \
+         \"warm_prefill_tokens_nocache\": {warm_off},\n  \
+         \"prefill_reduction_factor\": {reduction:.2},\n  \
+         \"prefix_hit_tokens\": {hit_total},\n  \
+         \"cold_ttft_s\": {cold_ttft:.6},\n  \
+         \"warm_ttft_s_mean\": {warm_ttft:.6},\n  \
+         \"l1_budget_bytes\": {l1},\n  \"l1_peak_bytes\": {l1_peak},\n  \
+         \"l2_budget_bytes\": {l2},\n  \"l2_peak_bytes\": {l2_peak},\n  \
+         \"cycle_l1_peak_bytes\": {cyc_l1},\n  \
+         \"cycle_l2_peak_bytes\": {cyc_l2},\n  \
+         \"l2_hits_cycle\": {l2_hits_cycle},\n  \
+         \"evictions_cycle\": {evictions_cycle}\n}}\n",
+        req = SUFFIXES.len(),
+        l1_peak = on.l1_peak,
+        l2_peak = on.l2_peak,
+        cyc_l1 = cycle.l1_peak,
+        cyc_l2 = cycle.l2_peak,
+    );
+    write_out(json);
+
+    // every warm request must actually hit the shared template prefix
+    for (i, o) in on.outs.iter().enumerate().skip(1) {
+        assert!(
+            o.metrics.counter("prefix_hit_tokens") > 0,
+            "warm request {i} missed the shared template prefix"
+        );
+    }
+    assert!(
+        reduction >= PREFIX_GATE,
+        "warm-path prefill must compute >= {PREFIX_GATE:.0}x fewer prompt \
+         tokens than cold (got {reduction:.2}x: {warm_on} vs {warm_off})"
+    );
+    // the tiny-L1 phase must exercise the disk tier, not degrade to misses
+    assert!(
+        l2_hits_cycle >= 1,
+        "demote/promote phase never promoted a block from L2"
+    );
+
+    // kill-switch: the env knob must override an enabled config
+    std::env::set_var("PIPEDEC_NO_PREFIX_CACHE", "1");
+    let cfg = EngineConfig {
+        stages: 2,
+        tree: TreeConfig { max_width: 4, max_children: 4, max_depth: 8 },
+        max_new_tokens: MAX_NEW,
+        seed: SEED,
+        ..EngineConfig::default()
+    };
+    let engine = PipeDecDbEngine::new(&dir, cfg).unwrap();
+    std::env::remove_var("PIPEDEC_NO_PREFIX_CACHE");
+    assert!(
+        engine.prefix_store().is_none(),
+        "PIPEDEC_NO_PREFIX_CACHE must disable the store"
+    );
+
+    let _ = std::fs::remove_dir_all(&on_dir);
+    let _ = std::fs::remove_dir_all(&cyc_dir);
+}

@@ -34,6 +34,51 @@ impl Default for TreeConfig {
     }
 }
 
+/// Tiered cross-request KV prefix cache (ISSUE 8,
+/// [`crate::kvcache::prefix`]): `[prefix_cache]` in TOML. The engines
+/// consult [`Self::runtime_enabled`], so the `PIPEDEC_NO_PREFIX_CACHE`
+/// environment kill-switch wins over both the TOML section and the CLI
+/// flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixCacheConfig {
+    /// Master switch (`enabled` key / `--no-prefix-cache` CLI flag).
+    pub enabled: bool,
+    /// L1 (host memory) byte budget for resident prefix entries.
+    pub l1_bytes: usize,
+    /// L2 (disk spill) byte budget; only meaningful with `l2_dir` set.
+    pub l2_bytes: usize,
+    /// Spill directory for the disk tier; `None` disables L2 (entries
+    /// evicted from L1 are dropped instead of demoted).
+    pub l2_dir: Option<String>,
+    /// Key granularity in tokens; `0` = auto (the model's prefill chunk
+    /// width). Engines round a nonzero value to a multiple of the
+    /// prefill width so seeded prefixes keep chunk boundaries — and
+    /// therefore float summation order and token outputs — bit-identical
+    /// to the uncached path.
+    pub chunk_tokens: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            l1_bytes: 64 << 20,
+            l2_bytes: 256 << 20,
+            l2_dir: None,
+            chunk_tokens: 0,
+        }
+    }
+}
+
+impl PrefixCacheConfig {
+    /// `enabled`, unless the `PIPEDEC_NO_PREFIX_CACHE` kill-switch is set
+    /// in the environment (any value). Engines read this once at
+    /// construction.
+    pub fn runtime_enabled(&self) -> bool {
+        self.enabled && std::env::var_os("PIPEDEC_NO_PREFIX_CACHE").is_none()
+    }
+}
+
 /// Engine/topology parameters for the real (artifact-backed) engine.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
@@ -71,6 +116,8 @@ pub struct EngineConfig {
     /// compute. `false` applies commits at the sync point — the PR 4
     /// serial reference path. Outputs are bit-identical either way.
     pub overlap_sync: bool,
+    /// Tiered cross-request KV prefix cache (ISSUE 8).
+    pub prefix_cache: PrefixCacheConfig,
 }
 
 impl Default for EngineConfig {
@@ -87,6 +134,7 @@ impl Default for EngineConfig {
             ablate_tree_reuse: false,
             threads: 0,
             overlap_sync: true,
+            prefix_cache: PrefixCacheConfig::default(),
         }
     }
 }
@@ -120,6 +168,21 @@ impl EngineConfig {
         }
         if let Some(v) = doc.get("engine", "overlap_sync") {
             cfg.overlap_sync = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("prefix_cache", "enabled") {
+            cfg.prefix_cache.enabled = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("prefix_cache", "l1_bytes") {
+            cfg.prefix_cache.l1_bytes = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("prefix_cache", "l2_bytes") {
+            cfg.prefix_cache.l2_bytes = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("prefix_cache", "l2_dir") {
+            cfg.prefix_cache.l2_dir = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("prefix_cache", "chunk_tokens") {
+            cfg.prefix_cache.chunk_tokens = v.as_usize()?;
         }
         if let Some(v) = doc.get("tree", "max_width") {
             cfg.tree.max_width = v.as_usize()?;
@@ -160,6 +223,13 @@ impl EngineConfig {
             "temperature out of range"
         );
         anyhow::ensure!((0.0..=1.0).contains(&self.top_p), "top_p out of range");
+        anyhow::ensure!(
+            self.prefix_cache
+                .l2_dir
+                .as_deref()
+                .is_none_or(|d| !d.is_empty()),
+            "prefix_cache.l2_dir must be non-empty when set"
+        );
         Ok(())
     }
 
@@ -244,6 +314,34 @@ mod tests {
         assert!(!off.overlap_sync);
         let on = EngineConfig::from_toml_str("[engine]\noverlap_sync = true\n").unwrap();
         assert!(on.overlap_sync);
+    }
+
+    #[test]
+    fn prefix_cache_section_parses_and_defaults_on() {
+        let d = PrefixCacheConfig::default();
+        assert!(d.enabled, "prefix cache defaults on");
+        assert_eq!(d.chunk_tokens, 0, "default chunk is auto");
+        assert!(d.l2_dir.is_none(), "disk tier defaults off");
+        let cfg = EngineConfig::from_toml_str(
+            r#"
+            [prefix_cache]
+            enabled = false
+            l1_bytes = 1024
+            l2_bytes = 4096
+            l2_dir = "/tmp/pfx"
+            chunk_tokens = 8
+            "#,
+        )
+        .unwrap();
+        assert!(!cfg.prefix_cache.enabled);
+        assert_eq!(cfg.prefix_cache.l1_bytes, 1024);
+        assert_eq!(cfg.prefix_cache.l2_bytes, 4096);
+        assert_eq!(cfg.prefix_cache.l2_dir.as_deref(), Some("/tmp/pfx"));
+        assert_eq!(cfg.prefix_cache.chunk_tokens, 8);
+        assert!(
+            EngineConfig::from_toml_str("[prefix_cache]\nl2_dir = \"\"\n").is_err(),
+            "empty l2_dir rejected"
+        );
     }
 
     #[test]

@@ -68,6 +68,7 @@ use crate::engine::{
     DecodeOutput, DecodeRequest, Engine, EngineKind, NullSink, ScheduledEngine, Session,
     SessionId, SessionRecord, SessionStatus, SpecStats, StepReport, TokenSink,
 };
+use crate::kvcache::prefix::{PrefixEntry, PrefixKv, PrefixStore};
 use crate::kvcache::{CacheCommit, CommitOp, TwoLevelCache};
 use crate::metrics::{Metrics, SharedMetrics};
 use crate::model::{ModelCore, StageContext};
@@ -120,6 +121,26 @@ struct DbSession {
     /// Cache-commit applications counted on the eager path (overlap-path
     /// ops are counted by the workers into the shared metrics).
     commit_ops_eager: u64,
+    /// Prompt tokens covered by a prefix-cache hit at admission (ISSUE 8);
+    /// 0 on a miss or with the cache disabled.
+    prefix_hit_tokens: u64,
+    /// Prompt tokens the prefill actually computed (the uncovered
+    /// suffix; the full prompt without a hit).
+    prefill_tokens: u64,
+    /// Which tier answered the admission probe (at most one is set).
+    prefix_l1_hit: bool,
+    prefix_l2_hit: bool,
+    /// Whether the store was probed at all (distinguishes a miss from a
+    /// disabled cache in the per-session metrics).
+    prefix_probed: bool,
+    /// Store-wide eviction count snapshot at admission, so retire can
+    /// attribute the delta to this session's metrics.
+    prefix_evictions_before: u64,
+    /// Pins on the shared L1 prefix blocks this session seeded from or
+    /// inserted (read-only; dropped at retire/cancel). Keeps each `Arc`
+    /// strong count an observable proxy for "sessions sharing this
+    /// template block".
+    prefix_pins: Vec<Arc<PrefixEntry>>,
     wall0: Instant,
 }
 
@@ -180,6 +201,9 @@ pub struct PipeDecDbEngine {
     stalled_for: u64,
     pool: Option<WorkerPool>,
     worker_metrics: Arc<SharedMetrics>,
+    /// Cross-request KV prefix cache (ISSUE 8); `None` when disabled by
+    /// config or the `PIPEDEC_NO_PREFIX_CACHE` kill-switch.
+    prefix: Option<PrefixStore>,
 }
 
 impl PipeDecDbEngine {
@@ -220,6 +244,7 @@ impl PipeDecDbEngine {
         } else {
             None
         };
+        let prefix = PrefixStore::from_config(&cfg.prefix_cache, target.cfg.width_cap)?;
         Ok(Self {
             rt,
             target,
@@ -242,7 +267,29 @@ impl PipeDecDbEngine {
             stalled_for: 0,
             pool,
             worker_metrics: Arc::new(SharedMetrics::new()),
+            prefix,
         })
+    }
+
+    /// Device-mirror occupancy per context (stage groups in order, then
+    /// the draft) — leak probe for tests and stall diagnostics.
+    pub fn mirror_counts(&self) -> Vec<usize> {
+        self.group_ctxs
+            .iter()
+            .map(|c| c.as_ref().map_or(0, StageContext::mirror_count))
+            .chain([self.draft_ctx.as_ref().map_or(0, StageContext::mirror_count)])
+            .collect()
+    }
+
+    /// The cross-request prefix store, when enabled (test hook).
+    pub fn prefix_store(&self) -> Option<&PrefixStore> {
+        self.prefix.as_ref()
+    }
+
+    /// Live sessions currently pinning a shared prefix entry (test hook:
+    /// a cancelled session must drop its pin).
+    pub fn pinned_prefix_sessions(&self) -> usize {
+        self.live.iter().filter(|s| !s.prefix_pins.is_empty()).count()
     }
 
     fn groups(&self) -> usize {
@@ -301,9 +348,48 @@ impl PipeDecDbEngine {
         let w = tc.width_cap;
         let t0 = Instant::now();
         let prompt = shell.prompt_ids.clone();
+
+        // Cross-request prefix reuse (ISSUE 8): probe the store for the
+        // longest chain of cached blocks covering the (context-truncated)
+        // prompt and seed every per-session cache — stage caches and the
+        // draft cache — block by block. The probe is capped at `len - 1`
+        // so the final prompt token is always re-computed: the last
+        // prefill chunk must still produce logits for the first sampled
+        // token. Device mirrors warm lazily through the existing
+        // epoch-diff upload path on the session's first forward.
+        let mut covered = 0usize;
+        let mut prefix_pins: Vec<Arc<PrefixEntry>> = Vec::new();
+        let (mut prefix_l1_hit, mut prefix_l2_hit) = (false, false);
+        let prefix_probed = self.prefix.is_some();
+        let prefix_evictions_before = self
+            .prefix
+            .as_ref()
+            .map_or(0, |store| store.stats().evictions);
+        if let Some(store) = self.prefix.as_mut() {
+            let before = store.stats();
+            let chain = store.lookup(&prompt, prompt.len().saturating_sub(1));
+            for entry in &chain {
+                anyhow::ensure!(
+                    entry.kv.len() == shell.caches.len(),
+                    "prefix block holds {} caches, session has {}",
+                    entry.kv.len(),
+                    shell.caches.len()
+                );
+                for (kv, cache) in entry.kv.iter().zip(shell.caches.iter_mut()) {
+                    kv.seed(cache)?;
+                }
+            }
+            if let Some(last) = chain.last() {
+                covered = last.tokens.len();
+            }
+            prefix_l1_hit = store.stats().l1_hits > before.l1_hits;
+            prefix_l2_hit = store.stats().l2_hits > before.l2_hits;
+            prefix_pins = chain;
+        }
+
         let mut last_h = None;
         let mut last_count = 0;
-        for chunk in prompt.chunks(w) {
+        for chunk in prompt[covered..].chunks(w) {
             let start = shell.caches[0].past_len();
             let mut h = self.target.embed(&self.rt, chunk)?;
             for s in 0..stages {
@@ -329,14 +415,49 @@ impl PipeDecDbEngine {
         let v = tc.vocab_size;
         let row = &logits[(last_count - 1) * v..last_count * v];
         let first = select_token(row, &sampling, &mut rng);
-        // draft prefill (parallel with the target on the real testbed)
+        // draft prefill (parallel with the target on the real testbed);
+        // with a prefix hit the draft cache was seeded too, so it also
+        // runs only the uncovered suffix (positions derive from the
+        // cache's past length)
         self.draft.full_prefill(
             &self.rt,
             self.draft_ctx.as_mut().expect("draft ctx in residence"),
             &mut shell.caches[stages],
-            &prompt,
+            &prompt[covered..],
         )?;
         let prefill_s = t0.elapsed().as_secs_f64();
+
+        // Insert (or reference-bump) this session's own uncovered blocks
+        // so concurrent sessions sharing a template converge on one
+        // resident copy per block. Blocks at boundaries <= covered were
+        // just returned (and LRU-bumped) by the admission lookup.
+        if let Some(store) = self.prefix.as_mut() {
+            let chunk = store.chunk_tokens();
+            let insert_len = store.align_down(prompt.len());
+            let mut b = covered + chunk;
+            while b <= insert_len {
+                let pfx = &prompt[..b];
+                if let Some(arc) = store.bump(pfx) {
+                    prefix_pins.push(arc);
+                } else if !store.contains(pfx) {
+                    let kv = shell
+                        .caches
+                        .iter()
+                        .map(|c| PrefixKv::extract_range(c, b - chunk, b))
+                        .collect::<Result<Vec<_>>>()?;
+                    let entry = PrefixEntry {
+                        tokens: pfx.to_vec(),
+                        kv,
+                    };
+                    // A key collision only forfeits caching for this
+                    // block; the decode itself is unaffected.
+                    if let Ok(arc) = store.insert(entry) {
+                        prefix_pins.push(arc);
+                    }
+                }
+                b += chunk;
+            }
+        }
 
         let budget = tc.tree_cap.min(dc.tree_cap);
         let tree = PredictionTree::new(self.cfg.tree, budget, first, prompt.len());
@@ -359,6 +480,13 @@ impl PipeDecDbEngine {
             t_commit_eager_s: 0.0,
             t_commit_worker_s: 0.0,
             commit_ops_eager: 0,
+            prefix_hit_tokens: covered as u64,
+            prefill_tokens: (prompt.len() - covered) as u64,
+            prefix_l1_hit,
+            prefix_l2_hit,
+            prefix_probed,
+            prefix_evictions_before,
+            prefix_pins,
             wall0: Instant::now(),
             base: shell,
         })
@@ -409,6 +537,28 @@ impl PipeDecDbEngine {
             metrics.incr("hits", sess.hits);
             metrics.incr("misses", sess.misses);
             metrics.record("prefill_s", sess.prefill_s);
+            metrics.incr("prefill_tokens", sess.prefill_tokens);
+            // prefix-cache accounting (ISSUE 8): hit tokens double as
+            // prompt tokens the prefill never re-computed; tier bytes are
+            // point-in-time store gauges, evictions the store delta since
+            // this session's admission
+            if sess.prefix_probed {
+                metrics.incr("prefix_hit_tokens", sess.prefix_hit_tokens);
+                metrics.incr("prefill_tokens_saved", sess.prefix_hit_tokens);
+                if sess.prefix_l1_hit {
+                    metrics.incr("prefix_l1_hits", 1);
+                } else if sess.prefix_l2_hit {
+                    metrics.incr("prefix_l2_hits", 1);
+                } else {
+                    metrics.incr("prefix_misses", 1);
+                }
+                if let Some(store) = self.prefix.as_ref() {
+                    metrics.record("prefix_l1_bytes", store.l1_bytes() as f64);
+                    metrics.record("prefix_l2_bytes", store.l2_bytes() as f64);
+                    let delta = store.stats().evictions - sess.prefix_evictions_before;
+                    metrics.incr("prefix_evictions", delta);
+                }
+            }
             // per-session sync breakdown: decide at the coordinator, the
             // commit wherever it ran — eager at the sync point (serial
             // path) or inside this session's jobs (overlap path, seconds

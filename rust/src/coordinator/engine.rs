@@ -60,6 +60,7 @@ use super::workers::{
 use crate::concurrency::protocol::CommitLog;
 use crate::config::EngineConfig;
 use crate::engine::{DecodeOutput, DecodeRequest, Engine, EngineKind, SpecStats, TokenSink};
+use crate::kvcache::prefix::{PrefixEntry, PrefixKv, PrefixStore};
 use crate::kvcache::{CacheCommit, CommitOp, TwoLevelCache};
 use crate::metrics::{Metrics, SharedMetrics};
 use crate::model::{ModelCore, StageContext};
@@ -105,6 +106,11 @@ pub struct PipeDecEngine {
     /// [`CommitLog`] (shared with `DbSession` and the model checker);
     /// `commit_log.seq()` is every job's `commit_target`.
     commit_log: CommitLog<CacheCommit>,
+    /// Cross-request KV prefix cache (ISSUE 8). Unlike the per-request
+    /// caches it is *not* cleared by [`Self::reset`] — persisting across
+    /// decodes is the point. `None` when disabled by config or the
+    /// `PIPEDEC_NO_PREFIX_CACHE` kill-switch.
+    prefix: Option<PrefixStore>,
 }
 
 impl PipeDecEngine {
@@ -171,6 +177,7 @@ impl PipeDecEngine {
         } else {
             None
         };
+        let prefix = PrefixStore::from_config(&cfg.prefix_cache, target.cfg.width_cap)?;
         Ok(Self {
             rt,
             target,
@@ -187,7 +194,13 @@ impl PipeDecEngine {
             pool,
             worker_metrics: Arc::new(SharedMetrics::new()),
             commit_log: CommitLog::new(),
+            prefix,
         })
+    }
+
+    /// The cross-request prefix store, when enabled (test hook).
+    pub fn prefix_store(&self) -> Option<&PrefixStore> {
+        self.prefix.as_ref()
     }
 
     pub fn stages(&self) -> usize {
@@ -226,15 +239,57 @@ impl PipeDecEngine {
 
     /// Pipeline prefill of the prompt through all target stages (the paper
     /// adopts plain sequential pre-filling, §3.4.1) plus draft prefill.
-    /// Returns the first decoded token and the modeled prefill seconds.
-    fn prefill(&mut self, prompt_ids: &[u32], sampling: &Sampling) -> Result<(u32, f64)> {
+    /// Probes the cross-request prefix store first (ISSUE 8): on a hit
+    /// every stage cache and the draft cache are seeded with the cached
+    /// rows and only the uncovered suffix is computed. Returns the first
+    /// decoded token and the prefill seconds; prefix-cache counters go
+    /// into `metrics`.
+    fn prefill(
+        &mut self,
+        prompt_ids: &[u32],
+        sampling: &Sampling,
+        metrics: &mut Metrics,
+    ) -> Result<(u32, f64)> {
         let w = self.target.cfg.width_cap;
         let gs = self.cfg.group_size;
         let lps = self.layers_per_stage;
         let t0 = Instant::now();
+
+        // probe capped at len - 1: the final prompt token is always
+        // re-computed so the last chunk yields logits for the first token
+        let mut chain: Vec<Arc<PrefixEntry>> = Vec::new();
+        let (mut l1_hit, mut l2_hit) = (false, false);
+        let prefix_probed = self.prefix.is_some();
+        let evictions_before = self.prefix.as_ref().map_or(0, |s| s.stats().evictions);
+        if let Some(store) = self.prefix.as_mut() {
+            let before = store.stats();
+            chain = store.lookup(prompt_ids, prompt_ids.len().saturating_sub(1));
+            l1_hit = store.stats().l1_hits > before.l1_hits;
+            l2_hit = store.stats().l2_hits > before.l2_hits;
+        }
+        let mut covered = 0usize;
+        for entry in &chain {
+            anyhow::ensure!(
+                entry.kv.len() == self.cfg.stages + 1,
+                "prefix block holds {} caches, engine has {}",
+                entry.kv.len(),
+                self.cfg.stages + 1
+            );
+            for s in 0..self.cfg.stages {
+                let st = self.groups_state[s / gs]
+                    .as_mut()
+                    .expect("group state in residence");
+                entry.kv[s].seed(&mut st.caches[s % gs])?;
+            }
+            entry.kv[self.cfg.stages]
+                .seed(self.draft_cache.as_mut().expect("draft cache in residence"))?;
+            covered = entry.tokens.len();
+        }
+        drop(chain); // solo sessions don't outlive prefill; no pin needed
+
         let mut last_h = None;
         let mut last_count = 0;
-        for chunk in prompt_ids.chunks(w) {
+        for chunk in prompt_ids[covered..].chunks(w) {
             let start = self.groups_state[0]
                 .as_ref()
                 .expect("group state in residence")
@@ -266,14 +321,66 @@ impl PipeDecEngine {
         let first = select_token(row, sampling, &mut self.rng);
 
         // draft prefill (runs in parallel with the target on the real
-        // testbed; sequential here, and excluded from decode latency)
+        // testbed; sequential here, and excluded from decode latency);
+        // a seeded draft cache runs only the uncovered suffix as well
         self.draft.full_prefill(
             &self.rt,
             self.draft_ctx.as_mut().expect("draft ctx in residence"),
             self.draft_cache.as_mut().expect("draft cache in residence"),
-            prompt_ids,
+            &prompt_ids[covered..],
         )?;
-        Ok((first, t0.elapsed().as_secs_f64()))
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        // insert (or keep) this prompt's own uncovered blocks so the
+        // next decode sharing the template skips straight to its suffix
+        if let Some(store) = self.prefix.as_mut() {
+            let chunk = store.chunk_tokens();
+            let insert_len = store.align_down(prompt_ids.len());
+            let mut b = covered + chunk;
+            while b <= insert_len {
+                let pfx = &prompt_ids[..b];
+                if store.bump(pfx).is_none() && !store.contains(pfx) {
+                    let mut kv = Vec::with_capacity(self.cfg.stages + 1);
+                    for s in 0..self.cfg.stages {
+                        let st = self.groups_state[s / gs]
+                            .as_ref()
+                            .expect("group state in residence");
+                        kv.push(PrefixKv::extract_range(&st.caches[s % gs], b - chunk, b)?);
+                    }
+                    kv.push(PrefixKv::extract_range(
+                        self.draft_cache.as_ref().expect("draft cache in residence"),
+                        b - chunk,
+                        b,
+                    )?);
+                    let entry = PrefixEntry {
+                        tokens: pfx.to_vec(),
+                        kv,
+                    };
+                    // a key collision only forfeits caching for this block
+                    let _ = store.insert(entry);
+                }
+                b += chunk;
+            }
+        }
+        metrics.incr("prefill_tokens", (prompt_ids.len() - covered) as u64);
+        if prefix_probed {
+            metrics.incr("prefix_hit_tokens", covered as u64);
+            metrics.incr("prefill_tokens_saved", covered as u64);
+            if l1_hit {
+                metrics.incr("prefix_l1_hits", 1);
+            } else if l2_hit {
+                metrics.incr("prefix_l2_hits", 1);
+            } else {
+                metrics.incr("prefix_misses", 1);
+            }
+            if let Some(store) = self.prefix.as_ref() {
+                metrics.record("prefix_l1_bytes", store.l1_bytes() as f64);
+                metrics.record("prefix_l2_bytes", store.l2_bytes() as f64);
+                let delta = store.stats().evictions - evictions_before;
+                metrics.incr("prefix_evictions", delta);
+            }
+        }
+        Ok((first, prefill_s))
     }
 
     /// Account one inter-node transfer through the central scheduler and the
@@ -482,7 +589,7 @@ impl Engine for PipeDecEngine {
         anyhow::ensure!(!prompt_ids.is_empty(), "empty prompt");
 
         let hd_start = self.rt.stats().snapshot();
-        let (first, prefill_s) = self.prefill(&prompt_ids, &sampling)?;
+        let (first, prefill_s) = self.prefill(&prompt_ids, &sampling, &mut metrics)?;
         metrics.record("prefill_s", prefill_s);
         let hd_prefill = self.rt.stats().snapshot();
         {

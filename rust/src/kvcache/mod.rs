@@ -70,6 +70,7 @@
 //! never aliases the original's device state.
 
 pub mod device;
+pub mod prefix;
 
 use anyhow::{ensure, Result};
 

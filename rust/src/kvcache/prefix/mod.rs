@@ -1,0 +1,778 @@
+//! Tiered cross-request KV prefix cache (ISSUE 8).
+//!
+//! Template-heavy traffic (shared system prompts, few-shot scaffolds)
+//! re-computes the same prefill KV for nearly every session. This module
+//! turns that into a cache problem: a content-addressed [`PrefixStore`]
+//! keys **chunk-aligned token prefixes** by rolling hash. Storage is
+//! block-granular: each [`PrefixEntry`] holds exactly one chunk's worth
+//! of past-KV rows for every pipeline cache (all stage caches plus the
+//! draft cache), keyed by the hash of the *entire* prefix up to that
+//! block's end boundary. Two prompts that share a template but diverge
+//! in their suffixes therefore share every template block — the store
+//! converges on one resident copy per block, and a lookup walks the
+//! chain of consecutive blocks to cover the longest cached prefix.
+//!
+//! Blocks live in two tiers:
+//!
+//! * **L1** — host memory, `Arc`-shared read-only [`PrefixEntry`]s.
+//!   Concurrent sessions seeding from the same template share one
+//!   resident copy per block; sessions copy-on-seed into their private
+//!   [`TwoLevelCache`]s, so entries are never mutated after insert
+//!   (see `rust/CONCURRENCY.md`).
+//! * **L2** — a disk spill directory. Blocks evicted from L1 under the
+//!   byte budget are serialized with a whole-payload checksum; a hit
+//!   verifies, promotes back to L1, and deletes the spill file. A
+//!   corrupt or truncated file fails verification, is deleted, and the
+//!   probe degrades to a miss — the store never returns bad tensors.
+//!
+//! Both tiers run LRU eviction against configurable byte budgets
+//! ([`config::PrefixCacheConfig`](crate::config::PrefixCacheConfig),
+//! `[prefix_cache]` in TOML, `PIPEDEC_NO_PREFIX_CACHE` kill-switch).
+//!
+//! Keys are computed over the **context-truncated** prompt (the
+//! scheduler truncates `prompt_ids` before admission), so a prompt that
+//! only differs beyond the truncation point still hits, and a truncated
+//! prompt can never alias an untruncated sibling: every entry stores its
+//! exact token prefix and every probe compares tokens, not just hashes.
+//!
+//! Lookup covers the **longest** chain of consecutive cached blocks no
+//! longer than the caller's cap (the caller keeps at least the final
+//! prompt token uncovered so prefill still produces logits). Engines
+//! seed each session cache block-by-block via [`PrefixKv::seed`] (host
+//! append + commit; device mirrors warm lazily through the existing
+//! epoch-diff upload path) and insert the session's own uncovered
+//! blocks after prefill via [`PrefixKv::extract_range`].
+
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::TwoLevelCache;
+use crate::runtime::bytes::as_byte_slice;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const MAGIC: &[u8; 8] = b"PDPFXV1\0";
+
+/// Incremental FNV-1a over token ids — "rolling" in the sense that the
+/// key for `tokens[..n+chunk]` extends the key for `tokens[..n]` without
+/// re-hashing the shared prefix.
+fn hash_extend(mut h: u64, tokens: &[u32]) -> u64 {
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Content key for an exact token prefix.
+pub fn prefix_key(tokens: &[u32]) -> u64 {
+    hash_extend(FNV_OFFSET, tokens)
+}
+
+/// One block of past-KV rows for one [`TwoLevelCache`] (one pipeline
+/// stage cache or the draft cache), covering prompt rows
+/// `start..start + rows`. Layout matches
+/// `TwoLevelCache::append_past_block` with `block_w == rows`: per layer
+/// `[heads, rows, head_dim]`, layers contiguous.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixKv {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Absolute row offset of this block in the prompt.
+    pub start: usize,
+    /// Rows held by this block.
+    pub rows: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl PrefixKv {
+    fn layer_stride(&self) -> usize {
+        self.heads * self.rows * self.head_dim
+    }
+
+    /// Resident size of the tensor payload in bytes.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Copy rows `start..end` of the cache's model level out into a
+    /// standalone block (the cache keeps its copy).
+    pub fn extract_range(cache: &TwoLevelCache, start: usize, end: usize) -> Result<Self> {
+        ensure!(
+            start < end && end <= cache.past_len(),
+            "prefix extract: rows {start}..{end} out of past_len {}",
+            cache.past_len()
+        );
+        let (layers, heads, hd) = (cache.layers(), cache.heads(), cache.head_dim());
+        let cap = cache.past_cap();
+        let rows = end - start;
+        let stride = heads * rows * hd;
+        let mut k = vec![0.0f32; layers * stride];
+        let mut v = vec![0.0f32; layers * stride];
+        for l in 0..layers {
+            let (src_k, src_v) = (cache.past_k_layer(l), cache.past_v_layer(l));
+            for h in 0..heads {
+                for r in 0..rows {
+                    let src = (h * cap + start + r) * hd;
+                    let dst = l * stride + (h * rows + r) * hd;
+                    k[dst..dst + hd].copy_from_slice(&src_k[src..src + hd]);
+                    v[dst..dst + hd].copy_from_slice(&src_v[src..src + hd]);
+                }
+            }
+        }
+        Ok(Self {
+            layers,
+            heads,
+            head_dim: hd,
+            start,
+            rows,
+            k,
+            v,
+        })
+    }
+
+    /// Seed a session cache's model level from this block: append rows
+    /// `start..start + rows` to every layer and commit. The cache's
+    /// past length must equal `start` (blocks seed in chain order onto a
+    /// fresh cache). The host-side epoch bump makes the device mirror
+    /// re-upload lazily through the existing path on first use.
+    pub fn seed(&self, cache: &mut TwoLevelCache) -> Result<()> {
+        ensure!(
+            cache.past_len() == self.start,
+            "prefix seed out of order: block starts at row {} but cache holds {}",
+            self.start,
+            cache.past_len()
+        );
+        ensure!(
+            self.layers == cache.layers()
+                && self.heads == cache.heads()
+                && self.head_dim == cache.head_dim(),
+            "prefix seed shape mismatch: block [{}x{}x{}] vs cache [{}x{}x{}]",
+            self.layers,
+            self.heads,
+            self.head_dim,
+            cache.layers(),
+            cache.heads(),
+            cache.head_dim()
+        );
+        ensure!(
+            self.start + self.rows <= cache.past_cap(),
+            "prefix seed overflow: {} rows > past_cap {}",
+            self.start + self.rows,
+            cache.past_cap()
+        );
+        let stride = self.layer_stride();
+        for l in 0..self.layers {
+            cache.append_past_block(
+                l,
+                &self.k[l * stride..(l + 1) * stride],
+                &self.v[l * stride..(l + 1) * stride],
+                self.rows,
+                self.rows,
+            )?;
+        }
+        cache.commit_past(self.rows);
+        Ok(())
+    }
+}
+
+/// One cached block: the exact (context-truncated, chunk-aligned) token
+/// prefix it extends — the block holds the KV rows for the *last* chunk
+/// of `tokens`, for every pipeline cache of the producing engine (stage
+/// caches in order, then the draft cache). Read-only after insert;
+/// shared by `Arc`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixEntry {
+    pub tokens: Vec<u32>,
+    pub kv: Vec<PrefixKv>,
+}
+
+impl PrefixEntry {
+    /// Resident size in bytes (tensor payload + token key).
+    pub fn bytes(&self) -> usize {
+        self.kv.iter().map(PrefixKv::bytes).sum::<usize>()
+            + self.tokens.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Monotonic counters describing store behaviour; flow into per-session
+/// metrics and `BENCH_prefix.json`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Lookups that covered at least one block without touching disk.
+    pub l1_hits: u64,
+    /// Lookups that covered at least one block from disk (verified +
+    /// promoted to L1).
+    pub l2_hits: u64,
+    /// Lookups with no usable cached prefix.
+    pub misses: u64,
+    /// New blocks admitted to L1.
+    pub inserts: u64,
+    /// Insert/bump calls that found the block already resident (shared
+    /// template converging on one copy).
+    pub ref_bumps: u64,
+    /// Blocks evicted from a tier under its byte budget (an L1→L2
+    /// demotion counts once; dropping from L2 counts once more).
+    pub evictions: u64,
+    /// L1 evictions that landed on disk instead of being dropped.
+    pub spills: u64,
+    /// L2 blocks deleted because verification failed (corrupt or
+    /// truncated spill files).
+    pub corrupt_dropped: u64,
+}
+
+struct L1Slot {
+    entry: Arc<PrefixEntry>,
+    last_used: u64,
+}
+
+struct L2Slot {
+    path: PathBuf,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Content-addressed two-tier store for prefill prefix KV blocks.
+///
+/// Single-owner (one per engine, probed at admission on the coordinator
+/// thread); the `Arc`s it hands out are what cross threads, and those
+/// are read-only. Not a `Sync` structure by design.
+pub struct PrefixStore {
+    chunk: usize,
+    l1_budget: usize,
+    l2_budget: usize,
+    l2_dir: Option<PathBuf>,
+    tick: u64,
+    l1: HashMap<u64, L1Slot>,
+    l2: HashMap<u64, L2Slot>,
+    l1_bytes: usize,
+    l2_bytes: usize,
+    stats: PrefixStats,
+}
+
+impl PrefixStore {
+    /// `chunk_tokens` is the block granularity: every stored block holds
+    /// exactly this many rows and is keyed at a boundary that is a
+    /// multiple of it. `l2_dir = None` disables the disk tier (L1
+    /// evictions drop instead of spilling).
+    pub fn new(
+        chunk_tokens: usize,
+        l1_budget: usize,
+        l2_budget: usize,
+        l2_dir: Option<PathBuf>,
+    ) -> Result<Self> {
+        ensure!(chunk_tokens >= 1, "prefix chunk_tokens must be >= 1");
+        if let Some(dir) = &l2_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create prefix L2 dir {}", dir.display()))?;
+        }
+        Ok(Self {
+            chunk: chunk_tokens,
+            l1_budget,
+            l2_budget,
+            l2_dir,
+            tick: 0,
+            l1: HashMap::new(),
+            l2: HashMap::new(),
+            l1_bytes: 0,
+            l2_bytes: 0,
+            stats: PrefixStats::default(),
+        })
+    }
+
+    /// Build from the engine's `[prefix_cache]` config. Returns `None`
+    /// when disabled (by config or the `PIPEDEC_NO_PREFIX_CACHE`
+    /// kill-switch, read once here at engine construction). A nonzero
+    /// `chunk_tokens` is rounded down to a multiple of the model's
+    /// prefill chunk width (minimum one width): seeded prefixes then
+    /// end exactly on a prefill chunk boundary, so the uncovered suffix
+    /// re-runs with the same chunk splits — and the same float summation
+    /// order, hence bit-identical tokens — as the uncached path.
+    pub fn from_config(
+        cfg: &crate::config::PrefixCacheConfig,
+        prefill_width: usize,
+    ) -> Result<Option<Self>> {
+        if !cfg.runtime_enabled() {
+            return Ok(None);
+        }
+        let w = prefill_width.max(1);
+        let chunk = if cfg.chunk_tokens == 0 {
+            w
+        } else {
+            (cfg.chunk_tokens / w).max(1) * w
+        };
+        Self::new(
+            chunk,
+            cfg.l1_bytes,
+            cfg.l2_bytes,
+            cfg.l2_dir.clone().map(PathBuf::from),
+        )
+        .map(Some)
+    }
+
+    pub fn chunk_tokens(&self) -> usize {
+        self.chunk
+    }
+
+    /// Largest chunk-aligned length `<= n`.
+    pub fn align_down(&self, n: usize) -> usize {
+        n / self.chunk * self.chunk
+    }
+
+    pub fn l1_bytes(&self) -> usize {
+        self.l1_bytes
+    }
+
+    pub fn l2_bytes(&self) -> usize {
+        self.l2_bytes
+    }
+
+    pub fn l1_len(&self) -> usize {
+        self.l1.len()
+    }
+
+    pub fn l2_len(&self) -> usize {
+        self.l2.len()
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Longest chain of consecutive cached blocks covering a prefix of
+    /// `prompt` no longer than `max_tokens`, in seeding order (block at
+    /// `0..chunk` first). The walk extends the rolling hash one chunk at
+    /// a time and stops at the first boundary with no verified block;
+    /// every candidate compares exact tokens so hash collisions read as
+    /// misses. Per call, exactly one of {l1_hits, l2_hits, misses}
+    /// advances: a miss if the chain is empty, an l2 hit if any block
+    /// was promoted from disk, an l1 hit otherwise.
+    pub fn lookup(&mut self, prompt: &[u32], max_tokens: usize) -> Vec<Arc<PrefixEntry>> {
+        let cap = self.align_down(max_tokens.min(prompt.len()));
+        let mut chain = Vec::new();
+        let mut used_l2 = false;
+        let mut h = FNV_OFFSET;
+        let mut len = 0;
+        while len < cap {
+            h = hash_extend(h, &prompt[len..len + self.chunk]);
+            len += self.chunk;
+            let now = self.touch();
+            if let Some(slot) = self.l1.get_mut(&h) {
+                if slot.entry.tokens == prompt[..len] {
+                    slot.last_used = now;
+                    chain.push(Arc::clone(&slot.entry));
+                    continue;
+                }
+                break; // hash collision — different content
+            }
+            if self.l2.contains_key(&h) {
+                if let Some(entry) = self.promote_l2(h, &prompt[..len]) {
+                    used_l2 = true;
+                    chain.push(entry);
+                    continue;
+                }
+            }
+            break; // first uncovered boundary ends the chain
+        }
+        if chain.is_empty() {
+            self.stats.misses += 1;
+        } else if used_l2 {
+            self.stats.l2_hits += 1;
+        } else {
+            self.stats.l1_hits += 1;
+        }
+        chain
+    }
+
+    /// Peek an L1 block without touching LRU state or counters (test /
+    /// diagnostics hook).
+    pub fn peek_l1(&self, tokens: &[u32]) -> Option<Arc<PrefixEntry>> {
+        let slot = self.l1.get(&prefix_key(tokens))?;
+        (slot.entry.tokens == tokens).then(|| Arc::clone(&slot.entry))
+    }
+
+    /// Is a block for this exact prefix resident in either tier? (L2
+    /// presence is judged by key only; verification happens on the hit
+    /// path.)
+    pub fn contains(&self, tokens: &[u32]) -> bool {
+        let key = prefix_key(tokens);
+        self.l1.get(&key).is_some_and(|s| s.entry.tokens == tokens)
+            || self.l2.contains_key(&key)
+    }
+
+    /// Spill-file path for an L2-resident block (test hook for the
+    /// corruption path).
+    pub fn l2_file(&self, tokens: &[u32]) -> Option<PathBuf> {
+        self.l2.get(&prefix_key(tokens)).map(|s| s.path.clone())
+    }
+
+    /// Reference-bump an L1-resident block: LRU-touch it and return the
+    /// shared handle (sessions pin it for their lifetime). `None` when
+    /// the block is not in L1 — callers fall back to [`Self::insert`].
+    pub fn bump(&mut self, tokens: &[u32]) -> Option<Arc<PrefixEntry>> {
+        let now = self.touch();
+        let slot = self.l1.get_mut(&prefix_key(tokens))?;
+        if slot.entry.tokens != tokens {
+            return None;
+        }
+        slot.last_used = now;
+        self.stats.ref_bumps += 1;
+        Some(Arc::clone(&slot.entry))
+    }
+
+    /// Admit a block (or reference-bump the resident copy). The entry's
+    /// token length must be a positive multiple of `chunk_tokens` and
+    /// every per-cache tensor must hold exactly the final chunk's rows;
+    /// misaligned entries are rejected so every stored key is probe-able
+    /// and every block seeds in chain order. Returns the store's shared
+    /// handle — sessions pin it for their lifetime.
+    pub fn insert(&mut self, entry: PrefixEntry) -> Result<Arc<PrefixEntry>> {
+        let len = entry.tokens.len();
+        ensure!(
+            len > 0 && len % self.chunk == 0,
+            "prefix insert: length {len} not a positive multiple of chunk {}",
+            self.chunk
+        );
+        ensure!(
+            !entry.kv.is_empty()
+                && entry
+                    .kv
+                    .iter()
+                    .all(|kv| kv.rows == self.chunk && kv.start + kv.rows == len),
+            "prefix insert: blocks must cover exactly rows {}..{len}",
+            len - self.chunk
+        );
+        let key = prefix_key(&entry.tokens);
+        let now = self.touch();
+        if let Some(slot) = self.l1.get_mut(&key) {
+            if slot.entry.tokens == entry.tokens {
+                slot.last_used = now;
+                self.stats.ref_bumps += 1;
+                return Ok(Arc::clone(&slot.entry));
+            }
+            bail!("prefix key collision on insert");
+        }
+        // A fresh copy supersedes a spilled one: drop the file, keep L1.
+        if let Some(slot) = self.l2.remove(&key) {
+            self.l2_bytes -= slot.bytes;
+            let _ = std::fs::remove_file(&slot.path);
+        }
+        let bytes = entry.bytes();
+        let arc = Arc::new(entry);
+        self.l1.insert(
+            key,
+            L1Slot {
+                entry: Arc::clone(&arc),
+                last_used: now,
+            },
+        );
+        self.l1_bytes += bytes;
+        self.stats.inserts += 1;
+        self.evict_l1();
+        Ok(arc)
+    }
+
+    fn lru_key(map_last_used: impl Iterator<Item = (u64, u64)>) -> Option<u64> {
+        map_last_used.min_by_key(|&(_, used)| used).map(|(k, _)| k)
+    }
+
+    fn evict_l1(&mut self) {
+        while self.l1_bytes > self.l1_budget {
+            let Some(key) = Self::lru_key(self.l1.iter().map(|(k, s)| (*k, s.last_used)))
+            else {
+                break;
+            };
+            let slot = self.l1.remove(&key).expect("lru key present");
+            self.l1_bytes -= slot.entry.bytes();
+            self.stats.evictions += 1;
+            self.spill(key, &slot.entry);
+        }
+    }
+
+    fn evict_l2(&mut self) {
+        while self.l2_bytes > self.l2_budget {
+            let Some(key) = Self::lru_key(self.l2.iter().map(|(k, s)| (*k, s.last_used)))
+            else {
+                break;
+            };
+            let slot = self.l2.remove(&key).expect("lru key present");
+            self.l2_bytes -= slot.bytes;
+            let _ = std::fs::remove_file(&slot.path);
+            self.stats.evictions += 1;
+        }
+    }
+
+    fn l2_path(dir: &Path, key: u64) -> PathBuf {
+        dir.join(format!("pfx_{key:016x}.bin"))
+    }
+
+    fn spill(&mut self, key: u64, entry: &PrefixEntry) {
+        let Some(dir) = self.l2_dir.clone() else {
+            return; // no disk tier: demotion is a drop
+        };
+        let bytes = entry.bytes();
+        if bytes > self.l2_budget {
+            return; // can never fit; don't churn the tier
+        }
+        let path = Self::l2_path(&dir, key);
+        if std::fs::write(&path, serialize(entry)).is_err() {
+            let _ = std::fs::remove_file(&path);
+            return; // spill failure degrades to a drop, never an error
+        }
+        let now = self.touch();
+        self.l2.insert(
+            key,
+            L2Slot {
+                path,
+                bytes,
+                last_used: now,
+            },
+        );
+        self.l2_bytes += bytes;
+        self.stats.spills += 1;
+        self.evict_l2();
+    }
+
+    /// Read, verify, and promote an L2 block back into L1. Any read,
+    /// parse, or checksum failure deletes the spill file and reports a
+    /// miss; a token mismatch (hash collision) leaves the file alone.
+    fn promote_l2(&mut self, key: u64, expect: &[u32]) -> Option<Arc<PrefixEntry>> {
+        let slot = self.l2.get(&key)?;
+        let path = slot.path.clone();
+        match std::fs::read(&path).ok().and_then(|b| deserialize(&b).ok()) {
+            Some(entry) if entry.tokens == expect => {
+                let slot = self.l2.remove(&key).expect("probed above");
+                self.l2_bytes -= slot.bytes;
+                let _ = std::fs::remove_file(&slot.path);
+                let bytes = entry.bytes();
+                let arc = Arc::new(entry);
+                let now = self.touch();
+                self.l1.insert(
+                    key,
+                    L1Slot {
+                        entry: Arc::clone(&arc),
+                        last_used: now,
+                    },
+                );
+                self.l1_bytes += bytes;
+                self.evict_l1();
+                Some(arc)
+            }
+            Some(_) => None, // collision: different content, keep the file
+            None => {
+                let slot = self.l2.remove(&key).expect("probed above");
+                self.l2_bytes -= slot.bytes;
+                let _ = std::fs::remove_file(&slot.path);
+                self.stats.corrupt_dropped += 1;
+                None
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L2 serialization: [magic | checksum(u64) | payload], checksum = FNV-1a
+// over the payload bytes. Scalars cross through the audited
+// `runtime::bytes::as_byte_slice` choke point on write and safe
+// `from_ne_bytes` loops on read (spill files never leave the machine
+// that wrote them, so native endianness is self-consistent).
+// ---------------------------------------------------------------------------
+
+fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn serialize(entry: &PrefixEntry) -> Vec<u8> {
+    let mut payload = Vec::new();
+    payload.extend_from_slice(as_byte_slice(&[entry.tokens.len() as u64]));
+    payload.extend_from_slice(as_byte_slice(&[entry.kv.len() as u64]));
+    payload.extend_from_slice(as_byte_slice(&entry.tokens));
+    for kv in &entry.kv {
+        let dims = [
+            kv.layers as u64,
+            kv.heads as u64,
+            kv.head_dim as u64,
+            kv.start as u64,
+            kv.rows as u64,
+        ];
+        payload.extend_from_slice(as_byte_slice(&dims));
+        payload.extend_from_slice(as_byte_slice(&kv.k));
+        payload.extend_from_slice(as_byte_slice(&kv.v));
+    }
+    let mut out = Vec::with_capacity(MAGIC.len() + 8 + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(as_byte_slice(&[checksum(&payload)]));
+    out.extend_from_slice(&payload);
+    out
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.bytes.len(), "truncated prefix entry");
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_ne_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let b = self.take(n.checked_mul(4).context("length overflow")?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_ne_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(n.checked_mul(4).context("length overflow")?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_ne_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+}
+
+fn deserialize(bytes: &[u8]) -> Result<PrefixEntry> {
+    ensure!(bytes.len() >= MAGIC.len() + 8, "truncated prefix entry");
+    ensure!(&bytes[..MAGIC.len()] == MAGIC, "bad prefix entry magic");
+    let mut r = Reader {
+        bytes,
+        pos: MAGIC.len(),
+    };
+    let sum = r.u64()?;
+    ensure!(
+        checksum(&bytes[MAGIC.len() + 8..]) == sum,
+        "prefix entry checksum mismatch"
+    );
+    let n_tokens = usize::try_from(r.u64()?)?;
+    let n_caches = usize::try_from(r.u64()?)?;
+    ensure!(n_caches <= 4096, "implausible cache count");
+    let tokens = r.u32s(n_tokens)?;
+    let mut kv = Vec::with_capacity(n_caches);
+    for _ in 0..n_caches {
+        let layers = usize::try_from(r.u64()?)?;
+        let heads = usize::try_from(r.u64()?)?;
+        let head_dim = usize::try_from(r.u64()?)?;
+        let start = usize::try_from(r.u64()?)?;
+        let rows = usize::try_from(r.u64()?)?;
+        ensure!(start + rows == n_tokens, "block row range mismatch");
+        let n = layers
+            .checked_mul(heads)
+            .and_then(|x| x.checked_mul(rows))
+            .and_then(|x| x.checked_mul(head_dim))
+            .context("tensor size overflow")?;
+        kv.push(PrefixKv {
+            layers,
+            heads,
+            head_dim,
+            start,
+            rows,
+            k: r.f32s(n)?,
+            v: r.f32s(n)?,
+        });
+    }
+    ensure!(r.pos == bytes.len(), "trailing bytes in prefix entry");
+    Ok(PrefixEntry { tokens, kv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(start: usize, rows: usize, fill: f32) -> PrefixKv {
+        let n = 2 * rows * 2; // layers=2, heads=1, hd=2
+        PrefixKv {
+            layers: 2,
+            heads: 1,
+            head_dim: 2,
+            start,
+            rows,
+            k: (0..n).map(|i| fill + i as f32).collect(),
+            v: (0..n).map(|i| -fill - i as f32).collect(),
+        }
+    }
+
+    fn entry(tokens: &[u32], rows: usize) -> PrefixEntry {
+        PrefixEntry {
+            tokens: tokens.to_vec(),
+            kv: vec![kv(tokens.len() - rows, rows, tokens[0] as f32)],
+        }
+    }
+
+    #[test]
+    fn serialize_round_trips_bit_identically() {
+        let e = entry(&[1, 2, 3, 4], 2);
+        let got = deserialize(&serialize(&e)).unwrap();
+        assert_eq!(got, e);
+    }
+
+    #[test]
+    fn truncated_or_flipped_bytes_fail_verification() {
+        let e = entry(&[9, 8, 7, 6], 2);
+        let bytes = serialize(&e);
+        assert!(deserialize(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(deserialize(&bad).is_err());
+    }
+
+    #[test]
+    fn rolling_hash_extends_incrementally() {
+        let p = [5u32, 6, 7, 8, 9, 10];
+        let h4 = prefix_key(&p[..4]);
+        assert_eq!(hash_extend(h4, &p[4..6]), prefix_key(&p[..6]));
+        assert_ne!(prefix_key(&p[..4]), prefix_key(&p[..6]));
+    }
+
+    #[test]
+    fn extract_then_seed_round_trips_block_by_block() {
+        let mut src = TwoLevelCache::new(2, 2, 3, 8, 4);
+        let n = 4usize;
+        for l in 0..2 {
+            let block: Vec<f32> = (0..2 * n * 3).map(|i| (l * 100 + i) as f32).collect();
+            let neg: Vec<f32> = block.iter().map(|x| -x).collect();
+            src.append_past_block(l, &block, &neg, n, n).unwrap();
+        }
+        src.commit_past(n);
+        // two chunk blocks, seeded in chain order onto a fresh cache
+        let b0 = PrefixKv::extract_range(&src, 0, 2).unwrap();
+        let b1 = PrefixKv::extract_range(&src, 2, 4).unwrap();
+        let mut dst = TwoLevelCache::new(2, 2, 3, 8, 4);
+        // out-of-order seeding is rejected
+        assert!(b1.seed(&mut dst).is_err());
+        b0.seed(&mut dst).unwrap();
+        b1.seed(&mut dst).unwrap();
+        assert_eq!(dst.past_len(), n);
+        for l in 0..2 {
+            for h in 0..2 {
+                for r in 0..n {
+                    assert_eq!(dst.read_past_slot(l, h, r), src.read_past_slot(l, h, r));
+                }
+            }
+        }
+    }
+}

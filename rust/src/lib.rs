@@ -88,7 +88,19 @@
 //!   epochs feeding the device mirror, and the epoch-ordered
 //!   [`kvcache::CacheCommit`] replay protocol for the overlapped sync
 //!   phase), transmission scheduler, link model, and the workflow DAG
-//!   controller.
+//!   controller. [`kvcache::prefix`] (ISSUE 8) is the tiered
+//!   cross-request prefix cache: a content-addressed
+//!   [`kvcache::prefix::PrefixStore`] keys chunk-aligned token prefixes
+//!   of the context-truncated prompt by rolling hash and holds one
+//!   chunk's past-KV per block — L1 as `Arc`-shared read-only host
+//!   tensors, L2 as a checksummed disk spill directory, LRU eviction
+//!   against per-tier byte budgets, promotion back to L1 on hit.
+//!   Engines probe it at admission, seed session caches from the hit
+//!   chain, prefill only the uncovered suffix, and insert the session's
+//!   own blocks afterward; configured by the `[prefix_cache]` TOML
+//!   section / `--prefix-*` CLI flags, measured by
+//!   `rust/benches/bench_prefix.rs` → `BENCH_prefix.json`.
+//!
 //! * [`config`], [`tokenizer`], [`metrics`], [`util`] — configuration
 //!   (TOML subset), byte-level tokenizer, metrics/tables (including the
 //!   thread-safe [`metrics::SharedMetrics`] sink the pipeline workers
@@ -121,6 +133,23 @@
 //! * [`sim`] — calibrated cluster simulator for paper-scale figures.
 //! * [`workload`], [`bench_support`] — the six evaluation domains and the
 //!   bench harness used by `rust/benches/fig*.rs`.
+//!
+//! # Environment knobs
+//!
+//! Every `PIPEDEC_*` variable the crate reads:
+//!
+//! * `PIPEDEC_ARTIFACTS` — artifacts directory override (see
+//!   [`artifacts_dir`]); tests and benches skip gracefully when the
+//!   directory has no built artifacts.
+//! * `PIPEDEC_NO_KV_APPEND` — force the device KV mirror onto the full
+//!   re-upload fallback instead of the donated in-place append path
+//!   (ISSUE 7 baseline; read once at model load).
+//! * `PIPEDEC_NO_PREFIX_CACHE` — kill-switch for the cross-request
+//!   prefix cache, overriding an enabled `[prefix_cache]` config (read
+//!   once at engine construction; ISSUE 8).
+//! * `PIPEDEC_LOOM_SEED` — schedule seed for the loom-style
+//!   schedule-perturbing shim in [`concurrency::sync`] (only meaningful
+//!   under `--cfg loom`).
 
 // Unsafe-audit wall (ISSUE 6): every `unsafe` block, fn, and impl in
 // this crate must carry a `// SAFETY:` comment, and unsafe operations

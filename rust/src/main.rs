@@ -29,6 +29,8 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
                   [--children C] [--max-new N] [--prompt TEXT | --domain D]
                   [--temperature T] [--top-p P] [--top-k K] [--seed S]
                   [--threads T] [--overlap-sync BOOL] [--config FILE]
+                  [--no-prefix-cache] [--prefix-l1-bytes B] [--prefix-l2-bytes B]
+                  [--prefix-l2-dir DIR] [--prefix-chunk-tokens N]
                   [--no-stream]
                   decode one prompt, streaming tokens as they are verified
                   (--no-stream prints only the final completion)
@@ -47,6 +49,11 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
              (0 = auto: one per core; 1 = sequential reference path)
   --overlap-sync: overlap the sync phase's cache maintenance with the next
              timestep's compute (default true; false = serial sync)
+  --no-prefix-cache: disable the cross-request KV prefix cache (default on;
+             the PIPEDEC_NO_PREFIX_CACHE env var is an equivalent kill-switch)
+  --prefix-l1-bytes / --prefix-l2-bytes: tier byte budgets for the prefix
+             cache; --prefix-l2-dir enables the disk spill tier;
+             --prefix-chunk-tokens sets the key granularity (0 = auto)
 
   KIND (--engine): pipedec     pipeline + draft-in-pipeline dynamic-tree speculation
                    pipedec-db  SpecPipe-DB: continuous batching across requests
@@ -55,7 +62,7 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
                    slm         draft-size model standalone on one device";
 
 /// Flags that take no value; everything else expects one.
-const BOOL_FLAGS: &[&str] = &["no-stream"];
+const BOOL_FLAGS: &[&str] = &["no-stream", "no-prefix-cache"];
 
 /// Parse `--flag value`, `--flag=value`, and bare boolean flags into a map,
 /// rejecting anything not in `allowed` with the usage string.
@@ -95,6 +102,8 @@ fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, Stri
 const ENGINE_CFG_FLAGS: &[&str] = &[
     "engine", "stages", "group-size", "width", "children", "max-new",
     "temperature", "top-p", "top-k", "seed", "threads", "overlap-sync", "config",
+    "no-prefix-cache", "prefix-l1-bytes", "prefix-l2-bytes", "prefix-l2-dir",
+    "prefix-chunk-tokens",
 ];
 
 fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
@@ -134,6 +143,21 @@ fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     }
     if let Some(v) = flags.get("overlap-sync") {
         cfg.overlap_sync = v.parse()?;
+    }
+    if let Some(v) = flags.get("no-prefix-cache") {
+        cfg.prefix_cache.enabled = !v.parse::<bool>()?;
+    }
+    if let Some(v) = flags.get("prefix-l1-bytes") {
+        cfg.prefix_cache.l1_bytes = v.parse()?;
+    }
+    if let Some(v) = flags.get("prefix-l2-bytes") {
+        cfg.prefix_cache.l2_bytes = v.parse()?;
+    }
+    if let Some(v) = flags.get("prefix-l2-dir") {
+        cfg.prefix_cache.l2_dir = Some(v.clone());
+    }
+    if let Some(v) = flags.get("prefix-chunk-tokens") {
+        cfg.prefix_cache.chunk_tokens = v.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)

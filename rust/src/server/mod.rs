@@ -86,6 +86,13 @@ pub struct Completion {
     /// re-uploads (the ISSUE 7 fallback path; ~0 in steady state when
     /// the device-side append entry points are loaded).
     pub kv_reup_bytes: u64,
+    /// Prompt tokens covered by a cross-request prefix-cache hit at
+    /// admission (ISSUE 8); 0 on a miss or with the cache disabled.
+    pub prefix_hit_tokens: u64,
+    /// Prompt tokens prefill never re-computed thanks to the prefix
+    /// cache (today identical to `prefix_hit_tokens`; kept separate so a
+    /// partial-seed policy can diverge without a wire change).
+    pub prefill_tokens_saved: u64,
 }
 
 /// FIFO admission queue with a capacity bound (backpressure).
@@ -238,6 +245,16 @@ fn kv_byte_split(m: &Metrics) -> (u64, u64) {
     (m.counter("hd_kv_app_bytes"), m.counter("hd_kv_reup_bytes"))
 }
 
+/// Pull the cross-request prefix-cache accounting out of an engine's
+/// metrics: (hit tokens, prefill tokens saved). Engines without a prefix
+/// cache report (0, 0).
+fn prefix_stats(m: &Metrics) -> (u64, u64) {
+    (
+        m.counter("prefix_hit_tokens"),
+        m.counter("prefill_tokens_saved"),
+    )
+}
+
 /// Bookkeeping for one request in flight inside the scheduler.
 struct Ticket {
     router_id: u64,
@@ -293,6 +310,7 @@ pub fn serve_until_idle(
             let (t_decide_s, t_commit_s, sync_overlap_ratio) =
                 sync_breakdown(&output.metrics);
             let (kv_app_bytes, kv_reup_bytes) = kv_byte_split(&output.metrics);
+            let (prefix_hit_tokens, prefill_tokens_saved) = prefix_stats(&output.metrics);
             out.push(Completion {
                 id: ticket.router_id,
                 engine: sched.name(),
@@ -308,6 +326,8 @@ pub fn serve_until_idle(
                 sync_overlap_ratio,
                 kv_app_bytes,
                 kv_reup_bytes,
+                prefix_hit_tokens,
+                prefill_tokens_saved,
             });
         }
     }
@@ -327,6 +347,7 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
         debug_assert_eq!(probe.tokens(), result.tokens.len());
         let (t_decide_s, t_commit_s, sync_overlap_ratio) = sync_breakdown(&result.metrics);
         let (kv_app_bytes, kv_reup_bytes) = kv_byte_split(&result.metrics);
+        let (prefix_hit_tokens, prefill_tokens_saved) = prefix_stats(&result.metrics);
         out.push(Completion {
             id: req.id,
             engine: engine.name(),
@@ -342,6 +363,8 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
             sync_overlap_ratio,
             kv_app_bytes,
             kv_reup_bytes,
+            prefix_hit_tokens,
+            prefill_tokens_saved,
         });
     }
     Ok(out)
@@ -351,7 +374,9 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
 /// counters plus `latency_s`, `first_token_s`, `tbt_s`, and `queue_depth`
 /// series, the per-decode sync-phase breakdown (`t_decide_s`,
 /// `t_commit_s`, `sync_overlap_ratio` — ISSUE 5), the KV-mirror upload
-/// split (`kv_app_bytes` / `kv_reup_bytes` counters — ISSUE 7), and the
+/// split (`kv_app_bytes` / `kv_reup_bytes` counters — ISSUE 7), the
+/// prefix-cache reuse counters (`prefix_hit_tokens` /
+/// `prefill_tokens_saved` — ISSUE 8), and the
 /// full-latency sample summary. `tbt_s` samples only requests that
 /// streamed at least two tokens; the sync series sample only requests
 /// that hit a sync point (decodes of a single token have none).
@@ -375,6 +400,8 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
         }
         m.incr("kv_app_bytes", c.kv_app_bytes);
         m.incr("kv_reup_bytes", c.kv_reup_bytes);
+        m.incr("prefix_hit_tokens", c.prefix_hit_tokens);
+        m.incr("prefill_tokens_saved", c.prefill_tokens_saved);
         lat.push(c.latency_s);
         total_tokens += c.tokens;
     }

@@ -1,0 +1,263 @@
+//! Store-level tests for the tiered cross-request prefix cache
+//! (`kvcache::prefix`, ISSUE 8): longest-prefix lookup across chunk
+//! boundaries, byte-budget eviction, L2 round trips, checksum
+//! corruption handling, `Arc`-shared residency, and truncation-robust
+//! keying. The final test drives the real engine (artifact-gated) to
+//! prove prompts differing only beyond the context-truncation point
+//! still share a cached prefix.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::engine::{build_engine, DecodeRequest, EngineKind, NullSink};
+use pipedec::kvcache::prefix::{prefix_key, PrefixEntry, PrefixKv, PrefixStore};
+
+const CHUNK: usize = 4;
+
+/// One single-cache block for the final chunk of `tokens`: layers=1,
+/// heads=1, head_dim=2, with tensor values derived from the tokens so
+/// different prefixes hold different payloads.
+fn block(tokens: &[u32]) -> PrefixEntry {
+    assert!(tokens.len() >= CHUNK && tokens.len() % CHUNK == 0);
+    let start = tokens.len() - CHUNK;
+    let fill = tokens[start] as f32;
+    let n = CHUNK * 2;
+    PrefixEntry {
+        tokens: tokens.to_vec(),
+        kv: vec![PrefixKv {
+            layers: 1,
+            heads: 1,
+            head_dim: 2,
+            start,
+            rows: CHUNK,
+            k: (0..n).map(|i| fill + i as f32 * 0.5).collect(),
+            v: (0..n).map(|i| -fill - i as f32 * 0.25).collect(),
+        }],
+    }
+}
+
+/// Insert the full block chain for a chunk-aligned prompt, as admission
+/// does after prefill.
+fn insert_chain(store: &mut PrefixStore, prompt: &[u32]) {
+    let mut b = CHUNK;
+    while b <= store.align_down(prompt.len()) {
+        store.insert(block(&prompt[..b])).unwrap();
+        b += CHUNK;
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipedec_prefix_test_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn lookup_returns_longest_chain_across_chunk_boundaries() {
+    let mut store = PrefixStore::new(CHUNK, 1 << 20, 1 << 20, None).unwrap();
+    let prompt: Vec<u32> = (1..=12).collect();
+    insert_chain(&mut store, &prompt);
+
+    // full coverage: three consecutive blocks, in seeding order
+    let chain = store.lookup(&prompt, prompt.len());
+    assert_eq!(chain.len(), 3);
+    assert_eq!(chain[0].tokens, prompt[..4]);
+    assert_eq!(chain[2].tokens, prompt[..12]);
+
+    // a cap below a boundary drops the partial chunk
+    let chain = store.lookup(&prompt, 11);
+    assert_eq!(chain.len(), 2, "cap 11 aligns down to 8");
+
+    // a prompt diverging after token 8 stops the chain at the boundary
+    let mut diverged = prompt.clone();
+    diverged[9] = 99;
+    let chain = store.lookup(&diverged, diverged.len());
+    assert_eq!(chain.len(), 2, "divergence past row 8 keeps two blocks");
+    assert_eq!(chain[1].tokens, prompt[..8]);
+
+    // a prompt diverging inside the first chunk misses entirely
+    let miss = store.lookup(&[99, 98, 97, 96, 95], 5);
+    assert!(miss.is_empty());
+    let s = store.stats();
+    assert_eq!((s.l1_hits, s.misses), (3, 1));
+}
+
+#[test]
+fn eviction_never_exceeds_either_tier_budget() {
+    let dir = tmp_dir("evict");
+    let b = block(&[1, 2, 3, 4]).bytes();
+    // exactly two blocks fit in L1, exactly one spill file fits in L2
+    let mut store = PrefixStore::new(CHUNK, 2 * b, b, Some(dir.clone())).unwrap();
+    for base in 0u32..4 {
+        let prompt: Vec<u32> = (0..CHUNK as u32).map(|i| base * 100 + i).collect();
+        store.insert(block(&prompt)).unwrap();
+        assert!(store.l1_bytes() <= 2 * b, "L1 over budget after insert {base}");
+        assert!(store.l2_bytes() <= b, "L2 over budget after insert {base}");
+    }
+    assert_eq!((store.l1_len(), store.l2_len()), (2, 1));
+    let s = store.stats();
+    assert_eq!(s.evictions, 3, "two L1 demotions + one L2 drop");
+    assert_eq!(s.spills, 2);
+    // dropped spill files are really deleted
+    let files = std::fs::read_dir(&dir).unwrap().count();
+    assert_eq!(files, store.l2_len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn l2_round_trip_restores_bit_identical_tensors() {
+    let dir = tmp_dir("roundtrip");
+    // zero L1 budget: every insert demotes to disk immediately
+    let mut store = PrefixStore::new(CHUNK, 0, 1 << 20, Some(dir.clone())).unwrap();
+    let prompt: Vec<u32> = vec![7, 11, 13, 17];
+    let original = store.insert(block(&prompt)).unwrap();
+    assert_eq!(store.l1_len(), 0);
+    assert_eq!(store.l2_len(), 1);
+
+    let chain = store.lookup(&prompt, prompt.len());
+    assert_eq!(chain.len(), 1, "spilled block must promote on lookup");
+    assert_eq!(store.stats().l2_hits, 1);
+    let promoted = &chain[0];
+    assert_eq!(**promoted, *original, "promoted block differs from inserted");
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&promoted.kv[0].k), bits(&original.kv[0].k));
+    assert_eq!(bits(&promoted.kv[0].v), bits(&original.kv[0].v));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checksum_corruption_reads_as_miss_and_deletes_the_file() {
+    let dir = tmp_dir("corrupt");
+    let mut store = PrefixStore::new(CHUNK, 0, 1 << 20, Some(dir.clone())).unwrap();
+    let prompt: Vec<u32> = vec![21, 22, 23, 24];
+    store.insert(block(&prompt)).unwrap();
+    let file = store.l2_file(&prompt).expect("block spilled to disk");
+
+    // flip one payload byte behind the checksum
+    let mut bytes = std::fs::read(&file).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&file, bytes).unwrap();
+
+    let chain = store.lookup(&prompt, prompt.len());
+    assert!(chain.is_empty(), "corrupt spill must degrade to a miss");
+    let s = store.stats();
+    assert_eq!((s.misses, s.corrupt_dropped), (1, 1));
+    assert!(!file.exists(), "corrupt spill file must be deleted");
+    assert!(!store.contains(&prompt));
+    assert_eq!((store.l2_len(), store.l2_bytes()), (0, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_sessions_share_one_l1_copy_per_block() {
+    let mut store = PrefixStore::new(CHUNK, 1 << 20, 1 << 20, None).unwrap();
+    let template: Vec<u32> = (100..108).collect();
+    insert_chain(&mut store, &template);
+    let resident_bytes = store.l1_bytes();
+
+    // two "sessions" probing the same template pin the same Arcs
+    let s1 = store.lookup(&template, template.len());
+    let s2 = store.lookup(&template, template.len());
+    for (a, b) in s1.iter().zip(&s2) {
+        assert!(Arc::ptr_eq(a, b), "sessions must share one resident copy");
+        // store + two session pins
+        assert_eq!(Arc::strong_count(a), 3);
+    }
+    // a third session re-inserting its own identical blocks converges on
+    // the resident copies instead of duplicating them
+    let before = store.stats().ref_bumps;
+    let again = store.insert(block(&template[..4])).unwrap();
+    assert!(Arc::ptr_eq(&again, &s1[0]));
+    assert_eq!(store.stats().ref_bumps, before + 1);
+    assert_eq!(store.l1_bytes(), resident_bytes, "no duplicate bytes");
+    assert_eq!(store.l1_len(), 2);
+}
+
+#[test]
+fn truncated_prompts_key_independently_of_untruncated_siblings() {
+    let mut store = PrefixStore::new(CHUNK, 1 << 20, 1 << 20, None).unwrap();
+    let long: Vec<u32> = (1..=12).collect();
+    insert_chain(&mut store, &long);
+
+    // a context-truncated sibling (first 8 tokens) covers exactly its
+    // own aligned length — never the untruncated entry beyond it
+    let truncated = &long[..8];
+    let chain = store.lookup(truncated, truncated.len());
+    assert_eq!(chain.len(), 2);
+    assert_eq!(
+        chain.last().unwrap().tokens.len(),
+        8,
+        "truncated prompt must not match past its own length"
+    );
+
+    // keys are position-exact: the full prefix and its truncation never
+    // collide, and a probe differing right after the truncation point
+    // still shares every block up to it
+    assert_ne!(prefix_key(&long), prefix_key(truncated));
+    let mut sibling = long.clone();
+    sibling[8] = 77; // diverges immediately past the truncation point
+    let chain = store.lookup(&sibling, sibling.len());
+    assert_eq!(chain.len(), 2, "shared blocks up to the divergence");
+}
+
+// ---------------------------------------------------------------------
+// Engine-level truncation regression (artifact-gated)
+// ---------------------------------------------------------------------
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+/// Prefix keys must be computed over the *context-truncated* prompt:
+/// two prompts that only differ beyond the truncation point truncate to
+/// the same token ids, so the second decode must hit the first one's
+/// cached prefix and produce bit-identical greedy output.
+#[test]
+fn prompts_differing_beyond_truncation_point_still_hit() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = EngineConfig {
+        stages: 2,
+        tree: TreeConfig {
+            max_width: 4,
+            max_children: 4,
+            max_depth: 8,
+        },
+        max_new_tokens: 8,
+        ..EngineConfig::default()
+    };
+    let mut engine = build_engine(EngineKind::PipeDec, &dir, cfg).unwrap();
+
+    // far longer than any model context: both prompts truncate to the
+    // same ids, differing only in the tail the engine never sees
+    let base = "the quick brown fox jumps over the lazy dog. ".repeat(4096);
+    let p1 = format!("{base}ending one");
+    let p2 = format!("{base}ending two");
+
+    let out1 = engine
+        .decode(&DecodeRequest::new(&p1), &mut NullSink)
+        .unwrap();
+    let out2 = engine
+        .decode(&DecodeRequest::new(&p2), &mut NullSink)
+        .unwrap();
+
+    assert_eq!(out1.metrics.counter("prefix_hit_tokens"), 0, "cold decode");
+    assert!(
+        out2.metrics.counter("prefix_hit_tokens") > 0,
+        "a prompt differing only beyond the truncation point must hit \
+         the truncated sibling's cached prefix"
+    );
+    assert!(
+        out2.metrics.counter("prefill_tokens") < out1.metrics.counter("prefill_tokens"),
+        "the warm decode must compute fewer prefill tokens"
+    );
+    assert_eq!(
+        out1.tokens, out2.tokens,
+        "identical truncated prompts must decode identically through the cache"
+    );
+}

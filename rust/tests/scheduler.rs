@@ -7,8 +7,10 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecDbEngine;
 use pipedec::engine::{
     build_engine, build_scheduled_engine, DecodeOutput, DecodeRequest, Engine, EngineKind,
     OneShotScheduler, ScheduledEngine, SessionId, SessionStatus, TokenSink,
@@ -304,4 +306,66 @@ fn db_cancelled_sessions_never_emit_again() {
     assert!(sched.poll(a).is_none());
     assert!(sched.poll(b).is_none());
     assert!(!sched.cancel(SessionId(999)), "unknown ids are not cancellable");
+}
+
+/// ISSUE 8: cancellation at any admission stage must not leak a pinned
+/// prefix-cache block or a device KV mirror slot.
+#[test]
+fn db_cancel_during_admission_leaks_no_prefix_pin_or_mirror() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut eng = PipeDecDbEngine::new(&dir, cfg()).unwrap();
+
+    // A runs to completion: the store warms with the template's blocks
+    // and the retired session releases its mirrors — that's the baseline
+    let a = eng
+        .submit(DecodeRequest::new(PROMPTS[0]), Box::new(pipedec::engine::NullSink))
+        .unwrap();
+    drive_to_idle(&mut eng);
+    assert!(eng.poll(a).is_some());
+    let baseline = eng.mirror_counts();
+    assert_eq!(eng.pinned_prefix_sessions(), 0);
+    let warmed = eng.prefix_store().map_or(0, |s| s.l1_len());
+    assert!(warmed > 0, "finished session must leave its prefix blocks");
+
+    // B: same template, cancelled while still queued — it was never
+    // admitted, so no pin and no mirror slot may appear
+    let b = eng
+        .submit(DecodeRequest::new(PROMPTS[0]), Box::new(pipedec::engine::NullSink))
+        .unwrap();
+    assert!(eng.cancel(b));
+    assert_eq!(eng.mirror_counts(), baseline, "queued cancel grew a mirror");
+    assert_eq!(eng.pinned_prefix_sessions(), 0);
+
+    // C: admitted (pins the shared blocks, warms mirrors), cancelled
+    // before finishing — retire must drop the pins and mirror slots
+    let c = eng
+        .submit(DecodeRequest::new(PROMPTS[0]), Box::new(pipedec::engine::NullSink))
+        .unwrap();
+    for _ in 0..100_000 {
+        if eng.status(c) == Some(SessionStatus::Running) {
+            break;
+        }
+        eng.step().unwrap();
+    }
+    assert_eq!(eng.status(c), Some(SessionStatus::Running), "C never admitted");
+    assert!(eng.pinned_prefix_sessions() >= 1, "admission must pin blocks");
+    assert!(eng.cancel(c));
+    assert_eq!(eng.pinned_prefix_sessions(), 0, "cancel leaked a prefix pin");
+    assert_eq!(eng.mirror_counts(), baseline, "cancel leaked a mirror slot");
+
+    // only the store's own handle (plus ours) remains on the shared
+    // template block once every session is gone
+    let store = eng.prefix_store().expect("prefix cache on by default");
+    let chunk = store.chunk_tokens();
+    let ids = tokenizer::encode(PROMPTS[0]);
+    assert!(ids.len() > chunk, "template spans at least one block");
+    let blk = store.peek_l1(&ids[..chunk]).expect("template block resident");
+    assert_eq!(
+        Arc::strong_count(&blk),
+        2,
+        "cancelled sessions must not hold prefix block references"
+    );
 }
