@@ -79,6 +79,33 @@ impl PrefixCacheConfig {
     }
 }
 
+/// Deadline and admission limits for the fault-isolated serving core
+/// (ISSUE 9): `[limits]` in TOML, `--ttft-deadline` / `--deadline` /
+/// `--queue-max-wait` / `--max-queue` on the CLI. Every limit defaults
+/// to 0 = disabled, so existing configs and tests are unaffected.
+///
+/// Deadlines are *checked at scheduler step boundaries* (the engine is
+/// step-driven; nothing preempts a running forward pass), so enforcement
+/// granularity is one timestep. An over-deadline session retires as
+/// [`crate::engine::SessionStatus::Failed`] with a reason starting with
+/// `"deadline"`; an over-capacity submit is rejected with
+/// [`crate::engine::ShedError`] carrying the queue depth.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LimitsConfig {
+    /// Seconds a session may wait for its *first* token, measured from
+    /// submit. 0 = no TTFT deadline.
+    pub ttft_deadline_s: f64,
+    /// Total wall seconds a session may live, measured from submit.
+    /// 0 = no total deadline.
+    pub deadline_s: f64,
+    /// Seconds a queued session may wait for admission before the
+    /// scheduler sheds it. 0 = wait forever.
+    pub queue_max_wait_s: f64,
+    /// Maximum queued (not yet admitted) sessions; submits beyond this
+    /// are rejected with [`crate::engine::ShedError`]. 0 = unbounded.
+    pub queue_cap: usize,
+}
+
 /// Engine/topology parameters for the real (artifact-backed) engine.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
@@ -118,6 +145,12 @@ pub struct EngineConfig {
     pub overlap_sync: bool,
     /// Tiered cross-request KV prefix cache (ISSUE 8).
     pub prefix_cache: PrefixCacheConfig,
+    /// Deadlines and admission shedding (ISSUE 9); all-zero = disabled.
+    pub limits: LimitsConfig,
+    /// Fault-injection plan armed at engine construction (ISSUE 9):
+    /// `[faultinject] plan = "site@hit=kind,..."`. The `PIPEDEC_FAULTS`
+    /// env var overrides it; `None`/empty leaves the layer disarmed.
+    pub fault_plan: Option<String>,
 }
 
 impl Default for EngineConfig {
@@ -135,6 +168,8 @@ impl Default for EngineConfig {
             threads: 0,
             overlap_sync: true,
             prefix_cache: PrefixCacheConfig::default(),
+            limits: LimitsConfig::default(),
+            fault_plan: None,
         }
     }
 }
@@ -184,6 +219,21 @@ impl EngineConfig {
         if let Some(v) = doc.get("prefix_cache", "chunk_tokens") {
             cfg.prefix_cache.chunk_tokens = v.as_usize()?;
         }
+        if let Some(v) = doc.get("limits", "ttft_deadline_s") {
+            cfg.limits.ttft_deadline_s = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("limits", "deadline_s") {
+            cfg.limits.deadline_s = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("limits", "queue_max_wait_s") {
+            cfg.limits.queue_max_wait_s = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("limits", "queue_cap") {
+            cfg.limits.queue_cap = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("faultinject", "plan") {
+            cfg.fault_plan = Some(v.as_str()?.to_string());
+        }
         if let Some(v) = doc.get("tree", "max_width") {
             cfg.tree.max_width = v.as_usize()?;
         }
@@ -230,6 +280,16 @@ impl EngineConfig {
                 .is_none_or(|d| !d.is_empty()),
             "prefix_cache.l2_dir must be non-empty when set"
         );
+        anyhow::ensure!(
+            self.limits.ttft_deadline_s >= 0.0
+                && self.limits.deadline_s >= 0.0
+                && self.limits.queue_max_wait_s >= 0.0,
+            "limits must be >= 0 (0 disables)"
+        );
+        if let Some(p) = &self.fault_plan {
+            p.parse::<crate::faultinject::FaultPlan>()
+                .context("validating [faultinject] plan")?;
+        }
         Ok(())
     }
 
@@ -341,6 +401,44 @@ mod tests {
         assert!(
             EngineConfig::from_toml_str("[prefix_cache]\nl2_dir = \"\"\n").is_err(),
             "empty l2_dir rejected"
+        );
+    }
+
+    #[test]
+    fn limits_section_parses_and_defaults_off() {
+        let d = LimitsConfig::default();
+        assert_eq!(d.ttft_deadline_s, 0.0);
+        assert_eq!(d.deadline_s, 0.0);
+        assert_eq!(d.queue_max_wait_s, 0.0);
+        assert_eq!(d.queue_cap, 0);
+        let cfg = EngineConfig::from_toml_str(
+            r#"
+            [limits]
+            ttft_deadline_s = 1.5
+            deadline_s = 30.0
+            queue_max_wait_s = 2.0
+            queue_cap = 8
+            "#,
+        )
+        .unwrap();
+        assert!((cfg.limits.ttft_deadline_s - 1.5).abs() < 1e-12);
+        assert!((cfg.limits.deadline_s - 30.0).abs() < 1e-12);
+        assert!((cfg.limits.queue_max_wait_s - 2.0).abs() < 1e-12);
+        assert_eq!(cfg.limits.queue_cap, 8);
+        assert!(
+            EngineConfig::from_toml_str("[limits]\ndeadline_s = -1.0\n").is_err(),
+            "negative deadlines rejected"
+        );
+    }
+
+    #[test]
+    fn fault_plan_key_is_validated() {
+        let cfg =
+            EngineConfig::from_toml_str("[faultinject]\nplan = \"stage_job@1=error\"\n").unwrap();
+        assert_eq!(cfg.fault_plan.as_deref(), Some("stage_job@1=error"));
+        assert!(
+            EngineConfig::from_toml_str("[faultinject]\nplan = \"bogus@1=error\"\n").is_err(),
+            "malformed plan rejected at parse time"
         );
     }
 

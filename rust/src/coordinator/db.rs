@@ -45,6 +45,20 @@
 //! maintenance overlaps every other session's (and its own next) compute
 //! instead of serializing the whole batch at the coordinator.
 //!
+//! Since ISSUE 9 the scheduler is a *fault-isolated* serving core: a
+//! task panic, model/device error, admission failure, missed deadline,
+//! or stalled flow retires only the owning session(s) as
+//! [`SessionStatus::Failed`] — partial output pollable, reason recorded,
+//! mirrors/pins/slots released through the same teardown as `cancel` —
+//! while co-scheduled sessions continue bit-identically, and `step()`
+//! never fails the batch for a per-session fault. Lost worker state
+//! (a panicked task destroys its lent caches and group context) is
+//! rebuilt from host truth: a fresh [`StageContext`] re-uploads the
+//! surviving sessions' mirrors lazily through the full re-upload
+//! fallback. Admission limits (`LimitsConfig`) shed over-capacity
+//! submits with [`ShedError`] and retire over-deadline sessions with a
+//! reason starting `"deadline"`.
+//!
 //! Served both ways: natively as a [`ScheduledEngine`] (the continuous
 //! server loop) and as a one-shot [`Engine`] (a decode = one session
 //! stepped to completion), so `EngineKind::PipeDecDb` passes the same
@@ -60,13 +74,13 @@ use anyhow::{Context, Result};
 use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
 use super::workers::{
-    self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
+    self, DraftCandidate, DraftJob, DraftOutcome, DraftReply, GroupOutcome, StageJob, WorkerPool,
 };
 use crate::concurrency::protocol::CommitLog;
 use crate::config::EngineConfig;
 use crate::engine::{
     DecodeOutput, DecodeRequest, Engine, EngineKind, NullSink, ScheduledEngine, Session,
-    SessionId, SessionRecord, SessionStatus, SpecStats, StepReport, TokenSink,
+    SessionId, SessionRecord, SessionStatus, ShedError, SpecStats, StepReport, TokenSink,
 };
 use crate::kvcache::prefix::{PrefixEntry, PrefixKv, PrefixStore};
 use crate::kvcache::{CacheCommit, CommitOp, TwoLevelCache};
@@ -83,6 +97,15 @@ use crate::util::XorShiftRng;
 struct SlotFlow {
     session: SessionId,
     df: DataFlow,
+}
+
+/// How a live session leaves the scheduler (ISSUE 9). `Finished` and
+/// `Failed` both produce a pollable output (full vs partial tokens);
+/// `Cancelled` produces none.
+enum Retire {
+    Finished,
+    Cancelled,
+    Failed(String),
 }
 
 /// A live session: the shared [`Session`] shell plus the SpecPipe-DB
@@ -209,6 +232,11 @@ pub struct PipeDecDbEngine {
 impl PipeDecDbEngine {
     pub fn new(artifact_dir: &Path, mut cfg: EngineConfig) -> Result<Self> {
         cfg.validate()?;
+        // chaos layer (ISSUE 9): config-armed plan, env var wins
+        if let Some(plan) = &cfg.fault_plan {
+            crate::faultinject::arm(plan.parse()?);
+        }
+        crate::faultinject::arm_from_env()?;
         let rt = Arc::new(Runtime::cpu()?);
         let target = Arc::new(ModelCore::load_with_width(
             &rt,
@@ -319,7 +347,10 @@ impl PipeDecDbEngine {
 
     /// Admit one queued session: mint its per-request caches, run the
     /// pipeline prefill (emitting the first token), and build its tree.
-    fn admit(&mut self, mut shell: Session) -> Result<DbSession> {
+    /// On error the shell comes back with whatever caches were minted, so
+    /// the caller can release its device mirrors and fail only this
+    /// session (admission containment, ISSUE 9).
+    fn admit(&mut self, mut shell: Session) -> std::result::Result<DbSession, Box<(Session, anyhow::Error)>> {
         let (max_new, sampling, seed) = shell.req.resolve(&self.cfg);
         let tc = self.target.cfg.clone();
         let dc = self.draft.cfg.clone();
@@ -365,99 +396,111 @@ impl PipeDecDbEngine {
             .prefix
             .as_ref()
             .map_or(0, |store| store.stats().evictions);
-        if let Some(store) = self.prefix.as_mut() {
-            let before = store.stats();
-            let chain = store.lookup(&prompt, prompt.len().saturating_sub(1));
-            for entry in &chain {
-                anyhow::ensure!(
-                    entry.kv.len() == shell.caches.len(),
-                    "prefix block holds {} caches, session has {}",
-                    entry.kv.len(),
-                    shell.caches.len()
-                );
-                for (kv, cache) in entry.kv.iter().zip(shell.caches.iter_mut()) {
-                    kv.seed(cache)?;
-                }
-            }
-            if let Some(last) = chain.last() {
-                covered = last.tokens.len();
-            }
-            prefix_l1_hit = store.stats().l1_hits > before.l1_hits;
-            prefix_l2_hit = store.stats().l2_hits > before.l2_hits;
-            prefix_pins = chain;
-        }
-
-        let mut last_h = None;
-        let mut last_count = 0;
-        for chunk in prompt[covered..].chunks(w) {
-            let start = shell.caches[0].past_len();
-            let mut h = self.target.embed(&self.rt, chunk)?;
-            for s in 0..stages {
-                let range = s * lps..(s + 1) * lps;
-                let ctx = self.group_ctxs[s / gs]
-                    .as_mut()
-                    .expect("group ctx in residence");
-                h = self.target.prefill_chunk(
-                    &self.rt,
-                    ctx,
-                    range,
-                    &mut shell.caches[s],
-                    h,
-                    chunk.len(),
-                    start,
-                )?;
-            }
-            last_count = chunk.len();
-            last_h = Some(h);
-        }
-        let h = last_h.context("empty prompt")?;
-        let logits = self.target.head(&self.rt, &h)?;
-        let v = tc.vocab_size;
-        let row = &logits[(last_count - 1) * v..last_count * v];
-        let first = select_token(row, &sampling, &mut rng);
-        // draft prefill (parallel with the target on the real testbed);
-        // with a prefix hit the draft cache was seeded too, so it also
-        // runs only the uncovered suffix (positions derive from the
-        // cache's past length)
-        self.draft.full_prefill(
-            &self.rt,
-            self.draft_ctx.as_mut().expect("draft ctx in residence"),
-            &mut shell.caches[stages],
-            &prompt[covered..],
-        )?;
-        let prefill_s = t0.elapsed().as_secs_f64();
-
-        // Insert (or reference-bump) this session's own uncovered blocks
-        // so concurrent sessions sharing a template converge on one
-        // resident copy per block. Blocks at boundaries <= covered were
-        // just returned (and LRU-bumped) by the admission lookup.
-        if let Some(store) = self.prefix.as_mut() {
-            let chunk = store.chunk_tokens();
-            let insert_len = store.align_down(prompt.len());
-            let mut b = covered + chunk;
-            while b <= insert_len {
-                let pfx = &prompt[..b];
-                if let Some(arc) = store.bump(pfx) {
-                    prefix_pins.push(arc);
-                } else if !store.contains(pfx) {
-                    let kv = shell
-                        .caches
-                        .iter()
-                        .map(|c| PrefixKv::extract_range(c, b - chunk, b))
-                        .collect::<Result<Vec<_>>>()?;
-                    let entry = PrefixEntry {
-                        tokens: pfx.to_vec(),
-                        kv,
-                    };
-                    // A key collision only forfeits caching for this
-                    // block; the decode itself is unaffected.
-                    if let Ok(arc) = store.insert(entry) {
-                        prefix_pins.push(arc);
+        // Everything fallible — prefix seeding, pipeline + draft prefill,
+        // block insertion — runs inside this closure, so an error hands
+        // the shell (with its partially-mirrored caches) back to the
+        // caller for release instead of dropping it here and stranding
+        // device mirrors.
+        let mut run = || -> Result<(u32, f64)> {
+            if let Some(store) = self.prefix.as_mut() {
+                let before = store.stats();
+                let chain = store.lookup(&prompt, prompt.len().saturating_sub(1));
+                for entry in &chain {
+                    anyhow::ensure!(
+                        entry.kv.len() == shell.caches.len(),
+                        "prefix block holds {} caches, session has {}",
+                        entry.kv.len(),
+                        shell.caches.len()
+                    );
+                    for (kv, cache) in entry.kv.iter().zip(shell.caches.iter_mut()) {
+                        kv.seed(cache)?;
                     }
                 }
-                b += chunk;
+                if let Some(last) = chain.last() {
+                    covered = last.tokens.len();
+                }
+                prefix_l1_hit = store.stats().l1_hits > before.l1_hits;
+                prefix_l2_hit = store.stats().l2_hits > before.l2_hits;
+                prefix_pins = chain;
             }
-        }
+
+            let mut last_h = None;
+            let mut last_count = 0;
+            for chunk in prompt[covered..].chunks(w) {
+                let start = shell.caches[0].past_len();
+                let mut h = self.target.embed(&self.rt, chunk)?;
+                for s in 0..stages {
+                    let range = s * lps..(s + 1) * lps;
+                    let ctx = self.group_ctxs[s / gs]
+                        .as_mut()
+                        .expect("group ctx in residence");
+                    h = self.target.prefill_chunk(
+                        &self.rt,
+                        ctx,
+                        range,
+                        &mut shell.caches[s],
+                        h,
+                        chunk.len(),
+                        start,
+                    )?;
+                }
+                last_count = chunk.len();
+                last_h = Some(h);
+            }
+            let h = last_h.context("empty prompt")?;
+            let logits = self.target.head(&self.rt, &h)?;
+            let v = tc.vocab_size;
+            let row = &logits[(last_count - 1) * v..last_count * v];
+            let first = select_token(row, &sampling, &mut rng);
+            // draft prefill (parallel with the target on the real testbed);
+            // with a prefix hit the draft cache was seeded too, so it also
+            // runs only the uncovered suffix (positions derive from the
+            // cache's past length)
+            self.draft.full_prefill(
+                &self.rt,
+                self.draft_ctx.as_mut().expect("draft ctx in residence"),
+                &mut shell.caches[stages],
+                &prompt[covered..],
+            )?;
+            let prefill_s = t0.elapsed().as_secs_f64();
+
+            // Insert (or reference-bump) this session's own uncovered blocks
+            // so concurrent sessions sharing a template converge on one
+            // resident copy per block. Blocks at boundaries <= covered were
+            // just returned (and LRU-bumped) by the admission lookup.
+            if let Some(store) = self.prefix.as_mut() {
+                let chunk = store.chunk_tokens();
+                let insert_len = store.align_down(prompt.len());
+                let mut b = covered + chunk;
+                while b <= insert_len {
+                    let pfx = &prompt[..b];
+                    if let Some(arc) = store.bump(pfx) {
+                        prefix_pins.push(arc);
+                    } else if !store.contains(pfx) {
+                        let kv = shell
+                            .caches
+                            .iter()
+                            .map(|c| PrefixKv::extract_range(c, b - chunk, b))
+                            .collect::<Result<Vec<_>>>()?;
+                        let entry = PrefixEntry {
+                            tokens: pfx.to_vec(),
+                            kv,
+                        };
+                        // A key collision only forfeits caching for this
+                        // block; the decode itself is unaffected.
+                        if let Ok(arc) = store.insert(entry) {
+                            prefix_pins.push(arc);
+                        }
+                    }
+                    b += chunk;
+                }
+            }
+            Ok((first, prefill_s))
+        };
+        let (first, prefill_s) = match run() {
+            Ok(v) => v,
+            Err(e) => return Err(Box::new((shell, e))),
+        };
 
         let budget = tc.tree_cap.min(dc.tree_cap);
         let tree = PredictionTree::new(self.cfg.tree, budget, first, prompt.len());
@@ -493,14 +536,11 @@ impl PipeDecDbEngine {
     }
 
     /// Remove a live session: purge its in-flight flows, release its
-    /// device KV mirrors, drop its host caches, and (when finished) build
-    /// the final [`DecodeOutput`]. Returns the session id.
-    fn retire(
-        &mut self,
-        si: usize,
-        finished: bool,
-        next_slots: &mut [Option<SlotFlow>],
-    ) -> SessionId {
+    /// device KV mirrors, drop its host caches (and prefix pins, which
+    /// drop with the session), and build the final [`DecodeOutput`] —
+    /// full for `Finished`, partial for `Failed`, none for `Cancelled`.
+    /// Returns the session id.
+    fn retire(&mut self, si: usize, how: Retire, next_slots: &mut [Option<SlotFlow>]) -> SessionId {
         let sess = self.live.remove(si);
         let id = sess.base.id;
         if self.entry_cursor > si {
@@ -530,8 +570,11 @@ impl PipeDecDbEngine {
                     .release_cache(c.id());
             }
         }
-        let record = if finished {
+        let record = if !matches!(how, Retire::Cancelled) {
             let mut metrics = Metrics::new();
+            if matches!(how, Retire::Failed(_)) {
+                metrics.incr("failed_sessions", 1);
+            }
             metrics.incr("tokens", sess.base.tokens.len() as u64);
             metrics.incr("timesteps", sess.timesteps);
             metrics.incr("hits", sess.hits);
@@ -597,7 +640,12 @@ impl PipeDecDbEngine {
                 }),
                 metrics,
             };
-            sess.base.into_record(SessionStatus::Finished, Some(output))
+            let status = match how {
+                Retire::Finished => SessionStatus::Finished,
+                Retire::Failed(reason) => SessionStatus::Failed { reason },
+                Retire::Cancelled => unreachable!("cancelled handled below"),
+            };
+            sess.base.into_record(status, Some(output))
         } else {
             sess.base.into_record(SessionStatus::Cancelled, None)
         };
@@ -605,14 +653,81 @@ impl PipeDecDbEngine {
         id
     }
 
+    /// Retire a *queued* (never admitted) session as `Failed` — deadline
+    /// or queue-wait shedding. A queued shell owns no caches, mirrors, or
+    /// pins, so teardown is just the record.
+    fn fail_queued(&mut self, qi: usize, reason: String) -> SessionId {
+        let shell = self.queue.remove(qi).expect("queue index in bounds");
+        let id = shell.id;
+        let mut metrics = Metrics::new();
+        metrics.incr("failed_sessions", 1);
+        let output = DecodeOutput {
+            text: tokenizer::decode(&shell.tokens),
+            tokens: shell.tokens.clone(),
+            wall_s: shell.queued_at.elapsed().as_secs_f64(),
+            modeled_s: 0.0,
+            spec: None,
+            metrics,
+        };
+        self.done
+            .push(shell.into_record(SessionStatus::Failed { reason }, Some(output)));
+        id
+    }
+
+    /// Retire a shell whose *admission* failed (prefill/model error, bad
+    /// prefix block): release whatever device mirrors the partial prefill
+    /// minted for its caches, then record it as `Failed`. The admission
+    /// loop continues, so a poisoned request cannot block the queue
+    /// behind it.
+    fn fail_admission(&mut self, shell: Session, reason: String) -> SessionId {
+        let id = shell.id;
+        let stages = self.cfg.stages;
+        let gs = self.cfg.group_size;
+        for (i, c) in shell.caches.iter().enumerate() {
+            if i < stages {
+                self.group_ctxs[i / gs]
+                    .as_mut()
+                    .expect("group ctx in residence")
+                    .release_cache(c.id());
+            } else {
+                self.draft_ctx
+                    .as_mut()
+                    .expect("draft ctx in residence")
+                    .release_cache(c.id());
+            }
+        }
+        let mut metrics = Metrics::new();
+        metrics.incr("failed_sessions", 1);
+        let output = DecodeOutput {
+            text: tokenizer::decode(&shell.tokens),
+            tokens: shell.tokens.clone(),
+            wall_s: shell.queued_at.elapsed().as_secs_f64(),
+            modeled_s: 0.0,
+            spec: None,
+            metrics,
+        };
+        self.done
+            .push(shell.into_record(SessionStatus::Failed { reason }, Some(output)));
+        id
+    }
+
     /// Build, execute, and reabsorb one step's task set: one task per
     /// occupied pipeline slot plus the draft/entry task over all live
     /// sessions in round-robin order. Returns the draft outcome, the
-    /// per-group outcomes, and each dispatched group's owning session.
+    /// per-group outcomes, each dispatched group's owning session, and
+    /// the sessions a task failure implicated (ISSUE 9) — the caller
+    /// retires exactly those as `Failed` and keeps serving the rest, so
+    /// this function never fails the batch: lost contexts are rebuilt
+    /// from host truth right here.
     #[allow(clippy::type_complexity)]
     fn run_step_tasks(
         &mut self,
-    ) -> Result<(DraftOutcome, Vec<Option<GroupOutcome>>, Vec<Option<SessionId>>)> {
+    ) -> (
+        DraftOutcome,
+        Vec<Option<GroupOutcome>>,
+        Vec<Option<SessionId>>,
+        Vec<(SessionId, String)>,
+    ) {
         let groups = self.groups();
         let gs = self.cfg.group_size;
         let lps = self.layers_per_stage;
@@ -702,6 +817,9 @@ impl PipeDecDbEngine {
                 break;
             }
         }
+        // dispatched candidate tags, for failure attribution when the
+        // whole draft task is lost with its state
+        let cand_tags: Vec<usize> = candidates.iter().map(|c| c.tag).collect();
         let draft_job = DraftJob {
             core: Arc::clone(&self.draft),
             ctx: self.draft_ctx.take().expect("draft ctx in residence"),
@@ -710,22 +828,68 @@ impl PipeDecDbEngine {
             metrics: Arc::clone(&self.worker_metrics),
         };
 
-        let (draft_done, stage_dones) =
-            workers::run_tasks(self.pool.as_ref(), &self.rt, draft_job, stage_jobs);
+        let (draft_reply, stage_replies) =
+            workers::run_tasks(self.pool.as_mut(), &self.rt, draft_job, stage_jobs);
 
-        // Reabsorb every lent piece before surfacing any task error.
-        self.draft_ctx = Some(draft_done.ctx);
-        for cand in draft_done.candidates {
-            let sess = &mut self.live[cand.tag];
-            sess.base.caches[di] = cand.cache;
-            sess.tree = cand.tree; // adopt the (possibly expanded) tree
-            sess.entry = cand.entry; // unconsumed entry flows come back
-            sess.t_commit_worker_s += cand.commit_s;
-        }
+        // Reabsorb every lent piece — rebuilding from host truth what died
+        // with a lost task — and attribute each failure to the session(s)
+        // whose state it touched.
+        let mut failures: Vec<(SessionId, String)> = Vec::new();
+        let draft_oc = match draft_reply {
+            DraftReply::Done(done) => {
+                self.draft_ctx = Some(done.ctx);
+                for cand in done.candidates {
+                    let sess = &mut self.live[cand.tag];
+                    sess.base.caches[di] = cand.cache;
+                    sess.tree = cand.tree; // adopt the (possibly expanded) tree
+                    sess.entry = cand.entry; // unconsumed entry flows come back
+                    sess.t_commit_worker_s += cand.commit_s;
+                }
+                match done.res {
+                    Ok(oc) => oc,
+                    Err(e) => {
+                        // The error struck one candidate's state (its
+                        // draft cache / tree may be mid-mutation): fail
+                        // exactly that session. `failed_tag: None` means
+                        // no candidate was touched — benign to every
+                        // session; entries were restored above and the
+                        // next step re-dispatches them.
+                        if let Some(tag) = done.failed_tag {
+                            failures.push((
+                                self.live[tag].base.id,
+                                format!("draft task failed: {e:#}"),
+                            ));
+                        }
+                        DraftOutcome {
+                            granted: None,
+                            draft_s: 0.0,
+                        }
+                    }
+                }
+            }
+            DraftReply::Lost { reason } => {
+                // The draft context and every dispatched candidate's
+                // state (tree, draft cache, pending entry flow) died with
+                // the task: rebuild the context from host truth and fail
+                // exactly the dispatched sessions — undispatched sessions
+                // never lent anything and continue untouched.
+                self.draft_ctx = Some(self.draft.context());
+                for &tag in &cand_tags {
+                    failures.push((
+                        self.live[tag].base.id,
+                        format!("draft task lost: {reason}"),
+                    ));
+                }
+                DraftOutcome {
+                    granted: None,
+                    draft_s: 0.0,
+                }
+            }
+        };
         let group_ctxs = &mut self.group_ctxs;
         let live = &mut self.live;
-        let (outcomes, first_err) =
-            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches, commit_s| {
+        let (outcomes, stage_failures) =
+            workers::absorb_stage_dones(groups, stage_replies, |g, ctx, caches, commit_s| {
                 group_ctxs[g] = Some(ctx);
                 if let Some(owner) = slot_owner[g] {
                     if let Some(si) = live.iter().position(|s| s.base.id == owner) {
@@ -736,27 +900,23 @@ impl PipeDecDbEngine {
                     }
                 }
             });
+        for f in stage_failures {
+            if f.state_lost {
+                // the group context (and the owner's member caches) died
+                // with the task: a fresh context rebuilds the surviving
+                // sessions' device mirrors lazily through the full
+                // re-upload fallback — host caches are the truth
+                self.group_ctxs[f.group] = Some(self.target.context());
+            }
+            if let Some(owner) = slot_owner[f.group] {
+                failures.push((owner, format!("group {} task failed: {}", f.group, f.reason)));
+            }
+        }
         // retire commit-log entries every owner of a session has applied
         for sess in self.live.iter_mut() {
             sess.trim_commit_log();
         }
-        if let Some(e) = first_err {
-            // A stage task failed. The draft grant — possibly a consumed
-            // entry flow — must go back to its owner as the pending entry
-            // before the error surfaces, or that session would lose its
-            // slot-0 (re)start forever. (In-flight flows of the errored
-            // step's *stage* jobs are dropped: after a model-execution
-            // failure the engine is degraded and callers should drain —
-            // the stall guard reports any session this leaves stuck.)
-            if let Ok(oc) = draft_done.res {
-                if let Some((si, df)) = oc.granted {
-                    self.live[si].entry = Some(df);
-                }
-            }
-            return Err(e);
-        }
-        let draft_oc = draft_done.res?;
-        Ok((draft_oc, outcomes, slot_owner))
+        (draft_oc, outcomes, slot_owner, failures)
     }
 
     /// One pipeline timestep across all live sessions (Fig. 2, batched):
@@ -771,25 +931,92 @@ impl PipeDecDbEngine {
         let d_bytes = self.target.cfg.dim * self.target.cfg.width_cap * 4;
         let mut next_slots: Vec<Option<SlotFlow>> = (0..groups).map(|_| None).collect();
 
-        // ---- admission: fill free session slots from the FIFO queue ----
+        // ---- deadlines (ISSUE 9, `LimitsConfig`): enforced at step
+        // boundaries — queued sessions against the queue max-wait and the
+        // TTFT deadline (admission is what produces the first token),
+        // live sessions against the total-wall deadline ----
+        let lim = self.cfg.limits;
+        if lim.queue_max_wait_s > 0.0 || lim.ttft_deadline_s > 0.0 || lim.deadline_s > 0.0 {
+            let mut qi = 0;
+            while qi < self.queue.len() {
+                let waited = self.queue[qi].queued_at.elapsed().as_secs_f64();
+                let over = |limit: f64| limit > 0.0 && waited > limit;
+                let reason = if over(lim.queue_max_wait_s) {
+                    Some(format!(
+                        "deadline: queued {waited:.3}s > queue_max_wait_s {}",
+                        lim.queue_max_wait_s
+                    ))
+                } else if over(lim.ttft_deadline_s) {
+                    Some(format!(
+                        "deadline: no first token after {waited:.3}s > ttft_deadline_s {}",
+                        lim.ttft_deadline_s
+                    ))
+                } else if over(lim.deadline_s) {
+                    Some(format!(
+                        "deadline: queued {waited:.3}s > deadline_s {}",
+                        lim.deadline_s
+                    ))
+                } else {
+                    None
+                };
+                match reason {
+                    Some(reason) => {
+                        let fid = self.fail_queued(qi, reason);
+                        report.finished.push(fid);
+                    }
+                    None => qi += 1,
+                }
+            }
+        }
+        if lim.deadline_s > 0.0 {
+            let over: Vec<SessionId> = self
+                .live
+                .iter()
+                .filter(|s| s.base.queued_at.elapsed().as_secs_f64() > lim.deadline_s)
+                .map(|s| s.base.id)
+                .collect();
+            for id in over {
+                if let Some(si) = self.live_index(id) {
+                    let elapsed = self.live[si].base.queued_at.elapsed().as_secs_f64();
+                    let reason = format!(
+                        "deadline: session wall {elapsed:.3}s > deadline_s {}",
+                        lim.deadline_s
+                    );
+                    let fid = self.retire(si, Retire::Failed(reason), &mut next_slots);
+                    report.finished.push(fid);
+                }
+            }
+        }
+
+        // ---- admission: fill free session slots from the FIFO queue; a
+        // failed admission retires only that session and the loop keeps
+        // refilling, so a poisoned request never blocks the queue ----
         while self.live.len() < self.max_live && !self.queue.is_empty() {
             let shell = self.queue.pop_front().expect("non-empty queue");
-            let sess = self.admit(shell)?;
-            let id = sess.base.id;
-            let first = *sess.base.tokens.last().expect("prefill emits a token");
-            report.admitted.push(id);
-            report.emitted.push((id, first));
-            self.live.push(sess);
-            let si = self.live.len() - 1;
-            if self.live[si].base.tokens.len() >= self.live[si].max_new {
-                let fid = self.retire(si, true, &mut next_slots);
-                report.finished.push(fid);
+            match self.admit(shell) {
+                Ok(sess) => {
+                    let id = sess.base.id;
+                    let first = *sess.base.tokens.last().expect("prefill emits a token");
+                    report.admitted.push(id);
+                    report.emitted.push((id, first));
+                    self.live.push(sess);
+                    let si = self.live.len() - 1;
+                    if self.live[si].base.tokens.len() >= self.live[si].max_new {
+                        let fid = self.retire(si, Retire::Finished, &mut next_slots);
+                        report.finished.push(fid);
+                    }
+                }
+                Err(boxed) => {
+                    let (shell, e) = *boxed;
+                    let fid = self.fail_admission(shell, format!("admission failed: {e:#}"));
+                    report.finished.push(fid);
+                }
             }
         }
 
         // ---- stage + draft/entry phases: the step's task set, executed
         // concurrently on the worker pool (inline when threads = 1) ----
-        let (draft_oc, outcomes, slot_owner) = if self.live.is_empty() {
+        let (draft_oc, outcomes, slot_owner, failures) = if self.live.is_empty() {
             (
                 DraftOutcome {
                     granted: None,
@@ -797,9 +1024,10 @@ impl PipeDecDbEngine {
                 },
                 (0..groups).map(|_| None).collect(),
                 vec![None; groups],
+                Vec::new(),
             )
         } else {
-            self.run_step_tasks()?
+            self.run_step_tasks()
         };
 
         // ---- deterministic post-order: transfer accounting and flow
@@ -836,6 +1064,18 @@ impl PipeDecDbEngine {
             self.entry_cursor = (si + 1) % self.live.len();
         }
 
+        // ---- failure domains (ISSUE 9): a session whose task errored or
+        // was lost with a worker retires here as `Failed`, releasing its
+        // mirrors/pins/slot; the exits below look sessions up by id, so a
+        // failed session's in-flight results are skipped and every other
+        // session proceeds bit-identically ----
+        for (id, reason) in failures {
+            if let Some(si) = self.live_index(id) {
+                let fid = self.retire(si, Retire::Failed(reason), &mut next_slots);
+                report.finished.push(fid);
+            }
+        }
+
         // paper latency model: max(T_draft, C·max(T_group_i) + max(T_t,i))
         let max_group = group_times.iter().cloned().fold(0.0, f64::max);
         let max_tx = transfer_times.iter().cloned().fold(0.0, f64::max);
@@ -847,13 +1087,22 @@ impl PipeDecDbEngine {
         // owning workers apply before their next forward (overlap_sync
         // on) or that applies right here (the serial reference path) ----
         let mut to_finish: Vec<SessionId> = Vec::new();
+        let mut sync_failures: Vec<(SessionId, String)> = Vec::new();
         let overlap = self.cfg.overlap_sync;
         for (id, df) in exits {
             let Some(si) = self.live_index(id) else { continue };
             let decide0 = Instant::now();
             let head_t = Instant::now();
             let hidden = df.hidden.as_ref().context("exit flow carries hidden states")?;
-            let logits = self.target.head(&self.rt, hidden)?;
+            let logits = match self.target.head(&self.rt, hidden) {
+                Ok(l) => l,
+                Err(e) => {
+                    // per-session decide failure (ISSUE 9): only this
+                    // session's verification is poisoned
+                    sync_failures.push((id, format!("verify head failed: {e:#}")));
+                    continue;
+                }
+            };
             step_modeled += head_t.elapsed().as_secs_f64();
             let v = self.target.cfg.vocab_size;
             let ablate = self.cfg.ablate_tree_reuse;
@@ -898,23 +1147,33 @@ impl PipeDecDbEngine {
             } else {
                 // eager path goes through each cache's owning context (the
                 // stage's group ctx / the draft ctx) so the device mirrors
-                // replay the commit in place instead of re-uploading
+                // replay the commit in place instead of re-uploading. A
+                // replay error poisons only this session (ISSUE 9): its
+                // caches may have applied a prefix of the commit, so the
+                // session fails, but co-scheduled caches were untouched.
                 let t0 = Instant::now();
                 let stages = self.cfg.stages;
                 let mut ops = 0usize;
-                for (i, cache) in sess.base.caches.iter_mut().enumerate() {
-                    if i < stages {
-                        self.group_ctxs[i / gs]
-                            .as_mut()
-                            .expect("group ctx in residence")
-                            .apply_commit(&self.rt, &self.target, cache, &commit)?;
-                    } else {
-                        self.draft_ctx
-                            .as_mut()
-                            .expect("draft ctx in residence")
-                            .apply_commit(&self.rt, &self.draft, cache, &commit)?;
+                let mut apply = || -> Result<()> {
+                    for (i, cache) in sess.base.caches.iter_mut().enumerate() {
+                        if i < stages {
+                            self.group_ctxs[i / gs]
+                                .as_mut()
+                                .expect("group ctx in residence")
+                                .apply_commit(&self.rt, &self.target, cache, &commit)?;
+                        } else {
+                            self.draft_ctx
+                                .as_mut()
+                                .expect("draft ctx in residence")
+                                .apply_commit(&self.rt, &self.draft, cache, &commit)?;
+                        }
+                        ops += 1;
                     }
-                    ops += 1;
+                    Ok(())
+                };
+                if let Err(e) = apply() {
+                    sync_failures.push((id, format!("commit replay failed: {e:#}")));
+                    continue;
                 }
                 commit_s = t0.elapsed().as_secs_f64();
                 sess.t_commit_eager_s += commit_s;
@@ -951,9 +1210,15 @@ impl PipeDecDbEngine {
                 s.modeled_s += share;
             }
         }
+        for (id, reason) in sync_failures {
+            if let Some(si) = self.live_index(id) {
+                let fid = self.retire(si, Retire::Failed(reason), &mut next_slots);
+                report.finished.push(fid);
+            }
+        }
         for id in to_finish {
             if let Some(si) = self.live_index(id) {
-                let fid = self.retire(si, true, &mut next_slots);
+                let fid = self.retire(si, Retire::Finished, &mut next_slots);
                 report.finished.push(fid);
             }
         }
@@ -991,7 +1256,7 @@ impl PipeDecDbEngine {
                     .iter()
                     .map(|s| s.pending_depth(s.base.caches[di].commit_epoch()))
                     .sum();
-                anyhow::bail!(
+                let diag = format!(
                     "scheduler stalled at step {}: {} steps without progress \
                      ({} live sessions holding {live_tokens} decoded tokens and \
                      {tree_nodes} tree nodes, {} queued, {} occupied pipeline \
@@ -1003,6 +1268,42 @@ impl PipeDecDbEngine {
                     self.queue.len(),
                     self.slots.iter().flatten().count(),
                 );
+                // scoped guard (ISSUE 9): fail only the implicated sessions
+                // — those holding undrained commits or sitting idle with no
+                // entry and no in-flight flow — instead of bailing out the
+                // whole batch. If nothing is clearly implicated (a scheduler
+                // bug rather than a stuck session), fail every live session
+                // so the engine still never wedges.
+                let mut victims: Vec<SessionId> = self
+                    .live
+                    .iter()
+                    .filter(|s| {
+                        let undrained = !s.commit_log.is_empty();
+                        let idle = s.entry.is_none()
+                            && !self
+                                .slots
+                                .iter()
+                                .flatten()
+                                .any(|f| f.session == s.base.id);
+                        undrained || idle
+                    })
+                    .map(|s| s.base.id)
+                    .collect();
+                if victims.is_empty() {
+                    victims = self.live.iter().map(|s| s.base.id).collect();
+                }
+                let mut slots = std::mem::take(&mut self.slots);
+                for id in victims {
+                    if let Some(si) = self.live_index(id) {
+                        let fid =
+                            self.retire(si, Retire::Failed(format!("stalled: {diag}")), &mut slots);
+                        report.finished.push(fid);
+                    }
+                }
+                self.slots = slots;
+                self.stalled_for = 0;
+                report.live = self.live.len();
+                report.queued = self.queue.len();
             }
         }
         Ok(report)
@@ -1019,6 +1320,16 @@ impl ScheduledEngine for PipeDecDbEngine {
     }
 
     fn submit(&mut self, req: DecodeRequest, sink: Box<dyn TokenSink>) -> Result<SessionId> {
+        // admission control (ISSUE 9): shed over-capacity submits with a
+        // typed error callers can downcast, rather than growing the queue
+        // without bound
+        let cap = self.cfg.limits.queue_cap;
+        if cap > 0 && self.queue.len() >= cap {
+            return Err(ShedError {
+                queue_depth: self.queue.len(),
+            }
+            .into());
+        }
         let (max_new, _, _) = req.resolve(&self.cfg);
         anyhow::ensure!(max_new >= 1, "max_new_tokens must be >= 1");
         anyhow::ensure!(
@@ -1055,7 +1366,7 @@ impl ScheduledEngine for PipeDecDbEngine {
             return true;
         }
         if let Some(si) = self.live_index(id) {
-            self.retire(si, false, &mut []);
+            self.retire(si, Retire::Cancelled, &mut []);
             return true;
         }
         false
@@ -1076,7 +1387,7 @@ impl ScheduledEngine for PipeDecDbEngine {
         if self.live.iter().any(|s| s.base.id == id) {
             return Some(SessionStatus::Running);
         }
-        self.done.iter().find(|s| s.id == id).map(|s| s.status)
+        self.done.iter().find(|s| s.id == id).map(|s| s.status.clone())
     }
 
     fn has_work(&self) -> bool {
@@ -1111,6 +1422,14 @@ impl Engine for PipeDecDbEngine {
                 }
             }
             if rep.finished.contains(&id) {
+                // a scheduled session that failed still produces a record
+                // (partial output); the one-shot surface reports it as an
+                // error so `decode` callers keep their Ok-means-complete
+                // contract
+                if let Some(SessionStatus::Failed { reason }) = ScheduledEngine::status(self, id) {
+                    let _ = ScheduledEngine::poll(self, id);
+                    anyhow::bail!("session failed: {reason}");
+                }
                 return ScheduledEngine::poll(self, id)
                     .context("finished session lost its output");
             }

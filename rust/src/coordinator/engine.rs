@@ -55,7 +55,7 @@ use anyhow::{Context, Result};
 use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
 use super::workers::{
-    self, DraftCandidate, DraftJob, DraftOutcome, GroupOutcome, StageJob, WorkerPool,
+    self, DraftCandidate, DraftJob, DraftOutcome, DraftReply, GroupOutcome, StageJob, WorkerPool,
 };
 use crate::concurrency::protocol::CommitLog;
 use crate::config::EngineConfig;
@@ -116,6 +116,11 @@ pub struct PipeDecEngine {
 impl PipeDecEngine {
     pub fn new(artifact_dir: &Path, mut cfg: EngineConfig) -> Result<Self> {
         cfg.validate()?;
+        // chaos layer (ISSUE 9): config-armed plan, env var wins
+        if let Some(plan) = &cfg.fault_plan {
+            crate::faultinject::arm(plan.parse()?);
+        }
+        crate::faultinject::arm_from_env()?;
         let rt = Arc::new(Runtime::cpu()?);
         // pick the narrowest artifact width bucket that fits the tree layer
         let target = Arc::new(ModelCore::load_with_width(
@@ -463,27 +468,87 @@ impl PipeDecEngine {
             metrics: Arc::clone(&self.worker_metrics),
         };
 
-        let (draft_done, stage_dones) =
-            workers::run_tasks(self.pool.as_ref(), &self.rt, draft_job, stage_jobs);
+        let (draft_reply, stage_replies) =
+            workers::run_tasks(self.pool.as_mut(), &self.rt, draft_job, stage_jobs);
 
-        // Bring every lent piece home before surfacing any task error, so
-        // a failed decode leaves the engine structurally intact.
-        self.draft_ctx = Some(draft_done.ctx);
-        let mut cands = draft_done.candidates;
-        let cand = cands.pop().expect("solo draft job has one candidate");
-        self.draft_cache = Some(cand.cache);
-        let mut commit_s = cand.commit_s;
-        *tree = cand.tree; // adopt the (possibly expanded) tree
+        // Bring every lent piece home — or rebuild it from host truth when
+        // it died with its task (worker panic / thread death) — before
+        // surfacing any error, so a failed decode leaves the engine
+        // structurally intact for the next one.
+        let mut commit_s = 0.0f64;
+        let draft_res = match draft_reply {
+            DraftReply::Done(done) => {
+                self.draft_ctx = Some(done.ctx);
+                let mut cands = done.candidates;
+                let cand = cands.pop().expect("solo draft job has one candidate");
+                self.draft_cache = Some(cand.cache);
+                commit_s += cand.commit_s;
+                *tree = cand.tree; // adopt the (possibly expanded) tree
+                done.res
+            }
+            DraftReply::Lost { reason } => {
+                // the canonical tree and draft cache died with the task;
+                // restart them fresh (the decode fails below and the next
+                // decode resets every cache anyway), and let the fresh
+                // StageContext re-upload device mirrors lazily
+                let dc = &self.draft.cfg;
+                self.draft_cache = Some(TwoLevelCache::new(
+                    dc.n_layers,
+                    dc.n_heads,
+                    dc.head_dim,
+                    dc.past_cap,
+                    dc.tree_cap,
+                ));
+                self.draft_ctx = Some(self.draft.context());
+                Err(anyhow::anyhow!("draft task lost: {reason}"))
+            }
+        };
         let groups_state = &mut self.groups_state;
-        let (outcomes, first_err) =
-            workers::absorb_stage_dones(groups, stage_dones, |g, ctx, caches, job_commit_s| {
+        let (outcomes, failures) =
+            workers::absorb_stage_dones(groups, stage_replies, |g, ctx, caches, job_commit_s| {
                 groups_state[g] = Some(GroupState { ctx, caches });
                 commit_s += job_commit_s;
             });
+        // groups whose lent state died with their task restart from host
+        // truth: fresh context (device mirrors rebuild via the full
+        // re-upload fallback), fresh member caches
+        for f in &failures {
+            if f.state_lost {
+                let fresh = self.rebuild_group_state();
+                self.groups_state[f.group] = Some(fresh);
+            }
+        }
+        let stage_err = failures
+            .into_iter()
+            .next()
+            .map(|f| anyhow::anyhow!("group {} task failed: {}", f.group, f.reason));
         // retire commits every cache owner has now applied
         self.trim_commit_log();
-        let draft_oc = workers::finish_absorb(draft_done.res, first_err)?;
+        let draft_oc = workers::finish_absorb(draft_res, stage_err)?;
         Ok((draft_oc, outcomes, commit_s))
+    }
+
+    /// Rebuild one group's resident state from host truth after its lent
+    /// state was destroyed with a panicked task. The caches restart empty
+    /// — sound for the solo engine, whose decode fails on any lost task
+    /// and resets every cache at the next request.
+    fn rebuild_group_state(&self) -> GroupState {
+        let tc = &self.target.cfg;
+        let caches = (0..self.cfg.group_size)
+            .map(|_| {
+                TwoLevelCache::new(
+                    self.layers_per_stage,
+                    tc.n_heads,
+                    tc.head_dim,
+                    tc.past_cap,
+                    tc.tree_cap,
+                )
+            })
+            .collect();
+        GroupState {
+            ctx: self.target.context(),
+            caches,
+        }
     }
 
     /// Drop commit-log entries every owner (all group caches + the draft

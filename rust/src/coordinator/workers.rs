@@ -41,13 +41,25 @@
 //! `threads = 1` the engines skip the pool and run the same jobs inline
 //! ([`run_inline`]), which is the reference path.
 //!
-//! Model-level failures travel back as `Result`s inside the replies. A
-//! *panic* inside a task is caught on the worker, reported as a
-//! [`Done`]-level reply, and re-raised as a panic on the coordinator once
-//! the rest of the timestep's replies have drained — matching the inline
-//! path's panic semantics instead of deadlocking the reply loop (the
-//! panicked task's lent state is lost, so the engine is poisoned, exactly
-//! as it would be mid-panic single-threaded).
+//! # Failure domains (ISSUE 9)
+//!
+//! Model-level failures travel back as `Result`s inside the replies,
+//! state-first: a failed task's lent caches and context still come home.
+//! A *panic* inside a task is caught on the worker and comes back as a
+//! [`StageReply::Lost`] / [`DraftReply::Lost`] for just that job — the
+//! lent state died with the task, so the coordinator rebuilds the
+//! group's [`StageContext`] from host truth (a fresh context re-uploads
+//! lazily via the device mirror's full re-upload fallback) and fails
+//! only the session(s) whose state was in the job; co-scheduled sessions
+//! continue untouched. A worker thread that dies *between* jobs
+//! announces its exit on the reply channel (a drop guard, so abrupt
+//! deaths announce too); the coordinator flushes that worker's in-flight
+//! jobs as `Lost` instead of blocking forever, and respawns the worker
+//! at its next dispatch. The inline path wraps job execution in the same
+//! panic catch, so no panic escapes the engine at any thread count.
+//! The named fault-injection choke points ([`crate::faultinject::Site`]:
+//! `stage_job`, `draft_job`, `worker_exit`) let the chaos suite drive
+//! every one of these paths deterministically.
 //!
 //! Worker-side timings land in a thread-safe
 //! [`crate::metrics::SharedMetrics`] carried by each job, so workers
@@ -59,6 +71,7 @@ use anyhow::Result;
 
 use super::pipeline::{self, DataFlow};
 use crate::concurrency::protocol::verify_drained;
+use crate::faultinject::{self, Site};
 use crate::concurrency::sync::mpsc::{channel, Receiver, Sender};
 use crate::concurrency::sync::Arc;
 use crate::concurrency::thread::{Builder, JoinHandle};
@@ -166,6 +179,36 @@ pub struct DraftDone {
     pub ctx: StageContext,
     pub candidates: Vec<DraftCandidate>,
     pub res: Result<DraftOutcome>,
+    /// When `res` is an error: the tag of the candidate being processed
+    /// when it struck, so the scheduler can fail only that session (its
+    /// draft cache may be mid-mutation). `None` means no candidate's
+    /// state was touched — the error is benign to every session.
+    pub failed_tag: Option<usize>,
+}
+
+/// A stage task's reply, or the news that the task died with its lent
+/// state (worker panic / thread death) and the group context must be
+/// rebuilt from host truth.
+pub enum StageReply {
+    Done(StageDone),
+    Lost { group: usize, reason: String },
+}
+
+/// The draft task's reply, or the news that it died with every dispatched
+/// candidate's tree and draft cache.
+pub enum DraftReply {
+    Done(DraftDone),
+    Lost { reason: String },
+}
+
+/// One group task that failed, as digested by [`absorb_stage_dones`].
+pub struct StageFailure {
+    pub group: usize,
+    pub reason: String,
+    /// True when the group's lent state (context + member caches) was
+    /// destroyed with the job and must be rebuilt from host truth; false
+    /// when the state came home in an error reply.
+    pub state_lost: bool,
 }
 
 /// Successful result of the draft task.
@@ -218,18 +261,21 @@ pub fn exec_stage_job(rt: &Runtime, mut job: StageJob) -> StageDone {
     let mut compute_s = 0.0f64;
     let mut hops = Vec::new();
     let mut commit_s = 0.0f64;
-    let mut err = None;
-    match apply_job_commits(
-        rt,
-        &job.core,
-        &mut job.ctx,
-        &mut job.caches,
-        &job.commits,
-        job.commit_target,
-        &job.metrics,
-    ) {
-        Ok(secs) => commit_s = secs,
-        Err(e) => err = Some(e),
+    // chaos choke point: fires before any of the job's state is mutated
+    let mut err = faultinject::fire(Site::StageJob).err();
+    if err.is_none() {
+        match apply_job_commits(
+            rt,
+            &job.core,
+            &mut job.ctx,
+            &mut job.caches,
+            &job.commits,
+            job.commit_target,
+            &job.metrics,
+        ) {
+            Ok(secs) => commit_s = secs,
+            Err(e) => err = Some(e),
+        }
     }
     let mut df = if err.is_none() { Some(job.df) } else { None };
     for k in 0..n {
@@ -284,10 +330,15 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
     let mut draft_s = 0.0f64;
     let mut granted = None;
     let mut err = None;
+    // Which candidate's state the error struck (its cache/tree may be
+    // mid-mutation); errors before any candidate mutation leave it None.
+    let mut failed_tag = None;
     // Drain every candidate's deferred commits first — a visited
     // candidate's expansion must see its post-sync draft cache, and
     // applying the unvisited candidates' commits early is harmless (the
-    // commits touch only that session's draft cache).
+    // commits touch only that session's draft cache). A failed drain
+    // taints only the owning candidate: later candidates keep their
+    // undrained suffix and re-receive it at the next dispatch.
     for cand in job.candidates.iter_mut() {
         match apply_job_commits(
             rt,
@@ -301,12 +352,20 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
             Ok(secs) => cand.commit_s = secs,
             Err(e) => {
                 err = Some(e);
+                failed_tag = Some(cand.tag);
                 break;
             }
         }
     }
     for cand in job.candidates.iter_mut() {
         if err.is_some() {
+            break;
+        }
+        // chaos choke point, per candidate visit so the injected fault is
+        // attributable to one session
+        if let Err(e) = faultinject::fire(Site::DraftJob) {
+            err = Some(e);
+            failed_tag = Some(cand.tag);
             break;
         }
         if let Some(df) = cand.entry.take() {
@@ -330,6 +389,7 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
             }
             Err(e) => {
                 err = Some(e);
+                failed_tag = Some(cand.tag);
                 break;
             }
         }
@@ -343,56 +403,94 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
             None => Ok(DraftOutcome { granted, draft_s }),
             Some(e) => Err(e),
         },
+        failed_tag,
     }
 }
 
 /// Reference path (`threads = 1`): execute the timestep's task set on the
 /// caller thread, draft first — byte-identical results to the pool, same
-/// job plumbing, zero concurrency.
+/// job plumbing, zero concurrency. Panics are caught into `Lost` replies
+/// exactly as on the pool, so no panic escapes the engine at any thread
+/// count.
 pub fn run_inline(
     rt: &Runtime,
     draft: DraftJob,
     stages: Vec<StageJob>,
-) -> (DraftDone, Vec<StageDone>) {
-    let d = exec_draft_job(rt, draft);
-    let s = stages.into_iter().map(|j| exec_stage_job(rt, j)).collect();
+) -> (DraftReply, Vec<StageReply>) {
+    let d = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec_draft_job(rt, draft)
+    })) {
+        Ok(d) => DraftReply::Done(d),
+        Err(p) => DraftReply::Lost {
+            reason: panic_message(p.as_ref()),
+        },
+    };
+    let s = stages
+        .into_iter()
+        .map(|j| {
+            let group = j.group;
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                exec_stage_job(rt, j)
+            })) {
+                Ok(d) => StageReply::Done(d),
+                Err(p) => StageReply::Lost {
+                    group,
+                    reason: panic_message(p.as_ref()),
+                },
+            }
+        })
+        .collect();
     (d, s)
 }
 
 /// Execute a timestep's task set on the pool when one exists, inline
 /// otherwise — the single dispatch seam both engines go through.
 pub fn run_tasks(
-    pool: Option<&WorkerPool>,
+    pool: Option<&mut WorkerPool>,
     rt: &Runtime,
     draft: DraftJob,
     stages: Vec<StageJob>,
-) -> (DraftDone, Vec<StageDone>) {
+) -> (DraftReply, Vec<StageReply>) {
     match pool {
         Some(pool) => pool.run_timestep(draft, stages),
         None => run_inline(rt, draft, stages),
     }
 }
 
-/// Reabsorb stage replies: hand each reply's lent state (plus its
-/// measured deferred-commit seconds) to `restore` *before* looking at its
-/// result — the invariant that keeps a failed decode from stranding
-/// caches/contexts — and collect the outcomes in group order plus the
-/// first task error, if any.
+/// Reabsorb stage replies: hand each surviving reply's lent state (plus
+/// its measured deferred-commit seconds) to `restore` *before* looking at
+/// its result — the invariant that keeps a failed decode from stranding
+/// caches/contexts — and collect the outcomes in group order plus every
+/// per-group failure. A `Lost` reply has no state to restore; its
+/// [`StageFailure::state_lost`] tells the caller to rebuild the group
+/// context from host truth.
 pub fn absorb_stage_dones(
     groups: usize,
-    dones: Vec<StageDone>,
+    replies: Vec<StageReply>,
     mut restore: impl FnMut(usize, StageContext, Vec<TwoLevelCache>, f64),
-) -> (Vec<Option<GroupOutcome>>, Option<anyhow::Error>) {
+) -> (Vec<Option<GroupOutcome>>, Vec<StageFailure>) {
     let mut outcomes: Vec<Option<GroupOutcome>> = (0..groups).map(|_| None).collect();
-    let mut first_err = None;
-    for done in dones {
-        restore(done.group, done.ctx, done.caches, done.commit_s);
-        match done.res {
-            Ok(oc) => outcomes[done.group] = Some(oc),
-            Err(e) => first_err = first_err.or(Some(e)),
+    let mut failures = Vec::new();
+    for reply in replies {
+        match reply {
+            StageReply::Done(done) => {
+                restore(done.group, done.ctx, done.caches, done.commit_s);
+                if let Err(e) = done.res.map(|oc| outcomes[done.group] = Some(oc)) {
+                    failures.push(StageFailure {
+                        group: done.group,
+                        reason: format!("{e:#}"),
+                        state_lost: false,
+                    });
+                }
+            }
+            StageReply::Lost { group, reason } => failures.push(StageFailure {
+                group,
+                reason,
+                state_lost: true,
+            }),
         }
     }
-    (outcomes, first_err)
+    (outcomes, failures)
 }
 
 /// Final step of reabsorbing a timestep: combine the draft reply's result
@@ -414,12 +512,34 @@ enum Job {
     Draft(DraftJob),
 }
 
+/// What kind of job a worker held — captured *before* execution so a
+/// panic (which consumes the job) can still be attributed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobTag {
+    Stage { group: usize },
+    Draft,
+}
+
+impl Job {
+    fn tag(&self) -> JobTag {
+        match self {
+            Job::Stage(j) => JobTag::Stage { group: j.group },
+            Job::Draft(_) => JobTag::Draft,
+        }
+    }
+}
+
 enum Done {
     Stage(StageDone),
     Draft(DraftDone),
-    /// A task panicked on the worker; carries the panic payload text. The
-    /// coordinator re-raises it after draining the timestep's replies.
-    Panicked(String),
+    /// A task panicked on the worker (thread survived); the job's lent
+    /// state died with it. The coordinator turns this into a `Lost` reply
+    /// for just that job.
+    Panicked { tag: JobTag, msg: String },
+    /// The worker thread itself is exiting (clean or unwinding) — sent by
+    /// a drop guard so it cannot be skipped. `gen` distinguishes a stale
+    /// announcement from a respawned worker's current incarnation.
+    Exited { worker: usize, gen: u64 },
 }
 
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
@@ -432,16 +552,80 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Body of one pool thread. Every exit path — clean shutdown, injected
+/// exit, even an abrupt panic — announces itself via the drop guard's
+/// `Done::Exited`, which is what lets the coordinator's reply loop flush
+/// a dead worker's jobs instead of blocking forever. Replies and the
+/// exit announcement go through the *same* `Sender`, so the announcement
+/// is ordered after every reply this worker produced.
+fn worker_loop(rx: Receiver<Job>, done_tx: Sender<Done>, rt: Arc<Runtime>, worker: usize, gen: u64) {
+    struct ExitGuard {
+        tx: Sender<Done>,
+        worker: usize,
+        gen: u64,
+    }
+    impl Drop for ExitGuard {
+        fn drop(&mut self) {
+            let _ = self.tx.send(Done::Exited {
+                worker: self.worker,
+                gen: self.gen,
+            });
+        }
+    }
+    let guard = ExitGuard {
+        tx: done_tx,
+        worker,
+        gen,
+    };
+    loop {
+        // chaos choke point: an injected error here exits the thread
+        // cleanly between jobs; an injected panic kills it abruptly.
+        // Both exercise the coordinator's flush-and-respawn path.
+        if faultinject::fire(Site::WorkerExit).is_err() {
+            break;
+        }
+        let Ok(job) = rx.recv() else { break };
+        // Contain task panics: the coordinator counts on one reply per
+        // job, so a panicking task must still answer.
+        let tag = job.tag();
+        let done = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match job {
+            Job::Stage(j) => Done::Stage(exec_stage_job(&rt, j)),
+            Job::Draft(j) => Done::Draft(exec_draft_job(&rt, j)),
+        }))
+        .unwrap_or_else(|p| Done::Panicked {
+            tag,
+            msg: panic_message(p.as_ref()),
+        });
+        if guard.tx.send(done).is_err() {
+            break; // pool dropped
+        }
+    }
+}
+
 /// The persistent pool: one thread per pipeline worker, fed over
 /// per-worker channels, replying on one shared channel. The draft task is
 /// pinned to the last worker; stage tasks round-robin over the rest in
 /// dispatch order, so with `workers >= groups + 1` every task of a
 /// timestep runs on its own thread (the paper's one-device-per-node
 /// deployment) and no stage worker queues two tasks while another idles.
+///
+/// The pool is self-healing (ISSUE 9): a dead worker is respawned at its
+/// next dispatch (the failed send returns the job, which is retried once
+/// on the fresh thread), and a worker that dies mid-timestep has its
+/// in-flight jobs flushed as `Lost` replies via its `Done::Exited`
+/// announcement — `run_timestep` always returns one reply per dispatched
+/// job and never panics on worker death.
 pub struct WorkerPool {
     txs: Vec<Sender<Job>>,
     rx: Receiver<Done>,
+    /// Kept so worker death can never close the reply channel under the
+    /// coordinator, and cloned into respawned workers.
+    done_tx: Sender<Done>,
     handles: Vec<JoinHandle<()>>,
+    /// Incarnation counter per worker slot; bumped on respawn so stale
+    /// `Exited` announcements from a replaced thread are ignored.
+    gens: Vec<u64>,
+    rt: Arc<Runtime>,
 }
 
 impl WorkerPool {
@@ -451,35 +635,17 @@ impl WorkerPool {
         let mut txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
-            let (tx, rx) = channel::<Job>();
-            let done_tx = done_tx.clone();
-            let rt = Arc::clone(&rt);
-            let handle = Builder::new()
-                .name(format!("pipedec-worker-{i}"))
-                .spawn(move || {
-                    while let Ok(job) = rx.recv() {
-                        // Contain task panics: the coordinator counts on one
-                        // reply per job, so a panicking task must still
-                        // answer or the reply loop would block forever.
-                        let done = std::panic::catch_unwind(
-                            std::panic::AssertUnwindSafe(|| match job {
-                                Job::Stage(j) => Done::Stage(exec_stage_job(&rt, j)),
-                                Job::Draft(j) => Done::Draft(exec_draft_job(&rt, j)),
-                            }),
-                        )
-                        .unwrap_or_else(|p| Done::Panicked(panic_message(p.as_ref())));
-                        if done_tx.send(done).is_err() {
-                            break; // pool dropped
-                        }
-                    }
-                })?;
+            let (tx, handle) = spawn_worker(i, 0, Arc::clone(&rt), done_tx.clone())?;
             txs.push(tx);
             handles.push(handle);
         }
         Ok(Self {
             txs,
             rx: done_rx,
+            done_tx,
             handles,
+            gens: vec![0; workers],
+            rt,
         })
     }
 
@@ -487,49 +653,211 @@ impl WorkerPool {
         self.txs.len()
     }
 
+    /// Replace a dead worker slot with a fresh thread (new job channel,
+    /// bumped generation); joins the old handle, which has already
+    /// exited — a failed send is the only caller, and a closed job
+    /// channel means the thread is gone.
+    fn respawn(&mut self, w: usize) -> Result<()> {
+        self.gens[w] += 1;
+        let (tx, handle) = spawn_worker(w, self.gens[w], Arc::clone(&self.rt), self.done_tx.clone())?;
+        self.txs[w] = tx;
+        let old = std::mem::replace(&mut self.handles[w], handle);
+        let _ = old.join();
+        Ok(())
+    }
+
+    /// Send `job` to worker `w`, respawning it once if it died between
+    /// jobs. Returns `None` when the job is in flight; otherwise a
+    /// synthesized error reply carrying the job's (untouched) state back —
+    /// the session layer fails gracefully instead of the pool panicking.
+    fn dispatch(&mut self, w: usize, job: Job) -> Option<Done> {
+        let job = match self.txs[w].send(job) {
+            Ok(()) => return None,
+            Err(e) => e.0,
+        };
+        let job = match self.respawn(w) {
+            Ok(()) => match self.txs[w].send(job) {
+                Ok(()) => return None,
+                Err(e) => e.0,
+            },
+            Err(spawn_err) => {
+                return Some(undispatched_reply(
+                    job,
+                    &format!("pipeline worker {w} respawn failed: {spawn_err:#}"),
+                ))
+            }
+        };
+        Some(undispatched_reply(
+            job,
+            &format!("pipeline worker {w} exited immediately after respawn"),
+        ))
+    }
+
     /// Dispatch one timestep's task set and block until every task
-    /// replied. Panics only if a worker thread died (a worker never
-    /// panics on model errors — those come back in `res`).
+    /// replied or was flushed. Worker deaths and task panics surface as
+    /// `Lost` replies (or error replies with state, when the job never
+    /// left the coordinator) — never as a coordinator panic or hang.
     pub fn run_timestep(
-        &self,
+        &mut self,
         draft: DraftJob,
         stages: Vec<StageJob>,
-    ) -> (DraftDone, Vec<StageDone>) {
+    ) -> (DraftReply, Vec<StageReply>) {
         let n = self.txs.len();
-        let mut sent = 1usize;
-        self.txs[n - 1]
-            .send(Job::Draft(draft))
-            .expect("pipeline worker exited");
+        let draft_worker = n - 1;
+        // per-worker sets of in-flight jobs, so an `Exited` announcement
+        // can flush exactly the jobs that died with the thread
+        let mut outstanding: Vec<Vec<JobTag>> = vec![Vec::new(); n];
+        let mut group_worker: Vec<(usize, usize)> = Vec::new();
+        let mut draft_reply: Option<DraftReply> = None;
+        let mut stage_replies: Vec<StageReply> = Vec::new();
+        let mut pending = 0usize;
+
+        let mut absorb = |done: Done,
+                          draft_reply: &mut Option<DraftReply>,
+                          stage_replies: &mut Vec<StageReply>| match done {
+            Done::Stage(d) => stage_replies.push(StageReply::Done(d)),
+            Done::Draft(d) => *draft_reply = Some(DraftReply::Done(d)),
+            Done::Panicked { tag, msg } => match tag {
+                JobTag::Stage { group } => stage_replies.push(StageReply::Lost {
+                    group,
+                    reason: format!("stage task panicked: {msg}"),
+                }),
+                JobTag::Draft => {
+                    *draft_reply = Some(DraftReply::Lost {
+                        reason: format!("draft task panicked: {msg}"),
+                    })
+                }
+            },
+            Done::Exited { .. } => unreachable!("exit announcements handled by the reply loop"),
+        };
+
+        match self.dispatch(draft_worker, Job::Draft(draft)) {
+            Some(done) => absorb(done, &mut draft_reply, &mut stage_replies),
+            None => {
+                outstanding[draft_worker].push(JobTag::Draft);
+                pending += 1;
+            }
+        }
         // round-robin over *dispatched* tasks (not group ids): with sparse
         // occupancy, assigning by group id would pile same-residue groups
         // onto one worker while others idle
         let stage_workers = (n - 1).max(1);
         for (i, job) in stages.into_iter().enumerate() {
             let w = if n == 1 { 0 } else { i % stage_workers };
-            self.txs[w]
-                .send(Job::Stage(job))
-                .expect("pipeline worker exited");
-            sent += 1;
-        }
-        let mut draft_done = None;
-        let mut stage_dones = Vec::with_capacity(sent - 1);
-        let mut panicked: Option<String> = None;
-        for _ in 0..sent {
-            match self.rx.recv().expect("pipeline worker exited") {
-                Done::Draft(d) => draft_done = Some(d),
-                Done::Stage(s) => stage_dones.push(s),
-                Done::Panicked(msg) => panicked = Some(msg),
+            let group = match job.tag() {
+                JobTag::Stage { group } => group,
+                JobTag::Draft => unreachable!("stage list holds stage jobs"),
+            };
+            match self.dispatch(w, Job::Stage(job)) {
+                Some(done) => absorb(done, &mut draft_reply, &mut stage_replies),
+                None => {
+                    outstanding[w].push(JobTag::Stage { group });
+                    group_worker.push((group, w));
+                    pending += 1;
+                }
             }
         }
-        if let Some(msg) = panicked {
-            // mirror the inline path: a panicking task panics the decode
-            // (after draining every reply, so no worker is left mid-send)
-            panic!("pipeline worker task panicked: {msg}");
+
+        while pending > 0 {
+            let Ok(done) = self.rx.recv() else {
+                break; // unreachable: the pool holds a live done_tx
+            };
+            match done {
+                Done::Exited { worker, gen } => {
+                    if gen != self.gens[worker] {
+                        continue; // stale announcement from a replaced thread
+                    }
+                    // the thread died with these jobs: flush them as Lost
+                    for tag in std::mem::take(&mut outstanding[worker]) {
+                        pending -= 1;
+                        match tag {
+                            JobTag::Stage { group } => stage_replies.push(StageReply::Lost {
+                                group,
+                                reason: format!("pipeline worker {worker} died mid-timestep"),
+                            }),
+                            JobTag::Draft => {
+                                draft_reply = Some(DraftReply::Lost {
+                                    reason: format!("pipeline worker {worker} died mid-timestep"),
+                                })
+                            }
+                        }
+                    }
+                }
+                done => {
+                    let (w, tag) = match &done {
+                        Done::Stage(d) => (
+                            worker_of_group(&group_worker, d.group, draft_worker),
+                            JobTag::Stage { group: d.group },
+                        ),
+                        Done::Draft(_) => (draft_worker, JobTag::Draft),
+                        Done::Panicked { tag, .. } => match tag {
+                            JobTag::Stage { group } => (
+                                worker_of_group(&group_worker, *group, draft_worker),
+                                *tag,
+                            ),
+                            JobTag::Draft => (draft_worker, *tag),
+                        },
+                        Done::Exited { .. } => unreachable!("matched above"),
+                    };
+                    if let Some(i) = outstanding[w].iter().position(|t| *t == tag) {
+                        outstanding[w].swap_remove(i);
+                        pending -= 1;
+                    }
+                    absorb(done, &mut draft_reply, &mut stage_replies);
+                }
+            }
         }
-        (
-            draft_done.expect("draft task is always dispatched"),
-            stage_dones,
-        )
+
+        let draft_reply = draft_reply.unwrap_or(DraftReply::Lost {
+            reason: "draft reply missing (worker pool reply channel closed)".to_string(),
+        });
+        (draft_reply, stage_replies)
+    }
+}
+
+/// Which worker a stage group was dispatched to (draft worker as the
+/// never-matching fallback — group ids are always in the map when their
+/// dispatch succeeded).
+fn worker_of_group(group_worker: &[(usize, usize)], group: usize, fallback: usize) -> usize {
+    group_worker
+        .iter()
+        .find(|(g, _)| *g == group)
+        .map(|&(_, w)| w)
+        .unwrap_or(fallback)
+}
+
+/// Spawn one pool thread (initial construction and respawn share this).
+fn spawn_worker(
+    i: usize,
+    gen: u64,
+    rt: Arc<Runtime>,
+    done_tx: Sender<Done>,
+) -> Result<(Sender<Job>, JoinHandle<()>)> {
+    let (tx, rx) = channel::<Job>();
+    let handle = Builder::new()
+        .name(format!("pipedec-worker-{i}"))
+        .spawn(move || worker_loop(rx, done_tx, rt, i, gen))?;
+    Ok((tx, handle))
+}
+
+/// Synthesize an error reply for a job that could not be dispatched at
+/// all — its state never left the coordinator, so it comes home intact
+/// inside a normal state-carrying reply with `res: Err`.
+fn undispatched_reply(job: Job, reason: &str) -> Done {
+    match job {
+        Job::Stage(j) => Done::Stage(StageDone {
+            group: j.group,
+            ctx: j.ctx,
+            caches: j.caches,
+            commit_s: 0.0,
+            res: Err(anyhow::anyhow!("{reason}")),
+        }),
+        Job::Draft(j) => Done::Draft(DraftDone {
+            ctx: j.ctx,
+            candidates: j.candidates,
+            res: Err(anyhow::anyhow!("{reason}")),
+            failed_tag: None,
+        }),
     }
 }
 

@@ -41,7 +41,7 @@ pub mod sink;
 pub use factory::{build_engine, build_scheduled_engine, EngineKind};
 pub use session::{
     OneShotScheduler, ScheduledEngine, Session, SessionId, SessionRecord, SessionStatus,
-    StepReport,
+    ShedError, StepReport,
 };
 pub use sink::{FnSink, NullSink, TokenSink, VecSink};
 

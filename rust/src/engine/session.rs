@@ -48,8 +48,9 @@ impl fmt::Display for SessionId {
 }
 
 /// Lifecycle of a session: `Queued → Running → Finished`, or `Cancelled`
-/// from either pre-terminal state.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// from either pre-terminal state, or `Failed` when the scheduler retires
+/// the session on a fault, deadline, or admission error (ISSUE 9).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SessionStatus {
     /// Submitted, not yet admitted into the pipeline.
     Queued,
@@ -60,7 +61,42 @@ pub enum SessionStatus {
     /// Cancelled via `cancel`; never emits another token and never yields
     /// an output.
     Cancelled,
+    /// Retired by the scheduler on a fault confined to this session (task
+    /// panic, model/device error, missed deadline, admission failure).
+    /// The reason is human-readable; deadline retirements start with
+    /// `"deadline"`. The partial output (tokens emitted before the fault)
+    /// stays pollable exactly once, like `Finished`.
+    Failed {
+        reason: String,
+    },
 }
+
+impl SessionStatus {
+    /// True for states a session can never leave.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, SessionStatus::Queued | SessionStatus::Running)
+    }
+}
+
+/// Error returned by [`ScheduledEngine::submit`] when the scheduler's
+/// admission queue is at capacity (load shedding,
+/// `LimitsConfig::queue_cap`). Carries the queue depth at rejection so
+/// the serving front end can report backpressure; the server loop
+/// downcasts submit errors to this type to mint `Shed` completions
+/// instead of aborting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedError {
+    /// Queue depth observed at the rejected submit.
+    pub queue_depth: usize,
+}
+
+impl fmt::Display for ShedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shed: admission queue full (depth {})", self.queue_depth)
+    }
+}
+
+impl std::error::Error for ShedError {}
 
 /// Per-request decode state owned by a scheduler.
 ///
@@ -83,6 +119,9 @@ pub struct Session {
     pub status: SessionStatus,
     /// Tokens emitted so far (always equals what the sink has seen).
     pub tokens: Vec<u32>,
+    /// When the request was submitted — the anchor for the queue
+    /// max-wait, TTFT, and total-wall deadlines (`LimitsConfig`).
+    pub queued_at: std::time::Instant,
 }
 
 impl Session {
@@ -96,6 +135,7 @@ impl Session {
             sink,
             status: SessionStatus::Queued,
             tokens: Vec::new(),
+            queued_at: std::time::Instant::now(),
         }
     }
 
@@ -135,7 +175,9 @@ pub struct StepReport {
     pub admitted: Vec<SessionId>,
     /// Verified tokens emitted this step, in emission order.
     pub emitted: Vec<(SessionId, u32)>,
-    /// Sessions that finished this step.
+    /// Sessions that reached a pollable terminal state this step —
+    /// `Finished`, or `Failed` (fault/deadline retirement, partial
+    /// output). Callers distinguish the two via `status`.
     pub finished: Vec<SessionId>,
     /// Live (admitted, unfinished) sessions after the step.
     pub live: usize,
@@ -265,19 +307,40 @@ impl ScheduledEngine for OneShotScheduler {
         sess.status = SessionStatus::Running;
         report.admitted.push(sess.id);
         let mut fresh = Vec::new();
-        let out = {
+        let res = {
             let mut fwd = ForwardSink {
                 sink: sess.sink.as_mut(),
                 seen: &mut fresh,
             };
-            self.inner.decode(&sess.req, &mut fwd)?
+            self.inner.decode(&sess.req, &mut fwd)
         };
         sess.tokens.extend_from_slice(&fresh);
         report.emitted.extend(fresh.into_iter().map(|t| (sess.id, t)));
-        report.modeled_step_s = out.modeled_s;
         report.finished.push(sess.id);
-        self.done
-            .push(sess.into_record(SessionStatus::Finished, Some(out)));
+        match res {
+            Ok(out) => {
+                report.modeled_step_s = out.modeled_s;
+                self.done
+                    .push(sess.into_record(SessionStatus::Finished, Some(out)));
+            }
+            // Fault isolation (ISSUE 9): a failed decode retires only
+            // this session — the partial output stays pollable and the
+            // scheduler keeps serving the queue.
+            Err(e) => {
+                let out = DecodeOutput {
+                    text: tokenizer::decode(&sess.tokens),
+                    tokens: sess.tokens.clone(),
+                    wall_s: 0.0,
+                    modeled_s: 0.0,
+                    spec: None,
+                    metrics: crate::metrics::Metrics::new(),
+                };
+                let status = SessionStatus::Failed {
+                    reason: format!("{e:#}"),
+                };
+                self.done.push(sess.into_record(status, Some(out)));
+            }
+        }
         report.queued = self.queue.len();
         Ok(report)
     }
@@ -304,7 +367,7 @@ impl ScheduledEngine for OneShotScheduler {
         if self.queue.iter().any(|s| s.id == id) {
             return Some(SessionStatus::Queued);
         }
-        self.done.iter().find(|s| s.id == id).map(|s| s.status)
+        self.done.iter().find(|s| s.id == id).map(|s| s.status.clone())
     }
 
     fn has_work(&self) -> bool {

@@ -1,0 +1,460 @@
+//! Deterministic fault injection for the fault-isolated serving core
+//! (ISSUE 9).
+//!
+//! A [`FaultPlan`] is a small list of rules, each naming a choke point
+//! ([`Site`]), the 1-based hit count at which it fires, and what happens
+//! ([`FaultKind`]): a panic, an `anyhow` error, or a delay. The
+//! production code calls [`fire`] at each choke point; when no plan is
+//! armed that is a single relaxed atomic load and an immediate return,
+//! so the layer costs nothing on the hot path.
+//!
+//! Plans serialize to a compact text grammar so a failing randomized run
+//! can be replayed exactly:
+//!
+//! ```text
+//! stage_job@3=panic,spill_read@1=error,device_op@2=delay:5
+//! ```
+//!
+//! i.e. comma-separated `site@hit=kind` rules, where `kind` is `panic`,
+//! `error`, or `delay:MS`. [`FaultPlan`] round-trips through
+//! `Display`/`FromStr`; the chaos suite prints the plan of any failing
+//! seed so it can be pinned as a fixed regression.
+//!
+//! Arming is process-global (the counters and plan live in statics, the
+//! same way the runtime's transfer stats do): engines arm from the
+//! `PIPEDEC_FAULTS` env var or the `[faultinject] plan` config key at
+//! construction, and tests use [`install`], which additionally holds a
+//! global lock so concurrent `#[test]`s cannot interleave plans.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::XorShiftRng;
+
+/// A named choke point the production code guards with [`fire`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Site {
+    /// Top of a pipeline stage job (`workers::exec_stage_job`).
+    StageJob,
+    /// One draft candidate's visit inside `workers::exec_draft_job`.
+    DraftJob,
+    /// `StageContext::apply_commit` — the commit-replay choke point.
+    ApplyCommit,
+    /// A device KV mirror update (`DeviceKvCache` around
+    /// `run_bufs_to_bufs`).
+    DeviceOp,
+    /// Prefix-cache L2 spill write (`PrefixStore::spill`).
+    SpillWrite,
+    /// Prefix-cache L2 promote read (`PrefixStore::promote_l2`).
+    SpillRead,
+    /// Top of the pipeline worker loop, *between* jobs — an injected
+    /// error here makes the worker thread exit; a panic kills it
+    /// abruptly. Both exercise the coordinator's respawn path.
+    WorkerExit,
+}
+
+impl Site {
+    pub const ALL: [Site; 7] = [
+        Site::StageJob,
+        Site::DraftJob,
+        Site::ApplyCommit,
+        Site::DeviceOp,
+        Site::SpillWrite,
+        Site::SpillRead,
+        Site::WorkerExit,
+    ];
+
+    /// Stable grammar name (`stage_job`, `spill_read`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::StageJob => "stage_job",
+            Site::DraftJob => "draft_job",
+            Site::ApplyCommit => "apply_commit",
+            Site::DeviceOp => "device_op",
+            Site::SpillWrite => "spill_write",
+            Site::SpillRead => "spill_read",
+            Site::WorkerExit => "worker_exit",
+        }
+    }
+
+    fn index(self) -> usize {
+        Site::ALL.iter().position(|&s| s == self).expect("site in ALL")
+    }
+
+    /// Whether the site runs inside a pipeline worker job, where a panic
+    /// is caught (`catch_unwind` inline, thread supervision pooled) and
+    /// converted into a per-session failure. Panics at coordinator-side
+    /// sites are genuine crashes, so randomized plans only place `Panic`
+    /// on worker-scoped sites.
+    pub fn worker_scoped(self) -> bool {
+        matches!(self, Site::StageJob | Site::DraftJob | Site::WorkerExit)
+    }
+}
+
+impl fmt::Display for Site {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Site {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Site::ALL
+            .into_iter()
+            .find(|site| site.name() == s)
+            .with_context(|| {
+                format!(
+                    "unknown fault site {s:?} (expected one of: {})",
+                    Site::ALL.map(Site::name).join(", ")
+                )
+            })
+    }
+}
+
+/// What an armed rule does when its hit count comes up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the choke point (tests the catch/respawn paths).
+    Panic,
+    /// Return an `anyhow` error from [`fire`].
+    Error,
+    /// Sleep this many milliseconds, then succeed (slow-stage model).
+    Delay(u64),
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Panic => f.write_str("panic"),
+            FaultKind::Error => f.write_str("error"),
+            FaultKind::Delay(ms) => write!(f, "delay:{ms}"),
+        }
+    }
+}
+
+impl FromStr for FaultKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "error" => Ok(FaultKind::Error),
+            _ => {
+                let ms = s
+                    .strip_prefix("delay:")
+                    .with_context(|| {
+                        format!("unknown fault kind {s:?} (panic | error | delay:MS)")
+                    })?
+                    .parse::<u64>()
+                    .with_context(|| format!("bad delay millis in {s:?}"))?;
+                Ok(FaultKind::Delay(ms))
+            }
+        }
+    }
+}
+
+/// One rule: at the `hit`-th (1-based) call of [`fire`] for `site`,
+/// inject `kind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRule {
+    pub site: Site,
+    pub hit: u64,
+    pub kind: FaultKind,
+}
+
+impl fmt::Display for FaultRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}={}", self.site, self.hit, self.kind)
+    }
+}
+
+impl FromStr for FaultRule {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (site_hit, kind) = s
+            .split_once('=')
+            .with_context(|| format!("fault rule {s:?} is not site@hit=kind"))?;
+        let (site, hit) = site_hit
+            .split_once('@')
+            .with_context(|| format!("fault rule {s:?} is not site@hit=kind"))?;
+        Ok(FaultRule {
+            site: site.parse()?,
+            hit: hit
+                .parse::<u64>()
+                .with_context(|| format!("bad hit count in {s:?}"))?,
+            kind: kind.parse()?,
+        })
+    }
+}
+
+/// A deterministic schedule of injected faults; see the module docs for
+/// the text grammar.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new(rules: Vec<FaultRule>) -> Self {
+        Self { rules }
+    }
+
+    /// A small random plan for the nightly chaos lane: 1–3 rules over
+    /// random sites/hit counts, biased toward errors (the common case)
+    /// with panics and short delays mixed in. Deterministic in `seed`,
+    /// so a failing seed's plan can be reprinted and pinned.
+    pub fn random(seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let n = 1 + rng.below(3);
+        let rules = (0..n)
+            .map(|_| {
+                let site = Site::ALL[rng.below(Site::ALL.len())];
+                let kind = match rng.below(10) {
+                    0..=4 => FaultKind::Error,
+                    // panics are survivable only inside worker jobs;
+                    // elsewhere degrade the roll to an error
+                    5..=7 if site.worker_scoped() => FaultKind::Panic,
+                    5..=7 => FaultKind::Error,
+                    _ => FaultKind::Delay(1 + rng.below(5) as u64),
+                };
+                FaultRule {
+                    site,
+                    hit: 1 + rng.below(6) as u64,
+                    kind,
+                }
+            })
+            .collect();
+        Self { rules }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{r}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(Self::default());
+        }
+        let rules = s
+            .split(',')
+            .map(|r| r.trim().parse())
+            .collect::<Result<Vec<FaultRule>>>()?;
+        Ok(Self { rules })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Global armed state
+// ---------------------------------------------------------------------
+
+/// The one hot-path cost: a relaxed load of this flag per choke point.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Per-site hit counters, indexed by [`Site::index`]; only touched once
+/// the layer is enabled.
+static HITS: [AtomicU64; 7] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Serializes [`install`]-scoped tests so two `#[test]`s cannot
+/// interleave plans (the armed state is process-global).
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_plan() -> MutexGuard<'static, Option<FaultPlan>> {
+    PLAN.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn reset_counters() {
+    for h in &HITS {
+        h.store(0, Ordering::SeqCst);
+    }
+}
+
+/// Arm `plan` process-wide (replacing any armed plan) and reset the hit
+/// counters. Engines call this for env/config-driven plans; tests should
+/// prefer the scoped [`install`].
+pub fn arm(plan: FaultPlan) {
+    let mut slot = lock_plan();
+    reset_counters();
+    *slot = Some(plan);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm the layer: [`fire`] reverts to the single-load no-op.
+pub fn disarm() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *lock_plan() = None;
+    reset_counters();
+}
+
+/// Arm from the `PIPEDEC_FAULTS` env var if it is set and non-empty.
+/// A malformed plan is an error (silently ignoring a typo'd plan would
+/// make a chaos run vacuously green).
+pub fn arm_from_env() -> Result<()> {
+    match std::env::var("PIPEDEC_FAULTS") {
+        Ok(s) if !s.trim().is_empty() => {
+            let plan: FaultPlan = s.parse().context("parsing PIPEDEC_FAULTS")?;
+            arm(plan);
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Whether a plan is currently armed.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::SeqCst)
+}
+
+/// Hits recorded at `site` since the last arm/reset (test observability).
+pub fn hits(site: Site) -> u64 {
+    HITS[site.index()].load(Ordering::SeqCst)
+}
+
+/// RAII guard for test-scoped plans; disarms on drop. Holds the global
+/// install lock, so guard lifetimes serialize across threads.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// Arm `plan` for the lifetime of the returned guard. Tests use this so
+/// the process-global state cannot leak between `#[test]`s (the guard
+/// holds a global lock and disarms on drop).
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    let lock = INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    arm(plan);
+    FaultGuard { _lock: lock }
+}
+
+/// The choke-point call: no-op (one relaxed load) when disarmed;
+/// otherwise bump `site`'s hit counter and run the matching rule, if
+/// any — sleeping for `Delay`, returning `Err` for `Error`, panicking
+/// for `Panic`.
+#[inline]
+pub fn fire(site: Site) -> Result<()> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    fire_armed(site)
+}
+
+#[cold]
+fn fire_armed(site: Site) -> Result<()> {
+    let hit = HITS[site.index()].fetch_add(1, Ordering::SeqCst) + 1;
+    let kind = lock_plan().as_ref().and_then(|p| {
+        p.rules
+            .iter()
+            .find(|r| r.site == site && r.hit == hit)
+            .map(|r| r.kind)
+    });
+    match kind {
+        None => Ok(()),
+        Some(FaultKind::Delay(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(FaultKind::Error) => bail!("injected fault: {site} hit {hit}"),
+        Some(FaultKind::Panic) => panic!("injected fault: {site} hit {hit}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_round_trips() {
+        let text = "stage_job@3=panic,spill_read@1=error,device_op@2=delay:5";
+        let plan: FaultPlan = text.parse().unwrap();
+        assert_eq!(plan.rules.len(), 3);
+        assert_eq!(plan.to_string(), text);
+        assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan);
+        assert_eq!("".parse::<FaultPlan>().unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        assert!("bogus_site@1=error".parse::<FaultPlan>().is_err());
+        assert!("stage_job@x=error".parse::<FaultPlan>().is_err());
+        assert!("stage_job@1=explode".parse::<FaultPlan>().is_err());
+        assert!("stage_job@1".parse::<FaultPlan>().is_err());
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_replayable() {
+        for seed in 0..50 {
+            let a = FaultPlan::random(seed);
+            assert_eq!(a, FaultPlan::random(seed), "seed {seed} not deterministic");
+            assert!(!a.rules.is_empty() && a.rules.len() <= 3);
+            let round: FaultPlan = a.to_string().parse().unwrap();
+            assert_eq!(round, a, "seed {seed} plan did not round-trip");
+        }
+    }
+
+    #[test]
+    fn disabled_fire_is_a_no_op_and_counts_nothing() {
+        let _guard = INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disarm();
+        for site in Site::ALL {
+            fire(site).unwrap();
+            assert_eq!(hits(site), 0, "{site}: disabled fire must not count");
+        }
+    }
+
+    #[test]
+    fn rules_fire_on_their_exact_hit() {
+        let plan: FaultPlan = "apply_commit@2=error".parse().unwrap();
+        let _g = install(plan);
+        assert!(fire(Site::ApplyCommit).is_ok(), "hit 1 passes");
+        let err = fire(Site::ApplyCommit).unwrap_err().to_string();
+        assert!(err.contains("apply_commit"), "reason names the site: {err}");
+        assert!(fire(Site::ApplyCommit).is_ok(), "hit 3 passes again");
+        assert_eq!(hits(Site::ApplyCommit), 3);
+        assert_eq!(hits(Site::StageJob), 0);
+    }
+
+    #[test]
+    fn install_guard_disarms_on_drop() {
+        {
+            let _g = install("stage_job@1=error".parse().unwrap());
+            assert!(enabled());
+        }
+        assert!(!enabled());
+        assert!(fire(Site::StageJob).is_ok());
+    }
+}

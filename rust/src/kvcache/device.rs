@@ -276,6 +276,7 @@ impl DeviceKvCache {
         let exe = if to_tree { &ops.app_tree } else { &ops.app_past };
         let LevelSlot { k, v, .. } = slot;
         let run = (|| -> Result<(DeviceBuffer, DeviceBuffer)> {
+            crate::faultinject::fire(crate::faultinject::Site::DeviceOp)?;
             let dims = [ops.heads, block_w, ops.head_dim];
             let k_src = rt.upload_f32(k_block, &dims)?;
             let v_src = rt.upload_f32(v_block, &dims)?;
@@ -378,6 +379,7 @@ impl DeviceKvCache {
                         let t = tree.as_ref().expect("checked current");
                         let LevelSlot { k, v, .. } = p;
                         let run = (|| -> Result<(DeviceBuffer, DeviceBuffer)> {
+                            crate::faultinject::fire(crate::faultinject::Site::DeviceOp)?;
                             let k2 = ops
                                 .promote
                                 .run_bufs_to_bufs(k, &[&t.k, &slot_b, &pos_b])?;
@@ -407,6 +409,7 @@ impl DeviceKvCache {
                         let idx = idx_b.as_ref().expect("moved implies idx");
                         let LevelSlot { k, v, .. } = t;
                         let run = (|| -> Result<(DeviceBuffer, DeviceBuffer)> {
+                            crate::faultinject::fire(crate::faultinject::Site::DeviceOp)?;
                             let k2 = ops.compact.run_bufs_to_bufs(k, &[idx])?;
                             let v2 = ops.compact.run_bufs_to_bufs(v, &[idx])?;
                             Ok((k2, v2))

@@ -526,7 +526,9 @@ impl PrefixStore {
             return; // can never fit; don't churn the tier
         }
         let path = Self::l2_path(&dir, key);
-        if std::fs::write(&path, serialize(entry)).is_err() {
+        if crate::faultinject::fire(crate::faultinject::Site::SpillWrite).is_err()
+            || std::fs::write(&path, serialize(entry)).is_err()
+        {
             let _ = std::fs::remove_file(&path);
             return; // spill failure degrades to a drop, never an error
         }
@@ -550,7 +552,10 @@ impl PrefixStore {
     fn promote_l2(&mut self, key: u64, expect: &[u32]) -> Option<Arc<PrefixEntry>> {
         let slot = self.l2.get(&key)?;
         let path = slot.path.clone();
-        match std::fs::read(&path).ok().and_then(|b| deserialize(&b).ok()) {
+        let read = crate::faultinject::fire(crate::faultinject::Site::SpillRead)
+            .ok()
+            .and_then(|()| std::fs::read(&path).ok());
+        match read.and_then(|b| deserialize(&b).ok()) {
             Some(entry) if entry.tokens == expect => {
                 let slot = self.l2.remove(&key).expect("probed above");
                 self.l2_bytes -= slot.bytes;

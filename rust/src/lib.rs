@@ -105,6 +105,13 @@
 //!   (TOML subset), byte-level tokenizer, metrics/tables (including the
 //!   thread-safe [`metrics::SharedMetrics`] sink the pipeline workers
 //!   record into), numeric helpers.
+//! * [`faultinject`] — the deterministic fault-injection layer (ISSUE 9):
+//!   a seeded, text-serializable [`faultinject::FaultPlan`] injects
+//!   panics, errors, and delays at named choke points (stage/draft jobs,
+//!   commit replay, device KV ops, prefix spill I/O, worker exit) so the
+//!   chaos suite (`tests/chaos.rs`) can drive per-session failure
+//!   domains deterministically. Disarmed (the default) it costs one
+//!   relaxed atomic load per choke point.
 //! * [`concurrency`] — the concurrency-correctness harness (ISSUE 6):
 //!   the [`concurrency::sync`] facade every threaded module imports its
 //!   primitives through (std normally, schedule-perturbing shim under
@@ -150,6 +157,12 @@
 //! * `PIPEDEC_LOOM_SEED` — schedule seed for the loom-style
 //!   schedule-perturbing shim in [`concurrency::sync`] (only meaningful
 //!   under `--cfg loom`).
+//! * `PIPEDEC_FAULTS` — arm a [`faultinject::FaultPlan`] (grammar:
+//!   `site@hit=kind,...`, e.g. `stage_job@3=panic`) at engine
+//!   construction; empty/unset leaves fault injection disarmed (ISSUE 9).
+//! * `PIPEDEC_CHAOS_SEED` — seed for the randomized nightly chaos lane
+//!   in `tests/chaos.rs` (`--ignored` test); the failing plan is printed
+//!   serialized for replay through `PIPEDEC_FAULTS`.
 
 // Unsafe-audit wall (ISSUE 6): every `unsafe` block, fn, and impl in
 // this crate must carry a `// SAFETY:` comment, and unsafe operations
@@ -165,6 +178,7 @@ pub mod concurrency;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod faultinject;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

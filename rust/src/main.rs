@@ -31,7 +31,8 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
                   [--threads T] [--overlap-sync BOOL] [--config FILE]
                   [--no-prefix-cache] [--prefix-l1-bytes B] [--prefix-l2-bytes B]
                   [--prefix-l2-dir DIR] [--prefix-chunk-tokens N]
-                  [--no-stream]
+                  [--ttft-deadline S] [--deadline S] [--queue-max-wait S]
+                  [--max-queue N] [--no-stream]
                   decode one prompt, streaming tokens as they are verified
                   (--no-stream prints only the final completion)
   pipedec serve   [--engine KIND] [--requests N] [--queue-cap N]
@@ -54,6 +55,11 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
   --prefix-l1-bytes / --prefix-l2-bytes: tier byte budgets for the prefix
              cache; --prefix-l2-dir enables the disk spill tier;
              --prefix-chunk-tokens sets the key granularity (0 = auto)
+  --ttft-deadline / --deadline / --queue-max-wait: per-request deadlines in
+             seconds (first token / total wall / admission-queue wait);
+             0 = disabled. Over-deadline sessions fail, the batch continues
+  --max-queue: scheduler admission-queue capacity (0 = unbounded); submits
+             over capacity are shed with a typed error
 
   KIND (--engine): pipedec     pipeline + draft-in-pipeline dynamic-tree speculation
                    pipedec-db  SpecPipe-DB: continuous batching across requests
@@ -103,7 +109,8 @@ const ENGINE_CFG_FLAGS: &[&str] = &[
     "engine", "stages", "group-size", "width", "children", "max-new",
     "temperature", "top-p", "top-k", "seed", "threads", "overlap-sync", "config",
     "no-prefix-cache", "prefix-l1-bytes", "prefix-l2-bytes", "prefix-l2-dir",
-    "prefix-chunk-tokens",
+    "prefix-chunk-tokens", "ttft-deadline", "deadline", "queue-max-wait",
+    "max-queue",
 ];
 
 fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
@@ -158,6 +165,18 @@ fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     }
     if let Some(v) = flags.get("prefix-chunk-tokens") {
         cfg.prefix_cache.chunk_tokens = v.parse()?;
+    }
+    if let Some(v) = flags.get("ttft-deadline") {
+        cfg.limits.ttft_deadline_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("deadline") {
+        cfg.limits.deadline_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("queue-max-wait") {
+        cfg.limits.queue_max_wait_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("max-queue") {
+        cfg.limits.queue_cap = v.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -169,6 +169,7 @@ impl StageContext {
         cache: &mut TwoLevelCache,
         commit: &crate::kvcache::CacheCommit,
     ) -> Result<()> {
+        crate::faultinject::fire(crate::faultinject::Site::ApplyCommit)?;
         let dev = self.dev_kv.get_mut(&cache.id());
         let pre = match (&dev, core.kv_ops()) {
             (Some(_), Some(_)) => Some(PreState::capture(cache)),

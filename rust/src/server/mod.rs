@@ -30,10 +30,10 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::engine::{
-    DecodeRequest, Engine, ScheduledEngine, SessionId, TokenSink,
+    DecodeRequest, Engine, ScheduledEngine, SessionId, SessionStatus, ShedError, TokenSink,
 };
 use crate::metrics::Metrics;
 use crate::util::Summary;
@@ -46,10 +46,39 @@ pub struct Request {
     pub arrived_at: f64,
 }
 
+/// How a request's service ended (ISSUE 9). The serving loop never aborts
+/// on a per-session fault: a failed, shed, or over-deadline request still
+/// produces a [`Completion`] carrying this status, and [`summarize`]
+/// counts each class (`completed_ok` / `failed` / `shed` /
+/// `deadline_exceeded`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompletionStatus {
+    /// Served to completion; token/latency fields are the full decode.
+    Ok,
+    /// The session failed inside the engine (worker fault, device error,
+    /// admission failure); fields cover the partial decode.
+    Failed { reason: String },
+    /// Rejected at admission: the scheduler queue was at capacity
+    /// (`limits.queue_cap`). No tokens were produced.
+    Shed,
+    /// Retired by the scheduler for exceeding a configured deadline
+    /// (`limits.ttft_deadline_s` / `deadline_s` / `queue_max_wait_s`).
+    DeadlineExceeded,
+}
+
+impl CompletionStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, CompletionStatus::Ok)
+    }
+}
+
 /// A finished request.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
+    /// How service ended; every non-`Ok` class is also counted by
+    /// [`summarize`].
+    pub status: CompletionStatus,
     /// Registry name of the engine that served the request.
     pub engine: &'static str,
     pub tokens: usize,
@@ -264,12 +293,53 @@ struct Ticket {
     probe: Rc<RefCell<ProbeState>>,
 }
 
+/// A zero-token completion for a request that never produced service —
+/// shed at admission, rejected by the scheduler, or torn down by an
+/// engine-level step failure.
+fn unserved(
+    id: u64,
+    engine: &'static str,
+    status: CompletionStatus,
+    latency_s: f64,
+    queue_depth: usize,
+) -> Completion {
+    Completion {
+        id,
+        status,
+        engine,
+        tokens: 0,
+        latency_s,
+        service_s: 0.0,
+        first_token_s: 0.0,
+        tbt_s: 0.0,
+        queue_depth,
+        modeled_s: 0.0,
+        t_decide_s: 0.0,
+        t_commit_s: 0.0,
+        sync_overlap_ratio: 0.0,
+        kv_app_bytes: 0,
+        kv_reup_bytes: 0,
+        prefix_hit_tokens: 0,
+        prefill_tokens_saved: 0,
+    }
+}
+
 /// Continuous-batching event loop: admit everything the router holds into
 /// the scheduler, then step the scheduler until idle, collecting
 /// per-request completions as sessions finish. Admission overlaps with
 /// decode — the scheduler admits sessions into pipeline slots per step —
 /// and requests submitted to the router *between* calls are picked up by
 /// the next call.
+///
+/// Fault isolation (ISSUE 9): the loop never aborts on a per-request
+/// fault. A submit rejected by admission control becomes a
+/// [`CompletionStatus::Shed`] completion; a session the scheduler retires
+/// as failed or over-deadline becomes `Failed { reason }` /
+/// `DeadlineExceeded` with its partial decode; co-scheduled requests are
+/// untouched. Only an engine-level `step()` error — the scheduler itself,
+/// not a session, is broken — ends the loop early, and even then every
+/// outstanding request is returned as a `Failed` completion rather than
+/// an `Err`.
 pub fn serve_until_idle(
     router: &mut Router,
     sched: &mut dyn ScheduledEngine,
@@ -283,36 +353,110 @@ pub fn serve_until_idle(
             let depth = router.depth();
             let req = router.pop().expect("depth > 0");
             let (probe_sink, probe) = StreamProbe::new();
-            let sid = sched.submit(req.req, Box::new(probe_sink))?;
-            tickets.push(Ticket {
-                router_id: req.id,
-                sid,
-                arrived_at: req.arrived_at,
-                queue_depth: depth,
-                probe,
-            });
+            match sched.submit(req.req, Box::new(probe_sink)) {
+                Ok(sid) => tickets.push(Ticket {
+                    router_id: req.id,
+                    sid,
+                    arrived_at: req.arrived_at,
+                    queue_depth: depth,
+                    probe,
+                }),
+                Err(e) => {
+                    let status = if e.downcast_ref::<ShedError>().is_some() {
+                        CompletionStatus::Shed
+                    } else {
+                        CompletionStatus::Failed {
+                            reason: format!("submit rejected: {e:#}"),
+                        }
+                    };
+                    out.push(unserved(
+                        req.id,
+                        sched.name(),
+                        status,
+                        router.now() - req.arrived_at,
+                        depth,
+                    ));
+                }
+            }
         }
         if !sched.has_work() {
             break;
         }
-        let rep = sched.step()?;
+        let rep = match sched.step() {
+            Ok(rep) => rep,
+            Err(e) => {
+                // the scheduler itself broke: fail every outstanding
+                // request instead of returning an error that drops them
+                let reason = format!("engine step failed: {e:#}");
+                for ticket in tickets.drain(..) {
+                    let latency = router.now() - ticket.arrived_at;
+                    let mut c = unserved(
+                        ticket.router_id,
+                        sched.name(),
+                        CompletionStatus::Failed {
+                            reason: reason.clone(),
+                        },
+                        latency,
+                        ticket.queue_depth,
+                    );
+                    let probe = ticket.probe.borrow();
+                    c.tokens = probe.tokens();
+                    c.service_s = probe.elapsed_s();
+                    c.first_token_s = probe.first_token_s().unwrap_or(c.service_s);
+                    c.tbt_s = probe.tbt_s();
+                    out.push(c);
+                }
+                break;
+            }
+        };
         for fid in &rep.finished {
             let Some(ti) = tickets.iter().position(|t| t.sid == *fid) else {
                 continue; // not ours (caller submitted directly)
             };
             let ticket = tickets.remove(ti);
-            let output = sched
-                .poll(ticket.sid)
-                .context("finished session must be pollable")?;
+            // status must be read before poll — poll forgets the session
+            let status = match sched.status(ticket.sid) {
+                Some(SessionStatus::Failed { reason }) => {
+                    if reason.starts_with("deadline") {
+                        CompletionStatus::DeadlineExceeded
+                    } else {
+                        CompletionStatus::Failed { reason }
+                    }
+                }
+                _ => CompletionStatus::Ok,
+            };
+            let output = match sched.poll(ticket.sid) {
+                Some(o) => o,
+                None => {
+                    anyhow::ensure!(
+                        !status.is_ok(),
+                        "finished session must be pollable"
+                    );
+                    crate::engine::DecodeOutput {
+                        tokens: Vec::new(),
+                        text: String::new(),
+                        wall_s: 0.0,
+                        modeled_s: 0.0,
+                        spec: None,
+                        metrics: Metrics::new(),
+                    }
+                }
+            };
             let probe = ticket.probe.borrow();
             let service = probe.elapsed_s();
-            debug_assert_eq!(probe.tokens(), output.tokens.len());
+            debug_assert!(
+                !status.is_ok() || probe.tokens() == output.tokens.len(),
+                "streamed {} tokens but output has {}",
+                probe.tokens(),
+                output.tokens.len()
+            );
             let (t_decide_s, t_commit_s, sync_overlap_ratio) =
                 sync_breakdown(&output.metrics);
             let (kv_app_bytes, kv_reup_bytes) = kv_byte_split(&output.metrics);
             let (prefix_hit_tokens, prefill_tokens_saved) = prefix_stats(&output.metrics);
             out.push(Completion {
                 id: ticket.router_id,
+                status,
                 engine: sched.name(),
                 tokens: output.tokens.len(),
                 latency_s: router.now() - ticket.arrived_at,
@@ -350,6 +494,7 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
         let (prefix_hit_tokens, prefill_tokens_saved) = prefix_stats(&result.metrics);
         out.push(Completion {
             id: req.id,
+            status: CompletionStatus::Ok,
             engine: engine.name(),
             tokens: result.tokens.len(),
             latency_s: router.now() - req.arrived_at,
@@ -386,6 +531,12 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
     let mut total_tokens = 0usize;
     for c in completions {
         m.incr("requests", 1);
+        match &c.status {
+            CompletionStatus::Ok => m.incr("completed_ok", 1),
+            CompletionStatus::Failed { .. } => m.incr("failed", 1),
+            CompletionStatus::Shed => m.incr("shed", 1),
+            CompletionStatus::DeadlineExceeded => m.incr("deadline_exceeded", 1),
+        }
         m.incr("tokens", c.tokens as u64);
         m.record("latency_s", c.latency_s);
         m.record("first_token_s", c.first_token_s);
@@ -545,6 +696,32 @@ mod tests {
         let mut sched = OneShotScheduler::new(Box::new(EchoEngine::new()));
         let done = serve_until_idle(&mut r, &mut sched).unwrap();
         assert_eq!(done[0].tokens, 3);
+    }
+
+    #[test]
+    fn summarize_counts_terminal_statuses() {
+        let done = vec![
+            unserved(0, "pp", CompletionStatus::Ok, 0.0, 1),
+            unserved(
+                1,
+                "pp",
+                CompletionStatus::Failed {
+                    reason: "worker lost".into(),
+                },
+                0.0,
+                1,
+            ),
+            unserved(2, "pp", CompletionStatus::Shed, 0.0, 1),
+            unserved(3, "pp", CompletionStatus::DeadlineExceeded, 0.0, 1),
+        ];
+        let (m, _) = summarize(&done, 1.0);
+        assert_eq!(m.counter("requests"), 4);
+        assert_eq!(m.counter("completed_ok"), 1);
+        assert_eq!(m.counter("failed"), 1);
+        assert_eq!(m.counter("shed"), 1);
+        assert_eq!(m.counter("deadline_exceeded"), 1);
+        assert!(done[0].status.is_ok());
+        assert!(!done[2].status.is_ok());
     }
 
     #[test]

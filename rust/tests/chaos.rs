@@ -1,0 +1,343 @@
+//! Chaos suite (ISSUE 9): deterministic fault-injection runs over the
+//! SpecPipe-DB scheduler asserting the fault-isolation contract:
+//!
+//! * no injected fault escapes the engine as a panic,
+//! * `step()` never returns an error for a session-scoped fault,
+//! * the engine always reaches idle (no deadlock, bounded steps),
+//! * every failed session reports a non-empty reason,
+//! * surviving sessions produce greedy outputs bit-identical to a
+//!   fault-free run,
+//! * no device KV mirror or prefix pin leaks past retirement,
+//! * deadline and shedding outcomes are observable end-to-end through
+//!   `server::Completion::status` and the `summarize` counters.
+//!
+//! Gating tests run fixed plans at `threads = 1` (inline execution makes
+//! fault hit counts deterministic). The `#[ignore]`d randomized test is
+//! the nightly lane: it derives a `FaultPlan` from `PIPEDEC_CHAOS_SEED`
+//! and prints the serialized plan up front so a failing run can be
+//! replayed exactly via `PIPEDEC_FAULTS`.
+//!
+//! Every test takes the install guard for its whole body: the armed plan
+//! is process-global, so tests must never overlap an armed window.
+
+use pipedec::config::{EngineConfig, TreeConfig};
+use pipedec::coordinator::PipeDecDbEngine;
+use pipedec::engine::{
+    DecodeRequest, NullSink, ScheduledEngine, SessionId, SessionStatus,
+};
+use pipedec::server::{serve_until_idle, summarize, CompletionStatus, Router};
+use pipedec::util::XorShiftRng;
+use pipedec::faultinject::{self, FaultPlan};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pipedec::artifacts_dir();
+    dir.join("target_config.txt").exists().then_some(dir)
+}
+
+/// Hold the process-global fault-injection lock, disarmed. Tests arm
+/// their plans inside the guarded scope; the guard disarms on drop.
+fn fault_quiesce() -> faultinject::FaultGuard {
+    let guard = faultinject::install(FaultPlan::default());
+    faultinject::disarm();
+    guard
+}
+
+fn cfg(threads: usize) -> EngineConfig {
+    EngineConfig {
+        stages: 2,
+        tree: TreeConfig {
+            max_width: 4,
+            max_children: 4,
+            max_depth: 8,
+        },
+        max_new_tokens: 8,
+        threads,
+        ..EngineConfig::default()
+    }
+}
+
+const PROMPTS: [&str; 3] = [
+    "<math>\nquestion: alice has 4 apples and buys 3 more. how many apples now?\n",
+    "<math>\nquestion: bob has 3 coins and finds 2 more. how many coins now?\n",
+    "<math>\nquestion: carol packs 5 boxes with 6 coins each. total coins?\n",
+];
+
+/// Fault-free reference run: per-prompt greedy outputs and the engine's
+/// post-idle mirror occupancy (the leak baseline). Must be called with
+/// the layer disarmed.
+fn baseline(dir: &std::path::Path, c: &EngineConfig) -> (Vec<Vec<u32>>, Vec<usize>) {
+    assert!(!faultinject::enabled(), "baseline must run fault-free");
+    let mut eng = PipeDecDbEngine::new(dir, c.clone()).unwrap();
+    let mut ids: Vec<SessionId> = Vec::new();
+    drive(&mut eng, &mut XorShiftRng::new(7), &mut ids);
+    let outs = ids
+        .iter()
+        .map(|id| eng.poll(*id).expect("baseline session finishes").tokens)
+        .collect();
+    (outs, eng.mirror_counts())
+}
+
+/// Drive one engine through a random submit/step interleaving until it
+/// goes idle and all of `to_submit` has been submitted (ids appended to
+/// `ids`). Panics if the engine wedges or a step returns an error.
+fn drive(eng: &mut PipeDecDbEngine, rng: &mut XorShiftRng, ids: &mut Vec<SessionId>) {
+    let mut next = ids.len();
+    let mut budget = 20_000u32;
+    while next < PROMPTS.len() || eng.has_work() {
+        budget -= 1;
+        assert!(budget > 0, "engine wedged: step budget exhausted");
+        if next < PROMPTS.len() && rng.below(2) == 0 {
+            ids.push(
+                eng.submit(DecodeRequest::new(PROMPTS[next]), Box::new(NullSink))
+                    .unwrap(),
+            );
+            next += 1;
+        } else if eng.has_work() {
+            eng.step()
+                .expect("step must never error on a session-scoped fault");
+        }
+    }
+}
+
+/// One chaos run: arm `plan`, run a random schedule, then check the
+/// whole fault-isolation contract against the fault-free baseline.
+fn chaos_run(
+    dir: &std::path::Path,
+    c: &EngineConfig,
+    plan: FaultPlan,
+    seed: u64,
+    expected: &[Vec<u32>],
+    mirror_base: &[usize],
+) -> usize {
+    faultinject::arm(plan);
+    let mut eng = PipeDecDbEngine::new(dir, c.clone()).unwrap();
+    let mut ids = Vec::new();
+    drive(&mut eng, &mut XorShiftRng::new(seed), &mut ids);
+    faultinject::disarm();
+
+    let mut failed = 0usize;
+    for (i, id) in ids.iter().enumerate() {
+        match eng.status(*id) {
+            Some(SessionStatus::Failed { reason }) => {
+                failed += 1;
+                assert!(!reason.is_empty(), "{id}: failure must carry a reason");
+                assert!(
+                    eng.poll(*id).is_some(),
+                    "{id}: failed session must still yield its partial output"
+                );
+            }
+            Some(SessionStatus::Finished) => {
+                let out = eng.poll(*id).expect("finished session is pollable");
+                if c.threads <= 1 {
+                    assert_eq!(
+                        out.tokens, expected[i],
+                        "{id}: surviving session diverged from the fault-free run"
+                    );
+                }
+            }
+            s => panic!("{id}: session not terminal after idle: {s:?}"),
+        }
+    }
+    assert_eq!(
+        eng.mirror_counts(),
+        mirror_base,
+        "device KV mirrors leaked past retirement"
+    );
+    assert_eq!(
+        eng.pinned_prefix_sessions(),
+        0,
+        "prefix pins leaked past retirement"
+    );
+    failed
+}
+
+/// Gating lane: fixed plans over fixed seeds at `threads = 1`.
+#[test]
+fn chaos_fixed_plans_isolate_faults_and_leak_nothing() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _guard = fault_quiesce();
+    let c = cfg(1);
+    let (expected, mirror_base) = baseline(&dir, &c);
+
+    // worker-scoped errors and panics must fail exactly one session;
+    // fail-soft device/spill faults must fail none
+    let plans: &[(&str, bool)] = &[
+        ("stage_job@2=error", true),
+        ("stage_job@5=panic", true),
+        ("draft_job@3=error", true),
+        ("draft_job@2=panic", true),
+        ("apply_commit@2=error", true),
+        ("device_op@1=error", false),
+        ("spill_write@1=error", false),
+        ("stage_job@1=delay:2,draft_job@2=error", true),
+    ];
+    for (i, (text, faults_a_session)) in plans.iter().enumerate() {
+        let plan: FaultPlan = text.parse().unwrap();
+        let failed = chaos_run(&dir, &c, plan, 100 + i as u64, &expected, &mirror_base);
+        if *faults_a_session {
+            // a lost draft job fails every session with an in-flight
+            // candidate, so >= 1 (not == 1) is the portable bound
+            assert!(failed >= 1, "plan {text:?} was expected to fail a session");
+        } else {
+            assert_eq!(failed, 0, "fail-soft plan {text:?} must not fail sessions");
+        }
+    }
+}
+
+/// Pooled lane: worker panics and worker-thread exits at `threads >= 2`
+/// must respawn without deadlocking the coordinator. Outputs are not
+/// compared (hit attribution is nondeterministic across workers); the
+/// invariants are liveness, terminal statuses, and leak-freedom.
+#[test]
+fn chaos_pooled_worker_faults_recover_without_deadlock() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _guard = fault_quiesce();
+    let c = cfg(3);
+    let (expected, mirror_base) = baseline(&dir, &c);
+    for (i, text) in [
+        "stage_job@2=panic",
+        "worker_exit@1=error",
+        "stage_job@1=panic,stage_job@3=panic",
+        "draft_job@2=panic,worker_exit@2=error",
+    ]
+    .iter()
+    .enumerate()
+    {
+        let plan: FaultPlan = text.parse().unwrap();
+        let failed = chaos_run(&dir, &c, plan, 200 + i as u64, &expected, &mirror_base);
+        assert!(
+            failed <= PROMPTS.len(),
+            "plan {text:?}: more failures than sessions"
+        );
+    }
+}
+
+/// Deadlines are observable end-to-end: with an (unmeetable) TTFT
+/// deadline every request is retired before admission and surfaces as
+/// `DeadlineExceeded` through the serving loop and summarize counters.
+#[test]
+fn chaos_deadline_outcomes_are_observable_end_to_end() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _guard = fault_quiesce();
+    let mut c = cfg(1);
+    c.limits.ttft_deadline_s = 1e-9;
+    let mut eng = PipeDecDbEngine::new(&dir, c).unwrap();
+    let mut router = Router::new(8);
+    for p in PROMPTS {
+        router.submit_prompt(p).unwrap();
+    }
+    let done = serve_until_idle(&mut router, &mut eng).unwrap();
+    assert_eq!(done.len(), PROMPTS.len());
+    for cpl in &done {
+        assert_eq!(
+            cpl.status,
+            CompletionStatus::DeadlineExceeded,
+            "request {} should have missed its TTFT deadline",
+            cpl.id
+        );
+        assert_eq!(cpl.tokens, 0, "no tokens before the first-token deadline");
+    }
+    let (m, _) = summarize(&done, 1.0);
+    assert_eq!(m.counter("deadline_exceeded"), PROMPTS.len() as u64);
+    assert_eq!(m.counter("completed_ok"), 0);
+}
+
+/// Admission-queue shedding is observable end-to-end: with `queue_cap`
+/// = 1 the serving loop's bulk admission sheds the overflow as typed
+/// `Shed` completions while the admitted request completes normally.
+#[test]
+fn chaos_shed_outcomes_are_observable_end_to_end() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _guard = fault_quiesce();
+    let mut c = cfg(1);
+    c.limits.queue_cap = 1;
+    let mut eng = PipeDecDbEngine::new(&dir, c).unwrap();
+    let mut router = Router::new(8);
+    for p in PROMPTS {
+        router.submit_prompt(p).unwrap();
+    }
+    let done = serve_until_idle(&mut router, &mut eng).unwrap();
+    assert_eq!(done.len(), PROMPTS.len());
+    let (m, _) = summarize(&done, 1.0);
+    assert_eq!(m.counter("completed_ok"), 1, "the admitted request completes");
+    assert_eq!(m.counter("shed"), 2, "overflow submits are shed, not errors");
+    let ok = done
+        .iter()
+        .find(|cpl| cpl.status.is_ok())
+        .expect("one request served");
+    assert!(ok.tokens > 0);
+}
+
+/// The serving loop never aborts under injected faults: failed sessions
+/// surface as `Failed { reason }` completions and the rest serve Ok.
+#[test]
+fn chaos_serve_until_idle_never_aborts_under_faults() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _guard = fault_quiesce();
+    faultinject::arm("stage_job@4=error".parse().unwrap());
+    let mut eng = PipeDecDbEngine::new(&dir, cfg(1)).unwrap();
+    let mut router = Router::new(8);
+    for p in PROMPTS {
+        router.submit_prompt(p).unwrap();
+    }
+    let done = serve_until_idle(&mut router, &mut eng).unwrap();
+    faultinject::disarm();
+    assert_eq!(done.len(), PROMPTS.len());
+    let (m, _) = summarize(&done, 1.0);
+    assert_eq!(m.counter("failed"), 1, "exactly one session absorbs the fault");
+    assert_eq!(m.counter("completed_ok"), PROMPTS.len() as u64 - 1);
+    for cpl in &done {
+        if let CompletionStatus::Failed { reason } = &cpl.status {
+            assert!(!reason.is_empty(), "failure reason must survive to the server");
+        }
+    }
+}
+
+/// Nightly lane: a randomized plan derived from `PIPEDEC_CHAOS_SEED`
+/// (default 1). The plan is printed first so a failing run's exact
+/// schedule can be pinned and replayed via `PIPEDEC_FAULTS=<plan>`.
+#[test]
+#[ignore = "nightly chaos lane: run with --ignored, seed via PIPEDEC_CHAOS_SEED"]
+fn chaos_randomized_plan_from_env_seed() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let seed: u64 = std::env::var("PIPEDEC_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let plan = FaultPlan::random(seed);
+    eprintln!(
+        "chaos seed {seed}: plan \"{plan}\" — replay with PIPEDEC_FAULTS=\"{plan}\""
+    );
+    let _guard = fault_quiesce();
+    let c = cfg(1);
+    let (expected, mirror_base) = baseline(&dir, &c);
+    for round in 0..8u64 {
+        let failed = chaos_run(
+            &dir,
+            &c,
+            plan.clone(),
+            seed.wrapping_mul(31).wrapping_add(round),
+            &expected,
+            &mirror_base,
+        );
+        assert!(failed <= PROMPTS.len());
+    }
+}

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use pipedec::config::{EngineConfig, TreeConfig};
 use pipedec::coordinator::PipeDecDbEngine;
+use pipedec::faultinject::{self, FaultPlan};
 use pipedec::engine::{
     build_engine, build_scheduled_engine, DecodeOutput, DecodeRequest, Engine, EngineKind,
     OneShotScheduler, ScheduledEngine, SessionId, SessionStatus, TokenSink,
@@ -169,6 +170,17 @@ fn artifacts() -> Option<std::path::PathBuf> {
     dir.join("target_config.txt").exists().then_some(dir)
 }
 
+/// Serialize db-engine tests against the process-global fault-injection
+/// state: tests that arm plans hold this guard for their whole body, and
+/// every other db test takes it with an empty plan so it can never run
+/// concurrently with an armed window (which would skew hit counters and
+/// inject faults into the wrong test).
+fn fault_quiesce() -> faultinject::FaultGuard {
+    let guard = faultinject::install(FaultPlan::default());
+    faultinject::disarm(); // hold the lock, but keep fire() on the no-op path
+    guard
+}
+
 fn cfg() -> EngineConfig {
     EngineConfig {
         stages: 2,
@@ -206,6 +218,7 @@ fn db_coscheduled_outputs_match_solo_decode() {
         eprintln!("skipping: no artifacts");
         return;
     };
+    let _faults = fault_quiesce();
     // solo greedy decodes through the one-shot PipeDec engine
     let mut solo = build_engine(EngineKind::PipeDec, &dir, cfg()).unwrap();
     let expected: Vec<Vec<u32>> = PROMPTS
@@ -249,6 +262,7 @@ fn db_admission_is_fifo_and_overlaps_decode() {
         eprintln!("skipping: no artifacts");
         return;
     };
+    let _faults = fault_quiesce();
     let mut sched = build_scheduled_engine(EngineKind::PipeDecDb, &dir, cfg()).unwrap();
     let mut ids = Vec::new();
     for p in PROMPTS {
@@ -275,6 +289,7 @@ fn db_cancelled_sessions_never_emit_again() {
         eprintln!("skipping: no artifacts");
         return;
     };
+    let _faults = fault_quiesce();
     let mut sched = build_scheduled_engine(EngineKind::PipeDecDb, &dir, cfg()).unwrap();
     let (sink_a, buf_a) = SharedSink::new();
     let a = sched
@@ -316,6 +331,7 @@ fn db_cancel_during_admission_leaks_no_prefix_pin_or_mirror() {
         eprintln!("skipping: no artifacts");
         return;
     };
+    let _faults = fault_quiesce();
     let mut eng = PipeDecDbEngine::new(&dir, cfg()).unwrap();
 
     // A runs to completion: the store warms with the template's blocks
@@ -368,4 +384,112 @@ fn db_cancel_during_admission_leaks_no_prefix_pin_or_mirror() {
         2,
         "cancelled sessions must not hold prefix block references"
     );
+}
+
+/// ISSUE 9: an injected mid-decode stage failure retires exactly one
+/// session as `Failed` while the FIFO queue refills its slot and every
+/// surviving session's greedy output stays bit-identical to the
+/// fault-free run.
+#[test]
+fn db_injected_mid_decode_failure_isolates_one_session() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _faults = fault_quiesce();
+    let mut c = cfg();
+    c.threads = 1; // inline execution: fault hit counts are deterministic
+
+    // fault-free baseline outputs (greedy => schedule-independent)
+    let mut base = PipeDecDbEngine::new(&dir, c.clone()).unwrap();
+    let mut base_ids = Vec::new();
+    for p in PROMPTS {
+        base_ids.push(
+            base.submit(DecodeRequest::new(p), Box::new(pipedec::engine::NullSink))
+                .unwrap(),
+        );
+    }
+    drive_to_idle(&mut base);
+    let expected: Vec<Vec<u32>> = base_ids
+        .iter()
+        .map(|id| base.poll(*id).expect("baseline session finishes").tokens)
+        .collect();
+
+    // same three requests with a stage-job error injected mid-decode
+    faultinject::arm("stage_job@4=error".parse().unwrap());
+    let mut eng = PipeDecDbEngine::new(&dir, c).unwrap();
+    let mut ids = Vec::new();
+    for p in PROMPTS {
+        ids.push(
+            eng.submit(DecodeRequest::new(p), Box::new(pipedec::engine::NullSink))
+                .unwrap(),
+        );
+    }
+    let finished = drive_to_idle(&mut eng);
+    assert_eq!(
+        finished.len(),
+        PROMPTS.len(),
+        "every session reaches a terminal state (FIFO refilled the slot)"
+    );
+
+    let mut failed = 0usize;
+    for (i, id) in ids.iter().enumerate() {
+        match eng.status(*id) {
+            Some(SessionStatus::Failed { reason }) => {
+                failed += 1;
+                assert!(!reason.is_empty(), "{id}: failure must carry a reason");
+                assert!(
+                    eng.poll(*id).is_some(),
+                    "{id}: failed session still yields its partial output"
+                );
+            }
+            Some(SessionStatus::Finished) => {
+                let out = eng.poll(*id).expect("finished session is pollable");
+                assert_eq!(
+                    out.tokens, expected[i],
+                    "{id}: surviving session diverged from the fault-free run"
+                );
+            }
+            s => panic!("{id}: unexpected terminal status {s:?}"),
+        }
+    }
+    assert_eq!(failed, 1, "exactly one session absorbs the injected fault");
+}
+
+/// ISSUE 9: the failure path must release device KV mirrors and prefix
+/// pins exactly like cancellation does (it reuses the same retire paths).
+#[test]
+fn db_failed_session_leaks_no_prefix_pin_or_mirror() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _faults = fault_quiesce();
+    let mut c = cfg();
+    c.threads = 1;
+    let mut eng = PipeDecDbEngine::new(&dir, c).unwrap();
+
+    // A completes cleanly: baseline mirror occupancy, no pins
+    let a = eng
+        .submit(DecodeRequest::new(PROMPTS[0]), Box::new(pipedec::engine::NullSink))
+        .unwrap();
+    drive_to_idle(&mut eng);
+    assert!(eng.poll(a).is_some());
+    let baseline = eng.mirror_counts();
+    assert_eq!(eng.pinned_prefix_sessions(), 0);
+
+    // B fails mid-decode via an injected stage error
+    faultinject::arm("stage_job@3=error".parse().unwrap());
+    let b = eng
+        .submit(DecodeRequest::new(PROMPTS[0]), Box::new(pipedec::engine::NullSink))
+        .unwrap();
+    drive_to_idle(&mut eng);
+    faultinject::disarm();
+    assert!(
+        matches!(eng.status(b), Some(SessionStatus::Failed { .. })),
+        "B must fail, got {:?}",
+        eng.status(b)
+    );
+    assert_eq!(eng.mirror_counts(), baseline, "failure leaked a mirror slot");
+    assert_eq!(eng.pinned_prefix_sessions(), 0, "failure leaked a prefix pin");
 }
