@@ -39,6 +39,16 @@
 //! commit twice, exiting on channel close without draining the queue — and
 //! the tests assert the explorer *fails* on each, which is what makes the
 //! passing runs meaningful.
+//!
+//! A second lane, [`SpecModel`], covers the continuous-speculation epoch
+//! protocol (ISSUE 10): a free-running draft thread banks epoch-tagged
+//! generations against possibly-stale snapshots while the coordinator
+//! prunes, resets and serves. It drives the production acceptance
+//! predicate [`crate::coordinator::spec::expansion_applicable`] and checks,
+//! against an independent node-identity ground truth, that no stale
+//! generation is ever applied and no still-valid generation is ever
+//! dropped, under every interleaving. [`SpecMutations`] seeds the
+//! corresponding bugs.
 
 use super::explore::Model;
 use super::protocol::{verify_drained, CommitCursor, CommitLog, Epoched};
@@ -488,6 +498,394 @@ impl Model for ProtocolModel {
         self.terminal_epochs
             .borrow_mut()
             .insert(s.workers.iter().map(|w| w.cursor.epoch()).collect());
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Continuous-speculation epoch protocol (ISSUE 10)
+// ---------------------------------------------------------------------------
+
+/// Seeded bugs for the speculation-epoch lane ([`SpecModel`]). Each makes
+/// some interleaving apply a stale expansion or drop a valid one; the loom
+/// tests assert the explorer fails on each.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecMutations {
+    /// Serve the head-of-bank generation without consulting
+    /// [`expansion_applicable`] at all.
+    pub apply_stale: bool,
+    /// Reject every banked generation even when the verdict says it still
+    /// applies (lockstep would have produced the identical layer).
+    pub drop_valid: bool,
+    /// Skip the divergence guard: after a *filtered* serve (a prune
+    /// removed some of the expansion's parents while it was in flight)
+    /// keep the deeper banked generations, whose shadow-minted parent ids
+    /// now collide with differently-shaped canonical nodes.
+    pub skip_divergence_guard: bool,
+    /// Remove the epoch mechanism entirely: Miss stops clearing the bank,
+    /// arrivals are banked regardless of tag, and applicability is
+    /// evaluated with the live epoch substituted for the expansion's.
+    /// Node-id collisions across a Miss reset then pass the frontier
+    /// equality check — proving the tag (not id matching) is what keeps
+    /// pre-reset generations out.
+    pub ignore_epoch: bool,
+}
+
+/// One scripted coordinator action per sync round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpecEvent {
+    /// Lockstep draft expansion: every frontier node mints its children
+    /// on the canonical tree (the fallback when no banked generation
+    /// serves).
+    Expand,
+    /// Hit-path prune: keep only the `keep % frontier.len()`-th frontier
+    /// node, discarding the sibling subtrees.
+    Hit { keep: usize },
+    /// Miss-path reset: bump the live epoch, rebuild the tree from a
+    /// fresh root, and clear the bank. Node ids restart, so ids from the
+    /// old tree *collide* with differently-valued new nodes — the epoch
+    /// tag is what keeps pre-reset generations out.
+    Miss,
+    /// Sync-phase serve attempt: absorb draft arrivals into the bank,
+    /// then pop generations until one applies (mirrors
+    /// `SpecBank::try_serve`).
+    Serve,
+}
+
+/// A free-running draft generation: the epoch it assumed, the snapshot
+/// frontier it expanded (`(node_id, value)` pairs), and the child values
+/// it computed per parent. `value` is a ground-truth-only node identity —
+/// unique across the whole run even where node *ids* collide across Miss
+/// resets — standing in for the token content the real draft derives from
+/// the node's path.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SpecExp {
+    epoch: u64,
+    parents: Vec<(u64, u64)>,
+    children: Vec<Vec<u64>>,
+}
+
+/// Draft-thread program counter: snapshot the committed state, then
+/// produce `gens` generations against a private shadow of it.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum DraftPc {
+    Snap,
+    Produce {
+        gen: usize,
+        snap_epoch: u64,
+        shadow: Vec<(u64, u64)>,
+        shadow_next_id: u64,
+    },
+}
+
+/// Shared state for [`SpecModel`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SpecState {
+    epoch: u64,
+    next_id: u64,
+    /// Canonical frontier, `(id, value)` in BFS order.
+    frontier: Vec<(u64, u64)>,
+    /// Ids alive in the *current* tree instance (cleared on Miss).
+    alive: BTreeSet<u64>,
+    /// Arrived-but-unbanked generations (the draft reply in flight).
+    inflight: VecDeque<SpecExp>,
+    bank: VecDeque<SpecExp>,
+    next_event: usize,
+    draft: DraftPc,
+    dispatches_left: usize,
+    served: u64,
+    dropped: u64,
+}
+
+/// Model of the free-running speculation protocol (ISSUE 10), driving the
+/// production acceptance predicate
+/// [`crate::coordinator::spec::expansion_applicable`] under every
+/// interleaving of a snapshotting draft thread against a coordinator
+/// running scripted Expand / Hit / Miss / Serve rounds.
+///
+/// * **Thread 0, the coordinator**, executes `events` in order. `Serve`
+///   mirrors `SpecBank::try_serve`: resolve each banked generation's
+///   parents against the live tree, ask `expansion_applicable`, apply the
+///   survivors' children or drop the generation, and clear the remaining
+///   bank after a filtered serve (the divergence guard).
+/// * **Thread 1, the draft**, free-runs `dispatches` cycles: atomically
+///   snapshot `(epoch, frontier, next_id)`, then mint `gens` generations
+///   against a private shadow — exactly like `draft_speculate`'s
+///   `tree.clone()` — publishing each into the in-flight queue. The
+///   explorer chooses when the snapshot lands relative to coordinator
+///   rounds, which is where every staleness case comes from.
+///
+/// Ground truth is independent of the checked predicate: every node
+/// carries a run-unique `value` (node ids deliberately restart on Miss so
+/// they collide across resets, as production tree ids do). An applied
+/// generation must have expanded, value-for-value, exactly the nodes that
+/// are the canonical frontier *now* — i.e. lockstep would have produced
+/// the identical layer; a dropped generation must not have. `check_terminal`
+/// records `(served, dropped)` into [`SpecModel::outcomes`] so tests can
+/// assert both outcomes are actually reachable.
+pub struct SpecModel {
+    pub events: Vec<SpecEvent>,
+    /// Draft snapshot/produce cycles.
+    pub dispatches: usize,
+    /// Generations minted per dispatch.
+    pub gens: usize,
+    pub mutations: SpecMutations,
+    /// `(served, dropped)` pairs over all terminal states.
+    pub outcomes: RefCell<BTreeSet<(u64, u64)>>,
+}
+
+/// Child fan-out: keep the frontier at most two wide so prunes have a
+/// sibling to discard without blowing up the state space.
+fn spec_fanout(frontier_len: usize) -> u64 {
+    if frontier_len <= 1 {
+        2
+    } else {
+        1
+    }
+}
+
+/// Deterministic per-node child value — the model's stand-in for the
+/// draft model being a pure function of the parent's path. Injective for
+/// the shallow trees explored here, so two distinct nodes never mint
+/// equal-valued children.
+fn spec_child_value(parent_value: u64, child: u64) -> u64 {
+    parent_value.wrapping_mul(31).wrapping_add(child + 7)
+}
+
+/// Root value for the tree instance of `epoch` — distinct per reset.
+fn spec_root_value(epoch: u64) -> u64 {
+    (epoch + 1) << 32
+}
+
+impl SpecModel {
+    pub fn new(events: Vec<SpecEvent>, dispatches: usize, gens: usize) -> Self {
+        Self {
+            events,
+            dispatches,
+            gens,
+            mutations: SpecMutations::default(),
+            outcomes: RefCell::new(BTreeSet::new()),
+        }
+    }
+
+    /// Ground truth for an applied generation: the survivors it expanded
+    /// must be, value-for-value and in order, the canonical frontier.
+    fn check_apply(s: &SpecState, exp: &SpecExp, survivors: &[usize]) -> Result<(), String> {
+        let surv_values: Vec<u64> = survivors.iter().map(|&i| exp.parents[i].1).collect();
+        let frontier_values: Vec<u64> = s.frontier.iter().map(|n| n.1).collect();
+        if surv_values != frontier_values {
+            return Err(format!(
+                "stale expansion applied: epoch-{} generation expanded nodes \
+                 {surv_values:?} but the committed frontier at epoch {} is \
+                 {frontier_values:?}",
+                exp.epoch, s.epoch
+            ));
+        }
+        Ok(())
+    }
+
+    /// Ground truth for a dropped generation: lockstep from the current
+    /// committed state must *not* have produced the identical layer.
+    fn check_drop(s: &SpecState, exp: &SpecExp) -> Result<(), String> {
+        let surv_values: Vec<u64> = exp
+            .parents
+            .iter()
+            .filter(|p| s.alive.contains(&p.0))
+            .map(|p| p.1)
+            .collect();
+        let frontier_values: Vec<u64> = s.frontier.iter().map(|n| n.1).collect();
+        if !surv_values.is_empty() && surv_values == frontier_values {
+            return Err(format!(
+                "valid expansion dropped: epoch-{} generation for frontier \
+                 {frontier_values:?} was discarded at live epoch {}",
+                exp.epoch, s.epoch
+            ));
+        }
+        Ok(())
+    }
+
+    /// Mirror of `SpecBank::try_serve` + the Done-arm arrival filter.
+    fn serve(&self, s: &mut SpecState) -> Result<(), String> {
+        while let Some(exp) = s.inflight.pop_front() {
+            if exp.epoch == s.epoch || self.mutations.ignore_epoch {
+                s.bank.push_back(exp);
+            } else {
+                s.dropped += 1;
+                Self::check_drop(s, &exp)?;
+            }
+        }
+        while let Some(exp) = s.bank.pop_front() {
+            let survivors: Vec<usize> = (0..exp.parents.len())
+                .filter(|&i| s.alive.contains(&exp.parents[i].0))
+                .collect();
+            let surviving_ids: Vec<u64> =
+                survivors.iter().map(|&i| exp.parents[i].0).collect();
+            let frontier_ids: Vec<u64> = s.frontier.iter().map(|n| n.0).collect();
+            let tag = if self.mutations.ignore_epoch {
+                s.epoch
+            } else {
+                exp.epoch
+            };
+            let verdict = crate::coordinator::spec::expansion_applicable(
+                tag,
+                s.epoch,
+                &surviving_ids,
+                &frontier_ids,
+            );
+            let apply = (verdict || self.mutations.apply_stale) && !self.mutations.drop_valid;
+            if !apply {
+                s.dropped += 1;
+                Self::check_drop(s, &exp)?;
+                continue; // stale: fall through to the next generation
+            }
+            Self::check_apply(s, &exp, &survivors)?;
+            let mut minted = Vec::with_capacity(survivors.len());
+            for &i in &survivors {
+                for &value in &exp.children[i] {
+                    minted.push((s.next_id, value));
+                    s.alive.insert(s.next_id);
+                    s.next_id += 1;
+                }
+            }
+            s.frontier = minted;
+            s.served += 1;
+            if survivors.len() < exp.parents.len() && !self.mutations.skip_divergence_guard {
+                // Divergence guard: deeper generations assumed the
+                // unfiltered tree; their shadow ids alias fresh canonical
+                // nodes, so they must die with this serve.
+                while let Some(rest) = s.bank.pop_front() {
+                    s.dropped += 1;
+                    Self::check_drop(s, &rest)?;
+                }
+            }
+            break;
+        }
+        Ok(())
+    }
+}
+
+impl Model for SpecModel {
+    type State = SpecState;
+
+    fn initial(&self) -> SpecState {
+        let root = (0u64, spec_root_value(0));
+        SpecState {
+            epoch: 0,
+            next_id: 1,
+            frontier: vec![root],
+            alive: BTreeSet::from([0]),
+            inflight: VecDeque::new(),
+            bank: VecDeque::new(),
+            next_event: 0,
+            draft: DraftPc::Snap,
+            dispatches_left: self.dispatches,
+            served: 0,
+            dropped: 0,
+        }
+    }
+
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn enabled(&self, s: &SpecState, tid: usize) -> bool {
+        match tid {
+            0 => s.next_event < self.events.len(),
+            _ => s.dispatches_left > 0,
+        }
+    }
+
+    fn step(&self, s: &mut SpecState, tid: usize) -> Result<(), String> {
+        if tid == 0 {
+            let ev = self.events[s.next_event];
+            s.next_event += 1;
+            match ev {
+                SpecEvent::Expand => {
+                    let fan = spec_fanout(s.frontier.len());
+                    let mut minted = Vec::new();
+                    for &(_, value) in &s.frontier.clone() {
+                        for c in 0..fan {
+                            minted.push((s.next_id, spec_child_value(value, c)));
+                            s.alive.insert(s.next_id);
+                            s.next_id += 1;
+                        }
+                    }
+                    s.frontier = minted;
+                }
+                SpecEvent::Hit { keep } => {
+                    let k = keep % s.frontier.len();
+                    for (i, &(id, _)) in s.frontier.clone().iter().enumerate() {
+                        if i != k {
+                            s.alive.remove(&id);
+                        }
+                    }
+                    s.frontier = vec![s.frontier[k]];
+                }
+                SpecEvent::Miss => {
+                    s.epoch += 1;
+                    s.alive.clear();
+                    s.next_id = 1;
+                    let root = (0u64, spec_root_value(s.epoch));
+                    s.alive.insert(0);
+                    s.frontier = vec![root];
+                    if !self.mutations.ignore_epoch {
+                        s.bank.clear(); // SpecBank::bump_epoch drops the bank
+                    }
+                }
+                SpecEvent::Serve => self.serve(s)?,
+            }
+            return Ok(());
+        }
+        match s.draft.clone() {
+            DraftPc::Snap => {
+                s.draft = DraftPc::Produce {
+                    gen: 0,
+                    snap_epoch: s.epoch,
+                    shadow: s.frontier.clone(),
+                    shadow_next_id: s.next_id,
+                };
+            }
+            DraftPc::Produce {
+                gen,
+                snap_epoch,
+                shadow,
+                mut shadow_next_id,
+            } => {
+                let fan = spec_fanout(shadow.len());
+                let mut children = Vec::with_capacity(shadow.len());
+                let mut next_shadow = Vec::new();
+                for &(_, value) in &shadow {
+                    let vals: Vec<u64> =
+                        (0..fan).map(|c| spec_child_value(value, c)).collect();
+                    for &v in &vals {
+                        next_shadow.push((shadow_next_id, v));
+                        shadow_next_id += 1;
+                    }
+                    children.push(vals);
+                }
+                s.inflight.push_back(SpecExp {
+                    epoch: snap_epoch,
+                    parents: shadow,
+                    children,
+                });
+                if gen + 1 == self.gens {
+                    s.dispatches_left -= 1;
+                    s.draft = DraftPc::Snap;
+                } else {
+                    s.draft = DraftPc::Produce {
+                        gen: gen + 1,
+                        snap_epoch,
+                        shadow: next_shadow,
+                        shadow_next_id,
+                    };
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_terminal(&self, s: &SpecState) -> Result<(), String> {
+        self.outcomes.borrow_mut().insert((s.served, s.dropped));
         Ok(())
     }
 }

@@ -143,6 +143,17 @@ pub struct EngineConfig {
     /// compute. `false` applies commits at the sync point — the PR 4
     /// serial reference path. Outputs are bit-identical either way.
     pub overlap_sync: bool,
+    /// Continuous asynchronous speculation (ISSUE 10): maximum draft tree
+    /// generations in flight per session. `1` = lockstep (the draft
+    /// expands exactly one layer per timestep, today's behavior,
+    /// bit-identical). `> 1` = after its in-step expansion the draft
+    /// free-runs ahead, speculatively expanding up to `spec_inflight - 1`
+    /// further generations against a shadow of the tree it just returned;
+    /// the coordinator banks them epoch-tagged and serves them on later
+    /// timesteps without paying the draft again, dropping any that went
+    /// stale (Miss reset, pruned attach point, cancel). Greedy outputs
+    /// are bit-identical at every setting.
+    pub spec_inflight: usize,
     /// Tiered cross-request KV prefix cache (ISSUE 8).
     pub prefix_cache: PrefixCacheConfig,
     /// Deadlines and admission shedding (ISSUE 9); all-zero = disabled.
@@ -167,6 +178,7 @@ impl Default for EngineConfig {
             ablate_tree_reuse: false,
             threads: 0,
             overlap_sync: true,
+            spec_inflight: 1,
             prefix_cache: PrefixCacheConfig::default(),
             limits: LimitsConfig::default(),
             fault_plan: None,
@@ -203,6 +215,9 @@ impl EngineConfig {
         }
         if let Some(v) = doc.get("engine", "overlap_sync") {
             cfg.overlap_sync = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("engine", "spec_inflight") {
+            cfg.spec_inflight = v.as_usize()?;
         }
         if let Some(v) = doc.get("prefix_cache", "enabled") {
             cfg.prefix_cache.enabled = v.as_bool()?;
@@ -268,6 +283,10 @@ impl EngineConfig {
             "tree.max_children must be >= 1"
         );
         anyhow::ensure!(self.tree.max_depth >= 2, "tree.max_depth must be >= 2");
+        anyhow::ensure!(
+            self.spec_inflight >= 1,
+            "spec_inflight must be >= 1 (1 = lockstep)"
+        );
         anyhow::ensure!(
             (0.0..=2.0).contains(&self.temperature),
             "temperature out of range"
@@ -374,6 +393,21 @@ mod tests {
         assert!(!off.overlap_sync);
         let on = EngineConfig::from_toml_str("[engine]\noverlap_sync = true\n").unwrap();
         assert!(on.overlap_sync);
+    }
+
+    #[test]
+    fn spec_inflight_parses_and_defaults_to_lockstep() {
+        assert_eq!(
+            EngineConfig::default().spec_inflight,
+            1,
+            "lockstep is the default"
+        );
+        let cfg = EngineConfig::from_toml_str("[engine]\nspec_inflight = 3\n").unwrap();
+        assert_eq!(cfg.spec_inflight, 3);
+        assert!(
+            EngineConfig::from_toml_str("[engine]\nspec_inflight = 0\n").is_err(),
+            "0 generations in flight is rejected"
+        );
     }
 
     #[test]

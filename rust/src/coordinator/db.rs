@@ -73,6 +73,7 @@ use anyhow::{Context, Result};
 
 use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
+use super::spec::SpecBank;
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, DraftReply, GroupOutcome, StageJob, WorkerPool,
 };
@@ -128,6 +129,12 @@ struct DbSession {
     /// queue discipline live in [`CommitLog`], shared with
     /// `PipeDecEngine` and the model checker.
     commit_log: CommitLog<CacheCommit>,
+    /// This session's bank of free-running speculative generations
+    /// (ISSUE 10): served in place of a draft grant when the session's
+    /// rotation turn comes up, epoch-bumped on every Miss reset; dies
+    /// with the session at retire/cancel so no generation outlives its
+    /// owner. Idle at `spec_inflight = 1`.
+    spec: SpecBank,
     timesteps: u64,
     hits: u64,
     misses: u64,
@@ -164,6 +171,9 @@ struct DbSession {
     /// strong count an observable proxy for "sessions sharing this
     /// template block".
     prefix_pins: Vec<Arc<PrefixEntry>>,
+    /// Wall seconds this session's stage tasks spent busy in pipeline
+    /// slots (occupancy numerator, ISSUE 10).
+    busy_group_s: f64,
     wall0: Instant,
 }
 
@@ -318,6 +328,13 @@ impl PipeDecDbEngine {
     /// a cancelled session must drop its pin).
     pub fn pinned_prefix_sessions(&self) -> usize {
         self.live.iter().filter(|s| !s.prefix_pins.is_empty()).count()
+    }
+
+    /// Total banked speculative generations across live sessions
+    /// (ISSUE 10 test hook: a retired session must leak no in-flight
+    /// generation — its bank dies with it).
+    pub fn inflight_generations(&self) -> usize {
+        self.live.iter().map(|s| s.spec.depth()).sum()
     }
 
     fn groups(&self) -> usize {
@@ -514,6 +531,7 @@ impl PipeDecDbEngine {
             max_new,
             budget,
             commit_log: CommitLog::new(),
+            spec: SpecBank::new(),
             timesteps: 0,
             hits: 0,
             misses: 0,
@@ -530,6 +548,7 @@ impl PipeDecDbEngine {
             prefix_probed,
             prefix_evictions_before,
             prefix_pins,
+            busy_group_s: 0.0,
             wall0: Instant::now(),
             base: shell,
         })
@@ -602,6 +621,21 @@ impl PipeDecDbEngine {
                     metrics.incr("prefix_evictions", delta);
                 }
             }
+            // continuous-speculation accounting (ISSUE 10): occupancy is
+            // this session's busy slot-seconds over its wall-clock share
+            // of the pipeline (`wall × groups` slot-seconds); banked
+            // generations dropped as stale / served in place of a draft
+            // dispatch are counted per owning session
+            let wall_s = sess.wall0.elapsed().as_secs_f64();
+            let occupancy = if wall_s > 0.0 {
+                (sess.busy_group_s / (wall_s * self.groups() as f64)).min(1.0)
+            } else {
+                0.0
+            };
+            metrics.record("occupancy", occupancy);
+            metrics.record("bubble_fraction", 1.0 - occupancy);
+            metrics.incr("stale_expansions_dropped", sess.spec.stale_dropped());
+            metrics.incr("spec_expansions_served", sess.spec.served());
             // per-session sync breakdown: decide at the coordinator, the
             // commit wherever it ran — eager at the sync point (serial
             // path) or inside this session's jobs (overlap path, seconds
@@ -733,6 +767,25 @@ impl PipeDecDbEngine {
         let lps = self.layers_per_stage;
         let di = self.cfg.stages; // draft cache index in session caches
 
+        // ---- continuous speculation (ISSUE 10): if the rotation-front
+        // session has a banked generation that still applies to its live
+        // tree, serve it in place of this step's draft dispatch (the same
+        // rule as the solo engine: the pipeline entry comes for free and
+        // the draft device idles the step). Served before the stage
+        // snapshots are taken, so the appended layer — which never
+        // disturbs existing node indices — is simply part of this step's
+        // view. Sessions with a pending entry flow keep entry priority.
+        let mut banked: Option<(usize, DataFlow)> = None;
+        if self.cfg.spec_inflight > 1 && !self.live.is_empty() {
+            let si = self.entry_cursor % self.live.len();
+            let sess = &mut self.live[si];
+            if sess.entry.is_none() {
+                if let Some(df) = sess.spec.try_serve(&mut sess.tree) {
+                    banked = Some((si, df));
+                }
+            }
+        }
+
         let mut slot_owner: Vec<Option<SessionId>> = vec![None; groups];
         let mut stage_jobs = Vec::new();
         // one immutable snapshot per session, shared by all of that
@@ -790,43 +843,51 @@ impl PipeDecDbEngine {
         // timestep; pending root flows take priority over tree expansion).
         // A pending entry flow is granted as soon as it is visited, so
         // sessions *after* the first entry-carrying one can never be
-        // reached this step — the candidate list stops there.
-        let n = self.live.len();
-        let mut candidates = Vec::with_capacity(n);
-        for k in 0..n {
-            let si = (self.entry_cursor + k) % n;
-            let sess = &mut self.live[si];
-            let has_entry = sess.entry.is_some();
-            let cache = std::mem::replace(
-                &mut sess.base.caches[di],
-                TwoLevelCache::placeholder(),
-            );
-            let commits = sess.pending_commits(cache.commit_epoch());
-            candidates.push(DraftCandidate {
-                tag: si,
-                entry: sess.entry.take(),
-                // moved, not cloned: stage jobs hold their Arc snapshots
-                // already, and the reabsorb loop adopts every tree back
-                tree: std::mem::replace(&mut sess.tree, PredictionTree::placeholder()),
-                cache,
-                commits,
-                commit_target: sess.commit_log.seq(),
-                commit_s: 0.0,
-            });
-            if has_entry {
-                break;
+        // reached this step — the candidate list stops there. On a
+        // bank-served step no draft task is built at all: every session's
+        // draft state stays resident and deferred commits wait for the
+        // owner's next dispatch.
+        let mut candidates = Vec::new();
+        if banked.is_none() {
+            let n = self.live.len();
+            for k in 0..n {
+                let si = (self.entry_cursor + k) % n;
+                let sess = &mut self.live[si];
+                let has_entry = sess.entry.is_some();
+                let cache = std::mem::replace(
+                    &mut sess.base.caches[di],
+                    TwoLevelCache::placeholder(),
+                );
+                let commits = sess.pending_commits(cache.commit_epoch());
+                candidates.push(DraftCandidate {
+                    tag: si,
+                    entry: sess.entry.take(),
+                    // moved, not cloned: stage jobs hold their Arc snapshots
+                    // already, and the reabsorb loop adopts every tree back
+                    tree: std::mem::replace(&mut sess.tree, PredictionTree::placeholder()),
+                    cache,
+                    commits,
+                    commit_target: sess.commit_log.seq(),
+                    commit_s: 0.0,
+                    spec_gens: self.cfg.spec_inflight,
+                    spec_epoch: sess.spec.epoch(),
+                    spec: Vec::new(),
+                });
+                if has_entry {
+                    break;
+                }
             }
         }
         // dispatched candidate tags, for failure attribution when the
         // whole draft task is lost with its state
         let cand_tags: Vec<usize> = candidates.iter().map(|c| c.tag).collect();
-        let draft_job = DraftJob {
+        let draft_job = (!candidates.is_empty()).then(|| DraftJob {
             core: Arc::clone(&self.draft),
             ctx: self.draft_ctx.take().expect("draft ctx in residence"),
             candidates,
             max_children: self.cfg.tree.max_children,
             metrics: Arc::clone(&self.worker_metrics),
-        };
+        });
 
         let (draft_reply, stage_replies) =
             workers::run_tasks(self.pool.as_mut(), &self.rt, draft_job, stage_jobs);
@@ -836,7 +897,14 @@ impl PipeDecDbEngine {
         // whose state it touched.
         let mut failures: Vec<(SessionId, String)> = Vec::new();
         let draft_oc = match draft_reply {
-            DraftReply::Done(done) => {
+            // a bank-served step dispatched no draft task: the grant is
+            // the banked flow, with zero draft seconds (the speculation
+            // that produced it ran during an earlier step's idle time)
+            None => DraftOutcome {
+                granted: banked,
+                draft_s: 0.0,
+            },
+            Some(DraftReply::Done(done)) => {
                 self.draft_ctx = Some(done.ctx);
                 for cand in done.candidates {
                     let sess = &mut self.live[cand.tag];
@@ -844,6 +912,10 @@ impl PipeDecDbEngine {
                     sess.tree = cand.tree; // adopt the (possibly expanded) tree
                     sess.entry = cand.entry; // unconsumed entry flows come back
                     sess.t_commit_worker_s += cand.commit_s;
+                    // bank the granted candidate's free-running generations
+                    // (empty for everyone else); arrival-time epoch filtering
+                    // happens inside the bank
+                    sess.spec.bank(cand.spec);
                 }
                 match done.res {
                     Ok(oc) => oc,
@@ -867,7 +939,7 @@ impl PipeDecDbEngine {
                     }
                 }
             }
-            DraftReply::Lost { reason } => {
+            Some(DraftReply::Lost { reason }) => {
                 // The draft context and every dispatched candidate's
                 // state (tree, draft cache, pending entry flow) died with
                 // the task: rebuild the context from host truth and fail
@@ -1042,6 +1114,13 @@ impl PipeDecDbEngine {
                 // intra-group hop: same timestep, scheduled transfer
                 group_times[g] += self.account_transfer(src, dst, d_bytes, seq);
             }
+            // occupancy numerator (ISSUE 10): the busy slot-seconds are
+            // attributed to the session whose flow occupied the slot
+            if let Some(owner) = slot_owner[g] {
+                if let Some(si) = self.live_index(owner) {
+                    self.live[si].busy_group_s += group_times[g];
+                }
+            }
             let Some(out) = oc.flow else { continue };
             let owner = slot_owner[g].expect("an outcome implies a dispatched owner");
             if g + 1 < groups {
@@ -1180,6 +1259,10 @@ impl PipeDecDbEngine {
                 sess.commit_ops_eager += ops as u64;
             }
             if missed {
+                // the tree is rebuilt from scratch: every banked
+                // speculative generation assumed state that no longer
+                // exists (ISSUE 10)
+                sess.spec.bump_epoch();
                 // authoritative past length without reading a cache that
                 // may still owe deferred commits: every emitted token
                 // after the prefill's first promoted exactly one root
@@ -1256,12 +1339,22 @@ impl PipeDecDbEngine {
                     .iter()
                     .map(|s| s.pending_depth(s.base.caches[di].commit_epoch()))
                     .sum();
+                // in-flight speculation per session (ISSUE 10): banked
+                // (gen, assumed epoch) pairs against each live epoch — a
+                // bank that never drains or an epoch that never advances
+                // shows up here
+                let spec_state: Vec<(Vec<(usize, u64)>, u64)> = self
+                    .live
+                    .iter()
+                    .map(|s| (s.spec.inflight(), s.spec.epoch()))
+                    .collect();
                 let diag = format!(
                     "scheduler stalled at step {}: {} steps without progress \
                      ({} live sessions holding {live_tokens} decoded tokens and \
                      {tree_nodes} tree nodes, {} queued, {} occupied pipeline \
                      slots, undrained commits per group {pending:?} + draft \
-                     {pending_draft})",
+                     {pending_draft}, speculative generations in flight per \
+                     session [(gen, epoch) pairs, live epoch] {spec_state:?})",
                     self.steps,
                     self.stalled_for,
                     self.live.len(),

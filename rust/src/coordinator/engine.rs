@@ -54,6 +54,7 @@ use anyhow::{Context, Result};
 
 use super::pipeline::DataFlow;
 use super::sampling::{select_token, Sampling};
+use super::spec::SpecBank;
 use super::workers::{
     self, DraftCandidate, DraftJob, DraftOutcome, DraftReply, GroupOutcome, StageJob, WorkerPool,
 };
@@ -106,6 +107,12 @@ pub struct PipeDecEngine {
     /// [`CommitLog`] (shared with `DbSession` and the model checker);
     /// `commit_log.seq()` is every job's `commit_target`.
     commit_log: CommitLog<CacheCommit>,
+    /// Continuous asynchronous speculation (ISSUE 10,
+    /// `cfg.spec_inflight > 1`): the epoch-tagged bank of free-running
+    /// draft generations. Served at the top of a timestep in place of a
+    /// draft dispatch; bumped (and drained) on every Miss-path tree
+    /// reset. Idle at `spec_inflight = 1`.
+    spec: SpecBank,
     /// Cross-request KV prefix cache (ISSUE 8). Unlike the per-request
     /// caches it is *not* cleared by [`Self::reset`] — persisting across
     /// decodes is the point. `None` when disabled by config or the
@@ -199,6 +206,7 @@ impl PipeDecEngine {
             pool,
             worker_metrics: Arc::new(SharedMetrics::new()),
             commit_log: CommitLog::new(),
+            spec: SpecBank::new(),
             prefix,
         })
     }
@@ -237,6 +245,8 @@ impl PipeDecEngine {
         // commits belong to one request's epoch sequence: a previous
         // decode's undrained tail is irrelevant once every cache reset
         self.commit_log.clear();
+        // in-flight speculation belonged to the previous request's tree
+        self.spec.reset();
         // a previously *failed* decode never reached the drain at its end;
         // discard its leftover worker timings so they can't pollute this one
         let _ = self.worker_metrics.drain();
@@ -405,10 +415,17 @@ impl PipeDecEngine {
     /// otherwise — and hand every piece of lent state back. Returns the
     /// draft outcome, the per-group outcomes in group order, and the
     /// seconds the jobs spent applying deferred sync commits.
+    ///
+    /// With `dispatch_draft = false` (a banked speculative expansion
+    /// served this timestep, ISSUE 10) no draft task is built: the tree
+    /// stays resident, the draft cache keeps its deferred commits for
+    /// the next real dispatch, and the returned outcome carries no grant
+    /// and zero draft seconds.
     fn run_timestep_tasks(
         &mut self,
         tree: &mut PredictionTree,
         inputs: &mut [Option<DataFlow>],
+        dispatch_draft: bool,
     ) -> Result<(DraftOutcome, Vec<Option<GroupOutcome>>, f64)> {
         let groups = self.groups();
         let gs = self.cfg.group_size;
@@ -448,24 +465,31 @@ impl PipeDecEngine {
                 metrics: Arc::clone(&self.worker_metrics),
             });
         }
-        let draft_cache = self.draft_cache.take().expect("draft cache in residence");
-        let draft_commits = self.commit_log.pending(draft_cache.commit_epoch());
-        let draft_job = DraftJob {
-            core: Arc::clone(&self.draft),
-            ctx: self.draft_ctx.take().expect("draft ctx in residence"),
-            candidates: vec![DraftCandidate {
-                tag: 0,
-                entry: None,
-                // moved, not cloned: the stage jobs already hold their Arc
-                // snapshot, and the coordinator adopts the tree back below
-                tree: std::mem::replace(tree, PredictionTree::placeholder()),
-                cache: draft_cache,
-                commits: draft_commits,
-                commit_target: self.commit_log.seq(),
-                commit_s: 0.0,
-            }],
-            max_children: self.cfg.tree.max_children,
-            metrics: Arc::clone(&self.worker_metrics),
+        let draft_job = if dispatch_draft {
+            let draft_cache = self.draft_cache.take().expect("draft cache in residence");
+            let draft_commits = self.commit_log.pending(draft_cache.commit_epoch());
+            Some(DraftJob {
+                core: Arc::clone(&self.draft),
+                ctx: self.draft_ctx.take().expect("draft ctx in residence"),
+                candidates: vec![DraftCandidate {
+                    tag: 0,
+                    entry: None,
+                    // moved, not cloned: the stage jobs already hold their Arc
+                    // snapshot, and the coordinator adopts the tree back below
+                    tree: std::mem::replace(tree, PredictionTree::placeholder()),
+                    cache: draft_cache,
+                    commits: draft_commits,
+                    commit_target: self.commit_log.seq(),
+                    commit_s: 0.0,
+                    spec_gens: self.cfg.spec_inflight,
+                    spec_epoch: self.spec.epoch(),
+                    spec: Vec::new(),
+                }],
+                max_children: self.cfg.tree.max_children,
+                metrics: Arc::clone(&self.worker_metrics),
+            })
+        } else {
+            None
         };
 
         let (draft_reply, stage_replies) =
@@ -477,16 +501,23 @@ impl PipeDecEngine {
         // structurally intact for the next one.
         let mut commit_s = 0.0f64;
         let draft_res = match draft_reply {
-            DraftReply::Done(done) => {
+            None => Ok(DraftOutcome {
+                granted: None,
+                draft_s: 0.0,
+            }),
+            Some(DraftReply::Done(done)) => {
                 self.draft_ctx = Some(done.ctx);
                 let mut cands = done.candidates;
                 let cand = cands.pop().expect("solo draft job has one candidate");
                 self.draft_cache = Some(cand.cache);
                 commit_s += cand.commit_s;
                 *tree = cand.tree; // adopt the (possibly expanded) tree
+                // bank the free-running generations (empty in lockstep or
+                // on a failed visit; dead-epoch ones are dropped inside)
+                self.spec.bank(cand.spec);
                 done.res
             }
-            DraftReply::Lost { reason } => {
+            Some(DraftReply::Lost { reason }) => {
                 // the canonical tree and draft cache died with the task;
                 // restart them fresh (the decode fails below and the next
                 // decode resets every cache anyway), and let the fresh
@@ -682,6 +713,8 @@ impl Engine for PipeDecEngine {
         // commit seconds applied inside jobs (the overlapped share of the
         // sync phase when a pool exists)
         let mut job_commit_s = 0.0f64;
+        // wall-time the pipeline groups spent computing (occupancy numerator)
+        let mut busy_group_s = 0.0f64;
         let max_timesteps = (max_new as u64 + 8) * (groups as u64 + 2);
 
         'outer: while decoded.len() < max_new {
@@ -693,14 +726,29 @@ impl Engine for PipeDecEngine {
                      {decoded_n}/{max_new} tokens decoded, {tree_n} tree nodes, \
                      {in_flight} in-flight flows, {hits} hits / {misses} misses, \
                      undrained commits per group {pending:?} + draft {pending_draft} \
-                     (of {issued} issued)",
+                     (of {issued} issued), {spec_n} speculative generations in flight \
+                     (gen, assumed epoch) {spec_inflight:?} at live epoch {spec_epoch}",
                     decoded_n = decoded.len(),
                     tree_n = tree.len(),
                     in_flight = inputs.iter().flatten().count(),
                     issued = self.commit_log.seq(),
+                    spec_n = self.spec.depth(),
+                    spec_inflight = self.spec.inflight(),
+                    spec_epoch = self.spec.epoch(),
                 );
             }
             let seq = timesteps;
+
+            // ---- continuous speculation (ISSUE 10): a banked generation
+            // that still applies to the live tree replaces this timestep's
+            // draft dispatch — the pipeline gets its next layer for free.
+            // Appending a BFS layer before the stage snapshot never
+            // disturbs existing rows, so stage tasks are unaffected. ----
+            let banked = if self.cfg.spec_inflight > 1 {
+                self.spec.try_serve(&mut tree)
+            } else {
+                None
+            };
 
             // ---- draft + stage phases: the timestep's task set, executed
             // concurrently on the worker pool (sequentially inline when
@@ -708,7 +756,7 @@ impl Engine for PipeDecEngine {
             // sequentially within its task (paper §3.1), draining its
             // caches' deferred sync commits first ----
             let (draft_oc, group_ocs, ts_commit_s) =
-                self.run_timestep_tasks(&mut tree, &mut inputs)?;
+                self.run_timestep_tasks(&mut tree, &mut inputs, banked.is_none())?;
             if ts_commit_s > 0.0 {
                 metrics.record("t_commit_s", ts_commit_s);
                 job_commit_s += ts_commit_s;
@@ -746,9 +794,15 @@ impl Engine for PipeDecEngine {
                 // draft (rank 0) -> L_1: token ids only
                 transfer_times.push(self.account_transfer(0, 1, df.entry_bytes(), seq));
                 next_inputs[0] = Some(df);
+            } else if let Some(df) = banked {
+                // a served speculative generation enters the pipeline
+                // exactly like a draft grant, minus the draft compute
+                transfer_times.push(self.account_transfer(0, 1, df.entry_bytes(), seq));
+                next_inputs[0] = Some(df);
             }
 
             // paper latency model: max(T_draft, C·max(T_group_i) + max(T_t,i))
+            busy_group_s += group_times.iter().sum::<f64>();
             let max_group = group_times.iter().cloned().fold(0.0, f64::max);
             let max_tx = transfer_times.iter().cloned().fold(0.0, f64::max);
             modeled_s += draft_s.max(max_group + max_tx);
@@ -797,6 +851,10 @@ impl Engine for PipeDecEngine {
                         }
                         PruneOutcome::Miss => {
                             misses += 1;
+                            // the tree is rebuilt from scratch: every banked
+                            // speculative generation assumed state that no
+                            // longer exists (ISSUE 10)
+                            self.spec.bump_epoch();
                             commit_s = self.issue_commit(CommitOp::Miss, &mut metrics)?;
                             // authoritative past length without reading a
                             // cache that may still owe deferred commits:
@@ -825,6 +883,19 @@ impl Engine for PipeDecEngine {
         metrics.incr("hits", hits);
         metrics.incr("misses", misses);
         metrics.incr("worker_threads", self.worker_threads() as u64);
+        // pipeline occupancy (ISSUE 10): the fraction of wall-clock group
+        // slots that were busy computing or hopping. A free-running draft
+        // keeps the entry group fed on timesteps lockstep would leave it
+        // waiting for the draft, so occupancy rises with spec_inflight.
+        let occupancy = if wall_s > 0.0 {
+            (busy_group_s / (wall_s * groups as f64)).min(1.0)
+        } else {
+            0.0
+        };
+        metrics.record("occupancy", occupancy);
+        metrics.record("bubble_fraction", 1.0 - occupancy);
+        metrics.incr("stale_expansions_dropped", self.spec.stale_dropped());
+        metrics.incr("spec_expansions_served", self.spec.served());
         // per-task timings the workers recorded concurrently
         metrics.merge(&self.worker_metrics.drain());
         // the commit seconds that ran inside jobs are the overlapped share

@@ -18,6 +18,10 @@
 //!   (eagerly at the sync point or deferred into the owner's next job),
 //!   which also replays them onto the device KV mirror in place
 //!   (ISSUE 7).
+//! * [`spec`] — continuous asynchronous speculation (ISSUE 10): the
+//!   epoch-tagged bank of free-running draft expansions
+//!   ([`spec::SpecBank`]) the coordinators serve in place of a draft
+//!   dispatch, dropping stale generations without applying them.
 //! * [`workers`] — the persistent pipeline worker pool (ISSUE 4): a
 //!   timestep's task set (draft + one task per timestep group) executes on
 //!   real threads, state moving in and out of jobs by ownership, with
@@ -33,6 +37,7 @@ pub mod db;
 pub mod engine;
 pub mod pipeline;
 pub mod sampling;
+pub mod spec;
 pub mod workers;
 
 pub use db::PipeDecDbEngine;

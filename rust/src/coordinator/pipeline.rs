@@ -25,6 +25,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::sampling::top_candidates;
+use super::spec::{SpecEpoch, SpecExpansion};
+use crate::faultinject::{self, Site};
 use crate::kvcache::TwoLevelCache;
 use crate::model::{bias, ModelCore, StageContext};
 use crate::runtime::Runtime;
@@ -56,10 +58,45 @@ impl DataFlow {
     }
 }
 
-/// Draft phase: process the unprocessed BFS suffix (the frontier layer) of
-/// `tree` through the draft model, expand the tree by one width-capped
-/// layer of top-`max_children` candidates, and return the new layer's data
-/// flow plus the measured draft seconds.
+/// Forward one contiguous block of unprocessed tree rows (`indices`, a
+/// BFS suffix starting at the cache's tree length) through the draft
+/// model and return its logits. Shared by the in-step expansion and the
+/// free-running speculation path (ISSUE 10).
+fn draft_forward_rows(
+    draft: &ModelCore,
+    rt: &Runtime,
+    ctx: &mut StageContext,
+    cache: &mut TwoLevelCache,
+    tree: &PredictionTree,
+    indices: &[usize],
+) -> Result<Vec<f32>> {
+    let dc = &draft.cfg;
+    let start = cache.tree_len();
+    anyhow::ensure!(
+        indices.len() <= dc.width_cap,
+        "frontier wider than width cap"
+    );
+    let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
+    let mut pos = vec![0i32; dc.width_cap];
+    for (r, &i) in indices.iter().enumerate() {
+        pos[r] = tree.position_of(i) as i32;
+    }
+    let rows = tree.bias_rows(indices, dc.tree_cap, bias::NEG);
+    let tree_bias =
+        bias::pad_tree_bias_rows(rows, indices.len(), start, dc.width_cap, dc.tree_cap);
+    draft.full_forward_tree_block(rt, ctx, cache, &tokens, &pos, &tree_bias)
+}
+
+/// Draft phase: process the unprocessed BFS suffix of `tree` through the
+/// draft model, expand the tree by one width-capped layer of
+/// top-`max_children` candidates, and return the new layer's data flow
+/// plus the measured draft seconds.
+///
+/// The suffix normally is exactly the frontier layer, but it can span
+/// several layers when banked speculative expansions (ISSUE 10) were
+/// applied to the tree after a prune dropped the draft cache's shadow
+/// rows; intermediate layers are then caught up one at a time (cache
+/// rows only, logits discarded) before the frontier is expanded.
 pub fn draft_expand(
     draft: &ModelCore,
     rt: &Runtime,
@@ -69,25 +106,22 @@ pub fn draft_expand(
     max_children: usize,
 ) -> Result<(Option<DataFlow>, f64)> {
     let dc = &draft.cfg;
-    let start = cache.tree_len();
-    if start >= tree.len() || tree.len() >= cache.tree_cap() {
+    if cache.tree_len() >= tree.len() || tree.len() >= cache.tree_cap() {
         return Ok((None, 0.0)); // frontier already processed or budget full
     }
-    let indices: Vec<usize> = (start..tree.len()).collect();
-    anyhow::ensure!(
-        indices.len() <= dc.width_cap,
-        "frontier wider than width cap"
-    );
     let t0 = Instant::now();
-    let tokens: Vec<u32> = indices.iter().map(|&i| tree.token(i)).collect();
-    let mut pos = vec![0i32; dc.width_cap];
-    for (r, &i) in indices.iter().enumerate() {
-        pos[r] = tree.position_of(i) as i32;
+    while cache.tree_len() < tree.frontier().start {
+        let start = cache.tree_len();
+        let l = (0..tree.depth_count())
+            .find(|&l| tree.layer_range(l).start == start)
+            .ok_or_else(|| {
+                anyhow::anyhow!("draft cache boundary {start} is not layer-aligned")
+            })?;
+        let indices: Vec<usize> = tree.layer_range(l).collect();
+        draft_forward_rows(draft, rt, ctx, cache, tree, &indices)?;
     }
-    let rows = tree.bias_rows(&indices, dc.tree_cap, bias::NEG);
-    let tree_bias =
-        bias::pad_tree_bias_rows(rows, indices.len(), start, dc.width_cap, dc.tree_cap);
-    let logits = draft.full_forward_tree_block(rt, ctx, cache, &tokens, &pos, &tree_bias)?;
+    let indices: Vec<usize> = tree.frontier().collect();
+    let logits = draft_forward_rows(draft, rt, ctx, cache, tree, &indices)?;
     let v = dc.vocab_size;
     let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
         .map(|r| top_candidates(&logits[r * v..(r + 1) * v], max_children))
@@ -99,6 +133,56 @@ pub fn draft_expand(
     }
     let ids = new_nodes.iter().map(|&i| tree.id(i)).collect();
     Ok((Some(DataFlow { ids, hidden: None }), elapsed))
+}
+
+/// Free-running speculation (ISSUE 10): after the in-step expansion,
+/// keep expanding up to `extra_gens` further generations against a
+/// *shadow* clone of `tree`, forwarding each shadow frontier through the
+/// draft's cache (so the rows are banked for later reuse) and returning
+/// one epoch-tagged [`SpecExpansion`] per generation. The canonical tree
+/// is never touched; the coordinator decides at serve time whether each
+/// generation still applies. Returns the speculation seconds alongside
+/// (modeled as free — it runs while the pipeline is busy — but measured
+/// for the occupancy accounting).
+pub fn draft_speculate(
+    draft: &ModelCore,
+    rt: &Runtime,
+    ctx: &mut StageContext,
+    cache: &mut TwoLevelCache,
+    tree: &PredictionTree,
+    max_children: usize,
+    epoch: SpecEpoch,
+    extra_gens: usize,
+) -> Result<(Vec<SpecExpansion>, f64)> {
+    let dc = &draft.cfg;
+    let t0 = Instant::now();
+    let mut shadow = tree.clone();
+    let mut out = Vec::with_capacity(extra_gens);
+    for gen in 0..extra_gens {
+        if cache.tree_len() >= shadow.len() || shadow.len() >= cache.tree_cap() {
+            break; // shadow frontier already processed or budget full
+        }
+        faultinject::fire(Site::DraftStale)?;
+        let indices: Vec<usize> = shadow.frontier().collect();
+        let logits = draft_forward_rows(draft, rt, ctx, cache, &shadow, &indices)?;
+        let v = dc.vocab_size;
+        let parents: Vec<u64> = indices.iter().map(|&i| shadow.id(i)).collect();
+        let cands: Vec<Vec<(u32, f32)>> = (0..indices.len())
+            .map(|r| top_candidates(&logits[r * v..(r + 1) * v], max_children))
+            .collect();
+        let minted = shadow.expand_layer(&cands);
+        if minted.is_empty() {
+            break;
+        }
+        out.push(SpecExpansion {
+            epoch,
+            parents,
+            cands,
+            children: minted.len(),
+            gen: gen + 2, // generation 1 was the in-step expansion
+        });
+    }
+    Ok((out, t0.elapsed().as_secs_f64()))
 }
 
 /// Stage phase for one stage: filter rows whose nodes were pruned while in

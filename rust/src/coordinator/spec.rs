@@ -1,0 +1,396 @@
+//! Continuous asynchronous speculation (ISSUE 10): the epoch-tagged bank
+//! of free-running draft expansions.
+//!
+//! With `[engine] spec_inflight = K > 1`, a draft job does not stop after
+//! its in-step expansion: it keeps speculating up to `K - 1` further tree
+//! generations against a *shadow* clone of the tree it just returned,
+//! forwarding each shadow frontier through its own KV cache and banking
+//! the resulting candidate sets as [`SpecExpansion`]s. The coordinator
+//! holds them in a [`SpecBank`] (one per session) and, on later
+//! timesteps, serves a banked generation instead of dispatching the
+//! draft — the pipeline gets its next layer without paying `T_draft`.
+//!
+//! Ownership and staleness rules (see CONCURRENCY.md §6):
+//!
+//! * The **draft** tags every expansion with the [`SpecEpoch`] it assumed
+//!   (the value at dispatch). It never touches the bank.
+//! * The **coordinator** owns the bank and the live epoch. The epoch is
+//!   bumped — and the bank drained as stale — only when speculation's
+//!   whole basis disappears: a Miss-path tree reset or a session cancel.
+//!   Hit prunes keep the epoch: their staleness is caught structurally,
+//!   by resolving the expansion's parent ids against the live tree
+//!   ([`expansion_applicable`]); survivors must cover the post-prune
+//!   frontier exactly, or the expansion is dropped unapplied.
+//! * A prune between banked generations makes the *deeper* generations'
+//!   node ids untrustworthy (the canonical tree and the draft's shadow
+//!   mint ids independently once an apply is filtered), so any serve
+//!   that applied fewer parents or minted a different node count than
+//!   the shadow did clears the remainder of the bank ([divergence
+//!   guard](SpecBank::try_serve)).
+//!
+//! Greedy outputs are bit-identical to lockstep: a served expansion is
+//! exactly the layer the lockstep draft would have produced from the
+//! same committed state (same candidate sets, same width selection), and
+//! anything else is dropped, never applied.
+
+use std::collections::VecDeque;
+
+use super::pipeline::DataFlow;
+use crate::tree::{Candidates, PredictionTree};
+
+/// The epoch a speculative expansion assumed: bumped by the coordinator
+/// whenever the tree's identity space resets (Miss rebuild, session
+/// cancel), which invalidates every in-flight generation at once.
+pub type SpecEpoch = u64;
+
+/// One free-running draft generation: the candidate children proposed
+/// for each parent (a shadow-frontier node, identified by tree node id),
+/// tagged with the epoch the draft assumed.
+#[derive(Debug, Clone)]
+pub struct SpecExpansion {
+    /// [`SpecEpoch`] observed at draft dispatch.
+    pub epoch: SpecEpoch,
+    /// Node ids of the shadow frontier this generation expands
+    /// (ascending — BFS order of the shadow layer).
+    pub parents: Vec<u64>,
+    /// `cands[k]` = draft top-c proposals for `parents[k]`.
+    pub cands: Vec<Candidates>,
+    /// How many nodes the shadow's width/budget selection minted for this
+    /// layer. A serve that mints a different count has diverged from the
+    /// shadow (post-prune budget or filtered parents) and poisons any
+    /// deeper banked generation.
+    pub children: usize,
+    /// 1-based generation index within the owning draft job (generation
+    /// 1 is the in-step expansion, so banked generations start at 2).
+    pub gen: usize,
+}
+
+/// The pure acceptance rule, shared with the concurrency model checker
+/// (`concurrency::model`): an expansion may be applied iff its epoch
+/// matches the live epoch and its surviving parents (the banked parent
+/// ids that still resolve in the live tree, order preserved) are exactly
+/// the live frontier. Everything else is stale and must be dropped
+/// without being applied.
+pub fn expansion_applicable(
+    exp_epoch: SpecEpoch,
+    live_epoch: SpecEpoch,
+    surviving_parents: &[u64],
+    frontier_ids: &[u64],
+) -> bool {
+    exp_epoch == live_epoch
+        && !frontier_ids.is_empty()
+        && surviving_parents == frontier_ids
+}
+
+/// Per-session bank of in-flight speculative generations, owned by the
+/// coordinator's sync side. FIFO: generations are banked and served in
+/// the order the draft produced them.
+#[derive(Debug, Default)]
+pub struct SpecBank {
+    epoch: SpecEpoch,
+    bank: VecDeque<SpecExpansion>,
+    stale_dropped: u64,
+    served: u64,
+}
+
+impl SpecBank {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The live epoch the next draft dispatch should tag with.
+    pub fn epoch(&self) -> SpecEpoch {
+        self.epoch
+    }
+
+    /// In-flight (banked, not yet served or dropped) generation count.
+    pub fn depth(&self) -> usize {
+        self.bank.len()
+    }
+
+    /// `(gen, assumed epoch)` per in-flight generation, oldest first —
+    /// the stall guards report this so an async-draft livelock names
+    /// what the draft was assuming.
+    pub fn inflight(&self) -> Vec<(usize, SpecEpoch)> {
+        self.bank.iter().map(|e| (e.gen, e.epoch)).collect()
+    }
+
+    /// Expansions dropped as stale since construction/reset.
+    pub fn stale_dropped(&self) -> u64 {
+        self.stale_dropped
+    }
+
+    /// Expansions served (applied to the live tree) since
+    /// construction/reset.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Bank a draft job's speculative generations. Expansions tagged
+    /// with a dead epoch (the session reset while the job was in
+    /// flight) are dropped here, on arrival, and never enter the bank.
+    pub fn bank(&mut self, exps: Vec<SpecExpansion>) {
+        for exp in exps {
+            if exp.epoch == self.epoch {
+                self.bank.push_back(exp);
+            } else {
+                self.stale_dropped += 1;
+            }
+        }
+    }
+
+    /// Coordinator-side epoch bump: the tree's identity space is gone
+    /// (Miss rebuild / cancel), so every in-flight generation is stale.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+        self.drop_all();
+    }
+
+    /// Drop everything in flight (counted as stale) without bumping.
+    fn drop_all(&mut self) {
+        self.stale_dropped += self.bank.len() as u64;
+        self.bank.clear();
+    }
+
+    /// Full reset (engine re-seed): counters included.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+
+    /// Try to serve one banked generation onto the live tree. On
+    /// success the layer is applied ([`PredictionTree::expand_layer`])
+    /// and the new layer's data flow is returned — the caller routes it
+    /// exactly like a draft-granted flow and skips the draft dispatch.
+    /// Stale generations encountered on the way are dropped unapplied.
+    pub fn try_serve(&mut self, tree: &mut PredictionTree) -> Option<DataFlow> {
+        while let Some(exp) = self.bank.pop_front() {
+            let frontier_ids: Vec<u64> = tree.frontier().map(|i| tree.id(i)).collect();
+            // Surviving parents, order preserved: ids minted after a
+            // prune can collide numerically with pruned ones only across
+            // an epoch bump, which the epoch check already rejects.
+            let surviving: Vec<u64> = exp
+                .parents
+                .iter()
+                .copied()
+                .filter(|&id| tree.index_of_id(id).is_some())
+                .collect();
+            if !expansion_applicable(exp.epoch, self.epoch, &surviving, &frontier_ids) {
+                self.stale_dropped += 1;
+                continue;
+            }
+            let keep: Vec<Candidates> = exp
+                .parents
+                .iter()
+                .zip(&exp.cands)
+                .filter(|(id, _)| tree.index_of_id(**id).is_some())
+                .map(|(_, c)| c.clone())
+                .collect();
+            let minted = tree.expand_layer(&keep);
+            if minted.is_empty() {
+                // Node budget exhausted: nothing applied. Deeper
+                // generations assumed this layer existed, so they are
+                // stale too; fall back to the draft (which will also
+                // decline, matching lockstep's idle step).
+                self.stale_dropped += 1;
+                self.drop_all();
+                return None;
+            }
+            // Divergence guard: once an apply is filtered (pruned
+            // parents) or mints a different count than the shadow did
+            // (post-prune node budget), the canonical tree and the
+            // draft's shadow assign node ids independently — deeper
+            // banked generations could resolve numerically-equal ids to
+            // different nodes, so they must not be trusted.
+            if keep.len() < exp.parents.len() || minted.len() != exp.children {
+                self.drop_all();
+            }
+            self.served += 1;
+            let ids = minted.iter().map(|&i| tree.id(i)).collect();
+            return Some(DataFlow { ids, hidden: None });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TreeConfig;
+
+    fn tree(w: usize, c: usize) -> PredictionTree {
+        PredictionTree::new(
+            TreeConfig {
+                max_width: w,
+                max_children: c,
+                max_depth: 16,
+            },
+            64,
+            0,
+            0,
+        )
+    }
+
+    fn exp_for_frontier(t: &PredictionTree, epoch: SpecEpoch, gen: usize) -> SpecExpansion {
+        let parents: Vec<u64> = t.frontier().map(|i| t.id(i)).collect();
+        let cands: Vec<Candidates> = (0..parents.len())
+            .map(|k| vec![(100 + 2 * k as u32, 0.6), (101 + 2 * k as u32, 0.4)])
+            .collect();
+        // shadow-apply to learn the minted count
+        let mut shadow = t.clone();
+        let children = shadow.expand_layer(&cands).len();
+        SpecExpansion {
+            epoch,
+            parents,
+            cands,
+            children,
+            gen,
+        }
+    }
+
+    #[test]
+    fn matching_expansion_is_served_and_applied() {
+        let mut t = tree(8, 2);
+        let mut b = SpecBank::new();
+        let exp = exp_for_frontier(&t, b.epoch(), 2);
+        let want_children = exp.children;
+        b.bank(vec![exp]);
+        assert_eq!(b.depth(), 1);
+        let df = b.try_serve(&mut t).expect("served");
+        assert_eq!(df.ids.len(), want_children);
+        assert_eq!(t.depth_count(), 2, "layer applied");
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.served(), 1);
+        assert_eq!(b.stale_dropped(), 0);
+    }
+
+    #[test]
+    fn epoch_bump_drops_everything_unapplied() {
+        let mut t = tree(8, 2);
+        let mut b = SpecBank::new();
+        b.bank(vec![
+            exp_for_frontier(&t, b.epoch(), 2),
+            exp_for_frontier(&t, b.epoch(), 3),
+        ]);
+        b.bump_epoch();
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.stale_dropped(), 2);
+        assert!(b.try_serve(&mut t).is_none());
+        assert_eq!(t.depth_count(), 1, "nothing applied");
+    }
+
+    #[test]
+    fn stale_epoch_rejected_at_bank_time() {
+        let t = tree(8, 2);
+        let mut b = SpecBank::new();
+        let exp = exp_for_frontier(&t, b.epoch(), 2);
+        b.bump_epoch();
+        b.bank(vec![exp]);
+        assert_eq!(b.depth(), 0, "dead-epoch expansion never enters");
+        assert_eq!(b.stale_dropped(), 1);
+    }
+
+    #[test]
+    fn pruned_attach_point_drops_expansion() {
+        let mut t = tree(8, 2);
+        t.expand_layer(&[vec![(1, 0.7), (2, 0.3)]]);
+        // deepest layer lives only under token 2
+        t.expand_layer(&[vec![], vec![(5, 0.9), (6, 0.1)]]);
+        let mut b = SpecBank::new();
+        // speculate off the {5, 6} frontier, then verify token 1: the hit
+        // subtree has no nodes in that layer, so every banked parent is
+        // pruned away and the expansion has nowhere to attach
+        let exp = exp_for_frontier(&t, b.epoch(), 2);
+        b.bank(vec![exp]);
+        t.prune(1);
+        assert!(b.try_serve(&mut t).is_none());
+        assert_eq!(b.stale_dropped(), 1);
+        assert_eq!(t.depth_count(), 1, "nothing applied");
+    }
+
+    #[test]
+    fn prune_to_exact_frontier_still_serves() {
+        let mut t = tree(8, 2);
+        t.expand_layer(&[vec![(1, 0.7), (2, 0.3)]]);
+        let mut b = SpecBank::new();
+        // banked parents {1, 2}; verifying token 1 re-roots at node 1,
+        // whose surviving parent set exactly covers the new frontier —
+        // a filtered but valid serve (lockstep would expand the same
+        // node from the same committed state)
+        let exp = exp_for_frontier(&t, b.epoch(), 2);
+        b.bank(vec![exp]);
+        t.prune(1);
+        let df = b.try_serve(&mut t).expect("filtered serve");
+        assert!(!df.ids.is_empty());
+        assert_eq!(t.depth_count(), 2, "layer applied under the new root");
+        assert_eq!(b.served(), 1);
+    }
+
+    #[test]
+    fn filtered_or_diverged_apply_clears_deeper_generations() {
+        let mut t = tree(8, 2);
+        t.expand_layer(&[vec![(1, 0.7), (2, 0.3)]]);
+        t.expand_layer(&[vec![(3, 0.9), (4, 0.1)], vec![(5, 1.0)]]);
+        let mut b = SpecBank::new();
+        let g2 = exp_for_frontier(&t, b.epoch(), 2);
+        // a deeper generation banked off the shadow of g2
+        let mut shadow = t.clone();
+        shadow.expand_layer(&g2.cands);
+        let g3 = exp_for_frontier(&shadow, b.epoch(), 3);
+        b.bank(vec![g2, g3]);
+        // Hit on token 1: frontier shrinks to {3, 4}; g2's survivors
+        // still cover it exactly, so g2 serves — filtered.
+        t.prune(1);
+        let df = b.try_serve(&mut t).expect("filtered serve");
+        assert!(!df.ids.is_empty());
+        assert_eq!(
+            b.depth(),
+            0,
+            "divergence guard cleared the deeper generation"
+        );
+        assert_eq!(b.served(), 1);
+        assert_eq!(b.stale_dropped(), 1);
+    }
+
+    #[test]
+    fn budget_exhaustion_clears_bank_and_serves_nothing() {
+        let mut t = PredictionTree::new(
+            TreeConfig {
+                max_width: 8,
+                max_children: 2,
+                max_depth: 16,
+            },
+            1, // budget already full at the root
+            0,
+            0,
+        );
+        let mut b = SpecBank::new();
+        b.bank(vec![
+            exp_for_frontier(&t, b.epoch(), 2),
+            exp_for_frontier(&t, b.epoch(), 3),
+        ]);
+        assert!(b.try_serve(&mut t).is_none());
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.stale_dropped(), 2);
+        assert_eq!(t.depth_count(), 1, "nothing applied");
+    }
+
+    #[test]
+    fn inflight_reports_gens_and_epochs() {
+        let t = tree(8, 2);
+        let mut b = SpecBank::new();
+        b.bank(vec![
+            exp_for_frontier(&t, b.epoch(), 2),
+            exp_for_frontier(&t, b.epoch(), 3),
+        ]);
+        assert_eq!(b.inflight(), vec![(2, 0), (3, 0)]);
+    }
+
+    #[test]
+    fn applicability_rule_matches_doc() {
+        assert!(expansion_applicable(4, 4, &[7, 9], &[7, 9]));
+        assert!(!expansion_applicable(3, 4, &[7, 9], &[7, 9]), "dead epoch");
+        assert!(!expansion_applicable(4, 4, &[7], &[7, 9]), "partial cover");
+        assert!(!expansion_applicable(4, 4, &[9, 7], &[7, 9]), "order");
+        assert!(!expansion_applicable(4, 4, &[], &[]), "empty frontier");
+    }
+}

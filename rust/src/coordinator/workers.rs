@@ -70,6 +70,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::pipeline::{self, DataFlow};
+use super::spec::{SpecEpoch, SpecExpansion};
 use crate::concurrency::protocol::verify_drained;
 use crate::faultinject::{self, Site};
 use crate::concurrency::sync::mpsc::{channel, Receiver, Sender};
@@ -161,6 +162,18 @@ pub struct DraftCandidate {
     /// Reply-side: seconds spent applying this candidate's deferred
     /// commits (dispatched as 0, filled in by [`exec_draft_job`]).
     pub commit_s: f64,
+    /// Total generations this candidate may produce (ISSUE 10): 1 =
+    /// lockstep (the in-step expansion only); `K > 1` lets the draft
+    /// free-run `K - 1` further generations after a successful
+    /// expansion grant.
+    pub spec_gens: usize,
+    /// The [`SpecEpoch`] the owner's bank was at when this job was
+    /// dispatched — stamped onto every speculative generation.
+    pub spec_epoch: SpecEpoch,
+    /// Reply-side: the free-running generations the draft banked for
+    /// this candidate (dispatched empty, filled in by
+    /// [`exec_draft_job`]).
+    pub spec: Vec<SpecExpansion>,
 }
 
 /// The draft node's task: grant pipeline slot 0 to the first candidate
@@ -383,6 +396,46 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
             Ok((flow, secs)) => {
                 draft_s += secs;
                 if let Some(df) = flow {
+                    // Free-running speculation (ISSUE 10): with the
+                    // expansion granted, the draft's thread would
+                    // otherwise idle while the pipeline works — keep
+                    // expanding shadow generations for the bank. A
+                    // panic here is contained to the owning candidate
+                    // (same failure domain as an expansion error):
+                    // partial speculation is discarded and only this
+                    // session retires.
+                    if cand.spec_gens > 1 {
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            pipeline::draft_speculate(
+                                &job.core,
+                                rt,
+                                &mut job.ctx,
+                                &mut cand.cache,
+                                &cand.tree,
+                                job.max_children,
+                                cand.spec_epoch,
+                                cand.spec_gens - 1,
+                            )
+                        })) {
+                            Ok(Ok((exps, secs))) => {
+                                cand.spec = exps;
+                                job.metrics.record("worker_spec_s", secs);
+                            }
+                            Ok(Err(e)) => {
+                                err = Some(e);
+                                failed_tag = Some(cand.tag);
+                                break;
+                            }
+                            Err(p) => {
+                                err = Some(anyhow::anyhow!(
+                                    "draft speculation panicked: {}",
+                                    panic_message(p.as_ref())
+                                ));
+                                failed_tag = Some(cand.tag);
+                                break;
+                            }
+                        }
+                    }
                     granted = Some((cand.tag, df));
                     break;
                 }
@@ -414,17 +467,19 @@ pub fn exec_draft_job(rt: &Runtime, mut job: DraftJob) -> DraftDone {
 /// count.
 pub fn run_inline(
     rt: &Runtime,
-    draft: DraftJob,
+    draft: Option<DraftJob>,
     stages: Vec<StageJob>,
-) -> (DraftReply, Vec<StageReply>) {
-    let d = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        exec_draft_job(rt, draft)
-    })) {
-        Ok(d) => DraftReply::Done(d),
-        Err(p) => DraftReply::Lost {
-            reason: panic_message(p.as_ref()),
-        },
-    };
+) -> (Option<DraftReply>, Vec<StageReply>) {
+    let d = draft.map(|draft| {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec_draft_job(rt, draft)
+        })) {
+            Ok(d) => DraftReply::Done(d),
+            Err(p) => DraftReply::Lost {
+                reason: panic_message(p.as_ref()),
+            },
+        }
+    });
     let s = stages
         .into_iter()
         .map(|j| {
@@ -444,13 +499,16 @@ pub fn run_inline(
 }
 
 /// Execute a timestep's task set on the pool when one exists, inline
-/// otherwise — the single dispatch seam both engines go through.
+/// otherwise — the single dispatch seam both engines go through. `draft`
+/// is `None` on timesteps a banked speculative expansion served (ISSUE
+/// 10): the pipeline's layer came from the bank, so no draft task runs
+/// and no draft reply comes back.
 pub fn run_tasks(
     pool: Option<&mut WorkerPool>,
     rt: &Runtime,
-    draft: DraftJob,
+    draft: Option<DraftJob>,
     stages: Vec<StageJob>,
-) -> (DraftReply, Vec<StageReply>) {
+) -> (Option<DraftReply>, Vec<StageReply>) {
     match pool {
         Some(pool) => pool.run_timestep(draft, stages),
         None => run_inline(rt, draft, stages),
@@ -699,11 +757,12 @@ impl WorkerPool {
     /// left the coordinator) — never as a coordinator panic or hang.
     pub fn run_timestep(
         &mut self,
-        draft: DraftJob,
+        draft: Option<DraftJob>,
         stages: Vec<StageJob>,
-    ) -> (DraftReply, Vec<StageReply>) {
+    ) -> (Option<DraftReply>, Vec<StageReply>) {
         let n = self.txs.len();
         let draft_worker = n - 1;
+        let draft_dispatched = draft.is_some();
         // per-worker sets of in-flight jobs, so an `Exited` announcement
         // can flush exactly the jobs that died with the thread
         let mut outstanding: Vec<Vec<JobTag>> = vec![Vec::new(); n];
@@ -731,11 +790,13 @@ impl WorkerPool {
             Done::Exited { .. } => unreachable!("exit announcements handled by the reply loop"),
         };
 
-        match self.dispatch(draft_worker, Job::Draft(draft)) {
-            Some(done) => absorb(done, &mut draft_reply, &mut stage_replies),
-            None => {
-                outstanding[draft_worker].push(JobTag::Draft);
-                pending += 1;
+        if let Some(draft) = draft {
+            match self.dispatch(draft_worker, Job::Draft(draft)) {
+                Some(done) => absorb(done, &mut draft_reply, &mut stage_replies),
+                None => {
+                    outstanding[draft_worker].push(JobTag::Draft);
+                    pending += 1;
+                }
             }
         }
         // round-robin over *dispatched* tasks (not group ids): with sparse
@@ -808,8 +869,10 @@ impl WorkerPool {
             }
         }
 
-        let draft_reply = draft_reply.unwrap_or(DraftReply::Lost {
-            reason: "draft reply missing (worker pool reply channel closed)".to_string(),
+        let draft_reply = draft_dispatched.then(|| {
+            draft_reply.unwrap_or(DraftReply::Lost {
+                reason: "draft reply missing (worker pool reply channel closed)".to_string(),
+            })
         });
         (draft_reply, stage_replies)
     }

@@ -56,10 +56,15 @@ pub enum Site {
     /// error here makes the worker thread exit; a panic kills it
     /// abruptly. Both exercise the coordinator's respawn path.
     WorkerExit,
+    /// One free-running speculative generation inside
+    /// `pipeline::draft_speculate` (ISSUE 10): fires once per generation
+    /// beyond the in-step expansion, so a plan can kill or slow the
+    /// draft exactly while it is ahead of the committed tree.
+    DraftStale,
 }
 
 impl Site {
-    pub const ALL: [Site; 7] = [
+    pub const ALL: [Site; 8] = [
         Site::StageJob,
         Site::DraftJob,
         Site::ApplyCommit,
@@ -67,6 +72,7 @@ impl Site {
         Site::SpillWrite,
         Site::SpillRead,
         Site::WorkerExit,
+        Site::DraftStale,
     ];
 
     /// Stable grammar name (`stage_job`, `spill_read`, ...).
@@ -79,6 +85,7 @@ impl Site {
             Site::SpillWrite => "spill_write",
             Site::SpillRead => "spill_read",
             Site::WorkerExit => "worker_exit",
+            Site::DraftStale => "draft_stale",
         }
     }
 
@@ -92,7 +99,10 @@ impl Site {
     /// sites are genuine crashes, so randomized plans only place `Panic`
     /// on worker-scoped sites.
     pub fn worker_scoped(self) -> bool {
-        matches!(self, Site::StageJob | Site::DraftJob | Site::WorkerExit)
+        matches!(
+            self,
+            Site::StageJob | Site::DraftJob | Site::WorkerExit | Site::DraftStale
+        )
     }
 }
 
@@ -273,7 +283,8 @@ static ENABLED: AtomicBool = AtomicBool::new(false);
 
 /// Per-site hit counters, indexed by [`Site::index`]; only touched once
 /// the layer is enabled.
-static HITS: [AtomicU64; 7] = [
+static HITS: [AtomicU64; 8] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

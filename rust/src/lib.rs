@@ -50,7 +50,12 @@
 //!   promotion + tree compaction + mirror re-upload) with the next
 //!   timestep's compute; stage tasks read [`tree::TreeSnapshot`]s, never
 //!   the canonical tree. Outputs are bit-identical with the overlap on
-//!   or off.
+//!   or off. With `EngineConfig::spec_inflight > 1` (ISSUE 10) the draft
+//!   additionally free-runs when idle, banking epoch-tagged speculative
+//!   tree generations ([`coordinator::spec::SpecBank`]) that the
+//!   coordinator serves in place of the next draft dispatch when still
+//!   valid — and drops whole when stale — keeping outputs bit-identical
+//!   to lockstep while raising pipeline occupancy.
 //! * [`baselines`] — PP / STPP / SLM comparison engines (paper §4.2).
 //!
 //! The substrate they share:

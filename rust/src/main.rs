@@ -28,7 +28,8 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
   pipedec decode  [--engine KIND] [--stages N] [--group-size G] [--width W]
                   [--children C] [--max-new N] [--prompt TEXT | --domain D]
                   [--temperature T] [--top-p P] [--top-k K] [--seed S]
-                  [--threads T] [--overlap-sync BOOL] [--config FILE]
+                  [--threads T] [--overlap-sync BOOL] [--spec-inflight K]
+                  [--config FILE]
                   [--no-prefix-cache] [--prefix-l1-bytes B] [--prefix-l2-bytes B]
                   [--prefix-l2-dir DIR] [--prefix-chunk-tokens N]
                   [--ttft-deadline S] [--deadline S] [--queue-max-wait S]
@@ -50,6 +51,10 @@ const USAGE: &str = "usage: pipedec <decode|serve|sim|info> [flags]
              (0 = auto: one per core; 1 = sequential reference path)
   --overlap-sync: overlap the sync phase's cache maintenance with the next
              timestep's compute (default true; false = serial sync)
+  --spec-inflight: speculative draft generations in flight (default 1 =
+             lockstep; K > 1 lets the idle draft free-run ahead, tagging
+             each expansion with the commit epoch it assumed — stale ones
+             are dropped at sync, outputs stay bit-identical)
   --no-prefix-cache: disable the cross-request KV prefix cache (default on;
              the PIPEDEC_NO_PREFIX_CACHE env var is an equivalent kill-switch)
   --prefix-l1-bytes / --prefix-l2-bytes: tier byte budgets for the prefix
@@ -107,7 +112,8 @@ fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, Stri
 
 const ENGINE_CFG_FLAGS: &[&str] = &[
     "engine", "stages", "group-size", "width", "children", "max-new",
-    "temperature", "top-p", "top-k", "seed", "threads", "overlap-sync", "config",
+    "temperature", "top-p", "top-k", "seed", "threads", "overlap-sync",
+    "spec-inflight", "config",
     "no-prefix-cache", "prefix-l1-bytes", "prefix-l2-bytes", "prefix-l2-dir",
     "prefix-chunk-tokens", "ttft-deadline", "deadline", "queue-max-wait",
     "max-queue",
@@ -150,6 +156,9 @@ fn engine_cfg(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     }
     if let Some(v) = flags.get("overlap-sync") {
         cfg.overlap_sync = v.parse()?;
+    }
+    if let Some(v) = flags.get("spec-inflight") {
+        cfg.spec_inflight = v.parse()?;
     }
     if let Some(v) = flags.get("no-prefix-cache") {
         cfg.prefix_cache.enabled = !v.parse::<bool>()?;

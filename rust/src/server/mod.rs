@@ -122,6 +122,16 @@ pub struct Completion {
     /// cache (today identical to `prefix_hit_tokens`; kept separate so a
     /// partial-seed policy can diverge without a wire change).
     pub prefill_tokens_saved: u64,
+    /// Fraction of wall-clock pipeline slot-seconds that were busy over
+    /// this request's decode (ISSUE 10); 0 for engines without the
+    /// pipeline occupancy accounting.
+    pub occupancy: f64,
+    /// `1 − occupancy`: the pipeline-bubble share of the decode.
+    pub bubble_fraction: f64,
+    /// Free-running speculative generations dropped as stale (assumed
+    /// epoch or attach point no longer live) instead of applied
+    /// (ISSUE 10); 0 at `spec_inflight = 1`.
+    pub stale_expansions_dropped: u64,
 }
 
 /// FIFO admission queue with a capacity bound (backpressure).
@@ -284,6 +294,16 @@ fn prefix_stats(m: &Metrics) -> (u64, u64) {
     )
 }
 
+/// Pull the continuous-speculation accounting out of an engine's metrics
+/// (ISSUE 10): (occupancy, bubble fraction, stale expansions dropped).
+/// Engines without the occupancy accounting report (0, 0, 0) — bubble
+/// fraction is only meaningful alongside a recorded occupancy sample.
+fn spec_stats(m: &Metrics) -> (f64, f64, u64) {
+    let occ = m.samples("occupancy").first().copied().unwrap_or(0.0);
+    let bubble = m.samples("bubble_fraction").first().copied().unwrap_or(0.0);
+    (occ, bubble, m.counter("stale_expansions_dropped"))
+}
+
 /// Bookkeeping for one request in flight inside the scheduler.
 struct Ticket {
     router_id: u64,
@@ -321,6 +341,9 @@ fn unserved(
         kv_reup_bytes: 0,
         prefix_hit_tokens: 0,
         prefill_tokens_saved: 0,
+        occupancy: 0.0,
+        bubble_fraction: 0.0,
+        stale_expansions_dropped: 0,
     }
 }
 
@@ -454,6 +477,8 @@ pub fn serve_until_idle(
                 sync_breakdown(&output.metrics);
             let (kv_app_bytes, kv_reup_bytes) = kv_byte_split(&output.metrics);
             let (prefix_hit_tokens, prefill_tokens_saved) = prefix_stats(&output.metrics);
+            let (occupancy, bubble_fraction, stale_expansions_dropped) =
+                spec_stats(&output.metrics);
             out.push(Completion {
                 id: ticket.router_id,
                 status,
@@ -472,6 +497,9 @@ pub fn serve_until_idle(
                 kv_reup_bytes,
                 prefix_hit_tokens,
                 prefill_tokens_saved,
+                occupancy,
+                bubble_fraction,
+                stale_expansions_dropped,
             });
         }
     }
@@ -492,6 +520,7 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
         let (t_decide_s, t_commit_s, sync_overlap_ratio) = sync_breakdown(&result.metrics);
         let (kv_app_bytes, kv_reup_bytes) = kv_byte_split(&result.metrics);
         let (prefix_hit_tokens, prefill_tokens_saved) = prefix_stats(&result.metrics);
+        let (occupancy, bubble_fraction, stale_expansions_dropped) = spec_stats(&result.metrics);
         out.push(Completion {
             id: req.id,
             status: CompletionStatus::Ok,
@@ -510,6 +539,9 @@ pub fn drain(router: &mut Router, engine: &mut dyn Engine) -> Result<Vec<Complet
             kv_reup_bytes,
             prefix_hit_tokens,
             prefill_tokens_saved,
+            occupancy,
+            bubble_fraction,
+            stale_expansions_dropped,
         });
     }
     Ok(out)
@@ -553,6 +585,13 @@ pub fn summarize(completions: &[Completion], wall_s: f64) -> (Metrics, Summary) 
         m.incr("kv_reup_bytes", c.kv_reup_bytes);
         m.incr("prefix_hit_tokens", c.prefix_hit_tokens);
         m.incr("prefill_tokens_saved", c.prefill_tokens_saved);
+        // continuous-speculation series (ISSUE 10): occupancy/bubble only
+        // from engines that record them (a zero sample would skew means)
+        if c.occupancy > 0.0 {
+            m.record("occupancy", c.occupancy);
+            m.record("bubble_fraction", c.bubble_fraction);
+        }
+        m.incr("stale_expansions_dropped", c.stale_expansions_dropped);
         lat.push(c.latency_s);
         total_tokens += c.tokens;
     }

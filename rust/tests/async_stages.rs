@@ -16,11 +16,18 @@
 //! commits moves bookkeeping, never a decision — and the sync-phase
 //! breakdown (`t_decide_s` / `t_commit_s` / `sync_overlap_ratio`) must
 //! show the commits actually running on workers when a pool exists.
+//!
+//! ISSUE 10 extends it again to continuous asynchronous speculation:
+//! `spec_inflight > 1` (the free-running epoch-tagged draft) must be
+//! token-identical to lockstep across engines, thread counts and sync
+//! modes — including across Miss-path resets (only stale drops, never a
+//! stale apply) and mid-flight session cancels (the bank dies with the
+//! session, nothing leaks).
 
 use pipedec::config::{EngineConfig, TreeConfig};
-use pipedec::coordinator::Sampling;
+use pipedec::coordinator::{PipeDecDbEngine, Sampling};
 use pipedec::engine::{
-    build_engine, build_scheduled_engine, DecodeRequest, EngineKind, NullSink,
+    build_engine, build_scheduled_engine, DecodeRequest, EngineKind, NullSink, ScheduledEngine,
 };
 
 const PROMPT: &str =
@@ -261,5 +268,189 @@ fn threaded_wall_clock_is_sane_on_multicore() {
     assert!(
         par <= seq * 1.5,
         "threaded decode ({par:.4}s) materially slower than sequential ({seq:.4}s)"
+    );
+}
+
+// ---- ISSUE 10: continuous asynchronous speculation ----
+
+fn cfg_spec(threads: usize, seed: u64, overlap_sync: bool, spec_inflight: usize) -> EngineConfig {
+    EngineConfig {
+        spec_inflight,
+        ..cfg_overlap(threads, seed, overlap_sync)
+    }
+}
+
+#[test]
+fn continuous_speculation_is_token_identical_to_lockstep() {
+    // ISSUE 10 acceptance: greedy outputs at `spec_inflight > 1` are
+    // bit-identical to lockstep for both engines, across threads
+    // {1, 2, auto} and both sync modes. Timesteps are deliberately *not*
+    // compared — a served generation removes a draft dispatch from the
+    // schedule, which is the entire point.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for kind in [EngineKind::PipeDec, EngineKind::PipeDecDb] {
+        for threads in [1usize, 2, 0] {
+            for overlap in [false, true] {
+                let req = DecodeRequest::new(PROMPT).with_seed(31);
+                let mut lockstep =
+                    build_engine(kind, &dir, cfg_spec(threads, 31, overlap, 1)).unwrap();
+                let a = lockstep.decode(&req, &mut NullSink).unwrap();
+                let mut spec =
+                    build_engine(kind, &dir, cfg_spec(threads, 31, overlap, 3)).unwrap();
+                let b = spec.decode(&req, &mut NullSink).unwrap();
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "{kind} threads={threads} overlap={overlap}: spec_inflight=3 \
+                     changed the tokens"
+                );
+                assert_eq!(
+                    a.text, b.text,
+                    "{kind} threads={threads} overlap={overlap}: text diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn continuous_speculation_is_identical_under_stochastic_sampling() {
+    // The RNG is drawn once per emitted token, at the decide phase only;
+    // serving a banked generation instead of dispatching the draft must
+    // not move a single draw.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for kind in [EngineKind::PipeDec, EngineKind::PipeDecDb] {
+        let req = DecodeRequest::new(PROMPT)
+            .with_seed(42)
+            .with_sampling(Sampling::llama_stochastic());
+        let mut lockstep = build_engine(kind, &dir, cfg_spec(0, 42, true, 1)).unwrap();
+        let a = lockstep.decode(&req, &mut NullSink).unwrap();
+        let mut spec = build_engine(kind, &dir, cfg_spec(0, 42, true, 3)).unwrap();
+        let b = spec.decode(&req, &mut NullSink).unwrap();
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{kind}: stochastic replay diverged under continuous speculation"
+        );
+    }
+}
+
+#[test]
+fn speculation_engages_and_occupancy_is_reported() {
+    // The free-running draft must actually bank generations (served or
+    // dropped, depending on how verification lands), occupancy must be a
+    // valid fraction with bubble as its complement, and lockstep
+    // (`spec_inflight = 1`) must never bank anything.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let req = DecodeRequest::new(PROMPT).with_seed(5);
+    let mut spec = build_engine(EngineKind::PipeDec, &dir, cfg_spec(2, 5, true, 4)).unwrap();
+    let b = spec.decode(&req, &mut NullSink).unwrap();
+    let engaged = b.metrics.counter("spec_expansions_served")
+        + b.metrics.counter("stale_expansions_dropped");
+    assert!(engaged > 0, "free-running speculation never engaged");
+    let occ = b.metrics.samples("occupancy")[0];
+    assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ} out of range");
+    let bubble = b.metrics.samples("bubble_fraction")[0];
+    assert!(
+        (occ + bubble - 1.0).abs() < 1e-9,
+        "bubble {bubble} is not the complement of occupancy {occ}"
+    );
+    let mut lockstep =
+        build_engine(EngineKind::PipeDec, &dir, cfg_spec(2, 5, true, 1)).unwrap();
+    let a = lockstep.decode(&req, &mut NullSink).unwrap();
+    assert_eq!(a.metrics.counter("spec_expansions_served"), 0);
+    assert_eq!(a.metrics.counter("stale_expansions_dropped"), 0);
+    assert!(a.metrics.samples("occupancy")[0] > 0.0, "lockstep occupancy missing");
+}
+
+#[test]
+fn speculation_across_miss_resets_drops_stale_generations_only() {
+    // Satellite edge case: `ablate_tree_reuse` sends every verify down
+    // the Miss path, so each reset bumps the epoch and invalidates the
+    // whole bank. The stale counter must show the drops and the tokens
+    // must not move — a stale generation is never applied.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for kind in [EngineKind::PipeDec, EngineKind::PipeDecDb] {
+        let req = DecodeRequest::new(PROMPT).with_seed(13);
+        let mut ca = cfg_spec(2, 13, true, 1);
+        ca.ablate_tree_reuse = true;
+        let mut cb = cfg_spec(2, 13, true, 4);
+        cb.ablate_tree_reuse = true;
+        let a = build_engine(kind, &dir, ca).unwrap().decode(&req, &mut NullSink).unwrap();
+        let b = build_engine(kind, &dir, cb).unwrap().decode(&req, &mut NullSink).unwrap();
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{kind}: a stale generation leaked into the output across a Miss reset"
+        );
+        assert!(
+            b.metrics.counter("stale_expansions_dropped") > 0,
+            "{kind}: Miss resets produced no stale drops"
+        );
+    }
+}
+
+#[test]
+fn cancel_mid_flight_leaks_no_speculative_generation() {
+    // Satellite edge case: cancelling a session with banked generations
+    // must drop its bank with it (the `inflight_generations` probe), and
+    // the surviving session must decode exactly as if alone.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let other = "<math>\nquestion: bob has 3 coins and finds 2 more. total?\n";
+    let mut c = cfg(1, 9);
+    c.spec_inflight = 3;
+    let mut solo = PipeDecDbEngine::new(&dir, c.clone()).unwrap();
+    let solo_id = solo
+        .submit(DecodeRequest::new(other).with_seed(9), Box::new(NullSink))
+        .unwrap();
+    let mut guard = 0;
+    while solo.has_work() {
+        solo.step().unwrap();
+        guard += 1;
+        assert!(guard < 10_000, "solo reference failed to drain");
+    }
+    let expected = solo.poll(solo_id).expect("solo reference finishes").tokens;
+
+    let mut eng = PipeDecDbEngine::new(&dir, c).unwrap();
+    let victim = eng
+        .submit(DecodeRequest::new(PROMPT).with_seed(9), Box::new(NullSink))
+        .unwrap();
+    let survivor = eng
+        .submit(DecodeRequest::new(other).with_seed(9), Box::new(NullSink))
+        .unwrap();
+    let mut guard = 0;
+    while eng.inflight_generations() == 0 && eng.has_work() {
+        eng.step().unwrap();
+        guard += 1;
+        assert!(guard < 10_000, "speculation never engaged");
+    }
+    assert!(eng.inflight_generations() > 0, "no banked generation to cancel under");
+    assert!(eng.cancel(victim), "mid-flight cancel must succeed");
+    while eng.has_work() {
+        eng.step().unwrap();
+        guard += 1;
+        assert!(guard < 10_000, "engine wedged after cancel");
+    }
+    assert_eq!(
+        eng.inflight_generations(),
+        0,
+        "a speculative generation leaked past cancel/completion"
+    );
+    let out = eng.poll(survivor).expect("survivor finishes");
+    assert_eq!(
+        out.tokens, expected,
+        "survivor's tokens changed because a neighbour was cancelled mid-speculation"
     );
 }

@@ -341,3 +341,68 @@ fn chaos_randomized_plan_from_env_seed() {
         assert!(failed <= PROMPTS.len());
     }
 }
+
+/// ISSUE 10 satellite: a panic (or error) inside the *free-running*
+/// speculation loop — the `draft_stale` site fires once per extra
+/// generation in `draft_speculate` — must retire only the owning session,
+/// leave survivors bit-identical, and leak no in-flight generation or
+/// device state. The partial speculation is discarded with the job; it
+/// must never be banked.
+#[test]
+fn chaos_speculation_panic_retires_owner_and_leaks_no_generation() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let _guard = fault_quiesce();
+    let mut c = cfg(1);
+    c.spec_inflight = 3;
+    let (expected, mirror_base) = baseline(&dir, &c);
+    for (i, text) in ["draft_stale@1=panic", "draft_stale@2=error"].iter().enumerate() {
+        faultinject::arm(text.parse().unwrap());
+        let mut eng = PipeDecDbEngine::new(&dir, c.clone()).unwrap();
+        let mut ids = Vec::new();
+        drive(&mut eng, &mut XorShiftRng::new(300 + i as u64), &mut ids);
+        faultinject::disarm();
+        let mut failed = 0usize;
+        for (j, id) in ids.iter().enumerate() {
+            match eng.status(*id) {
+                Some(SessionStatus::Failed { reason }) => {
+                    failed += 1;
+                    assert!(!reason.is_empty(), "{id}: failure must carry a reason");
+                    assert!(
+                        eng.poll(*id).is_some(),
+                        "{id}: failed session must still yield its partial output"
+                    );
+                }
+                Some(SessionStatus::Finished) => {
+                    let out = eng.poll(*id).expect("finished session is pollable");
+                    assert_eq!(
+                        out.tokens, expected[j],
+                        "{id}: survivor diverged from the fault-free run"
+                    );
+                }
+                s => panic!("{id}: session not terminal after idle: {s:?}"),
+            }
+        }
+        assert_eq!(
+            failed, 1,
+            "plan {text:?}: a speculation fault must fail exactly the owning session"
+        );
+        assert_eq!(
+            eng.inflight_generations(),
+            0,
+            "plan {text:?}: an in-flight speculative generation leaked past retirement"
+        );
+        assert_eq!(
+            eng.mirror_counts(),
+            mirror_base,
+            "plan {text:?}: device KV mirrors leaked past retirement"
+        );
+        assert_eq!(
+            eng.pinned_prefix_sessions(),
+            0,
+            "plan {text:?}: prefix pins leaked past retirement"
+        );
+    }
+}

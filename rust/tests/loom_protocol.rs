@@ -15,9 +15,19 @@
 //! 2. no forward runs with an undrained commit suffix;
 //! 3. overlap-on and overlap-off reach the same final cache epoch;
 //! 4. pool shutdown never drops an in-flight job.
+//!
+//! The second half of the file covers the continuous-speculation epoch
+//! protocol (ISSUE 10) through `SpecModel`, which drives the production
+//! acceptance predicate `expansion_applicable`: under every interleaving
+//! of the free-running draft against prune/reset/serve rounds, no stale
+//! generation is ever applied and no still-valid generation is ever
+//! dropped — with seeded mutations proving each defense (epoch tag,
+//! frontier equality, divergence guard) is load-bearing.
 
 use pipedec::concurrency::explore::Explorer;
-use pipedec::concurrency::model::{Mutations, ProtocolModel};
+use pipedec::concurrency::model::{
+    Mutations, ProtocolModel, SpecEvent, SpecModel, SpecMutations,
+};
 
 /// 3 workers (2 stage groups + the pinned draft worker), 2 sync rounds,
 /// with a sparse row so one owner lags a full epoch behind — the case the
@@ -180,6 +190,164 @@ fn mutation_eager_shutdown_drops_an_inflight_job() {
     let err = explore(&m).expect_err("eager shutdown must be detected");
     assert!(
         err.contains("dropped") || err.contains("forwards"),
+        "unexpected violation: {err}"
+    );
+}
+
+// ---- continuous-speculation epoch protocol (ISSUE 10) ----
+
+fn explore_spec(m: &SpecModel) -> Result<pipedec::concurrency::explore::Stats, String> {
+    Explorer::new().explore(m).map_err(|v| v.to_string())
+}
+
+/// A script exercising every reconciliation path: an in-flight serve, a
+/// filtered serve after a prune, and a Miss reset with id-colliding
+/// regrowth before the final serve.
+fn spec_events() -> Vec<SpecEvent> {
+    vec![
+        SpecEvent::Expand,
+        SpecEvent::Serve,
+        SpecEvent::Hit { keep: 1 },
+        SpecEvent::Serve,
+        SpecEvent::Miss,
+        SpecEvent::Expand,
+        SpecEvent::Serve,
+    ]
+}
+
+#[test]
+fn speculation_epochs_safe_under_all_interleavings() {
+    let m = SpecModel::new(spec_events(), 2, 2);
+    let stats = explore_spec(&m).expect("speculation protocol must be safe");
+    assert!(
+        stats.states > 300,
+        "suspiciously small state space: {stats:?}"
+    );
+    assert!(stats.transitions > stats.states, "no branching explored");
+    // The search must actually reach both outcomes: schedules where a
+    // banked generation serves in place of a draft dispatch, and
+    // schedules where staleness forces a drop.
+    let outs = m.outcomes.borrow();
+    assert!(outs.iter().any(|&(served, _)| served > 0), "{outs:?}");
+    assert!(outs.iter().any(|&(_, dropped)| dropped > 0), "{outs:?}");
+}
+
+#[test]
+fn filtered_serve_with_divergence_guard_is_safe() {
+    // A prune lands between two in-flight generations: the first serves
+    // filtered, the guard must then kill the second (its shadow ids alias
+    // fresh canonical nodes of different value).
+    let m = SpecModel::new(
+        vec![
+            SpecEvent::Expand,
+            SpecEvent::Hit { keep: 1 },
+            SpecEvent::Serve,
+            SpecEvent::Serve,
+        ],
+        1,
+        2,
+    );
+    explore_spec(&m).expect("filtered serve + guard must be safe");
+}
+
+#[test]
+fn miss_reset_with_id_collisions_is_safe() {
+    // Miss restarts node-id minting, so a pre-reset generation's parent
+    // ids resolve against (differently-valued) post-reset nodes; the
+    // epoch tag must keep it out in every interleaving.
+    let m = SpecModel::new(
+        vec![
+            SpecEvent::Expand,
+            SpecEvent::Miss,
+            SpecEvent::Expand,
+            SpecEvent::Serve,
+        ],
+        1,
+        1,
+    );
+    let stats = explore_spec(&m).expect("miss reset must be safe");
+    assert!(stats.terminals >= 1);
+}
+
+// ---- seeded mutations: the search must *fail* on a broken protocol ----
+
+#[test]
+fn mutation_serving_without_the_applicability_check_applies_a_stale_generation() {
+    let mut m = SpecModel::new(vec![SpecEvent::Expand, SpecEvent::Serve], 1, 1);
+    m.mutations = SpecMutations {
+        apply_stale: true,
+        ..SpecMutations::default()
+    };
+    let err = explore_spec(&m).expect_err("unchecked serve must be detected");
+    assert!(
+        err.contains("stale expansion applied"),
+        "unexpected violation: {err}"
+    );
+}
+
+#[test]
+fn mutation_rejecting_valid_generations_drops_committed_work() {
+    let mut m = SpecModel::new(vec![SpecEvent::Serve, SpecEvent::Serve], 1, 1);
+    m.mutations = SpecMutations {
+        drop_valid: true,
+        ..SpecMutations::default()
+    };
+    let err = explore_spec(&m).expect_err("dropping valid generations must be detected");
+    assert!(
+        err.contains("valid expansion dropped"),
+        "unexpected violation: {err}"
+    );
+}
+
+#[test]
+fn mutation_skipping_the_divergence_guard_applies_an_aliased_generation() {
+    // Same script as `filtered_serve_with_divergence_guard_is_safe`; with
+    // the guard gone, the second generation's shadow-minted parent ids
+    // alias the canonically-minted survivor children and pass the frontier
+    // equality check while carrying the pruned branch's values.
+    let mut m = SpecModel::new(
+        vec![
+            SpecEvent::Expand,
+            SpecEvent::Hit { keep: 1 },
+            SpecEvent::Serve,
+            SpecEvent::Serve,
+        ],
+        1,
+        2,
+    );
+    m.mutations = SpecMutations {
+        skip_divergence_guard: true,
+        ..SpecMutations::default()
+    };
+    let err = explore_spec(&m).expect_err("guardless filtered serve must fail");
+    assert!(
+        err.contains("stale expansion applied"),
+        "unexpected violation: {err}"
+    );
+}
+
+#[test]
+fn mutation_ignoring_the_epoch_tag_applies_a_pre_reset_generation() {
+    // Same script as `miss_reset_with_id_collisions_is_safe`; with the
+    // epoch mechanism removed the collided node ids pass the frontier
+    // equality check and a pre-reset generation lands on the new tree.
+    let mut m = SpecModel::new(
+        vec![
+            SpecEvent::Expand,
+            SpecEvent::Miss,
+            SpecEvent::Expand,
+            SpecEvent::Serve,
+        ],
+        1,
+        1,
+    );
+    m.mutations = SpecMutations {
+        ignore_epoch: true,
+        ..SpecMutations::default()
+    };
+    let err = explore_spec(&m).expect_err("epoch removal must be detected");
+    assert!(
+        err.contains("stale expansion applied"),
         "unexpected violation: {err}"
     );
 }
